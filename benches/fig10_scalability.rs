@@ -1,0 +1,41 @@
+//! Figure 10 (a/b): AlexNet & VGG-16 speedup over single-device training
+//! on 8 devices, swept over batch size.
+//!
+//! The paper's headline: SOYBEAN reaches >7× speedup on AlexNet at batch
+//! 256 while data parallelism needs >1K to catch up; VGG tells the same
+//! story. Run with `cargo bench --bench fig10_scalability`.
+
+use std::time::Duration;
+
+use soybean::figures;
+use soybean::sim::SimConfig;
+use soybean::util::bench::time_it;
+
+fn main() {
+    let cfg = SimConfig::default();
+
+    let (table, rows) = figures::fig10("alexnet", &[64, 128, 256, 512, 1024, 2048], &cfg);
+    println!("{table}");
+    let at256 = rows.iter().find(|r| r.0 == 256).unwrap();
+    let dp_catch = rows
+        .iter()
+        .find(|r| r.1 >= at256.2)
+        .map(|r| r.0.to_string())
+        .unwrap_or_else(|| ">2048".into());
+    println!(
+        "  AlexNet @256: SOYBEAN {:.2}x vs DP {:.2}x; DP reaches SOYBEAN's @256 speedup at batch {}\n",
+        at256.2, at256.1, dp_catch
+    );
+
+    let (table, rows) = figures::fig10("vgg", &[16, 32, 64, 128, 256], &cfg);
+    println!("{table}");
+    for (b, dp, soy) in &rows {
+        assert!(soy >= dp, "SOYBEAN slower than DP on VGG at batch {b}");
+    }
+    println!("  VGG: SOYBEAN ≥ DP at every batch size ✓");
+
+    let m = time_it(0, Duration::from_millis(200), || {
+        std::hint::black_box(figures::fig10("alexnet", &[256], &cfg));
+    });
+    println!("\n  [fig10] single-point pipeline: {:.2} ms/iter ({} iters)", m.mean_ms(), m.iters);
+}

@@ -1,0 +1,39 @@
+//! Figure 8 (a/b/c): 4-layer MLP runtime & communication overhead for
+//! DP/MP/SOYBEAN across 2–8 devices, three (batch, hidden) settings.
+//!
+//! Regenerates the paper's series through the planner + testbed simulator
+//! and times the end-to-end plan+simulate pipeline (the part of SOYBEAN a
+//! user actually waits for; it is amortized over all training iterations,
+//! §3). Run with `cargo bench --bench fig8_mlp`.
+
+use std::time::Duration;
+
+use soybean::figures;
+use soybean::sim::SimConfig;
+use soybean::util::bench::time_it;
+
+fn main() {
+    let cfg = SimConfig::default();
+    for (label, batch, hidden) in [
+        ("fig8a: batch=512  hidden=8192", 512usize, 8192usize),
+        ("fig8b: batch=2048 hidden=8192", 2048, 8192),
+        ("fig8c: batch=2048 hidden=12288", 2048, 12288),
+    ] {
+        let (table, pts) = figures::fig8(batch, hidden, &cfg);
+        println!("{table}");
+        // Paper shape checks, reported inline.
+        let at8 = |s: &str| pts.iter().find(|p| p.devices == 8 && p.strategy == s).unwrap();
+        let (dp, mp, soy) = (at8("DP"), at8("MP"), at8("SOYBEAN"));
+        println!(
+            "  8-dev overhead/compute: DP {:.2}x  MP {:.2}x  SOY {:.2}x  | SOY speedup over DP: {:.2}x",
+            dp.overhead_s / dp.compute_s,
+            mp.overhead_s / mp.compute_s,
+            soy.overhead_s / soy.compute_s,
+            dp.runtime_s / soy.runtime_s
+        );
+        let m = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(figures::fig8(batch, hidden, &cfg));
+        });
+        println!("  [{label}] plan+simulate pipeline: {:.2} ms/iter ({} iters)\n", m.mean_ms(), m.iters);
+    }
+}

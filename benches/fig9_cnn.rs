@@ -1,0 +1,37 @@
+//! Figure 9 (a/b): 5-layer CNN, DP vs MP vs SOYBEAN as image size and
+//! filter count trade off (batch 256).
+//!
+//! 9(a): 6×6 images, 2048 filters — weights dominate, MP/SOYBEAN win.
+//! 9(b): 24×24 images, 512 filters — activations dominate, DP beats MP;
+//! SOYBEAN matches or beats both by cutting different layers differently.
+//! Run with `cargo bench --bench fig9_cnn`.
+
+use std::time::Duration;
+
+use soybean::figures;
+use soybean::sim::SimConfig;
+use soybean::util::bench::time_it;
+
+fn main() {
+    let cfg = SimConfig::default();
+    for (label, image, filters) in [
+        ("fig9a: image=6px  filters=2048", 6usize, 2048usize),
+        ("fig9b: image=24px filters=512", 24, 512),
+    ] {
+        let (table, pts) = figures::fig9(image, filters, &cfg);
+        println!("{table}");
+        let at8 = |s: &str| pts.iter().find(|p| p.devices == 8 && p.strategy == s).unwrap();
+        let (dp, mp, soy) = (at8("DP"), at8("MP"), at8("SOYBEAN"));
+        println!(
+            "  8-dev comm: DP {:.1} MB, MP {:.1} MB, SOY {:.1} MB (winner: {})",
+            dp.comm_bytes as f64 / 1e6,
+            mp.comm_bytes as f64 / 1e6,
+            soy.comm_bytes as f64 / 1e6,
+            if dp.runtime_s < mp.runtime_s { "DP over MP" } else { "MP over DP" },
+        );
+        let m = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(figures::fig9(image, filters, &cfg));
+        });
+        println!("  [{label}] pipeline: {:.2} ms/iter ({} iters)\n", m.mean_ms(), m.iters);
+    }
+}

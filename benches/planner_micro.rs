@@ -1,0 +1,51 @@
+//! Planner micro-benchmarks: the offline cost SOYBEAN adds to training.
+//!
+//! §3: "the runtime cost of the dataflow transformation can be amortized"
+//! — but only if planning is fast. Targets (see DESIGN.md §Perf): a full
+//! 8-device plan for VGG-16 in < 1 s.
+//!
+//! Run with `cargo bench --bench planner_micro`.
+
+use std::time::Duration;
+
+use soybean::graph::bfs_levels;
+use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
+use soybean::planner::{k_cut, one_cut};
+use soybean::util::bench::{report_row, time_it};
+
+fn main() {
+    println!("== planner micro-benchmarks ==");
+    let workloads: Vec<(&str, soybean::Graph)> = vec![
+        ("mlp-4x8192", mlp(&MlpConfig::fig8(512, 8192))),
+        ("mlp-e2e", mlp(&MlpConfig::e2e())),
+        ("cnn5", cnn5(256, 6, 4, 2048, 10)),
+        ("alexnet", alexnet(256)),
+        ("vgg16", vgg16(64)),
+    ];
+
+    for (name, g) in &workloads {
+        let lv = bfs_levels(g);
+        let m = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(one_cut(g));
+        });
+        report_row(
+            &format!("one_cut/{name}"),
+            &[
+                ("ms", format!("{:.2}", m.mean_ms())),
+                ("ops", g.ops.len().to_string()),
+                ("levels", lv.levels.len().to_string()),
+                ("maxwidth", lv.max_width().to_string()),
+            ],
+        );
+    }
+
+    for (name, g) in &workloads {
+        let m = time_it(1, Duration::from_millis(500), || {
+            std::hint::black_box(k_cut(g, 3));
+        });
+        report_row(&format!("k_cut3/{name}"), &[("ms", format!("{:.2}", m.mean_ms()))]);
+        if *name == "vgg16" {
+            assert!(m.mean.as_secs_f64() < 1.0, "VGG 8-device plan exceeded 1s target");
+        }
+    }
+}

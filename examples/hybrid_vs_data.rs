@@ -1,0 +1,59 @@
+//! The §2.2 motivating example, measured end to end with real execution.
+//!
+//! The paper's opening argument: on a 5-layer MLP(300) with batch 400,
+//! hybrid tiling moves ~42% fewer bytes than data parallelism. This
+//! example verifies the claim twice —
+//!
+//! 1. analytically, with both the paper's simplified accounting and the §4
+//!    conversion-cost model, and
+//! 2. empirically, by running real training steps through the engine under
+//!    both plans on 4 virtual devices and comparing the *metered* traffic
+//!    (and checking the losses agree with each other to fp32 tolerance).
+//!
+//! Run with: `cargo run --release --example hybrid_vs_data`
+
+use std::sync::Arc;
+
+use soybean::coordinator::{init_mlp_params, ParallelTrainer, SyntheticData};
+use soybean::figures;
+use soybean::models::{mlp, MlpConfig};
+use soybean::planner::{Planner, Strategy};
+use soybean::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", figures::example22());
+
+    // Empirical check on 4 virtual devices with real buffers.
+    let dims = vec![304usize, 304, 304, 304, 304, 304];
+    let cfg = MlpConfig { batch: 400, dims: dims.clone(), bias: true };
+    let g = mlp(&cfg);
+    let client = Arc::new(Client::cpu()?);
+    let mut data = SyntheticData::new(5, dims[0], *dims.last().unwrap());
+    let (x, y) = data.batch(400);
+
+    let mut results = Vec::new();
+    for strat in [Strategy::DataParallel, Strategy::Soybean] {
+        let params = init_mlp_params(3, &dims);
+        let plan = Planner::plan(&g, 2, strat);
+        let mut t = ParallelTrainer::new(client.clone(), g.clone(), plan, &params, 0.05)?;
+        let mut loss = 0.0;
+        for _ in 0..3 {
+            loss = t.step(&x, &y)?;
+        }
+        println!(
+            "{:<8}: loss {:.4}, metered traffic {:.2} MB over 3 steps",
+            strat.name(),
+            loss,
+            t.engine.metrics.total_bytes() as f64 / 1e6
+        );
+        results.push((loss, t.engine.metrics.total_bytes()));
+    }
+    let (dp_loss, dp_bytes) = results[0];
+    let (soy_loss, soy_bytes) = results[1];
+    assert!((dp_loss - soy_loss).abs() < 2e-3, "plans computed different numbers!");
+    println!(
+        "\nSOYBEAN moved {:.1}% less data than DP for identical numerics ✓",
+        (1.0 - soy_bytes as f64 / dp_bytes as f64) * 100.0
+    );
+    Ok(())
+}

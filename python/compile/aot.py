@@ -1,0 +1,81 @@
+"""AOT pipeline: lower every catalog entry to HLO text + write a manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only NAME ...]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_json(spec):
+    return {"dims": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def lower_entry(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    out_tree = jax.eval_shape(fn, *specs)
+    outs = jax.tree_util.tree_leaves(out_tree)
+    return to_hlo_text(lowered), outs
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of entry names to build")
+    ap.add_argument("--small", action="store_true",
+                    help="small-config catalog only (fast; used by pytest)")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cat = model.entries()
+    if args.small:
+        cat = {k: v for k, v in cat.items() if "small" in k or "pallas" in k}
+    if args.only:
+        cat = {k: v for k, v in cat.items() if k in args.only}
+
+    manifest = {"artifacts": [], "format": "hlo-text", "version": 1}
+    for name, (fn, specs, tags) in sorted(cat.items()):
+        text, outs = lower_entry(fn, specs)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": path.name,
+            "inputs": [_shape_json(s) for s in specs],
+            "outputs": [_shape_json(o) for o in outs],
+            "tags": tags,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  lowered {name}: {len(text)} chars, "
+              f"{len(specs)} inputs, {len(outs)} outputs")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles.
+
+The kernels here are the compute hot-spot of the SOYBEAN reproduction: blocked
+matrix multiplication (the sub-operator every tiling shard executes) and a
+fused fully-connected layer (matmul + bias + ReLU). They are authored for TPU
+tile structure (VMEM-sized blocks, MXU-aligned shapes) but lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT client that the
+Rust runtime drives. ``ref.py`` holds the pure-jnp oracles pytest checks
+against.
+"""
+
+from .matmul import (
+    fused_layer,
+    fused_layer_pallas,
+    matmul,
+    matmul_pallas,
+    pick_block,
+)
+from . import ref
+
+__all__ = [
+    "matmul", "matmul_pallas", "fused_layer", "fused_layer_pallas",
+    "pick_block", "ref",
+]

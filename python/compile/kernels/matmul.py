@@ -1,0 +1,167 @@
+"""Blocked Pallas matmul + fused layer kernels.
+
+These mirror, one level down the memory hierarchy, the same tiling algebra the
+paper applies across devices: a grid of (bm, bn) output tiles with a k-loop of
+(bm, bk) x (bk, bn) block products — i.e. the R/C tilings of section 4.1
+recursed into on-chip memory. BlockSpec index maps express the HBM->VMEM
+schedule that the paper's PCIe tile conversions express across GPUs.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is checked
+against ``ref.py`` by pytest; TPU efficiency is estimated from the block
+shapes (see DESIGN.md section Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile edge. 128 matches both the MXU systolic array edge
+# and an 8x128 VMEM lane multiple; three f32 buffers of 128x128 are ~192KiB,
+# comfortably inside a 16MiB VMEM budget with double-buffering headroom.
+DEFAULT_BLOCK = 128
+
+
+def pick_block(dim: int, target: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Pallas grids must tile the array exactly; for the paper's power-of-two
+    layer sizes this returns ``target`` itself, and degrades gracefully for
+    the odd shapes the hypothesis sweep throws at it.
+    """
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Grid point (i, j, kk): accumulate block product into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul_pallas(x, w, *, block_m=None, block_n=None, block_k=None):
+    """``x @ w`` as a blocked Pallas kernel (f32 accumulation).
+
+    x: (m, k), w: (k, n) -> (m, n). Block sizes default to the largest
+    divisors <= 128 of each dimension.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = block_m or pick_block(m)
+    bn = block_n or pick_block(n)
+    bk = block_k or pick_block(k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# Differentiable wrapper: backward ops are the same blocked Pallas GEMMs
+# (dx = g W^T, dW = x^T g — exactly the two backward multiplications of
+# section 2.1 of the paper), so autodiff of the L2 model stays on the kernel
+# path end to end.
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable blocked Pallas matmul (default block sizes)."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return matmul_pallas(g, w.T), matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def _fused_layer_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int):
+    """relu(x @ w + b), bias+activation fused into the final k step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def fused_layer_pallas(x, w, b, *, block_m=None, block_n=None, block_k=None):
+    """``relu(x @ w + b)`` as one Pallas kernel (fused epilogue).
+
+    x: (m, k), w: (k, n), b: (n,) -> (m, n).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = block_m or pick_block(m)
+    bn = block_n or pick_block(n)
+    bk = block_k or pick_block(k)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_fused_layer_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# Differentiable fused layer. The saved activation doubles as the ReLU mask
+# (y > 0 iff the pre-activation was positive), so the residuals are exactly
+# the tensors the paper's dataflow graph ships between layers.
+@jax.custom_vjp
+def fused_layer(x, w, b):
+    """Differentiable relu(x @ w + b) on the Pallas kernel path."""
+    return fused_layer_pallas(x, w, b)
+
+
+def _fused_layer_fwd(x, w, b):
+    y = fused_layer_pallas(x, w, b)
+    return y, (x, w, y)
+
+
+def _fused_layer_bwd(res, g):
+    x, w, y = res
+    dz = g * (y > 0).astype(g.dtype)
+    return matmul_pallas(dz, w.T), matmul_pallas(x.T, dz), dz.sum(axis=0)
+
+
+fused_layer.defvjp(_fused_layer_fwd, _fused_layer_bwd)

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is deliberately written in the most obvious way possible —
+these definitions are what the kernels and the Rust engine are checked
+against, so they must be beyond suspicion.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain dense matmul with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_layer_ref(x, w, b):
+    """relu(x @ w + b)."""
+    return jnp.maximum(matmul_ref(x, w) + b, 0.0)
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_xent_ref(logits, onehot):
+    """Mean softmax cross-entropy over the batch; onehot is f32 (b, classes)."""
+    m = logits.max(axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)) + m
+    logp = logits - logz
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def mlp_forward_ref(params, x):
+    """MLP forward: hidden layers relu(x W + b), last layer linear (logits)."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        if i + 1 == len(params):
+            h = matmul_ref(h, w) + b
+        else:
+            h = fused_layer_ref(h, w, b)
+    return h

@@ -1,0 +1,178 @@
+"""Layer-2 JAX model: MLP forward/backward/update, calling the L1 kernels.
+
+This is the compute graph the Rust coordinator parallelizes. It is authored
+once here, lowered to HLO text by ``aot.py``, and never imported at runtime.
+
+Two kernel paths exist and are cross-checked by pytest:
+
+- ``use_pallas=True`` routes every fully-connected layer through the blocked
+  Pallas kernels (``kernels.matmul``), so the exported HLO contains the
+  interpret-lowered kernel body. Used for the quickstart artifacts.
+- ``use_pallas=False`` uses the plain-jnp reference ops. Used for the large
+  e2e training artifacts where the interpret-mode grid loop would dominate
+  CPU wall-clock (the numerics are identical; see tests/test_model.py).
+
+All AOT entry points take flat positional arguments (PJRT has no pytrees).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_layer, fused_layer_pallas, matmul, matmul_pallas, ref
+
+# Canonical e2e training configuration (see DESIGN.md experiment index).
+E2E_DIMS = (784, 2048, 2048, 2048, 10)
+E2E_BATCH = 128
+# Small configuration whose artifacts run the Pallas path end to end.
+SMALL_DIMS = (64, 128, 128, 10)
+SMALL_BATCH = 32
+
+
+def init_mlp(key, dims):
+    """He-initialized MLP parameters: [(w0, b0), (w1, b1), ...]."""
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params.append((w, jnp.zeros((dout,), jnp.float32)))
+    return params
+
+
+def mlp_forward(params, x, use_pallas=False):
+    """Forward pass; hidden layers are fused matmul+bias+ReLU, last is linear."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i + 1 == len(params)
+        if use_pallas:
+            h = matmul(h, w) + b if last else fused_layer(h, w, b)
+        else:
+            h = ref.matmul_ref(h, w) + b if last else ref.fused_layer_ref(h, w, b)
+    return h
+
+
+def loss_fn(params, x, onehot, use_pallas=False):
+    """Mean softmax cross-entropy of the MLP on one batch."""
+    return ref.softmax_xent_ref(mlp_forward(params, x, use_pallas), onehot)
+
+
+def _unflatten(flat):
+    assert len(flat) % 2 == 0
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+def _flatten(params):
+    return [t for wb in params for t in wb]
+
+
+def mlp_step(x, onehot, lr, *flat, use_pallas=False):
+    """One SGD step. Returns (loss, *updated_flat_params)."""
+    params = _unflatten(list(flat))
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, onehot, use_pallas)
+    new = [
+        (w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)
+    ]
+    return (loss, *_flatten(new))
+
+
+def mlp_grads(x, onehot, *flat, use_pallas=False):
+    """Sum-of-losses gradients for one data shard (data-parallel hot path).
+
+    Returns (loss_sum, *flat_grads) where both loss and grads are gradients of
+    the *sum* over the shard's samples: the coordinator aggregates shard sums
+    and divides by the global batch size, which is exactly the paper's
+    gradient-aggregation step (the red -> r tiling conversion).
+    """
+    params = _unflatten(list(flat))
+
+    def sum_loss(p):
+        logits = mlp_forward(p, x, use_pallas)
+        return ref.softmax_xent_ref(logits, onehot) * x.shape[0]
+
+    loss, grads = jax.value_and_grad(sum_loss)(params)
+    return (loss, *_flatten(grads))
+
+
+def mlp_logits(x, *flat, use_pallas=False):
+    """Inference entry point: logits for one batch."""
+    return (mlp_forward(_unflatten(list(flat)), x, use_pallas),)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point catalog
+# ---------------------------------------------------------------------------
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def _param_specs(dims):
+    out = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        out.append(_spec(din, dout))
+        out.append(_spec(dout))
+    return out
+
+
+def entries(e2e_dims=E2E_DIMS, e2e_batch=E2E_BATCH, shard_devices=(2, 4, 8)):
+    """The artifact catalog: name -> (callable, [arg specs], tags).
+
+    - ``mlp_step``/``mlp_grads_*``: the e2e training hot path (jnp kernels).
+    - ``mlp_step_small_pallas``: full train step with every FC layer running
+      the Pallas kernel, proving L1 composes into L2/L3.
+    - ``matmul_pallas_*`` / ``fused_layer_pallas_*``: standalone shard
+      kernels for the quickstart and kernel benches.
+    """
+    nclass = e2e_dims[-1]
+    cat = {}
+
+    cat["mlp_step"] = (
+        lambda x, y, lr, *flat: mlp_step(x, y, lr, *flat, use_pallas=False),
+        [_spec(e2e_batch, e2e_dims[0]), _spec(e2e_batch, nclass), _spec()]
+        + _param_specs(e2e_dims),
+        {"kind": "train_step", "dims": list(e2e_dims), "batch": e2e_batch},
+    )
+    cat["mlp_logits"] = (
+        lambda x, *flat: mlp_logits(x, *flat, use_pallas=False),
+        [_spec(e2e_batch, e2e_dims[0])] + _param_specs(e2e_dims),
+        {"kind": "logits", "dims": list(e2e_dims), "batch": e2e_batch},
+    )
+    for ndev in shard_devices:
+        if e2e_batch % ndev:
+            continue
+        shard = e2e_batch // ndev
+        cat[f"mlp_grads_b{shard}"] = (
+            lambda x, y, *flat: mlp_grads(x, y, *flat, use_pallas=False),
+            [_spec(shard, e2e_dims[0]), _spec(shard, nclass)]
+            + _param_specs(e2e_dims),
+            {"kind": "grad_shard", "dims": list(e2e_dims), "batch": shard,
+             "devices": ndev},
+        )
+
+    small = SMALL_DIMS
+    cat["mlp_step_small_pallas"] = (
+        lambda x, y, lr, *flat: mlp_step(x, y, lr, *flat, use_pallas=True),
+        [_spec(SMALL_BATCH, small[0]), _spec(SMALL_BATCH, small[-1]), _spec()]
+        + _param_specs(small),
+        {"kind": "train_step", "dims": list(small), "batch": SMALL_BATCH,
+         "pallas": True},
+    )
+    cat["mlp_step_small"] = (
+        lambda x, y, lr, *flat: mlp_step(x, y, lr, *flat, use_pallas=False),
+        [_spec(SMALL_BATCH, small[0]), _spec(SMALL_BATCH, small[-1]), _spec()]
+        + _param_specs(small),
+        {"kind": "train_step", "dims": list(small), "batch": SMALL_BATCH},
+    )
+
+    for m, k, n in [(256, 256, 256), (128, 512, 256)]:
+        cat[f"matmul_pallas_{m}x{k}x{n}"] = (
+            lambda x, w: (matmul_pallas(x, w),),
+            [_spec(m, k), _spec(k, n)],
+            {"kind": "matmul", "m": m, "k": k, "n": n, "pallas": True},
+        )
+    m, k, n = 256, 256, 256
+    cat[f"fused_layer_pallas_{m}x{k}x{n}"] = (
+        lambda x, w, b: (fused_layer_pallas(x, w, b),),
+        [_spec(m, k), _spec(k, n), _spec(n)],
+        {"kind": "fused_layer", "m": m, "k": k, "n": n, "pallas": True},
+    )
+    return cat

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_layer_pallas, matmul_pallas, pick_block
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*dims, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(dims).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+def test_pick_block_exact():
+    assert pick_block(128) == 128
+    assert pick_block(256) == 128
+    assert pick_block(64) == 64
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 96, 100, 384, 1000]:
+        b = pick_block(dim)
+        assert dim % b == 0 and 1 <= b <= 128
+
+
+@given(st.integers(min_value=1, max_value=4096), st.integers(min_value=1, max_value=256))
+@settings(max_examples=50, deadline=None)
+def test_pick_block_property(dim, target):
+    b = pick_block(dim, target)
+    assert dim % b == 0
+    assert b <= max(target, 1) or dim <= target
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (128, 128, 128), (256, 128, 64),
+    (32, 256, 128), (96, 96, 96), (1, 128, 1),
+])
+def test_matmul_matches_ref(m, k, n):
+    x, w = _rand(m, k), _rand(k, n)
+    got = matmul_pallas(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_explicit_blocks():
+    x, w = _rand(64, 64), _rand(64, 64)
+    got = matmul_pallas(x, w, block_m=16, block_n=32, block_k=8)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    x = _rand(32, 32)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul_pallas(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zero():
+    x = _rand(16, 24)
+    z = jnp.zeros((24, 8), jnp.float32)
+    np.testing.assert_allclose(matmul_pallas(x, z), jnp.zeros((16, 8)), atol=0)
+
+
+def test_matmul_bf16():
+    x = _rand(64, 64).astype(jnp.bfloat16)
+    w = _rand(64, 64).astype(jnp.bfloat16)
+    got = matmul_pallas(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+
+@given(
+    m=st.sampled_from([8, 16, 24, 48, 64, 96, 160]),
+    k=st.sampled_from([8, 16, 32, 72, 128]),
+    n=st.sampled_from([8, 16, 40, 64, 128]),
+)
+@settings(max_examples=20, deadline=None)
+def test_matmul_shape_sweep(m, k, n):
+    x, w = _rand(m, k), _rand(k, n)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_jit_composes():
+    """The kernel must lower inside jax.jit (the AOT path)."""
+    x, w = _rand(64, 64), _rand(64, 64)
+    got = jax.jit(lambda a, b: matmul_pallas(a, b) * 2.0)(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w) * 2.0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused layer kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (128, 128, 128), (64, 256, 32)])
+def test_fused_layer_matches_ref(m, k, n):
+    x, w, b = _rand(m, k), _rand(k, n), _rand(n)
+    got = fused_layer_pallas(x, w, b)
+    np.testing.assert_allclose(got, ref.fused_layer_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_layer_nonnegative():
+    x, w, b = _rand(32, 32), _rand(32, 32), _rand(32)
+    assert (fused_layer_pallas(x, w, b) >= 0).all()
+
+
+def test_fused_layer_relu_actually_clips():
+    x = jnp.ones((8, 8), jnp.float32)
+    w = -jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    np.testing.assert_allclose(fused_layer_pallas(x, w, b), jnp.zeros((8, 8)), atol=0)
+
+
+@given(
+    m=st.sampled_from([8, 32, 64, 96]),
+    k=st.sampled_from([16, 64, 128]),
+    n=st.sampled_from([8, 48, 128]),
+)
+@settings(max_examples=15, deadline=None)
+def test_fused_layer_shape_sweep(m, k, n):
+    x, w, b = _rand(m, k), _rand(k, n), _rand(n)
+    np.testing.assert_allclose(
+        fused_layer_pallas(x, w, b), ref.fused_layer_ref(x, w, b),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiling equivalence: the paper's R/C tilings at kernel granularity.
+# Computing shards independently and concatenating must equal the full op —
+# the invariant the Rust execution engine relies on.
+# ---------------------------------------------------------------------------
+
+def test_row_tiling_shards_compose():
+    x, w = _rand(64, 32), _rand(32, 48)
+    full = matmul_pallas(x, w)
+    top = matmul_pallas(x[:32], w)
+    bot = matmul_pallas(x[32:], w)
+    np.testing.assert_allclose(jnp.concatenate([top, bot]), full, rtol=1e-5, atol=1e-5)
+
+
+def test_col_tiling_shards_compose():
+    x, w = _rand(64, 32), _rand(32, 48)
+    full = matmul_pallas(x, w)
+    left = matmul_pallas(x, w[:, :24])
+    right = matmul_pallas(x, w[:, 24:])
+    np.testing.assert_allclose(
+        jnp.concatenate([left, right], axis=1), full, rtol=1e-5, atol=1e-5)
+
+
+def test_reduction_tiling_shards_compose():
+    """C x R -> red: partial products over k-halves sum to the full result."""
+    x, w = _rand(32, 64), _rand(64, 48)
+    full = matmul_pallas(x, w)
+    p1 = matmul_pallas(x[:, :32], w[:32])
+    p2 = matmul_pallas(x[:, 32:], w[32:])
+    np.testing.assert_allclose(p1 + p2, full, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,65 @@
+//! Deterministic synthetic classification data.
+//!
+//! Gaussian class clusters with unit-scale separation: easy enough that a
+//! small MLP's loss visibly falls within a few hundred SGD steps, hard
+//! enough that it cannot be solved by the bias alone.
+
+use crate::runtime::HostTensor;
+use crate::util::Rng;
+
+pub struct SyntheticData {
+    pub din: usize,
+    pub classes: usize,
+    means: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl SyntheticData {
+    pub fn new(seed: u64, din: usize, classes: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let means = (0..classes).map(|_| rng.normal_vec(din, 1.2)).collect();
+        SyntheticData { din, classes, means, rng }
+    }
+
+    /// Next batch: `x [batch, din]`, one-hot `y [batch, classes]`.
+    pub fn batch(&mut self, batch: usize) -> (HostTensor, HostTensor) {
+        let mut x = Vec::with_capacity(batch * self.din);
+        let mut y = vec![0.0f32; batch * self.classes];
+        for i in 0..batch {
+            let c = self.rng.below(self.classes);
+            for j in 0..self.din {
+                x.push(self.means[c][j] + self.rng.normal() as f32 * 0.6);
+            }
+            y[i * self.classes + c] = 1.0;
+        }
+        (
+            HostTensor::from_vec(&[batch, self.din], x),
+            HostTensor::from_vec(&[batch, self.classes], y),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let mut a = SyntheticData::new(1, 8, 4);
+        let mut b = SyntheticData::new(1, 8, 4);
+        let (xa, ya) = a.batch(16);
+        let (xb, yb) = b.batch(16);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn onehot_rows_sum_to_one() {
+        let mut d = SyntheticData::new(2, 8, 4);
+        let (_, y) = d.batch(32);
+        for i in 0..32 {
+            let s: f32 = y.data[i * 4..(i + 1) * 4].iter().sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The training coordinator: BSP batch loop, parameter state, loss logging.
+//!
+//! Two interchangeable trainers close the loop end to end:
+//!
+//! - [`SerialTrainer`] — drives the AOT `mlp_step*` artifact (the whole
+//!   training step as one PJRT executable, exactly what `python/compile`
+//!   lowered). The correctness anchor.
+//! - [`ParallelTrainer`] — drives the [`crate::runtime::Engine`] under a
+//!   tiling plan: same numbers, distributed across virtual devices.
+//!
+//! [`SyntheticData`] supplies a deterministic separable classification
+//! task so loss curves are meaningful.
+
+mod data;
+mod trainer;
+
+pub use data::SyntheticData;
+pub use trainer::{init_mlp_params, ParallelTrainer, SerialTrainer};

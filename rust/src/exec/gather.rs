@@ -1,0 +1,176 @@
+//! Ghost-region gathering: §5.2's three-step tiling conversion.
+//!
+//! When device `d` needs region `target` of a tensor whose resident layout
+//! is `seq`, the flattening theorem lets us treat the resident shards as a
+//! regular grid: the target box decomposes into grid cells, and every cell
+//! is owned by at least one device (exactly one when the tensor is split,
+//! all of them when replicated). Senders slice, receivers fetch and
+//! concatenate — this function computes the slice list.
+
+use crate::tiling::TileSeq;
+
+use super::region::{resident_region, Region};
+
+/// One piece of a gather: fetch `region` from `src` device. `src == self`
+/// pieces are local copies (free).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SourcePiece {
+    pub src: usize,
+    pub region: Region,
+}
+
+/// Decompose `target` into pieces fetched from resident shards.
+///
+/// Preference order: the requesting device itself (local, free), then the
+/// nearest peer by id distance — a stand-in for §5.1's "prefer the fastest
+/// link", since nearby ids share the lower interconnect tiers.
+pub fn gather_sources(
+    shape: &[usize],
+    seq: &TileSeq,
+    devices: usize,
+    me: usize,
+    target: &Region,
+) -> Vec<SourcePiece> {
+    // Grid boundaries per axis from all residents.
+    let rank = shape.len();
+    let mut cuts: Vec<Vec<usize>> = vec![vec![]; rank];
+    let residents: Vec<Region> = (0..devices).map(|d| resident_region(shape, seq, d)).collect();
+    for r in &residents {
+        for d in 0..rank {
+            cuts[d].push(r.offset[d]);
+            cuts[d].push(r.offset[d] + r.shape[d]);
+        }
+    }
+    for d in 0..rank {
+        cuts[d].push(target.offset[d]);
+        cuts[d].push(target.offset[d] + target.shape[d]);
+        cuts[d].sort_unstable();
+        cuts[d].dedup();
+    }
+
+    // Enumerate grid cells intersecting the target (odometer over axes).
+    let mut pieces = Vec::new();
+    let mut idx = vec![0usize; rank];
+    'outer: loop {
+        // Build the current cell.
+        let mut cell = Region { offset: vec![0; rank], shape: vec![0; rank] };
+        let mut valid = true;
+        for d in 0..rank {
+            if idx[d] + 1 >= cuts[d].len() {
+                valid = false;
+                break;
+            }
+            cell.offset[d] = cuts[d][idx[d]];
+            cell.shape[d] = cuts[d][idx[d] + 1] - cuts[d][idx[d]];
+        }
+        if valid {
+            let part = cell.intersect(target);
+            if part == cell && !cell.is_empty() {
+                // Pick a source: self if possible, else nearest owner.
+                let src = if residents[me].contains(&cell) {
+                    me
+                } else {
+                    (0..devices)
+                        .filter(|&d| residents[d].contains(&cell))
+                        .min_by_key(|&d| (d ^ me).count_ones())
+                        .unwrap_or_else(|| panic!("cell {cell:?} owned by nobody (shape {shape:?} seq {seq:?} devices {devices} me {me} target {target:?})"))
+                };
+                pieces.push(SourcePiece { src, region: cell });
+            }
+        }
+        // Advance odometer.
+        for d in 0..rank {
+            idx[d] += 1;
+            if idx[d] + 1 < cuts[d].len() {
+                continue 'outer;
+            }
+            idx[d] = 0;
+        }
+        break;
+    }
+    if rank == 0 {
+        // Scalars: one piece, local if replicated (always is).
+        pieces.push(SourcePiece { src: me, region: Region::full(shape) });
+    }
+    pieces
+}
+
+/// Total bytes fetched from remote devices for this gather.
+pub fn remote_bytes(pieces: &[SourcePiece], me: usize, dtype_bytes: u64) -> u64 {
+    pieces
+        .iter()
+        .filter(|p| p.src != me)
+        .map(|p| p.region.elements() * dtype_bytes)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::Tile;
+
+    const R: Tile = Tile::Split(0);
+    const C: Tile = Tile::Split(1);
+    const REP: Tile = Tile::Rep;
+
+    #[test]
+    fn local_when_resident_covers() {
+        // Row-split tensor, device wants its own rows: all local.
+        let pieces = gather_sources(&[8, 4], &vec![R], 2, 0, &Region {
+            offset: vec![0, 0],
+            shape: vec![4, 4],
+        });
+        assert!(pieces.iter().all(|p| p.src == 0));
+        let total: u64 = pieces.iter().map(|p| p.region.elements()).sum();
+        assert_eq!(total, 16);
+    }
+
+    #[test]
+    fn figure7b_ghost_fetch() {
+        // Figure 7(b): tensor resident C (col-split), device 0 needs its
+        // row half (C -> R conversion). It owns the top-left quarter and
+        // must fetch the top-right quarter from device 1.
+        let target = Region { offset: vec![0, 0], shape: vec![4, 8] };
+        let pieces = gather_sources(&[8, 8], &vec![C], 2, 0, &target);
+        let local: u64 = pieces.iter().filter(|p| p.src == 0).map(|p| p.region.elements()).sum();
+        let remote = remote_bytes(&pieces, 0, 4);
+        assert_eq!(local, 16);
+        assert_eq!(remote, 16 * 4); // one quarter of 64 elements × 4 bytes
+        // Matches the conversion-cost table: c(C -> R) = S/2 across both
+        // devices = S/4 per device.
+        let s: u64 = 8 * 8 * 4;
+        assert_eq!(remote, s / 4);
+    }
+
+    #[test]
+    fn replicated_source_all_local() {
+        let target = Region { offset: vec![2, 0], shape: vec![4, 8] };
+        let pieces = gather_sources(&[8, 8], &vec![REP], 2, 1, &target);
+        assert_eq!(remote_bytes(&pieces, 1, 4), 0);
+    }
+
+    #[test]
+    fn pieces_tile_target_exactly() {
+        for (seq, me) in [(vec![R, C], 2usize), (vec![C, R], 1), (vec![R, REP], 3)] {
+            let target = Region { offset: vec![0, 2], shape: vec![6, 4] };
+            let pieces = gather_sources(&[8, 8], &seq, 4, me, &target);
+            let total: u64 = pieces.iter().map(|p| p.region.elements()).sum();
+            assert_eq!(total, target.elements(), "seq {seq:?}");
+            // No overlaps: pairwise disjoint.
+            for i in 0..pieces.len() {
+                for j in i + 1..pieces.len() {
+                    assert!(pieces[i].region.intersect(&pieces[j].region).is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_gather_from_split() {
+        // Split -> Rep conversion: device fetches everything it misses.
+        let target = Region::full(&[8, 8]);
+        let pieces = gather_sources(&[8, 8], &vec![R, R], 4, 0, &target);
+        // Owns 2 rows of 8 = 16 elements; fetches 48.
+        assert_eq!(remote_bytes(&pieces, 0, 4), 48 * 4);
+    }
+}

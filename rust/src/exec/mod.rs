@@ -1,0 +1,23 @@
+//! Execution-graph construction (paper §5).
+//!
+//! A k-cut plan assigns every tensor a [`crate::tiling::TileSeq`]; this
+//! module turns that into concrete *shards*: which axis-aligned region of
+//! each tensor lives on which device ([`region`]), which ghost regions an
+//! operator must gather before it can run, where each missing cell is
+//! fetched from ([`gather`]), and how device ids map onto the interconnect
+//! hierarchy ([`placement`], §5.1).
+//!
+//! The same machinery serves two consumers:
+//! - the **simulator** ([`crate::sim`]) reads per-link byte volumes;
+//! - the **real engine** ([`crate::runtime::engine`]) moves actual f32
+//!   buffers between worker threads along exactly these edges.
+
+mod gather;
+mod placement;
+mod region;
+mod shard;
+
+pub use gather::{gather_sources, remote_bytes, SourcePiece};
+pub use placement::{cut_of_pair, group_peers, Placement};
+pub use region::{cut_bit, resident_region, Region};
+pub use shard::{build_shard_tasks, ShardTask};

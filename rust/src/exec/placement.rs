@@ -1,0 +1,95 @@
+//! Tile placement on the interconnect hierarchy (paper §5.1).
+//!
+//! Device ids are assigned so that the *first* cut (the most expensive,
+//! Theorem 1) splits ids at the most-significant bit — i.e. across the
+//! *slowest* interconnect tier — and each deeper cut lands on a faster
+//! tier. Two devices' traffic crosses the tier of their highest differing
+//! id bit.
+
+/// A named interconnect hierarchy: `tiers[0]` is the slowest link (crossed
+/// by the first cut), `tiers[k-1]` the fastest.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub tiers: Vec<String>,
+}
+
+impl Placement {
+    /// The paper's testbed: one p2.8xlarge with 8 GPUs on a PCIe tree —
+    /// QPI between CPU sockets, then PCIe switches, then direct PCIe.
+    pub fn p2_8xlarge() -> Self {
+        Placement {
+            tiers: vec!["QPI".into(), "PCIe-switch".into(), "PCIe".into()],
+        }
+    }
+
+    /// A flat hierarchy with `k` identical tiers (unit tests, simulator
+    /// defaults beyond 8 devices).
+    pub fn flat(k: usize, name: &str) -> Self {
+        Placement { tiers: (0..k).map(|i| format!("{name}{i}")).collect() }
+    }
+
+    pub fn k(&self) -> usize {
+        self.tiers.len()
+    }
+}
+
+/// The cut index (= interconnect tier) that traffic between devices `a`
+/// and `b` crosses, among `2^k` devices: the highest differing id bit.
+/// Returns `None` for `a == b` (local).
+pub fn cut_of_pair(a: usize, b: usize, k: usize) -> Option<usize> {
+    if a == b {
+        return None;
+    }
+    let h = usize::BITS as usize - 1 - (a ^ b).leading_zeros() as usize;
+    Some(k - 1 - h)
+}
+
+/// All devices reachable from `d` by flipping exactly the given cut bits —
+/// the reduction group for an output produced `red` at those cuts.
+pub fn group_peers(d: usize, cuts: &[usize], k: usize) -> Vec<usize> {
+    let mut peers = vec![d];
+    for &c in cuts {
+        let bit = 1usize << (k - 1 - c);
+        let mut next = Vec::with_capacity(peers.len() * 2);
+        for &p in &peers {
+            next.push(p);
+            next.push(p ^ bit);
+        }
+        peers = next;
+    }
+    peers.sort_unstable();
+    peers.dedup();
+    peers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_cut_crosses_slowest_tier() {
+        // 8 devices, k=3: ids 0-3 vs 4-7 differ at the MSB = tier 0 (QPI).
+        assert_eq!(cut_of_pair(0, 4, 3), Some(0));
+        assert_eq!(cut_of_pair(3, 7, 3), Some(0));
+        // Within a quad, pairs differing at bit 1 cross tier 1.
+        assert_eq!(cut_of_pair(0, 2, 3), Some(1));
+        // Adjacent ids cross the fastest tier.
+        assert_eq!(cut_of_pair(6, 7, 3), Some(2));
+        assert_eq!(cut_of_pair(5, 5, 3), None);
+    }
+
+    #[test]
+    fn reduce_groups() {
+        assert_eq!(group_peers(0, &[2], 3), vec![0, 1]);
+        assert_eq!(group_peers(5, &[0], 3), vec![1, 5]);
+        assert_eq!(group_peers(0, &[0, 2], 3), vec![0, 1, 4, 5]);
+        assert_eq!(group_peers(3, &[], 3), vec![3]);
+    }
+
+    #[test]
+    fn testbed_tiers() {
+        let p = Placement::p2_8xlarge();
+        assert_eq!(p.k(), 3);
+        assert_eq!(p.tiers[0], "QPI");
+    }
+}

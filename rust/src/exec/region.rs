@@ -1,0 +1,145 @@
+//! Axis-aligned shard regions under recursive bisection.
+//!
+//! A `TileSeq` applied to a tensor partitions it into a grid of equal tiles
+//! (Theorem 2); each device's *resident region* is determined by reading
+//! the device id as a bit string, one bit per cut — bit `k-1-i` selects the
+//! half taken at cut `i`, so that the first (outermost, slowest-link) cut
+//! splits device ids into two contiguous ranges, matching §5.1's placement.
+
+use crate::tiling::{Tile, TileSeq};
+
+/// An axis-aligned box within a tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub offset: Vec<usize>,
+    pub shape: Vec<usize>,
+}
+
+impl Region {
+    pub fn full(shape: &[usize]) -> Self {
+        Region { offset: vec![0; shape.len()], shape: shape.to_vec() }
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shape.iter().any(|&d| d == 0)
+    }
+
+    /// Intersection of two boxes (empty-shaped region if disjoint).
+    pub fn intersect(&self, other: &Region) -> Region {
+        let rank = self.offset.len();
+        let mut offset = Vec::with_capacity(rank);
+        let mut shape = Vec::with_capacity(rank);
+        for d in 0..rank {
+            let lo = self.offset[d].max(other.offset[d]);
+            let hi = (self.offset[d] + self.shape[d]).min(other.offset[d] + other.shape[d]);
+            offset.push(lo);
+            shape.push(hi.saturating_sub(lo));
+        }
+        Region { offset, shape }
+    }
+
+    /// Whether `other` is entirely inside `self`.
+    pub fn contains(&self, other: &Region) -> bool {
+        self.intersect(other) == *other
+    }
+}
+
+/// The bit of device id `d` that drives cut `i` (of `k`): the outermost cut
+/// uses the most-significant bit so groups are contiguous id ranges.
+pub fn cut_bit(d: usize, i: usize, k: usize) -> usize {
+    (d >> (k - 1 - i)) & 1
+}
+
+/// The resident region of a tensor of `shape` on device `d` under `seq`
+/// (`seq.len() == k` cuts).
+pub fn resident_region(shape: &[usize], seq: &TileSeq, d: usize) -> Region {
+    let k = seq.len();
+    let mut r = Region::full(shape);
+    for (i, t) in seq.iter().enumerate() {
+        if let Tile::Split(dim) = t {
+            let half = r.shape[*dim] / 2;
+            if cut_bit(d, i, k) == 1 {
+                r.offset[*dim] += half;
+            }
+            r.shape[*dim] = half;
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::Tile;
+
+    const R: Tile = Tile::Split(0);
+    const C: Tile = Tile::Split(1);
+    const REP: Tile = Tile::Rep;
+
+    #[test]
+    fn single_row_cut() {
+        let top = resident_region(&[8, 4], &vec![R], 0);
+        let bot = resident_region(&[8, 4], &vec![R], 1);
+        assert_eq!(top, Region { offset: vec![0, 0], shape: vec![4, 4] });
+        assert_eq!(bot, Region { offset: vec![4, 0], shape: vec![4, 4] });
+    }
+
+    #[test]
+    fn rc_grid_four_devices() {
+        // Figure 4(b) right: RC partitions into four blocks.
+        let seq = vec![R, C];
+        let shapes: Vec<Region> = (0..4).map(|d| resident_region(&[8, 8], &seq, d)).collect();
+        assert_eq!(shapes[0].offset, vec![0, 0]);
+        assert_eq!(shapes[1].offset, vec![0, 4]); // same row half, other col
+        assert_eq!(shapes[2].offset, vec![4, 0]);
+        assert_eq!(shapes[3].offset, vec![4, 4]);
+        for s in &shapes {
+            assert_eq!(s.shape, vec![4, 4]);
+        }
+    }
+
+    #[test]
+    fn replication_keeps_full() {
+        for d in 0..4 {
+            let r = resident_region(&[8, 8], &vec![REP, REP], d);
+            assert_eq!(r, Region::full(&[8, 8]));
+        }
+    }
+
+    #[test]
+    fn hybrid_rr_quarters_rows() {
+        // Figure 4(b) left: RR = four-way row tiling.
+        let seq = vec![R, R];
+        for d in 0..4 {
+            let r = resident_region(&[8, 8], &seq, d);
+            assert_eq!(r.offset, vec![2 * d, 0]);
+            assert_eq!(r.shape, vec![2, 8]);
+        }
+    }
+
+    #[test]
+    fn shards_partition_split_tensor() {
+        // Splits tile the tensor exactly: disjoint and covering.
+        let seq = vec![R, C, R];
+        let mut total = 0u64;
+        for d in 0..8 {
+            total += resident_region(&[8, 8], &seq, d).elements();
+        }
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn intersect_and_contains() {
+        let a = Region { offset: vec![0, 0], shape: vec![4, 4] };
+        let b = Region { offset: vec![2, 2], shape: vec![4, 4] };
+        let i = a.intersect(&b);
+        assert_eq!(i, Region { offset: vec![2, 2], shape: vec![2, 2] });
+        assert!(a.contains(&i));
+        let disjoint = Region { offset: vec![6, 6], shape: vec![2, 2] };
+        assert!(a.intersect(&disjoint).is_empty());
+    }
+}

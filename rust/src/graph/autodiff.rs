@@ -1,0 +1,311 @@
+//! Reverse-mode differentiation over the semantic graph.
+//!
+//! Existing deep-learning frontends "automatically derive the computation
+//! required for the backward propagation and handle parameter updates"
+//! (paper §2.1); this module is that substrate. Given a forward graph ending
+//! in a [`OpKind::SoftmaxXent`] loss, it appends:
+//!
+//! - the backward operators (the `dC/dx` and `dC/dW` multiplications of
+//!   §2.1, conv backward-data/-filter, ReLU masking, bias reduction), and
+//! - one [`OpKind::SgdUpdate`] per parameter.
+//!
+//! The result is the full training-step graph the planner tiles — for an
+//! N-layer MLP, the 3N matrix multiplications the paper counts in §4.2.2.
+
+use std::collections::HashMap;
+
+use super::{EwKind, GraphBuilder, OpKind, TensorId, TensorKind};
+
+/// Appends backward ops + SGD updates for every weight reachable from
+/// `loss`. Returns the map `weight tensor -> updated-weight tensor`.
+///
+/// Panics if the forward graph contains transposed matmuls (the builder
+/// only emits plain ones in forward position) or if `loss` is not produced
+/// by a `SoftmaxXent` op.
+pub fn append_backward(b: &mut GraphBuilder, loss: TensorId) -> HashMap<TensorId, TensorId> {
+    let loss_op = b
+        .graph
+        .producer(loss)
+        .expect("loss must be produced by an op");
+    assert_eq!(
+        b.graph.ops[loss_op].kind,
+        OpKind::SoftmaxXent,
+        "loss must be a SoftmaxXent output"
+    );
+
+    // grads[t] = gradient tensor of t (accumulated if multiple consumers).
+    let mut grads: HashMap<TensorId, TensorId> = HashMap::new();
+    let mut order = b.graph.topo_order();
+    order.reverse();
+
+    let accumulate = |b: &mut GraphBuilder, grads: &mut HashMap<TensorId, TensorId>, t: TensorId, g: TensorId| {
+        match grads.get(&t) {
+            None => {
+                grads.insert(t, g);
+            }
+            Some(&prev) => {
+                let name = format!("{}.grad_acc", b.graph.tensors[t].name);
+                let sum = b.add(&name, prev, g);
+                grads.insert(t, sum);
+            }
+        }
+    };
+
+    for op_id in order {
+        let op = b.graph.ops[op_id].clone();
+        let out = op.outputs[0];
+        // The loss op seeds its own gradient; every other op needs the
+        // gradient of its output to have been produced already.
+        let d_out = if op.kind == OpKind::SoftmaxXent {
+            None
+        } else {
+            match grads.get(&out) {
+                Some(&g) => Some(g),
+                None => continue, // dead branch: not on the loss's cone
+            }
+        };
+
+        match op.kind {
+            OpKind::SoftmaxXent => {
+                let (logits, labels) = (op.inputs[0], op.inputs[1]);
+                let shape = b.graph.tensors[logits].shape.clone();
+                let g = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::SoftmaxXentGrad,
+                    vec![logits, labels],
+                    &shape,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, logits, g);
+            }
+            OpKind::MatMul { ta, tb } => {
+                assert!(!ta && !tb, "autodiff only supports plain forward matmuls");
+                let (a, w) = (op.inputs[0], op.inputs[1]);
+                let dz = d_out.unwrap();
+                // da = dz · wᵀ  — the activation-gradient multiplication.
+                let sa = b.graph.tensors[a].shape.clone();
+                let da = b.raw_op(
+                    &format!("{}.bwd_data", op.name),
+                    OpKind::MatMul { ta: false, tb: true },
+                    vec![dz, w],
+                    &sa,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, a, da);
+                // dw = aᵀ · dz  — the weight-gradient multiplication.
+                let sw = b.graph.tensors[w].shape.clone();
+                let dw = b.raw_op(
+                    &format!("{}.bwd_w", op.name),
+                    OpKind::MatMul { ta: true, tb: false },
+                    vec![a, dz],
+                    &sw,
+                    TensorKind::WeightGrad,
+                );
+                accumulate(b, &mut grads, w, dw);
+            }
+            OpKind::Conv2d { stride, pad } => {
+                let (x, w) = (op.inputs[0], op.inputs[1]);
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd_data", op.name),
+                    OpKind::Conv2dBwdData { stride, pad },
+                    vec![dz, w],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+                let sw = b.graph.tensors[w].shape.clone();
+                let dw = b.raw_op(
+                    &format!("{}.bwd_filter", op.name),
+                    OpKind::Conv2dBwdFilter { stride, pad },
+                    vec![x, dz],
+                    &sw,
+                    TensorKind::WeightGrad,
+                );
+                accumulate(b, &mut grads, w, dw);
+            }
+            OpKind::BiasAdd => {
+                let (x, bias) = (op.inputs[0], op.inputs[1]);
+                let dz = d_out.unwrap();
+                // dx = dz (identity; reuse the tensor — no op emitted).
+                accumulate(b, &mut grads, x, dz);
+                let sb = b.graph.tensors[bias].shape.clone();
+                let db = b.raw_op(
+                    &format!("{}.bwd_b", op.name),
+                    OpKind::ReduceSumRows,
+                    vec![dz],
+                    &sb,
+                    TensorKind::WeightGrad,
+                );
+                accumulate(b, &mut grads, bias, db);
+            }
+            OpKind::Pool2 => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                // Routing needs the forward activations to know the argmax.
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::Pool2Bwd,
+                    vec![dz, x, out],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::Flatten => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::FlattenBwd,
+                    vec![dz],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::Ew(EwKind::Relu) => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::Ew(EwKind::ReluGrad),
+                    vec![dz, out],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::Ew(EwKind::Add) => {
+                let dz = d_out.unwrap();
+                for &inp in &op.inputs {
+                    accumulate(b, &mut grads, inp, dz);
+                }
+            }
+            other => panic!("no gradient rule for forward op {other:?}"),
+        }
+    }
+
+    // SGD updates for every parameter that received a gradient.
+    let weights: Vec<TensorId> = b
+        .graph
+        .tensors
+        .iter()
+        .filter(|t| t.kind == TensorKind::Weight)
+        .map(|t| t.id)
+        .collect();
+    let mut updated = HashMap::new();
+    for w in weights {
+        if let Some(&g) = grads.get(&w) {
+            let sw = b.graph.tensors[w].shape.clone();
+            let name = format!("{}.sgd", b.graph.tensors[w].name);
+            let w2 = b.raw_op(&name, OpKind::SgdUpdate, vec![w, g], &sw, TensorKind::UpdatedWeight);
+            updated.insert(w, w2);
+        }
+    }
+    updated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    /// Builds the forward graph of an L-layer MLP (matmul + bias + relu per
+    /// hidden layer, linear last layer, softmax loss).
+    pub fn mlp_train_graph(batch: usize, dims: &[usize]) -> (GraphBuilder, TensorId) {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        let nl = dims.len() - 1;
+        for l in 0..nl {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+            let bias = b.weight(&format!("b{l}"), &[dims[l + 1]]);
+            h = b.bias_add(&format!("fc{l}.bias"), h, bias);
+            if l + 1 < nl {
+                h = b.relu(&format!("fc{l}.relu"), h);
+            }
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        (b, loss)
+    }
+
+    #[test]
+    fn mlp_backward_op_count() {
+        // Paper §4.2.2: an N-layer MLP has 3N matrix multiplications
+        // (forward + backward-data + backward-weight).
+        let (mut b, loss) = mlp_train_graph(32, &[16, 16, 16, 16]);
+        append_backward(&mut b, loss);
+        let g = b.finish();
+        let n_matmul = g.ops.iter().filter(|o| matches!(o.kind, OpKind::MatMul { .. })).count();
+        // 3 layers forward + 3 bwd_data + 3 bwd_w = 9 = 3N.
+        assert_eq!(n_matmul, 9);
+    }
+
+    #[test]
+    fn every_weight_gets_update() {
+        let (mut b, loss) = mlp_train_graph(8, &[4, 4, 4]);
+        let updated = append_backward(&mut b, loss);
+        let g = b.finish();
+        let n_weights = g
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .count();
+        assert_eq!(updated.len(), n_weights);
+        let n_updates = g.ops.iter().filter(|o| o.kind == OpKind::SgdUpdate).count();
+        assert_eq!(n_updates, n_weights);
+    }
+
+    #[test]
+    fn update_shapes_match_weights() {
+        let (mut b, loss) = mlp_train_graph(8, &[4, 6, 3]);
+        let updated = append_backward(&mut b, loss);
+        for (w, w2) in updated {
+            assert_eq!(b.graph.tensors[w].shape, b.graph.tensors[w2].shape);
+        }
+    }
+
+    #[test]
+    fn backward_graph_is_acyclic() {
+        let (mut b, loss) = mlp_train_graph(8, &[4, 4, 4, 4, 4]);
+        append_backward(&mut b, loss);
+        let g = b.finish();
+        let order = g.topo_order(); // panics on cycles
+        assert_eq!(order.len(), g.ops.len());
+    }
+
+    #[test]
+    fn conv_backward_ops() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 6, 6, 3]);
+        let w = b.weight("w", &[3, 3, 3, 16]);
+        let z = b.conv2d("c", x, w, 1, 1);
+        // Global-average-pool-free toy head: flatten via matmul is overkill;
+        // just check conv grads directly through a softmax over channels.
+        let lbl = b.label("y", &[8, 6, 6, 16]);
+        let loss = b.softmax_xent("loss", z, lbl);
+        append_backward(&mut b, loss);
+        let g = b.finish();
+        assert!(g.ops.iter().any(|o| matches!(o.kind, OpKind::Conv2dBwdData { .. })));
+        assert!(g.ops.iter().any(|o| matches!(o.kind, OpKind::Conv2dBwdFilter { .. })));
+    }
+
+    #[test]
+    fn relu_grad_consumes_activation() {
+        let (mut b, loss) = mlp_train_graph(8, &[4, 4, 4]);
+        append_backward(&mut b, loss);
+        let g = b.finish();
+        let rg = g
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::Ew(EwKind::ReluGrad))
+            .expect("relu grad emitted");
+        assert_eq!(rg.inputs.len(), 2);
+    }
+}

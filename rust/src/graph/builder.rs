@@ -1,0 +1,243 @@
+//! Array-language builder for semantic dataflow graphs.
+//!
+//! Plays the role of the TENSORFLOW/MXNET frontend in the paper's Figure 3:
+//! the user (here: `models/*`) expresses the forward computation; shapes are
+//! inferred and checked; `autodiff::append_backward` then derives the
+//! backward half and the SGD updates.
+
+use super::{EwKind, Graph, Op, OpId, OpKind, TensorId, TensorInfo, TensorKind};
+
+/// Builder over an owned [`Graph`].
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    pub graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> Graph {
+        self.graph
+    }
+
+    fn add_tensor(&mut self, name: &str, shape: &[usize], kind: TensorKind) -> TensorId {
+        let id = self.graph.tensors.len();
+        self.graph.tensors.push(TensorInfo {
+            id,
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            kind,
+            dtype_bytes: 4,
+        });
+        id
+    }
+
+    fn add_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        out_shape: &[usize],
+        out_kind: TensorKind,
+    ) -> (OpId, TensorId) {
+        let out = self.add_tensor(&format!("{name}.out"), out_shape, out_kind);
+        let id = self.graph.ops.len();
+        self.graph.ops.push(Op {
+            id,
+            kind,
+            inputs,
+            outputs: vec![out],
+            name: name.to_string(),
+        });
+        (id, out)
+    }
+
+    fn shape(&self, t: TensorId) -> &[usize] {
+        &self.graph.tensors[t].shape
+    }
+
+    // -- graph inputs -------------------------------------------------------
+
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.add_tensor(name, shape, TensorKind::Input)
+    }
+
+    pub fn label(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.add_tensor(name, shape, TensorKind::Label)
+    }
+
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.add_tensor(name, shape, TensorKind::Weight)
+    }
+
+    // -- operators ----------------------------------------------------------
+
+    /// `z = op(a) · op(b)` with optional transposes.
+    pub fn matmul(&mut self, name: &str, a: TensorId, b: TensorId, ta: bool, tb: bool) -> TensorId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 2, "{name}: lhs must be rank 2, got {sa:?}");
+        assert_eq!(sb.len(), 2, "{name}: rhs must be rank 2, got {sb:?}");
+        let (m, ka) = if ta { (sa[1], sa[0]) } else { (sa[0], sa[1]) };
+        let (kb, n) = if tb { (sb[1], sb[0]) } else { (sb[0], sb[1]) };
+        assert_eq!(ka, kb, "{name}: contraction mismatch {sa:?}x{sb:?} (ta={ta}, tb={tb})");
+        let kind = self.out_kind_for(a, b);
+        self.add_op(name, OpKind::MatMul { ta, tb }, vec![a, b], &[m, n], kind)
+            .1
+    }
+
+    /// NHWC ⊛ HWIO convolution.
+    pub fn conv2d(&mut self, name: &str, x: TensorId, w: TensorId, stride: usize, pad: usize) -> TensorId {
+        let (sx, sw) = (self.shape(x).to_vec(), self.shape(w).to_vec());
+        assert_eq!(sx.len(), 4, "{name}: activations must be NHWC");
+        assert_eq!(sw.len(), 4, "{name}: filters must be HWIO");
+        let (n, h, wd, cin) = (sx[0], sx[1], sx[2], sx[3]);
+        let (kh, kw, cin2, cout) = (sw[0], sw[1], sw[2], sw[3]);
+        assert_eq!(cin, cin2, "{name}: channel mismatch");
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (wd + 2 * pad - kw) / stride + 1;
+        self.add_op(
+            name,
+            OpKind::Conv2d { stride, pad },
+            vec![x, w],
+            &[n, oh, ow, cout],
+            TensorKind::Activation,
+        )
+        .1
+    }
+
+    /// 2×2/stride-2 max pool over NHWC.
+    pub fn pool2(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(sx.len(), 4, "{name}: pool input must be NHWC");
+        let out = [sx[0], sx[1] / 2, sx[2] / 2, sx[3]];
+        self.add_op(name, OpKind::Pool2, vec![x], &out, TensorKind::Activation).1
+    }
+
+    /// Flatten NHWC to [N, H*W*C] for the fully-connected head.
+    pub fn flatten(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(sx.len(), 4, "{name}: flatten input must be NHWC");
+        let out = [sx[0], sx[1] * sx[2] * sx[3]];
+        self.add_op(name, OpKind::Flatten, vec![x], &out, TensorKind::Activation).1
+    }
+
+    pub fn bias_add(&mut self, name: &str, x: TensorId, b: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        let sb = self.shape(b).to_vec();
+        assert_eq!(sb.len(), 1, "{name}: bias must be rank 1");
+        assert_eq!(*sx.last().unwrap(), sb[0], "{name}: bias length mismatch");
+        self.add_op(name, OpKind::BiasAdd, vec![x, b], &sx, TensorKind::Activation)
+            .1
+    }
+
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        self.add_op(name, OpKind::Ew(EwKind::Relu), vec![x], &sx, TensorKind::Activation)
+            .1
+    }
+
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let sa = self.shape(a).to_vec();
+        assert_eq!(sa, self.shape(b), "{name}: elementwise shape mismatch");
+        let kind = self.out_kind_for(a, b);
+        self.add_op(name, OpKind::Ew(EwKind::Add), vec![a, b], &sa, kind).1
+    }
+
+    /// Mean softmax cross-entropy loss (scalar output).
+    pub fn softmax_xent(&mut self, name: &str, logits: TensorId, labels: TensorId) -> TensorId {
+        assert_eq!(self.shape(logits), self.shape(labels), "{name}: logits/labels mismatch");
+        self.add_op(name, OpKind::SoftmaxXent, vec![logits, labels], &[], TensorKind::Scalar)
+            .1
+    }
+
+    // -- internal helpers (used by autodiff, public within the crate) -------
+
+    pub(crate) fn raw_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        out_shape: &[usize],
+        out_kind: TensorKind,
+    ) -> TensorId {
+        self.add_op(name, kind, inputs, out_shape, out_kind).1
+    }
+
+    /// Gradients of gradients stay gradients; anything fed by activations
+    /// stays an activation.
+    fn out_kind_for(&self, a: TensorId, b: TensorId) -> TensorKind {
+        let ka = self.graph.tensors[a].kind;
+        let kb = self.graph.tensors[b].kind;
+        use TensorKind::*;
+        if matches!(ka, Gradient | WeightGrad) || matches!(kb, Gradient | WeightGrad) {
+            Gradient
+        } else {
+            Activation
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_layer_shapes() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[400, 300]);
+        let w = b.weight("w", &[300, 300]);
+        let h = b.matmul("fc", x, w, false, false);
+        assert_eq!(b.shape(h), &[400, 300]);
+        let bias = b.weight("b", &[300]);
+        let h = b.bias_add("fc.b", h, bias);
+        let h = b.relu("fc.r", h);
+        assert_eq!(b.graph.tensors[h].shape, vec![400, 300]);
+        assert_eq!(b.graph.ops.len(), 3);
+    }
+
+    #[test]
+    fn transposed_matmul_shapes() {
+        let mut b = GraphBuilder::new();
+        let a = b.input("a", &[8, 4]);
+        let c = b.input("c", &[8, 6]);
+        // aᵀ · c : (4x8)·(8x6) -> 4x6
+        let z = b.matmul("t", a, c, true, false);
+        assert_eq!(b.shape(z), &[4, 6]);
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[256, 24, 24, 3]);
+        let w = b.weight("w", &[3, 3, 3, 512]);
+        let z = b.conv2d("c1", x, w, 1, 1);
+        assert_eq!(b.shape(z), &[256, 24, 24, 512]);
+        let w2 = b.weight("w2", &[3, 3, 512, 64]);
+        let z2 = b.conv2d("c2", z, w2, 2, 0);
+        assert_eq!(b.shape(z2), &[256, 11, 11, 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn matmul_shape_check() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 5]);
+        let w = b.weight("w", &[6, 7]);
+        b.matmul("bad", x, w, false, false);
+    }
+
+    #[test]
+    fn weight_bytes_paper_example() {
+        // §2.2: five 300x300 f32 weights = 1.8 MB of parameters.
+        let mut b = GraphBuilder::new();
+        let mut x = b.input("x", &[400, 300]);
+        for l in 0..5 {
+            let w = b.weight(&format!("w{l}"), &[300, 300]);
+            x = b.matmul(&format!("fc{l}"), x, w, false, false);
+        }
+        assert_eq!(b.graph.weight_bytes(), 1_800_000);
+        assert_eq!(b.graph.activation_bytes(), 2_400_000);
+    }
+}

@@ -1,0 +1,194 @@
+//! BFS levelization of the dataflow graph (paper §4.2.2).
+//!
+//! The one-cut DP needs the ops organized into a list of levels such that
+//! ops sharing a tensor sit in the same or adjacent levels. The paper gets
+//! this by treating the dataflow graph as *undirected* (two ops are
+//! adjacent iff they share a tensor) and running BFS; the sequential layer
+//! structure of DNN training makes the level width a small constant.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::{Graph, OpId, TensorId};
+
+/// Ops organized into BFS levels plus the derived tensor partition the DP
+/// consumes.
+#[derive(Debug, Clone)]
+pub struct Levels {
+    /// `levels[l]` = the op ids in BFS level `l`.
+    pub levels: Vec<Vec<OpId>>,
+    /// `boundary[l]` = tensors shared between level `l` and level `l+1`
+    /// (the DP state variables τ_l). `boundary.len() == levels.len() - 1`.
+    pub boundary: Vec<Vec<TensorId>>,
+    /// `internal[l]` = tensors touched only by level `l`'s ops.
+    pub internal: Vec<Vec<TensorId>>,
+}
+
+/// Level index of the first level in which each tensor appears.
+fn op_tensors(g: &Graph, op: OpId) -> impl Iterator<Item = TensorId> + '_ {
+    let o = &g.ops[op];
+    o.inputs.iter().chain(o.outputs.iter()).copied()
+}
+
+/// Runs undirected BFS over the op graph and partitions tensors into
+/// per-level boundary/internal sets.
+///
+/// Panics if any tensor is touched by ops more than one level apart — that
+/// would make the chain DP unsound. BFS adjacency guarantees this cannot
+/// happen (ops sharing a tensor are adjacent), so the check is a cheap
+/// internal-consistency assertion.
+pub fn bfs_levels(g: &Graph) -> Levels {
+    let n = g.ops.len();
+    if n == 0 {
+        return Levels { levels: vec![], boundary: vec![], internal: vec![] };
+    }
+
+    // tensor -> ops touching it
+    let mut touching: HashMap<TensorId, Vec<OpId>> = HashMap::new();
+    for (i, _) in g.ops.iter().enumerate() {
+        for t in op_tensors(g, i) {
+            touching.entry(t).or_default().push(i);
+        }
+    }
+
+    // adjacency: ops sharing a tensor
+    let mut adj: Vec<Vec<OpId>> = vec![vec![]; n];
+    for ops in touching.values() {
+        for (i, &a) in ops.iter().enumerate() {
+            for &b in &ops[i + 1..] {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+    }
+
+    // BFS from op 0 (graphs are connected for every model in the zoo; any
+    // stray component is appended level-wise at the end).
+    let mut level_of = vec![usize::MAX; n];
+    let mut max_level = 0usize;
+    let mut queue = VecDeque::new();
+    for start in 0..n {
+        if level_of[start] != usize::MAX {
+            continue;
+        }
+        // Attach later components after the current deepest level.
+        let base = if start == 0 { 0 } else { max_level + 1 };
+        level_of[start] = base;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            max_level = max_level.max(level_of[u]);
+            for &v in &adj[u] {
+                if level_of[v] == usize::MAX {
+                    level_of[v] = level_of[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+
+    let mut levels: Vec<Vec<OpId>> = vec![vec![]; max_level + 1];
+    for (op, &l) in level_of.iter().enumerate() {
+        levels[l].push(op);
+    }
+
+    // Tensor spans: min/max level of touching ops.
+    let mut boundary: Vec<Vec<TensorId>> = vec![vec![]; levels.len().saturating_sub(1)];
+    let mut internal: Vec<Vec<TensorId>> = vec![vec![]; levels.len()];
+    let mut tensor_ids: Vec<TensorId> = touching.keys().copied().collect();
+    tensor_ids.sort_unstable();
+    for t in tensor_ids {
+        let ops = &touching[&t];
+        let lo = ops.iter().map(|&o| level_of[o]).min().unwrap();
+        let hi = ops.iter().map(|&o| level_of[o]).max().unwrap();
+        assert!(
+            hi - lo <= 1,
+            "tensor {t} spans levels {lo}..{hi}; BFS levelization is unsound"
+        );
+        if lo == hi {
+            internal[lo].push(t);
+        } else {
+            boundary[lo].push(t);
+        }
+    }
+
+    Levels { levels, boundary, internal }
+}
+
+impl Levels {
+    /// Widest level (op count) — the `c` in the paper's `O(3^c · N)` bound.
+    pub fn max_width(&self) -> usize {
+        self.levels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Largest number of simultaneously-live DP state tensors.
+    pub fn max_boundary(&self) -> usize {
+        self.boundary.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+
+    fn mlp(batch: usize, dims: &[usize]) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        for l in 0..dims.len() - 1 {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn every_op_appears_once() {
+        let g = mlp(32, &[16, 16, 16, 16]);
+        let lv = bfs_levels(&g);
+        let total: usize = lv.levels.iter().map(Vec::len).sum();
+        assert_eq!(total, g.ops.len());
+    }
+
+    #[test]
+    fn tensors_span_at_most_two_levels() {
+        // bfs_levels asserts internally; reaching here is the test.
+        let g = mlp(32, &[8, 8, 8, 8, 8, 8]);
+        let lv = bfs_levels(&g);
+        assert!(lv.levels.len() >= 3);
+    }
+
+    #[test]
+    fn width_stays_bounded_as_depth_grows() {
+        // The paper's argument: for layered models the level width is a
+        // constant, so the DP is linear in depth.
+        let w_small = bfs_levels(&mlp(8, &[4; 4])).max_width();
+        let w_big = bfs_levels(&mlp(8, &[4; 12])).max_width();
+        assert!(w_big <= w_small + 2, "width grew with depth: {w_small} -> {w_big}");
+    }
+
+    #[test]
+    fn boundary_plus_internal_cover_all_tensors() {
+        let g = mlp(16, &[8, 8, 8]);
+        let lv = bfs_levels(&g);
+        let mut seen: Vec<TensorId> = lv
+            .boundary
+            .iter()
+            .chain(lv.internal.iter())
+            .flatten()
+            .copied()
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        // Every tensor touched by at least one op is covered exactly once.
+        let mut touched: Vec<TensorId> = g
+            .ops
+            .iter()
+            .flat_map(|o| o.inputs.iter().chain(o.outputs.iter()).copied())
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        assert_eq!(seen, touched);
+    }
+}

@@ -1,0 +1,159 @@
+//! The semantic dataflow graph — the serial training computation SOYBEAN
+//! parallelizes (paper §2.1, Figure 1b).
+//!
+//! This is the substrate the paper inherited from MXNet's frontend: an
+//! array-language builder that records forward operators, derives the
+//! backward operators by reverse-mode differentiation, and appends the SGD
+//! parameter updates. The result is a mostly-serial graph of tensor
+//! operators over which the tiling planner optimizes.
+
+mod autodiff;
+mod builder;
+mod levels;
+mod op;
+mod tensor;
+
+pub use autodiff::append_backward;
+pub use builder::GraphBuilder;
+pub use levels::{bfs_levels, Levels};
+pub use op::{EwKind, Op, OpId, OpKind};
+pub use tensor::{TensorId, TensorInfo, TensorKind};
+
+/// A dataflow graph of tensor operators.
+///
+/// Tensors and ops are stored in creation order; ids are dense indices.
+/// The graph is SSA-like: every tensor has exactly one producer (or is a
+/// graph input / parameter) and any number of consumers.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id]
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id]
+    }
+
+    /// The op producing `t`, if any (inputs and parameters have none).
+    pub fn producer(&self, t: TensorId) -> Option<OpId> {
+        self.ops.iter().position(|o| o.outputs.contains(&t))
+    }
+
+    /// All ops consuming `t`.
+    pub fn consumers(&self, t: TensorId) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.inputs.contains(&t))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total bytes of all weight tensors (the paper's "model size").
+    pub fn weight_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.bytes())
+            .sum()
+    }
+
+    /// Total bytes of all activation tensors produced by forward ops.
+    pub fn activation_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Activation)
+            .map(|t| t.bytes())
+            .sum()
+    }
+
+    /// Steady-state alias map: `alias[t]` is the tensor whose tiling `t`
+    /// must share. The training step runs every iteration, so an updated
+    /// parameter (`SgdUpdate` output) feeds the next iteration as the
+    /// parameter itself — the planner must give both the same tiling or the
+    /// "optimal" plan would dodge the parameter synchronization cost by
+    /// leaving updated weights scattered. All other tensors map to
+    /// themselves.
+    pub fn steady_state_aliases(&self) -> Vec<TensorId> {
+        let mut alias: Vec<TensorId> = (0..self.tensors.len()).collect();
+        for op in &self.ops {
+            if op.kind == OpKind::SgdUpdate {
+                alias[op.outputs[0]] = op.inputs[0];
+            }
+        }
+        alias
+    }
+
+    /// Topological order of ops (creation order is already topological for
+    /// builder-produced graphs; this validates and returns it).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        let mut ready: Vec<bool> = self
+            .tensors
+            .iter()
+            .map(|t| self.producer(t.id).is_none())
+            .collect();
+        let mut order = Vec::with_capacity(self.ops.len());
+        let mut emitted = vec![false; self.ops.len()];
+        loop {
+            let mut progressed = false;
+            for (i, op) in self.ops.iter().enumerate() {
+                if !emitted[i] && op.inputs.iter().all(|&t| ready[t]) {
+                    emitted[i] = true;
+                    for &o in &op.outputs {
+                        ready[o] = true;
+                    }
+                    order.push(i);
+                    progressed = true;
+                }
+            }
+            if order.len() == self.ops.len() {
+                return order;
+            }
+            assert!(progressed, "cycle in dataflow graph");
+        }
+    }
+
+    /// Human-readable dump (used by the `soybean inspect` subcommand).
+    pub fn dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for op in &self.ops {
+            let ins: Vec<String> = op
+                .inputs
+                .iter()
+                .map(|&t| format!("{}{:?}", self.tensors[t].name, self.tensors[t].shape))
+                .collect();
+            let outs: Vec<String> = op
+                .outputs
+                .iter()
+                .map(|&t| format!("{}{:?}", self.tensors[t].name, self.tensors[t].shape))
+                .collect();
+            let _ = writeln!(
+                s,
+                "op{:<3} {:<28} ({}) -> ({})",
+                op.id,
+                format!("{:?}", op.kind),
+                ins.join(", "),
+                outs.join(", ")
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::default();
+        assert_eq!(g.weight_bytes(), 0);
+        assert!(g.topo_order().is_empty());
+    }
+}

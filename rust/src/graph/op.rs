@@ -1,0 +1,113 @@
+//! Operator kinds of the training dataflow graph.
+//!
+//! The set covers everything the paper's evaluation needs: dense matmul
+//! (MLP layers and their backward passes), 2-D convolution with its two
+//! backward operators (CNN/AlexNet/VGG), elementwise activation functions,
+//! bias broadcast/reduction, softmax cross-entropy, and the SGD update.
+
+use super::TensorId;
+
+/// Dense index of an op within its graph.
+pub type OpId = usize;
+
+/// Elementwise operator flavors (same shape in, same shape out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Relu,
+    /// `relu_grad(dy, y)` — mask the upstream gradient by `y > 0`.
+    ReluGrad,
+    Add,
+    Mul,
+}
+
+/// Operator kinds. Shape legality is enforced by the [`GraphBuilder`];
+/// tiling semantics (aligned tilings, communication costs) are derived from
+/// these in `tiling::aligned`.
+///
+/// [`GraphBuilder`]: super::GraphBuilder
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// `Z = op(A) · op(B)` where `op` is optional transposition. The
+    /// backward multiplications of §2.1 (`dx = dy Wᵀ`, `dW = xᵀ dy`) are
+    /// expressed with the transpose flags, so the *stored* tensors keep a
+    /// single tiling while the planner reasons in logical row/col space.
+    MatMul { ta: bool, tb: bool },
+
+    /// NHWC ⊛ HWIO forward convolution.
+    Conv2d { stride: usize, pad: usize },
+    /// Gradient w.r.t. the input activations: `dX = dZ ⊛ rot180(W)`.
+    Conv2dBwdData { stride: usize, pad: usize },
+    /// Gradient w.r.t. the filter: `dW = Xᵀ ⊛ dZ`.
+    Conv2dBwdFilter { stride: usize, pad: usize },
+
+    /// Elementwise map over identically-shaped operands.
+    Ew(EwKind),
+
+    /// 2×2 max pooling with stride 2 over NHWC (AlexNet/VGG downsampling).
+    Pool2,
+    /// Gradient of [`OpKind::Pool2`]: routes `dz` back to the pre-pool shape.
+    Pool2Bwd,
+    /// `[N, H, W, C] -> [N, H·W·C]` (conv stack to FC head).
+    Flatten,
+    /// Gradient of [`OpKind::Flatten`].
+    FlattenBwd,
+
+    /// `x[M, N] + b[N]` with broadcast over rows.
+    BiasAdd,
+    /// Column sums: `x[M, N] -> [N]` (the bias gradient).
+    ReduceSumRows,
+
+    /// Mean softmax cross-entropy: `(logits[M, C], onehot[M, C]) -> scalar`.
+    /// Row-wise: may only be partitioned along the batch dimension.
+    SoftmaxXent,
+    /// Its gradient w.r.t. logits: `(logits, onehot) -> [M, C]`, row-wise.
+    SoftmaxXentGrad,
+
+    /// `w' = w - lr * g`. The learning rate is a scalar attribute (not a
+    /// graph tensor) so the tiling problem sees exactly the paper's graph.
+    SgdUpdate,
+}
+
+impl OpKind {
+    /// True for the three matmul-shaped operators (Eq. 2 applies directly).
+    pub fn is_matmul_like(&self) -> bool {
+        matches!(
+            self,
+            OpKind::MatMul { .. }
+                | OpKind::Conv2d { .. }
+                | OpKind::Conv2dBwdData { .. }
+                | OpKind::Conv2dBwdFilter { .. }
+        )
+    }
+
+    /// True for operators that the paper restricts to batch-dimension
+    /// partitioning (§4.5 "all other operators").
+    pub fn batch_only(&self) -> bool {
+        matches!(self, OpKind::SoftmaxXent | OpKind::SoftmaxXentGrad)
+    }
+}
+
+/// One operator instance: kind + operand/result tensor ids.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    /// Debug label, e.g. `"fc1.fwd"` or `"conv3.bwd_filter"`.
+    pub name: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert!(OpKind::MatMul { ta: false, tb: false }.is_matmul_like());
+        assert!(OpKind::Conv2dBwdFilter { stride: 1, pad: 0 }.is_matmul_like());
+        assert!(!OpKind::BiasAdd.is_matmul_like());
+        assert!(OpKind::SoftmaxXent.batch_only());
+        assert!(!OpKind::Ew(EwKind::Relu).batch_only());
+    }
+}

@@ -1,0 +1,90 @@
+//! Tensor metadata: shape, role, and size accounting.
+
+/// Dense index of a tensor within its graph.
+pub type TensorId = usize;
+
+/// The role a tensor plays in the training computation. The planner uses
+/// this both for reporting (describing a plan as "data parallel" requires
+/// knowing which tensors are weights) and for the §2.2-style accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Mini-batch input (the `x0` of Eq. 1).
+    Input,
+    /// Training labels / one-hot targets.
+    Label,
+    /// Model parameter (weight matrix or bias vector).
+    Weight,
+    /// Forward intermediate (layer activation).
+    Activation,
+    /// Backward intermediate (activation gradient).
+    Gradient,
+    /// Gradient of a parameter.
+    WeightGrad,
+    /// Updated parameter produced by the SGD step.
+    UpdatedWeight,
+    /// Scalar loss or other reduction output.
+    Scalar,
+}
+
+/// Shape + role record for one tensor.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    /// Logical dimensions. Scalars have an empty shape.
+    pub shape: Vec<usize>,
+    pub kind: TensorKind,
+    /// Bytes per element (4 for f32 throughout the paper's workloads).
+    pub dtype_bytes: usize,
+}
+
+impl TensorInfo {
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+
+    /// Total size in bytes — the unit of every communication cost in §4.
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.dtype_bytes as u64
+    }
+
+    /// Whether this tensor is a model parameter (weight or bias).
+    pub fn is_param(&self) -> bool {
+        self.kind == TensorKind::Weight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> TensorInfo {
+        TensorInfo {
+            id: 0,
+            name: "t".into(),
+            shape: shape.to_vec(),
+            kind: TensorKind::Activation,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn bytes_of_matrix() {
+        // The paper's §2.2 example: a 300x300 f32 weight is 0.36 MB;
+        // five of them are 1.8 MB.
+        assert_eq!(t(&[300, 300]).bytes(), 360_000);
+        assert_eq!(5 * t(&[300, 300]).bytes(), 1_800_000);
+        // and a 400x300 activation is 0.48 MB (x5 = 2.4 MB).
+        assert_eq!(t(&[400, 300]).bytes(), 480_000);
+    }
+
+    #[test]
+    fn scalar_is_one_element() {
+        assert_eq!(t(&[]).elements(), 1);
+        assert_eq!(t(&[]).bytes(), 4);
+    }
+}

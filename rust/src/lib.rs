@@ -1,0 +1,51 @@
+//! # SOYBEAN-RS
+//!
+//! Reproduction of *"Unifying Data, Model and Hybrid Parallelism in Deep
+//! Learning via Tensor Tiling"* (Wang, Huang, Li — NYU, 2018).
+//!
+//! SOYBEAN takes the **serial** dataflow graph of one DNN training step,
+//! finds the communication-optimal **tiling** for every tensor (the paper's
+//! one-cut dynamic program recursed into a k-cut plan), rewrites the graph
+//! into a **parallel execution graph** of partitioned sub-operators plus
+//! tiling-conversion transfers, places shards on an interconnect hierarchy,
+//! and executes. Data parallelism, model parallelism, and grouped hybrids
+//! all arise as special points of the tiling space.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//!
+//! - [`graph`] — the semantic dataflow graph: tensors, operators, a builder,
+//!   reverse-mode autodiff, and BFS levelization (the substrate the paper
+//!   inherits from MXNet's frontend).
+//! - [`tiling`] — the tiling algebra of §4.1–4.2.1: basic tilings
+//!   `{R, C, r}`, composition/flattening, ghost-area conversion costs, and
+//!   per-operator aligned tilings (Eq. 2).
+//! - [`planner`] — §4.2.2's one-cut dynamic program, §4.3's recursive k-cut
+//!   algorithm, the pure data-/model-parallel baselines, and a brute-force
+//!   optimality checker.
+//! - [`exec`] — §5: partitioning each operator into `2^k` sub-operators,
+//!   inserting three-phase tiling conversions, and placing shards on the
+//!   device hierarchy.
+//! - [`sim`] — the testbed substitute: a PCIe-tree interconnect and
+//!   shape-aware compute model that turns communication volumes into the
+//!   runtime/overhead numbers of the paper's figures.
+//! - [`runtime`] — the PJRT side: HLO-text artifact registry, dynamic
+//!   `XlaBuilder` kernels, and the multi-worker execution engine (real
+//!   buffers, real transfers; Python never runs here).
+//! - [`coordinator`] — the training loop: BSP batches, SGD, metrics.
+//! - [`models`] — the model zoo: MLP, parametric CNN, AlexNet, VGG-16 as
+//!   semantic graphs (the paper's evaluation workloads).
+
+pub mod coordinator;
+pub mod exec;
+pub mod figures;
+pub mod graph;
+pub mod models;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+
+pub mod util;
+
+pub use graph::{Graph, GraphBuilder, Op, OpId, OpKind, TensorId, TensorInfo};
+pub use tiling::{Tile, TileSeq};

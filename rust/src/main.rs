@@ -1,0 +1,165 @@
+//! `soybean` — CLI front door for the SOYBEAN reproduction.
+//!
+//! Subcommands (std-only arg parsing; clap is not in the offline vendor
+//! set):
+//!
+//! ```text
+//! soybean plan     --model mlp --batch 512 --hidden 8192 --k 3 [--strategy soybean]
+//! soybean simulate --model alexnet --batch 256 --k 3
+//! soybean reproduce fig8a|fig8b|fig8c|fig9a|fig9b|fig10a|fig10b|example22|all
+//! soybean train    --steps 100 --batch 32 [--k 2] [--strategy dp]
+//! soybean inspect  --model vgg --batch 32
+//! ```
+
+use std::collections::HashMap;
+
+use soybean::coordinator::{init_mlp_params, ParallelTrainer, SyntheticData};
+use soybean::figures;
+use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
+use soybean::planner::{classify, Planner, Strategy};
+use soybean::runtime::Client;
+use soybean::sim::{simulate, SimConfig};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn strategy_of(flags: &HashMap<String, String>) -> Strategy {
+    match flags.get("strategy").map(String::as_str) {
+        Some("dp") | Some("data") => Strategy::DataParallel,
+        Some("mp") | Some("model") => Strategy::ModelParallel,
+        _ => Strategy::Soybean,
+    }
+}
+
+fn model_graph(flags: &HashMap<String, String>) -> soybean::Graph {
+    let batch = get(flags, "batch", 512usize);
+    match flags.get("model").map(String::as_str).unwrap_or("mlp") {
+        "mlp" => mlp(&MlpConfig::fig8(batch, get(flags, "hidden", 8192))),
+        "cnn" => cnn5(batch, get(flags, "image", 6), 4, get(flags, "filters", 2048), 10),
+        "alexnet" => alexnet(batch),
+        "vgg" => vgg16(batch),
+        other => {
+            eprintln!("unknown model {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&argv[1.min(argv.len())..]);
+    let cfg = SimConfig::default();
+
+    match cmd {
+        "plan" => {
+            let g = model_graph(&flags);
+            let k = get(&flags, "k", 3usize);
+            let plan = Planner::plan(&g, k, strategy_of(&flags));
+            println!("{}", plan.describe(&g));
+            println!("classification: {}", classify(&g, &plan.tiles));
+        }
+        "simulate" => {
+            let g = model_graph(&flags);
+            let k = get(&flags, "k", 3usize);
+            for strat in Strategy::all() {
+                let plan = Planner::plan(&g, k, strat);
+                let r = simulate(&g, &plan, &cfg);
+                println!(
+                    "{:<8} devices={} runtime={:.2}ms compute={:.2}ms overhead={:.2}ms comm={:.2}MB",
+                    strat.name(),
+                    r.devices,
+                    r.step_s * 1e3,
+                    r.compute_s * 1e3,
+                    r.overhead_s * 1e3,
+                    r.total_bytes as f64 / 1e6
+                );
+            }
+        }
+        "reproduce" => {
+            let which = argv.get(1).map(String::as_str).unwrap_or("all");
+            let all = which == "all";
+            if all || which == "example22" {
+                println!("{}", figures::example22());
+            }
+            if all || which == "fig8a" {
+                println!("{}", figures::fig8(512, 8192, &cfg).0);
+            }
+            if all || which == "fig8b" {
+                println!("{}", figures::fig8(2048, 8192, &cfg).0);
+            }
+            if all || which == "fig8c" {
+                println!("{}", figures::fig8(2048, 12288, &cfg).0);
+            }
+            if all || which == "fig9a" {
+                println!("{}", figures::fig9(6, 2048, &cfg).0);
+            }
+            if all || which == "fig9b" {
+                println!("{}", figures::fig9(24, 512, &cfg).0);
+            }
+            if all || which == "fig10a" {
+                println!("{}", figures::fig10("alexnet", &[64, 128, 256, 512, 1024], &cfg).0);
+            }
+            if all || which == "fig10b" {
+                println!("{}", figures::fig10("vgg", &[16, 32, 64, 128, 256], &cfg).0);
+            }
+        }
+        "train" => {
+            // Small real training run through the parallel engine.
+            let steps = get(&flags, "steps", 50usize);
+            let batch = get(&flags, "batch", 32usize);
+            let k = get(&flags, "k", 2usize);
+            let dims = vec![64usize, 128, 128, 10];
+            let g = mlp(&MlpConfig { batch, dims: dims.clone(), bias: true });
+            let plan = Planner::plan(&g, k, strategy_of(&flags));
+            println!("plan: {} over {} devices", classify(&g, &plan.tiles), plan.devices());
+            let client = std::sync::Arc::new(Client::cpu().expect("PJRT client"));
+            let params = init_mlp_params(7, &dims);
+            let mut trainer = ParallelTrainer::new(client, g, plan, &params, 0.1).expect("engine");
+            let mut data = SyntheticData::new(3, dims[0], *dims.last().unwrap());
+            for s in 0..steps {
+                let (x, y) = data.batch(batch);
+                let loss = trainer.step(&x, &y).expect("step");
+                if s % 10 == 0 || s + 1 == steps {
+                    println!("step {s:>4}  loss {loss:.4}");
+                }
+            }
+            println!(
+                "engine traffic: {:.2} MB over {} transfers",
+                trainer.engine.metrics.total_bytes() as f64 / 1e6,
+                trainer.engine.metrics.transfers
+            );
+        }
+        "inspect" => {
+            let g = model_graph(&flags);
+            println!("{}", g.dump());
+            println!(
+                "{} ops, {} tensors, {:.1} MB weights, {:.1} MB activations",
+                g.ops.len(),
+                g.tensors.len(),
+                g.weight_bytes() as f64 / 1e6,
+                g.activation_bytes() as f64 / 1e6
+            );
+        }
+        _ => {
+            println!("usage: soybean <plan|simulate|reproduce|train|inspect> [flags]");
+            println!("  see rust/src/main.rs header for flags");
+        }
+    }
+}

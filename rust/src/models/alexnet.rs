@@ -1,0 +1,83 @@
+//! AlexNet (Krizhevsky et al. 2012) as a training graph — Figure 10(a).
+//!
+//! Faithful layer shapes (227×227×3 input, 5 conv layers, 3 FC layers,
+//! ~60M parameters), with the LRN layers omitted (they are
+//! tiling-transparent elementwise ops with negligible traffic) and the
+//! stride-4 11×11 stem expressed exactly.
+
+use crate::graph::{append_backward, Graph, GraphBuilder};
+
+/// Build AlexNet's training step for the given batch size.
+pub fn alexnet(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut h = b.input("x", &[batch, 227, 227, 3]);
+    let y = b.label("y", &[batch, 1000]);
+
+    // conv1: 11x11/4, 96 filters -> 55x55x96, pool -> 27x27x96
+    let w1 = b.weight("conv1.w", &[11, 11, 3, 96]);
+    h = b.conv2d("conv1", h, w1, 4, 0);
+    h = b.relu("conv1.relu", h);
+    h = b.pool2("pool1", h); // 55 -> 27 (floor)
+    // conv2: 5x5 pad 2, 256 filters -> 27x27x256, pool -> 13
+    let w2 = b.weight("conv2.w", &[5, 5, 96, 256]);
+    h = b.conv2d("conv2", h, w2, 1, 2);
+    h = b.relu("conv2.relu", h);
+    h = b.pool2("pool2", h);
+    // conv3..5: 3x3 pad 1
+    let w3 = b.weight("conv3.w", &[3, 3, 256, 384]);
+    h = b.conv2d("conv3", h, w3, 1, 1);
+    h = b.relu("conv3.relu", h);
+    let w4 = b.weight("conv4.w", &[3, 3, 384, 384]);
+    h = b.conv2d("conv4", h, w4, 1, 1);
+    h = b.relu("conv4.relu", h);
+    let w5 = b.weight("conv5.w", &[3, 3, 384, 256]);
+    h = b.conv2d("conv5", h, w5, 1, 1);
+    h = b.relu("conv5.relu", h);
+    h = b.pool2("pool5", h); // 13 -> 6
+
+    let flat = b.flatten("flatten", h); // 6*6*256 = 9216
+    let wf1 = b.weight("fc6.w", &[9216, 4096]);
+    let mut f = b.matmul("fc6", flat, wf1, false, false);
+    f = b.relu("fc6.relu", f);
+    let wf2 = b.weight("fc7.w", &[4096, 4096]);
+    f = b.matmul("fc7", f, wf2, false, false);
+    f = b.relu("fc7.relu", f);
+    let wf3 = b.weight("fc8.w", &[4096, 1000]);
+    let logits = b.matmul("fc8", f, wf3, false, false);
+
+    let loss = b.softmax_xent("loss", logits, y);
+    append_backward(&mut b, loss);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_near_60m() {
+        let g = alexnet(128);
+        let params = g.weight_bytes() / 4;
+        // Canonical AlexNet (without biases): ~60.9M weights.
+        assert!(params > 55_000_000 && params < 65_000_000, "{params}");
+    }
+
+    #[test]
+    fn fc_layers_dominate_parameters() {
+        // The property Figure 10(a) exploits: FC weights (fc6 alone is
+        // 9216×4096 ≈ 37.7M) dwarf conv filters, so data parallelism pays
+        // hugely for the FC gradients while activations entering fc6 are
+        // tiny — hybrid tiling wins.
+        let g = alexnet(128);
+        let fc6 = g.tensors.iter().find(|t| t.name == "fc6.w").unwrap();
+        assert_eq!(fc6.bytes(), 9216 * 4096 * 4);
+        assert!(fc6.bytes() * 2 > g.weight_bytes() / 2);
+    }
+
+    #[test]
+    fn spatial_pipeline_shapes() {
+        let g = alexnet(64);
+        let pool5 = g.tensors.iter().find(|t| t.name == "pool5.out").unwrap();
+        assert_eq!(pool5.shape, vec![64, 6, 6, 256]);
+    }
+}

@@ -1,0 +1,63 @@
+//! The 5-layer convolutional network of Figure 9, parameterized by image
+//! size and filter count.
+//!
+//! Figure 9(a) trains on small 6×6 images with a large filter count (2048);
+//! Figure 9(b) on larger 24×24 images with 512 filters; batch 256 in both.
+
+use crate::graph::{append_backward, Graph, GraphBuilder};
+
+/// 5 stacked 3×3 same-padding conv layers (+ReLU), global flatten, FC
+/// softmax head — the §6.2 CNN shape.
+pub fn cnn5(batch: usize, image: usize, channels_in: usize, filters: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut h = b.input("x", &[batch, image, image, channels_in]);
+    let y = b.label("y", &[batch, classes]);
+    let mut cin = channels_in;
+    for l in 0..5 {
+        let w = b.weight(&format!("conv{l}.w"), &[3, 3, cin, filters]);
+        h = b.conv2d(&format!("conv{l}"), h, w, 1, 1);
+        h = b.relu(&format!("conv{l}.relu"), h);
+        cin = filters;
+    }
+    let flat = b.flatten("flatten", h);
+    let feat = image * image * filters;
+    let w_fc = b.weight("fc.w", &[feat, classes]);
+    let logits = b.matmul("fc", flat, w_fc, false, false);
+    let loss = b.softmax_xent("loss", logits, y);
+    append_backward(&mut b, loss);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn fig9a_shape() {
+        let g = cnn5(256, 6, 4, 2048, 10);
+        let convs = g.ops.iter().filter(|o| matches!(o.kind, OpKind::Conv2d { .. })).count();
+        assert_eq!(convs, 5);
+        // Same-padding: spatial dims preserved.
+        let act = g.tensors.iter().find(|t| t.name == "conv4.out").unwrap();
+        assert_eq!(act.shape, vec![256, 6, 6, 2048]);
+    }
+
+    #[test]
+    fn fig9_filter_vs_image_tradeoff() {
+        // 9(a): small image, big filters => weights dominate activations.
+        let a = cnn5(256, 6, 4, 2048, 10);
+        assert!(a.weight_bytes() > a.activation_bytes() / 4);
+        // 9(b): big image, small filters => activations dominate weights.
+        let b = cnn5(256, 24, 4, 512, 10);
+        assert!(b.activation_bytes() > b.weight_bytes());
+    }
+
+    #[test]
+    fn backward_ops_present() {
+        let g = cnn5(8, 6, 4, 16, 10);
+        assert!(g.ops.iter().any(|o| matches!(o.kind, OpKind::Conv2dBwdData { .. })));
+        assert!(g.ops.iter().any(|o| matches!(o.kind, OpKind::Conv2dBwdFilter { .. })));
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::FlattenBwd));
+    }
+}

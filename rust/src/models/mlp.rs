@@ -1,0 +1,79 @@
+//! Multi-layer perceptron training graphs (Figures 8a–c, Table 1, and the
+//! end-to-end example).
+
+use crate::graph::{append_backward, Graph, GraphBuilder, TensorId};
+
+/// MLP configuration. `dims[0]` is the input width, `dims.last()` the class
+/// count; every interior entry a hidden layer.
+#[derive(Debug, Clone)]
+pub struct MlpConfig {
+    pub batch: usize,
+    pub dims: Vec<usize>,
+    /// Include bias vectors (the paper's MLP experiments are pure matmul
+    /// chains; the e2e example uses biases).
+    pub bias: bool,
+}
+
+impl MlpConfig {
+    /// The paper's Figure 8 configuration: a 4-layer MLP with square
+    /// `hidden × hidden` weights.
+    pub fn fig8(batch: usize, hidden: usize) -> Self {
+        MlpConfig { batch, dims: vec![hidden; 5], bias: false }
+    }
+
+    /// The e2e training example (~13M parameters).
+    pub fn e2e() -> Self {
+        MlpConfig { batch: 128, dims: vec![784, 2048, 2048, 2048, 10], bias: true }
+    }
+}
+
+/// Build the full training-step graph for an MLP.
+pub fn mlp(cfg: &MlpConfig) -> Graph {
+    let (g, _) = mlp_with_loss(cfg);
+    g
+}
+
+/// Like [`mlp`] but also returning the loss tensor id (used by the engine).
+pub fn mlp_with_loss(cfg: &MlpConfig) -> (Graph, TensorId) {
+    let mut b = GraphBuilder::new();
+    let nl = cfg.dims.len() - 1;
+    let mut h = b.input("x", &[cfg.batch, cfg.dims[0]]);
+    let y = b.label("y", &[cfg.batch, *cfg.dims.last().unwrap()]);
+    for l in 0..nl {
+        let w = b.weight(&format!("w{l}"), &[cfg.dims[l], cfg.dims[l + 1]]);
+        h = b.matmul(&format!("fc{l}"), h, w, false, false);
+        if cfg.bias {
+            let bias = b.weight(&format!("b{l}"), &[cfg.dims[l + 1]]);
+            h = b.bias_add(&format!("fc{l}.ba"), h, bias);
+        }
+        if l + 1 < nl {
+            h = b.relu(&format!("fc{l}.relu"), h);
+        }
+    }
+    let loss = b.softmax_xent("loss", h, y);
+    append_backward(&mut b, loss);
+    (b.finish(), loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn fig8_graph_matches_paper_counts() {
+        // 4 layers => 12 matmuls (3N of §4.2.2), weights 8192².
+        let g = mlp(&MlpConfig::fig8(512, 8192));
+        let mm = g.ops.iter().filter(|o| matches!(o.kind, OpKind::MatMul { .. })).count();
+        assert_eq!(mm, 12);
+        assert_eq!(g.weight_bytes(), 4 * 8192 * 8192 * 4);
+    }
+
+    #[test]
+    fn e2e_param_count() {
+        let g = mlp(&MlpConfig::e2e());
+        let params = g.weight_bytes() / 4;
+        // 784·2048 + 2048² + 2048² + 2048·10 + biases ≈ 10.0M
+        assert!(params > 9_000_000 && params < 15_000_000, "{params}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Model zoo: the paper's evaluation workloads as semantic training graphs.
+//!
+//! Every constructor returns the *full training step* (forward + backward +
+//! SGD updates) built through [`crate::graph::GraphBuilder`] and
+//! [`crate::graph::append_backward`] — the exact graphs the figures sweep:
+//!
+//! - [`mlp`] — the L-layer MLP of Figures 8(a–c) and Table 1;
+//! - [`cnn5`] — the 5-layer CNN of Figures 9(a–b), parameterized by image
+//!   size and filter count;
+//! - [`alexnet`] — Figure 10(a);
+//! - [`vgg16`] — Figure 10(b).
+
+mod alexnet;
+mod cnn;
+mod mlp;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use cnn::cnn5;
+pub use mlp::{mlp, mlp_with_loss, MlpConfig};
+pub use vgg::vgg16;

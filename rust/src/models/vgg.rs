@@ -1,0 +1,72 @@
+//! VGG-16 (Simonyan & Zisserman 2015) as a training graph — Figure 10(b).
+//!
+//! 13 3×3 conv layers in five blocks with 2×2 pools, then the 3-layer FC
+//! head (~138M parameters). "VGG has similar structure to AlexNet but with
+//! more layers" (§6.4) — deeper conv stack, even heavier FC head.
+
+use crate::graph::{append_backward, Graph, GraphBuilder, TensorId};
+
+fn block(b: &mut GraphBuilder, mut h: TensorId, name: &str, convs: usize, cin: usize, cout: usize) -> TensorId {
+    let mut c = cin;
+    for i in 0..convs {
+        let w = b.weight(&format!("{name}.conv{i}.w"), &[3, 3, c, cout]);
+        h = b.conv2d(&format!("{name}.conv{i}"), h, w, 1, 1);
+        h = b.relu(&format!("{name}.conv{i}.relu"), h);
+        c = cout;
+    }
+    b.pool2(&format!("{name}.pool"), h)
+}
+
+/// Build VGG-16's training step for the given batch size.
+pub fn vgg16(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new();
+    let mut h = b.input("x", &[batch, 224, 224, 3]);
+    let y = b.label("y", &[batch, 1000]);
+
+    h = block(&mut b, h, "b1", 2, 3, 64); // 224 -> 112
+    h = block(&mut b, h, "b2", 2, 64, 128); // 112 -> 56
+    h = block(&mut b, h, "b3", 3, 128, 256); // 56 -> 28
+    h = block(&mut b, h, "b4", 3, 256, 512); // 28 -> 14
+    h = block(&mut b, h, "b5", 3, 512, 512); // 14 -> 7
+
+    let flat = b.flatten("flatten", h); // 7*7*512 = 25088
+    let wf1 = b.weight("fc1.w", &[25088, 4096]);
+    let mut f = b.matmul("fc1", flat, wf1, false, false);
+    f = b.relu("fc1.relu", f);
+    let wf2 = b.weight("fc2.w", &[4096, 4096]);
+    f = b.matmul("fc2", f, wf2, false, false);
+    f = b.relu("fc2.relu", f);
+    let wf3 = b.weight("fc3.w", &[4096, 1000]);
+    let logits = b.matmul("fc3", f, wf3, false, false);
+
+    let loss = b.softmax_xent("loss", logits, y);
+    append_backward(&mut b, loss);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn parameter_count_near_138m() {
+        let g = vgg16(32);
+        let params = g.weight_bytes() / 4;
+        assert!(params > 130_000_000 && params < 140_000_000, "{params}");
+    }
+
+    #[test]
+    fn thirteen_conv_layers() {
+        let g = vgg16(32);
+        let convs = g.ops.iter().filter(|o| matches!(o.kind, OpKind::Conv2d { .. })).count();
+        assert_eq!(convs, 13);
+    }
+
+    #[test]
+    fn final_spatial_shape() {
+        let g = vgg16(16);
+        let p5 = g.tensors.iter().find(|t| t.name == "b5.pool.out").unwrap();
+        assert_eq!(p5.shape, vec![16, 7, 7, 512]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Exhaustive one-cut search for small graphs + the optimality property
+//! tests (paper §4.4, checked empirically).
+//!
+//! proptest is not in the offline vendor set, so the property tests are
+//! hand-rolled: a deterministic [`crate::util::Rng`] generates random small
+//! training graphs and the DP's cost is compared against full enumeration
+//! of the tiling space.
+
+use crate::graph::Graph;
+use crate::tiling::{candidate_tiles, Tile};
+
+use super::onecut::{price, OneCutPlan};
+
+/// Exhaustively enumerate every tiling assignment (product of candidate
+/// sets over all tensors) and return the optimum. Exponential — panics if
+/// the state space exceeds `limit` assignments.
+pub fn brute_force(g: &Graph, limit: usize) -> OneCutPlan {
+    // Enumerate only alias representatives (updated weights share their
+    // weight's variable — the same steady-state constraint the DP applies).
+    let alias = g.steady_state_aliases();
+    let reps: Vec<usize> = (0..g.tensors.len()).filter(|&t| alias[t] == t).collect();
+    let cands: Vec<Vec<Tile>> =
+        reps.iter().map(|&t| candidate_tiles(&g.tensors[t])).collect();
+    let states: usize = cands.iter().map(Vec::len).product();
+    assert!(states <= limit, "brute force space {states} exceeds limit {limit}");
+
+    let mut best_cost = u64::MAX;
+    let mut best_tiles: Vec<Tile> = vec![Tile::Rep; g.tensors.len()];
+    let mut tiles = best_tiles.clone();
+    for mut idx in 0..states {
+        for (i, c) in cands.iter().enumerate() {
+            tiles[reps[i]] = c[idx % c.len()];
+            idx /= c.len();
+        }
+        for t in 0..tiles.len() {
+            tiles[t] = tiles[alias[t]];
+        }
+        let cost = price(g, &tiles);
+        if cost < best_cost {
+            best_cost = cost;
+            best_tiles.copy_from_slice(&tiles);
+        }
+    }
+    OneCutPlan { tiles: best_tiles, cost: best_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+    use crate::planner::one_cut;
+    use crate::util::Rng;
+
+    /// Random tiny training graph: 1–2 FC layers, optional bias/relu,
+    /// random even dims. Kept under ~12 tensors so brute force stays fast.
+    fn random_graph(rng: &mut Rng) -> Graph {
+        let dims = [2usize, 4, 6, 8];
+        let batch = *rng.choose(&[2usize, 4, 8, 16]);
+        let nl = 1 + rng.below(2);
+        let with_bias = rng.below(2) == 1;
+        let with_relu = rng.below(2) == 1;
+        let mut b = GraphBuilder::new();
+        let mut shape_in = *rng.choose(&dims);
+        let mut h = b.input("x", &[batch, shape_in]);
+        let out_dim = *rng.choose(&dims);
+        let mut last = shape_in;
+        for l in 0..nl {
+            let next = if l + 1 == nl { out_dim } else { *rng.choose(&dims) };
+            let w = b.weight(&format!("w{l}"), &[last, next]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+            if with_bias {
+                let bias = b.weight(&format!("b{l}"), &[next]);
+                h = b.bias_add(&format!("ba{l}"), h, bias);
+            }
+            if with_relu && l + 1 < nl {
+                h = b.relu(&format!("r{l}"), h);
+            }
+            last = next;
+            shape_in = next;
+        }
+        let y = b.label("y", &[batch, out_dim]);
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn dp_matches_bruteforce_on_fixed_cases() {
+        for (batch, din, dout) in [(4usize, 4usize, 4usize), (8, 2, 6), (16, 8, 2)] {
+            let mut b = GraphBuilder::new();
+            let x = b.input("x", &[batch, din]);
+            let w = b.weight("w", &[din, dout]);
+            let h = b.matmul("fc", x, w, false, false);
+            let y = b.label("y", &[batch, dout]);
+            let loss = b.softmax_xent("loss", h, y);
+            append_backward(&mut b, loss);
+            let g = b.finish();
+            let dp = one_cut(&g);
+            let bf = brute_force(&g, 2_000_000);
+            assert_eq!(dp.cost, bf.cost, "case {batch}x{din}x{dout}");
+        }
+    }
+
+    #[test]
+    fn dp_matches_bruteforce_property() {
+        // Hand-rolled property test: 25 random graphs, DP == brute force.
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut checked = 0;
+        while checked < 20 {
+            let g = random_graph(&mut rng);
+            let alias = g.steady_state_aliases();
+            let states: usize = g
+                .tensors
+                .iter()
+                .filter(|t| alias[t.id] == t.id)
+                .map(|t| candidate_tiles(t).len())
+                .product();
+            if states > 400_000 {
+                continue; // keep the test fast; plenty of small cases occur
+            }
+            let dp = one_cut(&g);
+            let bf = brute_force(&g, 400_000);
+            assert_eq!(
+                dp.cost, bf.cost,
+                "optimality violated on random graph (seed case {checked}):\n{}",
+                g.dump()
+            );
+            checked += 1;
+        }
+    }
+
+    #[test]
+    fn dp_never_worse_than_random_assignments() {
+        // Weaker but broader property: DP beats 200 random assignments on a
+        // mid-sized graph too big for brute force.
+        let mut b = GraphBuilder::new();
+        let batch = 64;
+        let dims = [32usize, 48, 32, 16];
+        let mut h = b.input("x", &[batch, dims[0]]);
+        for l in 0..dims.len() - 1 {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+        }
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        let g = b.finish();
+
+        let dp = one_cut(&g);
+        let cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let tiles: Vec<Tile> = cands.iter().map(|c| *rng.choose(c)).collect();
+            assert!(dp.cost <= price(&g, &tiles));
+        }
+    }
+}

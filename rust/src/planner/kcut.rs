@@ -1,0 +1,253 @@
+//! The k-cut tiling algorithm (paper §4.3, Algorithm 1).
+//!
+//! `2^k` devices are split into two groups; [`super::one_cut`] finds the
+//! optimal tiling between them; shard shapes are halved along the chosen
+//! split dimensions; and the procedure recurses within a group on the
+//! reduced problem. Theorem 1 gives the total cost: the i-th cut's
+//! conversion volume `δ_i` happens in `2^(i-1)` group pairs, each pair
+//! spanning `2^(k-i)` devices whose traffic the outer `2^(k-i)` weight in
+//! `c_k = Σ 2^(k-i)·δ_i` accounts for.
+
+use crate::graph::{Graph, Op, OpKind, TensorKind};
+use crate::tiling::{describe_seq, op_cost, op_cost_with_form, Form, Tile, TileSeq};
+
+use super::onecut::one_cut;
+
+/// The form stock data parallelism always uses: gradient aggregation via
+/// the reduction path (`C·R -> red` for weight-gradient matmuls/convs,
+/// the batch-axis reduction for bias gradients), never the Eq. (2)
+/// substitution of shipping activations. `None` = op is unconstrained.
+pub fn classic_dp_form(g: &Graph, op: &Op) -> Option<Form> {
+    let grad_out = g.tensors[op.outputs[0]].kind == TensorKind::WeightGrad;
+    match op.kind {
+        OpKind::MatMul { .. } | OpKind::Conv2dBwdFilter { .. } if grad_out => {
+            Some(Form::MatMul(2))
+        }
+        OpKind::ReduceSumRows if grad_out => Some(Form::GridAxis(0)),
+        _ => None,
+    }
+}
+
+/// Like `price` but forcing specific forms for some ops.
+pub fn price_forced(
+    g: &Graph,
+    tiles: &[Tile],
+    forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
+) -> u64 {
+    let mut total = 0u64;
+    for op in &g.ops {
+        let ins: Vec<Tile> = op.inputs.iter().map(|&t| tiles[t]).collect();
+        let out = tiles[op.outputs[0]];
+        let c = match forced(g, op) {
+            Some(f) => op_cost_with_form(g, op, &ins, out, f)
+                .unwrap_or_else(|| op_cost(g, op, &ins, out)),
+            None => op_cost(g, op, &ins, out),
+        };
+        total = total.saturating_add(c);
+    }
+    total
+}
+
+/// A complete k-cut tiling plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub k: usize,
+    /// Per tensor (indexed by `TensorId`): the basic tiling chosen at each
+    /// cut, outermost first.
+    pub tiles: Vec<TileSeq>,
+    /// δ_1 … δ_k: conversion bytes of each cut at that cut's granularity.
+    pub cut_costs: Vec<u64>,
+}
+
+impl Plan {
+    pub fn devices(&self) -> usize {
+        1 << self.k
+    }
+
+    /// Theorem 1: `c_k = Σ_{i=1..k} 2^(k−i) · δ_i`, where δ_k is the
+    /// *outermost* cut (the paper indexes cuts innermost-first). In this
+    /// struct `cut_costs[0]` is the outermost cut — performed once between
+    /// the two top-level groups — and `cut_costs[j]` happens simultaneously
+    /// in `2^j` group pairs, hence the `2^j` weight.
+    pub fn total_cost(&self) -> u64 {
+        self.cut_costs
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (1u64 << i) * d)
+            .sum()
+    }
+
+    /// Table of tensor tilings in paper notation (`soybean plan` output).
+    pub fn describe(&self, g: &Graph) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "k={} ({} devices), total cost {} bytes", self.k, self.devices(), self.total_cost());
+        for (i, d) in self.cut_costs.iter().enumerate() {
+            let _ = writeln!(s, "  δ_{} = {d} bytes (weight 2^{})", i + 1, self.k - 1 - i);
+        }
+        for t in &g.tensors {
+            let _ = writeln!(
+                s,
+                "  {:<24} {:<16} {}",
+                t.name,
+                format!("{:?}", t.shape),
+                describe_seq(&self.tiles[t.id])
+            );
+        }
+        s
+    }
+}
+
+/// Halve every tensor's shape along its chosen split dimension, producing
+/// the within-group subproblem for the next cut.
+pub fn apply_cut(g: &Graph, tiles: &[Tile]) -> Graph {
+    let mut sub = g.clone();
+    for t in &mut sub.tensors {
+        if let Tile::Split(d) = tiles[t.id] {
+            assert!(t.shape[d] % 2 == 0);
+            t.shape[d] /= 2;
+        }
+    }
+    sub
+}
+
+/// Algorithm 1: recursively one-cut, `k` times.
+pub fn k_cut(g: &Graph, k: usize) -> Plan {
+    let nt = g.tensors.len();
+    let mut tiles: Vec<TileSeq> = vec![Vec::with_capacity(k); nt];
+    let mut cut_costs = Vec::with_capacity(k);
+    let mut cur = g.clone();
+    for _ in 0..k {
+        let oc = one_cut(&cur);
+        cut_costs.push(oc.cost);
+        for t in 0..nt {
+            tiles[t].push(oc.tiles[t]);
+        }
+        cur = apply_cut(&cur, &oc.tiles);
+    }
+    Plan { k, tiles, cut_costs }
+}
+
+/// Re-price an arbitrary per-tensor `TileSeq` assignment cut by cut (used
+/// for the fixed baselines so all strategies share one cost model).
+pub fn eval_plan(g: &Graph, tiles: &[TileSeq]) -> Plan {
+    eval_plan_forced(g, tiles, &|_, _| None)
+}
+
+/// [`eval_plan`] with per-op forced forms (the classic-DP baseline).
+pub fn eval_plan_forced(
+    g: &Graph,
+    tiles: &[TileSeq],
+    forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
+) -> Plan {
+    let k = tiles.first().map_or(0, Vec::len);
+    assert!(tiles.iter().all(|s| s.len() == k), "ragged tile sequences");
+    let mut cur = g.clone();
+    let mut cut_costs = Vec::with_capacity(k);
+    for i in 0..k {
+        let cut: Vec<Tile> = tiles.iter().map(|s| s[i]).collect();
+        cut_costs.push(price_forced(&cur, &cut, forced));
+        cur = apply_cut(&cur, &cut);
+    }
+    Plan { k, tiles: tiles.to_vec(), cut_costs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+
+    fn mlp_train(batch: usize, dims: &[usize]) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        let nl = dims.len() - 1;
+        for l in 0..nl {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+            if l + 1 < nl {
+                h = b.relu(&format!("fc{l}.relu"), h);
+            }
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn theorem1_weighting() {
+        let p = Plan { k: 3, tiles: vec![], cut_costs: vec![40, 20, 10] };
+        // Outermost cut once, middle twice, innermost in all four leaf
+        // pairs: 1·40 + 2·20 + 4·10 = 120.
+        assert_eq!(p.total_cost(), 120);
+        assert_eq!(p.devices(), 8);
+    }
+
+    #[test]
+    fn kcut_beats_baselines_on_paper_example() {
+        // The §2.2 16-device setting: SOYBEAN must beat both pure schemes.
+        let g = mlp_train(400, &[300; 6]);
+        let k = 4;
+        let soy = k_cut(&g, k);
+        let dp = super::super::baselines::data_parallel(&g, k);
+        let mp = super::super::baselines::model_parallel(&g, k);
+        assert!(soy.total_cost() <= dp.total_cost(), "soy {} dp {}", soy.total_cost(), dp.total_cost());
+        assert!(soy.total_cost() <= mp.total_cost(), "soy {} mp {}", soy.total_cost(), mp.total_cost());
+    }
+
+    #[test]
+    fn kcut_costs_consistent_with_eval() {
+        let g = mlp_train(64, &[32, 32, 32]);
+        let p = k_cut(&g, 2);
+        let re = eval_plan(&g, &p.tiles);
+        assert_eq!(p.cut_costs, re.cut_costs);
+    }
+
+    #[test]
+    fn greediness_theorem3() {
+        // Theorem 3: each outer cut costs at most twice the next inner
+        // cut — the greedy outer cut could always have used the inner
+        // cut's tiling, whose cost at the outer (un-halved) granularity is
+        // at most doubled.
+        for (batch, dims) in [(400usize, vec![300usize; 6]), (512, vec![256; 4]), (64, vec![512, 512, 512])] {
+            let g = mlp_train(batch, &dims);
+            let p = k_cut(&g, 3);
+            for j in 0..p.cut_costs.len() - 1 {
+                assert!(
+                    p.cut_costs[j] <= 2 * p.cut_costs[j + 1].max(1),
+                    "outer δ at cut {} = {} > 2× inner {} for {batch} {dims:?}",
+                    j,
+                    p.cut_costs[j],
+                    p.cut_costs[j + 1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_cuts_monotone_devices() {
+        let g = mlp_train(128, &[64, 64]);
+        for k in 0..4 {
+            let p = k_cut(&g, k);
+            assert_eq!(p.devices(), 1 << k);
+            assert_eq!(p.cut_costs.len(), k);
+        }
+    }
+
+    #[test]
+    fn apply_cut_halves_only_split_dims() {
+        let g = mlp_train(8, &[4, 4]);
+        let tiles: Vec<Tile> = g
+            .tensors
+            .iter()
+            .map(|t| if t.rank() == 2 && t.shape[0] % 2 == 0 { Tile::Split(0) } else { Tile::Rep })
+            .collect();
+        let sub = apply_cut(&g, &tiles);
+        for (a, b) in g.tensors.iter().zip(&sub.tensors) {
+            match tiles[a.id] {
+                Tile::Split(0) => assert_eq!(b.shape[0], a.shape[0] / 2),
+                _ => assert_eq!(b.shape, a.shape),
+            }
+        }
+    }
+}

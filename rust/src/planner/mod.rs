@@ -1,0 +1,76 @@
+//! Tiling planners: the paper's optimizer (§4.2.2–§4.4) and its baselines.
+//!
+//! - [`one_cut`] — the level-structured dynamic program (Eq. 4–5) that
+//!   finds the communication-minimal tiling across **two** devices/groups.
+//! - [`k_cut`] — Algorithm 1: recursively apply one-cut, halving shard
+//!   shapes each time, to tile across `2^k` devices; total cost follows
+//!   Theorem 1, `c_k = Σ 2^(k−i) δ_i`.
+//! - [`baselines`] — the pure data-parallel and model-parallel tilings of
+//!   §4.1 (`T_data`, `T_model`) as fixed plans, priced by the same cost
+//!   model so the figures compare like for like.
+//! - [`bruteforce`] — exhaustive enumeration for small graphs; the
+//!   hand-rolled property tests check the DP against it (§4.4's optimality
+//!   claim, verified empirically).
+
+pub mod baselines;
+pub mod bruteforce;
+mod kcut;
+mod onecut;
+
+pub use kcut::{apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, Plan};
+pub use onecut::{one_cut, OneCutPlan};
+
+use crate::graph::Graph;
+use crate::tiling::TileSeq;
+
+/// Which planning strategy to use — the three lines of every figure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// SOYBEAN's optimal k-cut tiling.
+    Soybean,
+    /// Pure data parallelism (`T_data`).
+    DataParallel,
+    /// Pure model parallelism (`T_model`).
+    ModelParallel,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Soybean => "SOYBEAN",
+            Strategy::DataParallel => "DP",
+            Strategy::ModelParallel => "MP",
+        }
+    }
+
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean]
+    }
+}
+
+/// Front door used by the CLI, examples and benches.
+pub struct Planner;
+
+impl Planner {
+    /// Produce a k-cut plan for `2^k` devices under the given strategy.
+    pub fn plan(g: &Graph, k: usize, strategy: Strategy) -> Plan {
+        match strategy {
+            Strategy::Soybean => k_cut(g, k),
+            Strategy::DataParallel => baselines::data_parallel(g, k),
+            Strategy::ModelParallel => baselines::model_parallel(g, k),
+        }
+    }
+}
+
+/// Classifies a plan for reporting: does it coincide with pure data
+/// parallelism, pure model parallelism, or is it a hybrid?
+pub fn classify(g: &Graph, tiles: &[TileSeq]) -> &'static str {
+    let k = tiles.first().map_or(0, Vec::len);
+    if tiles == baselines::data_parallel_tiles(g, k).as_slice() {
+        return "data-parallel";
+    }
+    if tiles == baselines::model_parallel_tiles(g, k).as_slice() {
+        return "model-parallel";
+    }
+    "hybrid"
+}

@@ -1,0 +1,489 @@
+//! The one-cut tiling algorithm (paper §4.2.2).
+//!
+//! Finds the tiling `T: tensors -> {Split(d), Rep}` minimizing the total
+//! conversion cost (Eq. 3) across **two** devices or device groups.
+//!
+//! Implementation of the paper's DP (Eq. 4–5):
+//!
+//! 1. BFS-levelize the undirected op graph ([`crate::graph::bfs_levels`]);
+//!    tensors then split into per-level *boundary* sets (the DP states τ_l)
+//!    and *internal* sets.
+//! 2. Within a level, ops are grouped into *components* connected through
+//!    internal tensors; each component's minimal cost is tabulated once per
+//!    assignment of the boundary tensors it touches, minimizing over its
+//!    internal tensors. (Ops that share only boundary tensors decompose —
+//!    this is what keeps `level_cost` cheap.)
+//! 3. A forward sweep over levels combines component tables into the
+//!    `g_l(τ_l)` recurrence; backtracking recovers the argmin tiling.
+//!
+//! The search is exhaustive over the candidate tiling space, so the result
+//! is optimal for the cost model — the property tests in
+//! [`super::bruteforce`] check this against full enumeration.
+
+use std::collections::HashMap;
+
+use crate::graph::{bfs_levels, Graph, OpId, TensorId};
+use crate::tiling::aligned::INFEASIBLE;
+use crate::tiling::{candidate_tiles, op_cost, Tile};
+
+/// Result of the one-cut DP: a basic tiling per tensor and the total
+/// conversion cost (bytes moved across the cut for one training step).
+#[derive(Debug, Clone)]
+pub struct OneCutPlan {
+    /// Indexed by `TensorId`; tensors not touched by any op get `Rep`.
+    pub tiles: Vec<Tile>,
+    pub cost: u64,
+}
+
+/// An enumerable assignment space over a fixed list of tensors.
+#[derive(Debug, Clone, Default)]
+struct Space {
+    ids: Vec<TensorId>,
+    cands: Vec<Vec<Tile>>,
+}
+
+impl Space {
+    fn new(ids: Vec<TensorId>, all_cands: &[Vec<Tile>]) -> Self {
+        let cands = ids.iter().map(|&t| all_cands[t].clone()).collect();
+        Space { ids, cands }
+    }
+
+    fn len(&self) -> usize {
+        self.cands.iter().map(Vec::len).product()
+    }
+
+    /// Decode a mixed-radix index into per-tensor tiles (same order as ids).
+    fn decode(&self, mut idx: usize) -> Vec<Tile> {
+        let mut out = Vec::with_capacity(self.cands.len());
+        for c in &self.cands {
+            out.push(c[idx % c.len()]);
+            idx /= c.len();
+        }
+        out
+    }
+}
+
+/// One intra-level component: ops connected through internal tensors, plus
+/// the cost table over its touched boundary tensors.
+struct Component {
+    #[allow(dead_code)]
+    ops: Vec<OpId>,
+    /// Boundary tensors this component reads (subset of prev ∪ cur).
+    boundary_ids: Vec<TensorId>,
+    internal: Space,
+    /// Indexed by the mixed-radix assignment of `boundary_ids` (using the
+    /// global candidate lists); value = (min cost, best internal index).
+    table: Vec<(u64, usize)>,
+    /// Radix per boundary tensor (candidate count), same order as ids.
+    boundary_radix: Vec<usize>,
+}
+
+impl Component {
+    /// Index into `table` given a lookup map from tensor to chosen tile.
+    fn index_of(&self, choose: &dyn Fn(TensorId) -> usize) -> usize {
+        let mut idx = 0;
+        let mut mult = 1;
+        for (i, &t) in self.boundary_ids.iter().enumerate() {
+            idx += choose(t) * mult;
+            mult *= self.boundary_radix[i];
+        }
+        idx
+    }
+}
+
+/// Union-find for component construction.
+fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+    while parent[x] != x {
+        parent[x] = parent[parent[x]];
+        x = parent[x];
+    }
+    x
+}
+
+pub fn one_cut(g: &Graph) -> OneCutPlan {
+    let nt = g.tensors.len();
+    let all_cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
+    if g.ops.is_empty() {
+        return OneCutPlan { tiles: vec![Tile::Rep; nt], cost: 0 };
+    }
+    // Steady-state constraint: updated parameters share their parameter's
+    // tiling variable (see Graph::steady_state_aliases).
+    let alias = g.steady_state_aliases();
+
+    let lv = bfs_levels(g);
+    let nlevels = lv.levels.len();
+
+    // Membership maps for quick classification.
+    let mut boundary_level = vec![usize::MAX; nt]; // tensor -> l if in boundary[l]
+    for (l, b) in lv.boundary.iter().enumerate() {
+        for &t in b {
+            boundary_level[t] = l;
+        }
+    }
+    let mut internal_level = vec![usize::MAX; nt];
+    for (l, ts) in lv.internal.iter().enumerate() {
+        for &t in ts {
+            internal_level[t] = l;
+        }
+    }
+
+    // Build per-level components and their tables.
+    let mut level_components: Vec<Vec<Component>> = Vec::with_capacity(nlevels);
+    for (l, ops) in lv.levels.iter().enumerate() {
+        // Union ops sharing an internal tensor of this level.
+        let mut parent: Vec<usize> = (0..ops.len()).collect();
+        let mut internal_owner: HashMap<TensorId, usize> = HashMap::new();
+        for (oi, &op) in ops.iter().enumerate() {
+            let o = &g.ops[op];
+            for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                let t = alias[t];
+                if internal_level[t] == l {
+                    match internal_owner.get(&t) {
+                        None => {
+                            internal_owner.insert(t, oi);
+                        }
+                        Some(&prev) => {
+                            let (a, b) = (find(&mut parent, prev), find(&mut parent, oi));
+                            if a != b {
+                                parent[a] = b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut groups: HashMap<usize, Vec<OpId>> = HashMap::new();
+        for (oi, &op) in ops.iter().enumerate() {
+            groups.entry(find(&mut parent, oi)).or_default().push(op);
+        }
+
+        let mut comps = Vec::new();
+        let mut group_keys: Vec<usize> = groups.keys().copied().collect();
+        group_keys.sort_unstable();
+        for key in group_keys {
+            let comp_ops = groups[&key].clone();
+            let mut bids: Vec<TensorId> = Vec::new();
+            let mut iids: Vec<TensorId> = Vec::new();
+            for &op in &comp_ops {
+                let o = &g.ops[op];
+                for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                    let t = alias[t];
+                    if internal_level[t] == l {
+                        if !iids.contains(&t) {
+                            iids.push(t);
+                        }
+                    } else if !bids.contains(&t) {
+                        bids.push(t);
+                    }
+                }
+            }
+            bids.sort_unstable();
+            iids.sort_unstable();
+            let internal = Space::new(iids, &all_cands);
+            let boundary_radix: Vec<usize> = bids.iter().map(|&t| all_cands[t].len()).collect();
+            let table_len: usize = boundary_radix.iter().product::<usize>().max(1);
+            assert!(
+                table_len.saturating_mul(internal.len().max(1)) < 50_000_000,
+                "level {l} component too large for exhaustive tabulation"
+            );
+
+            // Tabulate: for every boundary assignment, minimize over
+            // internal assignments.
+            let mut table = vec![(INFEASIBLE, 0usize); table_len];
+            let bspace = Space::new(bids.clone(), &all_cands);
+            for bidx in 0..table_len {
+                let btiles = bspace.decode(bidx);
+                let mut best = (INFEASIBLE, 0usize);
+                for iidx in 0..internal.len().max(1) {
+                    let itiles = if internal.ids.is_empty() {
+                        Vec::new()
+                    } else {
+                        internal.decode(iidx)
+                    };
+                    let lookup = |t: TensorId| -> Tile {
+                        let t = alias[t];
+                        if let Some(p) = bids.iter().position(|&x| x == t) {
+                            btiles[p]
+                        } else if let Some(p) = internal.ids.iter().position(|&x| x == t) {
+                            itiles[p]
+                        } else {
+                            unreachable!("tensor {t} not in component scope")
+                        }
+                    };
+                    let mut cost = 0u64;
+                    for &op in &comp_ops {
+                        let o = &g.ops[op];
+                        let ins: Vec<Tile> = o.inputs.iter().map(|&t| lookup(t)).collect();
+                        let out = lookup(o.outputs[0]);
+                        cost = cost.saturating_add(op_cost(g, o, &ins, out));
+                        if cost >= best.0 {
+                            break;
+                        }
+                    }
+                    if cost < best.0 {
+                        best = (cost, iidx);
+                    }
+                }
+                table[bidx] = best;
+            }
+            comps.push(Component {
+                ops: comp_ops,
+                boundary_ids: bids,
+                internal,
+                table,
+                boundary_radix,
+            });
+        }
+        level_components.push(comps);
+    }
+
+    // DP over boundary assignments. boundary[l] exists for l in 0..nlevels-1.
+    let spaces: Vec<Space> = (0..nlevels.saturating_sub(1))
+        .map(|l| Space::new(lv.boundary[l].clone(), &all_cands))
+        .collect();
+    // Position of a tensor within its boundary space (for fast lookups).
+    let mut pos_in_boundary = vec![usize::MAX; nt];
+    for sp in &spaces {
+        for (i, &t) in sp.ids.iter().enumerate() {
+            pos_in_boundary[t] = i;
+        }
+    }
+
+    // g[l][state over boundary[l]] = (cost, best prev state index)
+    let empty = Space::default();
+    let mut dp: Vec<Vec<(u64, usize)>> = Vec::with_capacity(nlevels);
+    for l in 0..nlevels {
+        let prev_space = if l == 0 { &empty } else { &spaces[l - 1] };
+        let cur_space = if l + 1 < nlevels { &spaces[l] } else { &empty };
+        let prev_len = prev_space.len().max(1);
+        let cur_len = cur_space.len().max(1);
+
+        // Decompose each component's table index into contributions from
+        // prev/cur choices: choose(t) = index of t's tile in its candidate
+        // list, read from whichever decoded assignment contains it.
+        let mut cur_dp = vec![(INFEASIBLE, 0usize); cur_len];
+        // Pre-decode candidate index vectors (not tiles) once per state:
+        // the mixed-radix digits ARE the candidate indices.
+        let digits = |space: &Space, mut idx: usize| -> Vec<usize> {
+            space
+                .cands
+                .iter()
+                .map(|c| {
+                    let d = idx % c.len();
+                    idx /= c.len();
+                    d
+                })
+                .collect()
+        };
+        let prev_digit_cache: Vec<Vec<usize>> =
+            (0..prev_len).map(|i| digits(prev_space, i)).collect();
+
+        for cur_idx in 0..cur_len {
+            let cur_digits = digits(cur_space, cur_idx);
+            let mut best = (INFEASIBLE, 0usize);
+            for prev_idx in 0..prev_len {
+                let prev_cost = if l == 0 { 0 } else { dp[l - 1][prev_idx].0 };
+                if prev_cost >= best.0 {
+                    continue;
+                }
+                let prev_digits = &prev_digit_cache[prev_idx];
+                let choose = |t: TensorId| -> usize {
+                    let p = pos_in_boundary[t];
+                    if boundary_level[t] + 1 == l + 0 {
+                        // t in boundary[l-1] -> prev space
+                        prev_digits[p]
+                    } else {
+                        cur_digits[p]
+                    }
+                };
+                let mut cost = prev_cost;
+                for comp in &level_components[l] {
+                    let idx = comp.index_of(&choose);
+                    cost = cost.saturating_add(comp.table[idx].0);
+                    if cost >= best.0 {
+                        break;
+                    }
+                }
+                if cost < best.0 {
+                    best = (cost, prev_idx);
+                }
+            }
+            cur_dp[cur_idx] = best;
+        }
+        dp.push(cur_dp);
+    }
+
+    // Final answer: the last level has an empty "next" boundary.
+    let (final_cost, mut state) = dp[nlevels - 1]
+        .iter()
+        .enumerate()
+        .map(|(i, &(c, p))| (c, i, p))
+        .min()
+        .map(|(c, i, _)| (c, i))
+        .unwrap();
+    assert!(final_cost < INFEASIBLE, "no feasible one-cut tiling exists");
+
+    // Backtrack boundary assignments.
+    let mut boundary_assign: Vec<Vec<Tile>> = vec![Vec::new(); spaces.len()];
+    for l in (0..nlevels).rev() {
+        let prev_state = dp[l][state].1;
+        if l >= 1 {
+            boundary_assign[l - 1] = spaces[l - 1].decode(prev_state);
+        }
+        if l + 1 < nlevels && l < spaces.len() {
+            boundary_assign[l] = spaces[l].decode(state);
+        }
+        state = prev_state;
+    }
+
+    // Assemble final tiles: boundaries from the DP traceback, internals
+    // from the component argmins.
+    let mut tiles = vec![Tile::Rep; nt];
+    for (l, sp) in spaces.iter().enumerate() {
+        for (i, &t) in sp.ids.iter().enumerate() {
+            tiles[t] = boundary_assign[l][i];
+        }
+    }
+    let choose_final = |t: TensorId| -> usize {
+        let l = boundary_level[t];
+        let tile = boundary_assign[l][pos_in_boundary[t]];
+        all_cands[t].iter().position(|&c| c == tile).unwrap()
+    };
+    for comps in &level_components {
+        for comp in comps {
+            let idx = comp.index_of(&choose_final);
+            let (_, best_internal) = comp.table[idx];
+            if !comp.internal.ids.is_empty() {
+                let itiles = comp.internal.decode(best_internal);
+                for (i, &t) in comp.internal.ids.iter().enumerate() {
+                    tiles[t] = itiles[i];
+                }
+            }
+        }
+    }
+
+    // Resolve aliases: updated weights inherit their weight's tiling.
+    for t in 0..nt {
+        tiles[t] = tiles[alias[t]];
+    }
+
+    // Sanity: re-price the assembled tiling; must equal the DP cost.
+    let repriced = price(g, &tiles);
+    debug_assert_eq!(repriced, final_cost, "DP cost mismatch on reconstruction");
+
+    OneCutPlan { tiles, cost: final_cost }
+}
+
+/// Total conversion cost of a complete tiling assignment (Eq. 3).
+pub fn price(g: &Graph, tiles: &[Tile]) -> u64 {
+    let mut total = 0u64;
+    for op in &g.ops {
+        let ins: Vec<Tile> = op.inputs.iter().map(|&t| tiles[t]).collect();
+        total = total.saturating_add(op_cost(g, op, &ins, tiles[op.outputs[0]]));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+    use crate::tiling::Tile;
+
+    fn mlp_train(batch: usize, dims: &[usize]) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        let nl = dims.len() - 1;
+        for l in 0..nl {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+            if l + 1 < nl {
+                h = b.relu(&format!("fc{l}.relu"), h);
+            }
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn forward_chain_prefers_data_parallel_when_batch_large() {
+        // Wide batch, small weights: DP (all-R activations, rep weights)
+        // should be optimal and cost exactly the gradient aggregation.
+        let g = mlp_train(4096, &[64, 64, 64]);
+        let plan = one_cut(&g);
+        // Weight matrices replicated.
+        for t in &g.tensors {
+            if t.kind == crate::graph::TensorKind::Weight && t.rank() == 2 {
+                assert_eq!(plan.tiles[t.id], Tile::Rep, "weight {} not replicated", t.name);
+            }
+        }
+        // Cost strictly positive (gradients must cross) but far below
+        // shipping activations.
+        assert!(plan.cost > 0);
+        assert!(plan.cost < g.activation_bytes());
+    }
+
+    #[test]
+    fn forward_chain_prefers_model_parallel_when_weights_large() {
+        // Tiny batch, huge weights: replicating weights (DP) would pay
+        // 2|W| per layer; splitting them must win.
+        let g = mlp_train(8, &[1024, 1024, 1024]);
+        let plan = one_cut(&g);
+        let n_split_weights = g
+            .tensors
+            .iter()
+            .filter(|t| {
+                t.kind == crate::graph::TensorKind::Weight
+                    && t.rank() == 2
+                    && matches!(plan.tiles[t.id], Tile::Split(_))
+            })
+            .count();
+        assert!(n_split_weights >= 2, "expected split weights, got {n_split_weights}");
+    }
+
+    #[test]
+    fn price_matches_dp_cost() {
+        let g = mlp_train(64, &[32, 48, 16]);
+        let plan = one_cut(&g);
+        assert_eq!(price(&g, &plan.tiles), plan.cost);
+    }
+
+    #[test]
+    fn beats_or_matches_fixed_baselines() {
+        for (batch, dims) in [
+            (512usize, vec![256usize, 256, 256]),
+            (32, vec![512, 512]),
+            (128, vec![64, 256, 64]),
+        ] {
+            let g = mlp_train(batch, &dims);
+            let plan = one_cut(&g);
+            let dp = super::super::baselines::data_parallel_tiles(&g, 1);
+            let mp = super::super::baselines::model_parallel_tiles(&g, 1);
+            let dp_tiles: Vec<Tile> = dp.iter().map(|s| s[0]).collect();
+            let mp_tiles: Vec<Tile> = mp.iter().map(|s| s[0]).collect();
+            assert!(plan.cost <= price(&g, &dp_tiles), "worse than DP for {batch} {dims:?}");
+            assert!(plan.cost <= price(&g, &mp_tiles), "worse than MP for {batch} {dims:?}");
+        }
+    }
+
+    #[test]
+    fn single_op_graph() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]);
+        let w = b.weight("w", &[8, 8]);
+        b.matmul("mm", x, w, false, false);
+        let g = b.finish();
+        let plan = one_cut(&g);
+        // One matmul alone always admits a zero-cost aligned tiling.
+        assert_eq!(plan.cost, 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::default();
+        let plan = one_cut(&g);
+        assert_eq!(plan.cost, 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! The AOT artifact registry: `artifacts/manifest.json` + `*.hlo.txt`.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; afterwards the Rust
+//! binary is self-contained — this module loads the manifest, compiles each
+//! HLO module on the PJRT client lazily, and hands out executables by name.
+//! Python never runs on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::client::{Client, Executable};
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+    /// Free-form tags from the Python side (kind, dims, batch, pallas...).
+    pub tags: HashMap<String, String>,
+}
+
+/// Lazily-compiling artifact registry.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    pub metas: Vec<ArtifactMeta>,
+    compiled: Mutex<HashMap<String, usize>>, // name -> index into `exes`
+    exes: Mutex<Vec<std::sync::Arc<Executable>>>,
+}
+
+fn shapes_of(v: &Json) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.get("dims")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("shape without dims"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl ArtifactRegistry {
+    /// Load `manifest.json` from `dir` (typically `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut metas = Vec::new();
+        for a in arts {
+            let name = a.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("unnamed artifact"))?;
+            let file = a.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact without file"))?;
+            let mut tags = HashMap::new();
+            if let Some(Json::Obj(m)) = a.get("tags") {
+                for (k, v) in m {
+                    let vs = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => format!("{n}"),
+                        Json::Bool(b) => format!("{b}"),
+                        other => format!("{other:?}"),
+                    };
+                    tags.insert(k.clone(), vs);
+                }
+            }
+            metas.push(ArtifactMeta {
+                name: name.to_string(),
+                file: file.to_string(),
+                input_shapes: shapes_of(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                output_shapes: shapes_of(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                tags,
+            });
+        }
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            metas,
+            compiled: Mutex::new(HashMap::new()),
+            exes: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.iter().find(|m| m.name == name)
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn get(&self, client: &Client, name: &str) -> Result<std::sync::Arc<Executable>> {
+        {
+            let map = self.compiled.lock().unwrap();
+            if let Some(&i) = map.get(name) {
+                return Ok(self.exes.lock().unwrap()[i].clone());
+            }
+        }
+        let meta = self
+            .meta(name)
+            .ok_or_else(|| anyhow!("no artifact named {name} in manifest"))?
+            .clone();
+        let text = std::fs::read_to_string(self.dir.join(&meta.file))
+            .with_context(|| format!("reading artifact {}", meta.file))?;
+        let exe = client.compile_hlo_text(&text, meta.output_shapes.clone())?;
+        let arc = std::sync::Arc::new(exe);
+        let mut exes = self.exes.lock().unwrap();
+        let mut map = self.compiled.lock().unwrap();
+        exes.push(arc.clone());
+        map.insert(meta.name.clone(), exes.len() - 1);
+        Ok(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let reg = ArtifactRegistry::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(reg.metas.len() >= 5, "expected the full catalog");
+        let step = reg.meta("mlp_step").expect("mlp_step artifact");
+        // x, y, lr + 8 params = 11 inputs; loss + 8 updated params out.
+        assert_eq!(step.input_shapes.len(), 11);
+        assert_eq!(step.output_shapes.len(), 9);
+        assert_eq!(step.input_shapes[0], vec![128, 784]);
+    }
+
+    #[test]
+    fn pallas_artifact_tagged() {
+        let reg = ArtifactRegistry::load(&artifacts_dir()).unwrap();
+        let m = reg.meta("mlp_step_small_pallas").expect("pallas artifact");
+        assert_eq!(m.tags.get("pallas").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let reg = ArtifactRegistry::load(&artifacts_dir()).unwrap();
+        assert!(reg.meta("nope").is_none());
+    }
+}

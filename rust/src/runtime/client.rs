@@ -1,0 +1,84 @@
+//! PJRT client wrapper: compile HLO (text artifacts or built computations)
+//! and execute with [`HostTensor`] inputs/outputs.
+//!
+//! This is the only module that touches the `xla` crate FFI. Follows the
+//! /opt/xla-example/load_hlo pattern: HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids).
+
+use anyhow::{Context, Result};
+
+use super::tensor::HostTensor;
+
+/// A PJRT CPU client (thread-safe; the engine shares one behind an `Arc`).
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+/// A compiled computation ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Output shapes, in tuple order (from the manifest or the builder).
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Self> {
+        Ok(Client { inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Compile HLO text (the AOT artifact format).
+    pub fn compile_hlo_text(&self, text: &str, out_shapes: Vec<Vec<usize>>) -> Result<Executable> {
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
+            .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.inner.compile(&comp).context("compiling HLO")?;
+        Ok(Executable { exe, out_shapes })
+    }
+
+    /// Compile a computation built with `XlaBuilder` (the dynamic path).
+    pub fn compile(&self, comp: &xla::XlaComputation, out_shapes: Vec<Vec<usize>>) -> Result<Executable> {
+        let exe = self.inner.compile(comp).context("compiling computation")?;
+        Ok(Executable { exe, out_shapes })
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+fn from_literal(l: &xla::Literal, shape: &[usize]) -> Result<HostTensor> {
+    let data = l.to_vec::<f32>()?;
+    Ok(HostTensor::from_vec(shape, data))
+}
+
+impl Executable {
+    /// Execute with host inputs; returns the tuple elements as host
+    /// tensors. Every computation in this repo returns a tuple (the AOT
+    /// path lowers with `return_tuple=True`; the dynamic builder wraps).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.out_shapes.len(),
+            "expected {} outputs, got {}",
+            self.out_shapes.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&self.out_shapes)
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+}

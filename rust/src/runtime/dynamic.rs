@@ -1,0 +1,196 @@
+//! Dynamic kernel construction with `XlaBuilder` — zero Python at runtime.
+//!
+//! The planner is free to pick tilings whose shard shapes were not known at
+//! `make artifacts` time; this module builds the per-shard computations for
+//! the MLP operator set on the fly and caches compiled executables by
+//! (kind, shapes) signature. The AOT artifact path remains the hot path for
+//! the canonical e2e shapes; tests cross-check the two against each other.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::graph::{EwKind, OpKind};
+
+use super::client::{Client, Executable};
+
+/// Signature of a dynamic kernel: op kind + input shapes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KernelSig {
+    pub kind: KernelKind,
+    pub in_shapes: Vec<Vec<usize>>,
+}
+
+/// The executable operator set of the real engine (the MLP family; conv
+/// models are planned and simulated but not executed — see DESIGN.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    MatMul { ta: bool, tb: bool },
+    BiasAdd,
+    Relu,
+    ReluGrad,
+    Add,
+    ReduceSumRows,
+    /// Sum (not mean) of per-row softmax cross-entropies; the engine
+    /// divides by the global batch after shard reduction.
+    SoftmaxXentSum,
+    /// `(softmax(logits) − onehot) · scale` with `scale` a scalar input.
+    SoftmaxXentGrad,
+    /// `w − lr · g` with `lr` a scalar input.
+    SgdUpdate,
+}
+
+impl KernelKind {
+    /// Maps a semantic op to its kernel (None = not executable).
+    pub fn of(op: &OpKind) -> Option<KernelKind> {
+        match op {
+            OpKind::MatMul { ta, tb } => Some(KernelKind::MatMul { ta: *ta, tb: *tb }),
+            OpKind::BiasAdd => Some(KernelKind::BiasAdd),
+            OpKind::Ew(EwKind::Relu) => Some(KernelKind::Relu),
+            OpKind::Ew(EwKind::ReluGrad) => Some(KernelKind::ReluGrad),
+            OpKind::Ew(EwKind::Add) => Some(KernelKind::Add),
+            OpKind::ReduceSumRows => Some(KernelKind::ReduceSumRows),
+            OpKind::SoftmaxXent => Some(KernelKind::SoftmaxXentSum),
+            OpKind::SoftmaxXentGrad => Some(KernelKind::SoftmaxXentGrad),
+            OpKind::SgdUpdate => Some(KernelKind::SgdUpdate),
+            _ => None,
+        }
+    }
+
+    /// Extra trailing scalar parameters beyond the op's tensor inputs.
+    pub fn scalar_params(&self) -> usize {
+        match self {
+            KernelKind::SoftmaxXentGrad | KernelKind::SgdUpdate => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Build the `XlaComputation` for a signature. Returns the computation and
+/// its output shapes.
+pub fn build_kernel(sig: &KernelSig) -> Result<(xla::XlaComputation, Vec<Vec<usize>>)> {
+    let b = xla::XlaBuilder::new(&format!("{:?}", sig.kind));
+    let shape = |dims: &[usize]| {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        xla::Shape::array::<f32>(d)
+    };
+    let mut params = Vec::new();
+    for (i, s) in sig.in_shapes.iter().enumerate() {
+        params.push(b.parameter_s(i as i64, &shape(s), &format!("p{i}"))?);
+    }
+    for i in 0..sig.kind.scalar_params() {
+        let n = sig.in_shapes.len() + i;
+        params.push(b.parameter_s(n as i64, &shape(&[]), &format!("s{i}"))?);
+    }
+
+    let (out, out_shape): (xla::XlaOp, Vec<usize>) = match sig.kind {
+        KernelKind::MatMul { ta, tb } => {
+            let a = if ta { params[0].transpose(&[1, 0])? } else { params[0].clone() };
+            let c = if tb { params[1].transpose(&[1, 0])? } else { params[1].clone() };
+            let m = if ta { sig.in_shapes[0][1] } else { sig.in_shapes[0][0] };
+            let n = if tb { sig.in_shapes[1][0] } else { sig.in_shapes[1][1] };
+            (a.matmul(&c)?, vec![m, n])
+        }
+        KernelKind::BiasAdd => {
+            let [m, n] = [sig.in_shapes[0][0], sig.in_shapes[0][1]];
+            let bias = params[1].broadcast_in_dim(&[m as i64, n as i64], &[1])?;
+            (params[0].add_(&bias)?, vec![m, n])
+        }
+        KernelKind::Relu => {
+            let zero = b.c0(0f32)?;
+            (params[0].max(&zero)?, sig.in_shapes[0].clone())
+        }
+        KernelKind::ReluGrad => {
+            // dz * (y > 0)
+            let zero = b.c0(0f32)?;
+            let mask = params[1].gt(&zero)?.convert(xla::PrimitiveType::F32)?;
+            (params[0].mul_(&mask)?, sig.in_shapes[0].clone())
+        }
+        KernelKind::Add => (params[0].add_(&params[1])?, sig.in_shapes[0].clone()),
+        KernelKind::ReduceSumRows => {
+            (params[0].reduce_sum(&[0], false)?, vec![sig.in_shapes[0][1]])
+        }
+        KernelKind::SoftmaxXentSum => {
+            // sum over rows of -(onehot · log_softmax(logits))
+            let logits = &params[0];
+            let onehot = &params[1];
+            let m = logits.reduce_max(&[1], true)?;
+            let shifted = logits.sub_(&m)?;
+            let lse = shifted.exp()?.reduce_sum(&[1], true)?.log()?;
+            let logp = shifted.sub_(&lse)?;
+            let per_row = onehot.mul_(&logp)?.reduce_sum(&[1], false)?;
+            let total = per_row.reduce_sum(&[0], false)?;
+            let zero = b.c0(0f32)?;
+            (zero.sub_(&total)?, vec![])
+        }
+        KernelKind::SoftmaxXentGrad => {
+            // (softmax(logits) − onehot) · scale
+            let logits = &params[0];
+            let onehot = &params[1];
+            let scale = &params[2];
+            let m = logits.reduce_max(&[1], true)?;
+            let e = logits.sub_(&m)?.exp()?;
+            let z = e.reduce_sum(&[1], true)?;
+            let soft = e.div_(&z)?;
+            let dims: Vec<i64> = sig.in_shapes[0].iter().map(|&d| d as i64).collect();
+            let sc = scale.broadcast_in_dim(&dims, &[])?;
+            (soft.sub_(onehot)?.mul_(&sc)?, sig.in_shapes[0].clone())
+        }
+        KernelKind::SgdUpdate => {
+            // w − lr · g
+            let w = &params[0];
+            let g = &params[1];
+            let lr = &params[2];
+            let dims: Vec<i64> = sig.in_shapes[0].iter().map(|&d| d as i64).collect();
+            let lrb = lr.broadcast_in_dim(&dims, &[])?;
+            (w.sub_(&g.mul_(&lrb)?)?, sig.in_shapes[0].clone())
+        }
+    };
+
+    let tuple = b.tuple(&[out])?;
+    let comp = tuple.build()?;
+    Ok((comp, vec![out_shape]))
+}
+
+/// Compile-once cache of dynamic kernels.
+pub struct KernelCache {
+    client: Arc<Client>,
+    cache: Mutex<HashMap<KernelSig, Arc<Executable>>>,
+}
+
+impl KernelCache {
+    pub fn new(client: Arc<Client>) -> Self {
+        KernelCache { client, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, sig: &KernelSig) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(sig) {
+            return Ok(e.clone());
+        }
+        let (comp, out_shapes) = build_kernel(sig)?;
+        let exe = Arc::new(self.client.compile(&comp, out_shapes)?);
+        self.cache.lock().unwrap().insert(sig.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn client(&self) -> &Arc<Client> {
+        &self.client
+    }
+}
+
+/// Helper for callers that need an executable check before building.
+pub fn executable_op(kind: &OpKind) -> Result<KernelKind> {
+    match KernelKind::of(kind) {
+        Some(k) => Ok(k),
+        None => bail!("op kind {kind:?} is not executable by the engine (plan/simulate only)"),
+    }
+}

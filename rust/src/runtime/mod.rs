@@ -1,0 +1,23 @@
+//! The PJRT runtime: everything that executes real numbers.
+//!
+//! - [`client`] — the one FFI boundary: PJRT CPU client, HLO-text
+//!   compilation, literal conversion.
+//! - [`artifacts`] — the AOT registry over `artifacts/manifest.json`
+//!   (Python's only output; never imported at runtime).
+//! - [`dynamic`] — `XlaBuilder` shard kernels for shapes the planner
+//!   invents at runtime, compiled once and cached.
+//! - [`tensor`] — host-side dense tensors with region slice/paste.
+//! - [`engine`] — the BSP virtual-device executor realizing a tiling plan
+//!   with real buffers and metered transfers.
+
+pub mod artifacts;
+pub mod client;
+pub mod dynamic;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::ArtifactRegistry;
+pub use client::{Client, Executable};
+pub use dynamic::{KernelCache, KernelKind, KernelSig};
+pub use engine::{Engine, Metrics};
+pub use tensor::HostTensor;

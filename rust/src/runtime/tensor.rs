@@ -1,0 +1,209 @@
+//! Host-side f32 tensors: the engine's working representation.
+//!
+//! Row-major dense arrays with the region slicing/pasting the §5.2 tiling
+//! conversions need (senders slice shards, receivers concatenate).
+
+use crate::exec::Region;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    #[allow(dead_code)]
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for d in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.shape[d + 1];
+        }
+        s
+    }
+
+    /// Copy out an axis-aligned region as a new tensor.
+    pub fn slice(&self, r: &Region) -> HostTensor {
+        assert_eq!(r.offset.len(), self.shape.len());
+        for d in 0..self.shape.len() {
+            assert!(r.offset[d] + r.shape[d] <= self.shape[d], "region out of bounds");
+        }
+        let mut out = HostTensor::zeros(&r.shape);
+        copy_region(&self.data, &self.shape, r, &mut out.data, &r.shape, &zero_region(&r.shape), false);
+        out
+    }
+
+    /// Paste `src` (whose shape equals `r.shape`) into region `r` of self.
+    pub fn paste(&mut self, r: &Region, src: &HostTensor) {
+        assert_eq!(src.shape, r.shape);
+        let shape = self.shape.clone();
+        copy_region(&src.data, &src.shape, &zero_region(&src.shape), &mut self.data, &shape, r, false);
+    }
+
+    /// Add `src` into region `r` of self (for reductions).
+    pub fn add_region(&mut self, r: &Region, src: &HostTensor) {
+        assert_eq!(src.shape, r.shape);
+        let shape = self.shape.clone();
+        copy_region(&src.data, &src.shape, &zero_region(&src.shape), &mut self.data, &shape, r, true);
+    }
+
+    /// Elementwise add (shapes must match).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+fn zero_region(shape: &[usize]) -> Region {
+    Region { offset: vec![0; shape.len()], shape: shape.to_vec() }
+}
+
+/// Generic strided copy: `dst[dst_region] (+)= src[src_region]`, both
+/// regions of identical shape.
+fn copy_region(
+    src: &[f32],
+    src_shape: &[usize],
+    src_region: &Region,
+    dst: &mut [f32],
+    dst_shape: &[usize],
+    dst_region: &Region,
+    accumulate: bool,
+) {
+    assert_eq!(src_region.shape, dst_region.shape);
+    let rank = src_shape.len();
+    if rank == 0 {
+        if accumulate {
+            dst[0] += src[0];
+        } else {
+            dst[0] = src[0];
+        }
+        return;
+    }
+    let sstr = strides_of(src_shape);
+    let dstr = strides_of(dst_shape);
+    // Iterate over all rows (all dims but the last), memcpy the last dim.
+    let rows: usize = src_region.shape[..rank - 1].iter().product::<usize>().max(1);
+    let rowlen = src_region.shape[rank - 1];
+    let mut idx = vec![0usize; rank.saturating_sub(1)];
+    for _ in 0..rows {
+        let mut soff = src_region.offset[rank - 1];
+        let mut doff = dst_region.offset[rank - 1];
+        for d in 0..rank - 1 {
+            soff += (src_region.offset[d] + idx[d]) * sstr[d];
+            doff += (dst_region.offset[d] + idx[d]) * dstr[d];
+        }
+        if accumulate {
+            for i in 0..rowlen {
+                dst[doff + i] += src[soff + i];
+            }
+        } else {
+            dst[doff..doff + rowlen].copy_from_slice(&src[soff..soff + rowlen]);
+        }
+        // odometer
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < src_region.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::from_vec(shape, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn slice_matrix_block() {
+        let t = iota(&[4, 4]);
+        let r = Region { offset: vec![1, 2], shape: vec![2, 2] };
+        let s = t.slice(&r);
+        assert_eq!(s.data, vec![6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn slice_then_paste_roundtrip() {
+        let t = iota(&[6, 5]);
+        let r = Region { offset: vec![2, 1], shape: vec![3, 3] };
+        let s = t.slice(&r);
+        let mut u = HostTensor::zeros(&[6, 5]);
+        u.paste(&r, &s);
+        assert_eq!(u.slice(&r), s);
+    }
+
+    #[test]
+    fn add_region_accumulates() {
+        let mut t = HostTensor::zeros(&[2, 2]);
+        let ones = HostTensor::from_vec(&[2, 2], vec![1.0; 4]);
+        let full = Region { offset: vec![0, 0], shape: vec![2, 2] };
+        t.add_region(&full, &ones);
+        t.add_region(&full, &ones);
+        assert_eq!(t.data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = HostTensor::scalar(3.5);
+        let r = Region { offset: vec![], shape: vec![] };
+        assert_eq!(s.slice(&r).data, vec![3.5]);
+    }
+
+    #[test]
+    fn rank1_slice() {
+        let t = iota(&[6]);
+        let r = Region { offset: vec![2], shape: vec![3] };
+        assert_eq!(t.slice(&r).data, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = iota(&[3, 3]);
+        let mut b = iota(&[3, 3]);
+        b.data[4] += 0.25;
+        assert_eq!(a.max_abs_diff(&b), 0.25);
+    }
+}

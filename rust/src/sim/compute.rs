@@ -1,0 +1,160 @@
+//! Shard compute-time model: FLOP counts and shape-dependent GEMM
+//! efficiency.
+//!
+//! The paper's §6.3 observation — the same total work runs at different
+//! speeds depending on matrix shape, because the BLAS library picks
+//! different algorithms — is modeled by an efficiency factor that penalizes
+//! skinny operands. The factor's constants can be recalibrated from real
+//! PJRT CPU measurements (`table1_shapes` bench) via [`EffModel`].
+
+use crate::exec::{resident_region, ShardTask};
+use crate::graph::{Graph, Op, OpKind};
+
+/// Shape-dependent fraction of peak a GEMM of local shape (m, k, n)
+/// achieves.
+#[derive(Debug, Clone)]
+pub struct EffModel {
+    /// Dimension at which efficiency saturates.
+    pub knee: f64,
+    /// Floor efficiency for degenerate shapes.
+    pub floor: f64,
+}
+
+impl Default for EffModel {
+    fn default() -> Self {
+        // Saturate near 512-wide operands; a 1-wide GEMV limps at 5%.
+        EffModel { knee: 512.0, floor: 0.05 }
+    }
+}
+
+impl EffModel {
+    pub fn gemm_eff(&self, m: f64, k: f64, n: f64) -> f64 {
+        let mind = m.min(k).min(n);
+        (mind / self.knee).sqrt().clamp(self.floor, 1.0)
+    }
+}
+
+/// The local (per-device) shapes an op computes on under its schedule:
+/// ghost input shapes and produced output shape. Device 0 is
+/// representative — the tiling is even, so every device matches.
+pub fn local_shapes(g: &Graph, op: &Op, task: &ShardTask) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let ins = op
+        .inputs
+        .iter()
+        .zip(&task.required_ins)
+        .map(|(&t, seq)| resident_region(&g.tensors[t].shape, seq, 0).shape)
+        .collect();
+    let out = resident_region(&g.tensors[op.outputs[0]].shape, &task.produced, 0).shape;
+    (ins, out)
+}
+
+/// FLOPs of one device's local execution of `op` under `task`.
+pub fn shard_flops(g: &Graph, op: &Op, task: &ShardTask) -> f64 {
+    let (ins, out) = local_shapes(g, op, task);
+    let vol = |s: &[usize]| s.iter().product::<usize>() as f64;
+    match op.kind {
+        OpKind::MatMul { ta, .. } => {
+            let (m, kk) = if ta { (ins[0][1], ins[0][0]) } else { (ins[0][0], ins[0][1]) };
+            let n = out[1];
+            2.0 * m as f64 * kk as f64 * n as f64
+        }
+        OpKind::Conv2d { .. } | OpKind::Conv2dBwdData { .. } | OpKind::Conv2dBwdFilter { .. } => {
+            // 2 · N·OH·OW · KH·KW·CIN · COUT with shard dims. Identify the
+            // filter operand by rank-4 HWIO shape on the weight slot.
+            let (act, filt, outv) = match op.kind {
+                OpKind::Conv2dBwdFilter { .. } => (&ins[0], &out, &ins[1]),
+                _ => (&ins[0], &ins[1], &out),
+            };
+            let spatial = outv[1] * outv[2];
+            2.0 * act[0] as f64
+                * spatial as f64
+                * (filt[0] * filt[1] * filt[2]) as f64
+                * filt[3] as f64
+        }
+        // Elementwise-ish: a handful of flops per output element.
+        OpKind::SoftmaxXent | OpKind::SoftmaxXentGrad => 8.0 * vol(&ins[0]),
+        _ => 2.0 * vol(&out).max(vol(&ins[0])),
+    }
+}
+
+/// Seconds of local compute for `op` under `task` at `peak_flops` with the
+/// shape-effect model applied (matmul/conv only; elementwise ops run at a
+/// fixed fraction of peak since they are bandwidth-bound).
+pub fn shard_seconds(g: &Graph, op: &Op, task: &ShardTask, peak_flops: f64, eff: &EffModel) -> f64 {
+    let flops = shard_flops(g, op, task);
+    let (ins, out) = local_shapes(g, op, task);
+    let e = match op.kind {
+        OpKind::MatMul { ta, .. } => {
+            let (m, kk) = if ta { (ins[0][1], ins[0][0]) } else { (ins[0][0], ins[0][1]) };
+            eff.gemm_eff(m as f64, kk as f64, out[1] as f64)
+        }
+        OpKind::Conv2d { .. } | OpKind::Conv2dBwdData { .. } | OpKind::Conv2dBwdFilter { .. } => {
+            // Convs im2col to fat GEMMs; penalize only tiny channel counts.
+            let c = *out.last().unwrap() as f64;
+            eff.gemm_eff(c.max(64.0), c.max(64.0), c.max(64.0))
+        }
+        // Bandwidth-bound ops: ~4% of peak.
+        _ => 0.04,
+    };
+    flops / (peak_flops * e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::build_shard_tasks;
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::{baselines, k_cut};
+
+    #[test]
+    fn eff_monotone_in_min_dim() {
+        let m = EffModel::default();
+        assert!(m.gemm_eff(8192.0, 8192.0, 8192.0) > m.gemm_eff(64.0, 8192.0, 8192.0));
+        assert_eq!(m.gemm_eff(512.0, 512.0, 512.0), 1.0);
+        assert!(m.gemm_eff(1.0, 1.0, 1.0) >= m.floor);
+    }
+
+    #[test]
+    fn dp_shard_flops_scale_inversely_with_devices() {
+        let g = mlp(&MlpConfig::fig8(512, 256));
+        let fwd = g.ops.iter().find(|o| o.name == "fc0").unwrap();
+        let full = 2.0 * 512.0 * 256.0 * 256.0;
+        for k in 0..3 {
+            let plan = baselines::data_parallel(&g, k);
+            let tasks = build_shard_tasks(&g, &plan);
+            let f = shard_flops(&g, fwd, &tasks[fwd.id]);
+            assert_eq!(f, full / (1 << k) as f64, "k={k}");
+        }
+    }
+
+    #[test]
+    fn soybean_balances_total_work() {
+        // Whatever the plan, per-device flops ≈ serial flops / devices
+        // (even tiling, no redundant compute on matmuls).
+        let g = mlp(&MlpConfig::fig8(512, 128));
+        let serial: f64 = {
+            let plan = k_cut(&g, 0);
+            let tasks = build_shard_tasks(&g, &plan);
+            g.ops.iter().map(|o| shard_flops(&g, o, &tasks[o.id])).sum()
+        };
+        let plan = k_cut(&g, 2);
+        let tasks = build_shard_tasks(&g, &plan);
+        let sharded: f64 = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::MatMul { .. }))
+            .map(|o| shard_flops(&g, o, &tasks[o.id]))
+            .sum();
+        let serial_mm: f64 = {
+            let plan0 = k_cut(&g, 0);
+            let t0 = build_shard_tasks(&g, &plan0);
+            g.ops
+                .iter()
+                .filter(|o| matches!(o.kind, OpKind::MatMul { .. }))
+                .map(|o| shard_flops(&g, o, &t0[o.id]))
+                .sum()
+        };
+        assert!((sharded - serial_mm / 4.0).abs() / serial_mm < 1e-9);
+        let _ = serial;
+    }
+}

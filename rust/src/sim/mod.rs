@@ -1,0 +1,18 @@
+//! Device/interconnect simulator — the testbed substitute for the paper's
+//! 8× GK210 p2.8xlarge instance (see DESIGN.md, hardware substitution).
+//!
+//! Given a training graph and a tiling plan, the simulator materializes the
+//! plan's shard schedule ([`crate::exec`]), meters every ghost-gather,
+//! reduction, and output-conversion transfer onto the PCIe-tree tiers of
+//! §5.1, applies per-tier bandwidth and contention (the paper's §6.2
+//! observation that aggregate PCIe throughput does not scale with
+//! simultaneous peers), and combines with a shape-aware compute model
+//! ([`compute`]) into per-step runtime and *communication overhead*
+//! (runtime minus compute-only runtime — the paper's metric, which credits
+//! overlap).
+
+pub mod compute;
+mod simulate;
+
+pub use compute::{shard_flops, EffModel};
+pub use simulate::{simulate, simulate_classic_dp, simulate_forced, SimConfig, SimReport};

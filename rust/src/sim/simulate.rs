@@ -1,0 +1,275 @@
+//! Event accounting for one training step under a plan.
+//!
+//! Communication is metered *group-hierarchically*, exactly as the §4 cost
+//! model prices it: the cut-`j` conversions happen between `2^j` pairs of
+//! device groups, each moving the per-op conversion bytes of the
+//! `j`-times-halved graph, and that traffic crosses interconnect tier `j`
+//! (§5.1 placement). This keeps the simulator and the optimizer on one
+//! theory — the metered bytes equal the plan's Theorem-1 cost bit for bit
+//! (asserted in tests). Compute uses the shape-aware model in [`compute`].
+
+use crate::exec::build_shard_tasks;
+use crate::graph::{Graph, Op};
+use crate::planner::{apply_cut, classic_dp_form, Plan};
+use crate::tiling::{op_cost, op_cost_with_form, Form, Tile};
+
+use super::compute::{shard_seconds, EffModel};
+
+/// Testbed parameters. Defaults model the paper's p2.8xlarge: 8 GK210
+/// GPUs (~2.9 TFLOP/s fp32 each) on a PCIe tree with ~10 GB/s effective
+/// per-direction links, QPI above it, and limited aggregate parallelism on
+/// shared segments.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Peak f32 FLOP/s per device.
+    pub peak_flops: f64,
+    /// Per-tier link bandwidth in bytes/s, slowest (tier 0 = first cut)
+    /// first. The last entry repeats if `k` exceeds the list.
+    pub tier_bandwidth: Vec<f64>,
+    /// Effective number of concurrent group-pair transfers a tier sustains
+    /// before its aggregate saturates (PCIe contention, §6.2: "aggregate
+    /// communication throughput is limited by contention on shared PCI-e
+    /// resources").
+    pub tier_parallel: Vec<f64>,
+    /// Per-op-per-cut fixed latency (s).
+    pub latency: f64,
+    /// Fraction of compute time communication can hide behind
+    /// (overhead = comm − overlap·compute, clamped at 0).
+    pub overlap: f64,
+    /// GEMM shape-effect model.
+    pub eff: EffModel,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            peak_flops: 2.9e12,
+            // QPI, PCIe switch, direct PCIe.
+            tier_bandwidth: vec![8.0e9, 10.0e9, 12.0e9],
+            tier_parallel: vec![1.0, 2.0, 4.0],
+            latency: 20e-6,
+            overlap: 0.3,
+            eff: EffModel::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Communication disabled — the paper's modified-backend run used to
+    /// isolate computation time (§6.2).
+    pub fn compute_only(mut self) -> Self {
+        for b in &mut self.tier_bandwidth {
+            *b = f64::INFINITY;
+        }
+        self.latency = 0.0;
+        self
+    }
+
+    fn bw(&self, tier: usize) -> f64 {
+        *self.tier_bandwidth.get(tier).unwrap_or_else(|| self.tier_bandwidth.last().unwrap())
+    }
+
+    fn parallel(&self, tier: usize) -> f64 {
+        *self.tier_parallel.get(tier).unwrap_or_else(|| self.tier_parallel.last().unwrap())
+    }
+}
+
+/// Simulation result for one training step.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub devices: usize,
+    /// Per-device compute seconds (even tiling — all devices identical).
+    pub compute_s: f64,
+    /// Communication seconds (tier-serialized, contention-aware).
+    pub comm_s: f64,
+    /// Overhead after overlap: `max(0, comm − overlap·compute)`.
+    pub overhead_s: f64,
+    /// `compute + overhead` — the measured-runtime analogue.
+    pub step_s: f64,
+    /// Total bytes crossing each tier (index = cut, outermost first).
+    pub tier_bytes: Vec<u64>,
+    pub total_bytes: u64,
+}
+
+impl SimReport {
+    pub fn throughput(&self, batch: usize) -> f64 {
+        batch as f64 / self.step_s
+    }
+}
+
+/// Simulate one training step of `g` under `plan`.
+pub fn simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
+    simulate_forced(g, plan, cfg, &|_, _| None)
+}
+
+/// Simulate the stock data-parallel execution: gradient aggregation via
+/// the classic allreduce forms (what the paper's MXNet baseline does).
+pub fn simulate_classic_dp(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
+    simulate_forced(g, plan, cfg, &classic_dp_form)
+}
+
+/// [`simulate`] with per-op forced aligned forms.
+pub fn simulate_forced(
+    g: &Graph,
+    plan: &Plan,
+    cfg: &SimConfig,
+    forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
+) -> SimReport {
+    let k = plan.k;
+    let tasks = build_shard_tasks(g, plan);
+
+    // Compute: per-device local work (even tiling: identical on all).
+    let mut compute_s = 0.0f64;
+    for op in &g.ops {
+        compute_s += shard_seconds(g, op, &tasks[op.id], cfg.peak_flops, &cfg.eff);
+    }
+
+    // Communication: per cut j, 2^j group pairs each move the per-op
+    // conversion bytes of the j-times-halved graph across tier j.
+    let mut tier_bytes = vec![0u64; k];
+    let mut tier_ops = vec![0u64; k];
+    let mut cur = g.clone();
+    for j in 0..k {
+        let cut: Vec<Tile> = plan.tiles.iter().map(|s| s[j]).collect();
+        let pairs = 1u64 << j;
+        for op in &cur.ops {
+            let ins: Vec<Tile> = op.inputs.iter().map(|&t| cut[t]).collect();
+            let out = cut[op.outputs[0]];
+            let c = match forced(&cur, op) {
+                Some(f) => op_cost_with_form(&cur, op, &ins, out, f)
+                    .unwrap_or_else(|| op_cost(&cur, op, &ins, out)),
+                None => op_cost(&cur, op, &ins, out),
+            };
+            if c > 0 {
+                tier_bytes[j] += pairs * c;
+                tier_ops[j] += pairs;
+            }
+        }
+        cur = apply_cut(&cur, &cut);
+    }
+
+    let mut comm_s = 0.0;
+    for j in 0..k {
+        if tier_bytes[j] == 0 {
+            continue;
+        }
+        // 2^j simultaneous pair transfers share the tier's aggregate.
+        let agg_bw = cfg.bw(j) * cfg.parallel(j).min((1u64 << j) as f64);
+        comm_s += tier_bytes[j] as f64 / agg_bw
+            + cfg.latency * (tier_ops[j] as f64 / (1u64 << j) as f64);
+    }
+
+    let overhead_s = (comm_s - cfg.overlap * compute_s).max(0.0);
+    SimReport {
+        devices: plan.devices(),
+        compute_s,
+        comm_s,
+        overhead_s,
+        step_s: compute_s + overhead_s,
+        total_bytes: tier_bytes.iter().sum(),
+        tier_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{cnn5, mlp, MlpConfig};
+    use crate::planner::{Planner, Strategy};
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn serial_plan_has_no_comm() {
+        let g = mlp(&MlpConfig::fig8(512, 256));
+        let plan = Planner::plan(&g, 0, Strategy::Soybean);
+        let r = simulate(&g, &plan, &cfg());
+        assert_eq!(r.total_bytes, 0);
+        assert_eq!(r.comm_s, 0.0);
+        assert!(r.compute_s > 0.0);
+        assert_eq!(r.step_s, r.compute_s);
+    }
+
+    #[test]
+    fn sim_bytes_equal_plan_cost() {
+        // The simulator meters the same theory the optimizer prices:
+        // metered bytes == Theorem-1 total, exactly.
+        let g = mlp(&MlpConfig::fig8(512, 512));
+        for strat in [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean] {
+            let plan = Planner::plan(&g, 3, strat);
+            // The DP baseline is priced (and must be simulated) with the
+            // classic gradient-aggregation forms.
+            let r = if strat == Strategy::DataParallel {
+                simulate_classic_dp(&g, &plan, &cfg())
+            } else {
+                simulate(&g, &plan, &cfg())
+            };
+            assert_eq!(r.total_bytes, plan.total_cost(), "{}", strat.name());
+        }
+    }
+
+    #[test]
+    fn compute_only_config_zeroes_overhead() {
+        let g = mlp(&MlpConfig::fig8(512, 1024));
+        let plan = Planner::plan(&g, 3, Strategy::DataParallel);
+        let r = simulate(&g, &plan, &cfg().compute_only());
+        assert_eq!(r.overhead_s, 0.0);
+        assert!(r.total_bytes > 0, "bytes still counted, just free");
+    }
+
+    #[test]
+    fn dp_overhead_dominates_at_small_batch_large_weights() {
+        // Figure 8(a)'s qualitative claim: 8 GPUs, hidden 8192, batch 512:
+        // DP's communication overhead far exceeds compute.
+        let g = mlp(&MlpConfig::fig8(512, 8192));
+        let dp = simulate(&g, &Planner::plan(&g, 3, Strategy::DataParallel), &cfg());
+        assert!(
+            dp.overhead_s > 2.0 * dp.compute_s,
+            "overhead {} compute {}",
+            dp.overhead_s,
+            dp.compute_s
+        );
+        // And SOYBEAN's plan must beat DP end to end.
+        let soy = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
+        assert!(soy.step_s < dp.step_s);
+    }
+
+    #[test]
+    fn soybean_never_more_bytes_than_baselines() {
+        for (g, label) in [
+            (mlp(&MlpConfig::fig8(512, 2048)), "mlp-small-batch"),
+            (mlp(&MlpConfig::fig8(2048, 2048)), "mlp-big-batch"),
+            (cnn5(256, 6, 4, 128, 10), "cnn-small-image"),
+        ] {
+            let soy = simulate(&g, &Planner::plan(&g, 2, Strategy::Soybean), &cfg());
+            let dp = simulate(&g, &Planner::plan(&g, 2, Strategy::DataParallel), &cfg());
+            let mp = simulate(&g, &Planner::plan(&g, 2, Strategy::ModelParallel), &cfg());
+            assert!(soy.total_bytes <= dp.total_bytes, "{label}: soy bytes > dp");
+            assert!(soy.total_bytes <= mp.total_bytes, "{label}: soy bytes > mp");
+            assert!(soy.step_s <= dp.step_s * 1.02, "{label}");
+            assert!(soy.step_s <= mp.step_s * 1.02, "{label}");
+        }
+    }
+
+    #[test]
+    fn more_devices_less_compute_per_step() {
+        let g = mlp(&MlpConfig::fig8(2048, 1024));
+        let r1 = simulate(&g, &Planner::plan(&g, 1, Strategy::Soybean), &cfg());
+        let r3 = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
+        assert!(r3.compute_s < r1.compute_s);
+    }
+
+    #[test]
+    fn crossover_with_batch_size() {
+        // §6.2: as the batch grows, DP's overhead ratio shrinks.
+        let small = mlp(&MlpConfig::fig8(512, 4096));
+        let large = mlp(&MlpConfig::fig8(4096, 4096));
+        let r_small = simulate(&small, &Planner::plan(&small, 3, Strategy::DataParallel), &cfg());
+        let r_large = simulate(&large, &Planner::plan(&large, 3, Strategy::DataParallel), &cfg());
+        let ratio_small = r_small.overhead_s / r_small.compute_s;
+        let ratio_large = r_large.overhead_s / r_large.compute_s;
+        assert!(ratio_large < ratio_small, "{ratio_large} !< {ratio_small}");
+    }
+}

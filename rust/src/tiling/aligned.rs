@@ -1,0 +1,620 @@
+//! Aligned tilings per operator class and the Eq. (2) cost (paper §4.2.1,
+//! §4.5).
+//!
+//! Every operator is viewed through one of two *semantics*:
+//!
+//! - **Matmul-like** (`MatMul`, the three conv operators): a logical
+//!   `M×K · K×N -> M×N` product with three aligned forms (Figure 6):
+//!   `R·r -> R`, `r·C -> C`, and `C·R -> red`. Transposed operands and
+//!   convolutions are handled by *axis maps* that translate logical row/col
+//!   splits into stored-tensor dimension splits (a conv activation's
+//!   logical row is its batch dimension, its logical column the channel
+//!   dimension — §4.5's reduction of convolution to the matrix algebra).
+//!
+//! - **Grid** (elementwise ops, bias broadcast, reductions, losses, SGD
+//!   updates): all operands are indexed by a shared logical grid; the
+//!   aligned forms split one grid axis, with operands lacking that axis
+//!   (broadcasts) replicated and outputs lacking it (reductions) produced
+//!   in the `red` state. Replicating everything is disallowed (redundant
+//!   computation, §4.5).
+//!
+//! The operator cost is the minimum over aligned forms of the input and
+//! output conversion costs — exactly Eq. (2) generalized beyond matmul.
+
+use crate::graph::{Graph, Op, OpKind};
+
+use super::conversion::{conversion_cost, Produced};
+use super::Tile;
+
+/// Sentinel for infeasible assignments (e.g. a required split of an odd
+/// dimension). Kept far below `u64::MAX` so sums never overflow.
+pub const INFEASIBLE: u64 = u64::MAX / 1024;
+
+/// Stored-tensor dimensions backing the logical row/col of a matmul
+/// operand. `None` means the logical axis is absent from the stored tensor
+/// (broadcast operand) — splitting that axis forces replication.
+#[derive(Debug, Clone, Copy)]
+struct AxisMap {
+    row: Option<usize>,
+    col: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+enum Sem {
+    MatMulLike { x: AxisMap, y: AxisMap, z: AxisMap },
+    Grid {
+        /// Which logical grid axes an aligned form may split.
+        splittable: Vec<bool>,
+        /// Per input: logical axis -> stored dim (None = broadcast).
+        in_maps: Vec<Vec<Option<usize>>>,
+        /// Output: logical axis -> stored dim (None = reduced away).
+        out_map: Vec<Option<usize>>,
+        /// Whether the fully-replicated form is admitted. Normally false
+        /// (§4.5 forbids redundant computation), but the SGD update is the
+        /// classic exception: every data-parallel system applies updates
+        /// redundantly on replicated gradients at zero communication, and
+        /// the paper's own DP accounting (2·|W| per cut) assumes exactly
+        /// that.
+        allow_replicated: bool,
+    },
+}
+
+/// Grid semantics helper: identity map over `rank` axes.
+fn ident(rank: usize) -> Vec<Option<usize>> {
+    (0..rank).map(Some).collect()
+}
+
+/// Which grid axes are splittable for an elementwise op over a tensor of
+/// this rank/kind — mirrors [`super::candidate_tiles`] so every candidate
+/// tiling has at least one aligned form.
+fn ew_splittable(rank: usize, weight_like: bool) -> Vec<bool> {
+    match (rank, weight_like) {
+        (4, false) => vec![true, false, false, true], // NHWC: batch, channel
+        (4, true) => vec![false, false, true, true],  // HWIO: in/out channel
+        (r, _) => vec![true; r],
+    }
+}
+
+fn semantics(g: &Graph, op: &Op) -> Sem {
+    match op.kind {
+        OpKind::MatMul { ta, tb } => Sem::MatMulLike {
+            x: AxisMap { row: Some(if ta { 1 } else { 0 }), col: Some(if ta { 0 } else { 1 }) },
+            y: AxisMap { row: Some(if tb { 1 } else { 0 }), col: Some(if tb { 0 } else { 1 }) },
+            z: AxisMap { row: Some(0), col: Some(1) },
+        },
+        // Forward conv: (N·OH·OW × CIN) · (CIN × COUT). Image and kernel
+        // dims ride along with the batch/contraction axes (§4.5).
+        OpKind::Conv2d { .. } => Sem::MatMulLike {
+            x: AxisMap { row: Some(0), col: Some(3) },
+            y: AxisMap { row: Some(2), col: Some(3) },
+            z: AxisMap { row: Some(0), col: Some(3) },
+        },
+        // dX = dZ ⊛ Wᵀ: contraction over COUT, producing CIN columns.
+        OpKind::Conv2dBwdData { .. } => Sem::MatMulLike {
+            x: AxisMap { row: Some(0), col: Some(3) },
+            y: AxisMap { row: Some(3), col: Some(2) },
+            z: AxisMap { row: Some(0), col: Some(3) },
+        },
+        // dW = Xᵀ ⊛ dZ: contraction over batch, producing CIN×COUT.
+        OpKind::Conv2dBwdFilter { .. } => Sem::MatMulLike {
+            x: AxisMap { row: Some(3), col: Some(0) },
+            y: AxisMap { row: Some(0), col: Some(3) },
+            z: AxisMap { row: Some(2), col: Some(3) },
+        },
+        OpKind::Ew(_) => {
+            let out = &g.tensors[op.outputs[0]];
+            let rank = out.rank();
+            Sem::Grid {
+                splittable: ew_splittable(rank, false),
+                in_maps: op.inputs.iter().map(|_| ident(rank)).collect(),
+                out_map: ident(rank),
+                allow_replicated: false,
+            }
+        }
+        OpKind::BiasAdd => {
+            let x = &g.tensors[op.inputs[0]];
+            let rank = x.rank();
+            let mut bias_map = vec![None; rank];
+            bias_map[rank - 1] = Some(0);
+            Sem::Grid {
+                splittable: ew_splittable(rank, false),
+                in_maps: vec![ident(rank), bias_map],
+                out_map: ident(rank),
+                allow_replicated: false,
+            }
+        }
+        // Pooling: a per-(batch, channel) local op; logical grid = output
+        // NHWC, splittable on batch/channel like any conv activation. The
+        // backward op additionally reads the forward input/output (same
+        // batch/channel structure).
+        OpKind::Pool2 => Sem::Grid {
+            splittable: vec![true, false, false, true],
+            in_maps: vec![vec![Some(0), Some(1), Some(2), Some(3)]],
+            out_map: ident(4),
+            allow_replicated: false,
+        },
+        OpKind::Pool2Bwd => Sem::Grid {
+            splittable: vec![true, false, false, true],
+            in_maps: vec![
+                vec![Some(0), Some(1), Some(2), Some(3)],
+                vec![Some(0), Some(1), Some(2), Some(3)],
+                vec![Some(0), Some(1), Some(2), Some(3)],
+            ],
+            out_map: ident(4),
+            allow_replicated: false,
+        },
+        // Flatten: logical axes = (batch, features); a channel split of the
+        // NHWC input corresponds to a column split of the flattened matrix
+        // (channel-major flatten).
+        OpKind::Flatten => Sem::Grid {
+            splittable: vec![true, true],
+            in_maps: vec![vec![Some(0), Some(3)]],
+            out_map: vec![Some(0), Some(1)],
+            allow_replicated: false,
+        },
+        OpKind::FlattenBwd => Sem::Grid {
+            splittable: vec![true, true],
+            in_maps: vec![vec![Some(0), Some(1)]],
+            out_map: vec![Some(0), Some(3)],
+            allow_replicated: false,
+        },
+        OpKind::ReduceSumRows => Sem::Grid {
+            splittable: vec![true, true],
+            in_maps: vec![ident(2)],
+            out_map: vec![None, Some(0)],
+            allow_replicated: false,
+        },
+        OpKind::SoftmaxXent => Sem::Grid {
+            // Row-wise op: only the batch axis may be split (§4.5).
+            splittable: vec![true, false],
+            in_maps: vec![ident(2), ident(2)],
+            out_map: vec![None, None],
+            allow_replicated: false,
+        },
+        OpKind::SoftmaxXentGrad => Sem::Grid {
+            splittable: vec![true, false],
+            in_maps: vec![ident(2), ident(2)],
+            out_map: ident(2),
+            allow_replicated: false,
+        },
+        OpKind::SgdUpdate => {
+            let w = &g.tensors[op.inputs[0]];
+            let rank = w.rank();
+            Sem::Grid {
+                splittable: ew_splittable(rank, rank == 4),
+                in_maps: vec![ident(rank), ident(rank)],
+                out_map: ident(rank),
+                allow_replicated: true,
+            }
+        }
+    }
+}
+
+/// Requirement a logical-axis split imposes on a stored tensor.
+fn req_tile(map: Option<usize>) -> Tile {
+    match map {
+        Some(d) => Tile::Split(d),
+        None => Tile::Rep,
+    }
+}
+
+/// Checks a required tile is realizable on the tensor (even dimension).
+fn feasible(g: &Graph, t: usize, tile: Tile) -> bool {
+    match tile {
+        Tile::Rep => true,
+        Tile::Split(d) => {
+            let shape = &g.tensors[t].shape;
+            d < shape.len() && shape[d] >= 2 && shape[d] % 2 == 0
+        }
+    }
+}
+
+/// Which aligned form an operator cost came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Form {
+    /// Matmul aligned form index: 0 = `R·r->R`, 1 = `r·C->C`, 2 = `C·R->red`.
+    MatMul(u8),
+    /// Grid form splitting the given logical axis.
+    GridAxis(u8),
+    /// The fully-replicated form (SGD update only).
+    Replicated,
+}
+
+impl Form {
+    pub fn label(&self) -> String {
+        match self {
+            Form::MatMul(0) => "R·r->R".to_string(),
+            Form::MatMul(1) => "r·C->C".to_string(),
+            Form::MatMul(_) => "C·R->red".to_string(),
+            Form::GridAxis(a) => format!("grid-split axis {a}"),
+            Form::Replicated => "replicated".to_string(),
+        }
+    }
+}
+
+/// Cost breakdown for one operator under chosen tilings: the aligned form
+/// picked and the conversion bytes per phase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpCostBreakdown {
+    pub form: Form,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+}
+
+impl OpCostBreakdown {
+    pub fn total(&self) -> u64 {
+        self.input_bytes.saturating_add(self.output_bytes)
+    }
+}
+
+/// The concrete requirements of one aligned form: the stored-tensor tiling
+/// each input must be converted to, and what the output is produced as.
+/// Used by the execution-graph builder to materialize the plan the cost
+/// model priced. Panics on a form that does not apply to this op.
+pub fn form_requirements(g: &Graph, op: &Op, form: Form) -> (Vec<Tile>, Produced) {
+    match (semantics(g, op), form) {
+        (Sem::MatMulLike { x, y: _, z }, Form::MatMul(0)) => (
+            vec![req_tile(x.row), Tile::Rep],
+            Produced::Tile(req_tile(z.row)),
+        ),
+        (Sem::MatMulLike { y, z, .. }, Form::MatMul(1)) => (
+            vec![Tile::Rep, req_tile(y.col)],
+            Produced::Tile(req_tile(z.col)),
+        ),
+        (Sem::MatMulLike { x, y, .. }, Form::MatMul(2)) => {
+            (vec![req_tile(x.col), req_tile(y.row)], Produced::Red)
+        }
+        (Sem::Grid { in_maps, out_map, .. }, Form::GridAxis(a)) => {
+            let a = a as usize;
+            let ins = in_maps.iter().map(|m| req_tile(m[a])).collect();
+            let prod = match out_map[a] {
+                Some(d) => Produced::Tile(Tile::Split(d)),
+                None => Produced::Red,
+            };
+            (ins, prod)
+        }
+        (Sem::Grid { in_maps, .. }, Form::Replicated) => {
+            (vec![Tile::Rep; in_maps.len()], Produced::Tile(Tile::Rep))
+        }
+        (sem, f) => panic!("form {f:?} does not apply to {} ({sem:?})", op.name),
+    }
+}
+
+/// Price one *specific* aligned form (no min): the conversion costs of
+/// `op` if executed via `form`. Returns `None` if the form is infeasible.
+/// Used to model the paper's stock data-parallel baseline, which always
+/// aggregates gradients (MXNet's parameter flow) rather than letting
+/// Eq. (2) substitute a cheaper activation-shipping form.
+pub fn op_cost_with_form(g: &Graph, op: &Op, ins: &[Tile], out: Tile, form: Form) -> Option<u64> {
+    let (reqs, prod) = form_requirements(g, op, form);
+    let mut total = 0u64;
+    for ((&t, &req), &given) in op.inputs.iter().zip(&reqs).zip(ins) {
+        if !feasible(g, t, req) {
+            return None;
+        }
+        total += conversion_cost(g.tensors[t].bytes(), Produced::Tile(given), req);
+    }
+    if let Produced::Tile(pt) = prod {
+        if !feasible(g, op.outputs[0], pt) {
+            return None;
+        }
+    }
+    total += conversion_cost(g.tensors[op.outputs[0]].bytes(), prod, out);
+    Some(total)
+}
+
+/// Eq. (2): minimum over aligned forms of conversion costs, for `op` with
+/// input tilings `ins` (same order as `op.inputs`) and output tiling `out`.
+/// Returns `INFEASIBLE` if no aligned form is realizable.
+pub fn op_cost(g: &Graph, op: &Op, ins: &[Tile], out: Tile) -> u64 {
+    op_cost_detailed(g, op, ins, out).map_or(INFEASIBLE, |b| b.total())
+}
+
+/// Like [`op_cost`] but reporting which aligned form won.
+pub fn op_cost_detailed(g: &Graph, op: &Op, ins: &[Tile], out: Tile) -> Option<OpCostBreakdown> {
+    assert_eq!(ins.len(), op.inputs.len(), "tiling arity mismatch for {}", op.name);
+    let mut best: Option<OpCostBreakdown> = None;
+    let mut consider = |cand: OpCostBreakdown| {
+        if best.as_ref().map_or(true, |b| cand.total() < b.total()) {
+            best = Some(cand);
+        }
+    };
+
+    match semantics(g, op) {
+        Sem::MatMulLike { x, y, z } => {
+            let (tx, ty) = (op.inputs[0], op.inputs[1]);
+            let tz = op.outputs[0];
+            let (bx, by, bz) =
+                (g.tensors[tx].bytes(), g.tensors[ty].bytes(), g.tensors[tz].bytes());
+            // (x requirement, y requirement, produced z, label)
+            let forms = [
+                (req_tile(x.row), Tile::Rep, Produced::Tile(req_tile(z.row)), Form::MatMul(0)),
+                (Tile::Rep, req_tile(y.col), Produced::Tile(req_tile(z.col)), Form::MatMul(1)),
+                (req_tile(x.col), req_tile(y.row), Produced::Red, Form::MatMul(2)),
+            ];
+            for (rx, ry, prod, label) in forms {
+                if !feasible(g, tx, rx) || !feasible(g, ty, ry) {
+                    continue;
+                }
+                if let Produced::Tile(pt) = prod {
+                    if !feasible(g, tz, pt) {
+                        continue;
+                    }
+                }
+                let cin = conversion_cost(bx, Produced::Tile(ins[0]), rx)
+                    + conversion_cost(by, Produced::Tile(ins[1]), ry);
+                let cout = conversion_cost(bz, prod, out);
+                consider(OpCostBreakdown { form: label, input_bytes: cin, output_bytes: cout });
+            }
+        }
+        Sem::Grid { splittable, in_maps, out_map, allow_replicated } => {
+            let tz = op.outputs[0];
+            let bz = g.tensors[tz].bytes();
+            if allow_replicated {
+                // Fully-replicated form: every input gathered, output
+                // produced replicated (redundant local compute, no wire
+                // traffic afterwards).
+                let mut cin = 0u64;
+                for (i, &t) in op.inputs.iter().enumerate() {
+                    cin += conversion_cost(g.tensors[t].bytes(), Produced::Tile(ins[i]), Tile::Rep);
+                }
+                let cout = conversion_cost(bz, Produced::Tile(Tile::Rep), out);
+                consider(OpCostBreakdown {
+                    form: Form::Replicated,
+                    input_bytes: cin,
+                    output_bytes: cout,
+                });
+            }
+            for (axis, &ok) in splittable.iter().enumerate() {
+                if !ok {
+                    continue;
+                }
+                let mut cin = 0u64;
+                let mut feasible_form = true;
+                for (i, map) in in_maps.iter().enumerate() {
+                    let r = req_tile(map[axis]);
+                    if !feasible(g, op.inputs[i], r) {
+                        feasible_form = false;
+                        break;
+                    }
+                    cin += conversion_cost(g.tensors[op.inputs[i]].bytes(), Produced::Tile(ins[i]), r);
+                }
+                if !feasible_form {
+                    continue;
+                }
+                let prod = match out_map[axis] {
+                    Some(d) => {
+                        if !feasible(g, tz, Tile::Split(d)) {
+                            continue;
+                        }
+                        Produced::Tile(Tile::Split(d))
+                    }
+                    None => Produced::Red,
+                };
+                let cout = conversion_cost(bz, prod, out);
+                consider(OpCostBreakdown {
+                    form: Form::GridAxis(axis as u8),
+                    input_bytes: cin,
+                    output_bytes: cout,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, TensorKind};
+
+    const R: Tile = Tile::Split(0);
+    const C: Tile = Tile::Split(1);
+    const REP: Tile = Tile::Rep;
+
+    /// x[400,300] · w[300,300] -> z[400,300], the §2.2 layer.
+    fn layer() -> (Graph, Op) {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[400, 300]);
+        let w = b.weight("w", &[300, 300]);
+        b.matmul("fc", x, w, false, false);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        (g, op)
+    }
+
+    #[test]
+    fn data_parallel_forward_is_free() {
+        // R · r -> R: the aligned form itself; no conversions.
+        let (g, op) = layer();
+        assert_eq!(op_cost(&g, &op, &[R, REP], R), 0);
+    }
+
+    #[test]
+    fn model_parallel_forward_pays_reduction() {
+        // C · R -> red, then red -> C costs the output size.
+        let (g, op) = layer();
+        let bz = 400 * 300 * 4;
+        assert_eq!(op_cost(&g, &op, &[C, R], C), bz);
+    }
+
+    #[test]
+    fn column_parallel_forward_is_free() {
+        // r · C -> C.
+        let (g, op) = layer();
+        assert_eq!(op_cost(&g, &op, &[REP, C], C), 0);
+    }
+
+    #[test]
+    fn unaligned_inputs_pay_ghost_area() {
+        // Figure 7(b): x arrives C, needs R for the R·r->R form: S_x/2.
+        let (g, op) = layer();
+        let bx: u64 = 400 * 300 * 4;
+        assert_eq!(op_cost(&g, &op, &[C, REP], R), bx / 2);
+    }
+
+    #[test]
+    fn weight_gradient_allreduce() {
+        // dW = xᵀ · dz with x,dz row-tiled and dW replicated: the C·R->red
+        // form is free on inputs, then red -> r costs 2·|W| — data
+        // parallelism's gradient aggregation.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[400, 300]);
+        let dz = b.input("dz", &[400, 300]);
+        b.matmul("bwd_w", x, dz, true, false);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let bw: u64 = 300 * 300 * 4;
+        assert_eq!(op_cost(&g, &op, &[R, R], REP), 2 * bw);
+    }
+
+    #[test]
+    fn activation_gradient_under_dp_is_free() {
+        // dx = dz · wᵀ with dz row-tiled, w replicated, dx row-tiled.
+        let mut b = GraphBuilder::new();
+        let dz = b.input("dz", &[400, 300]);
+        let w = b.weight("w", &[300, 300]);
+        b.matmul("bwd_data", dz, w, false, true);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        assert_eq!(op_cost(&g, &op, &[R, REP], R), 0);
+    }
+
+    #[test]
+    fn elementwise_same_tiling_free_mismatch_pays() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 32]);
+        b.relu("relu", x);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        assert_eq!(op_cost(&g, &op, &[R], R), 0);
+        assert_eq!(op_cost(&g, &op, &[C], C), 0);
+        // Input R but output C: convert either side; in+out = S/2 + 0 via
+        // axis-1 form (input R->C is S/2) or 0 + S/2 via axis-0 form.
+        let s: u64 = 64 * 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[R], C), s / 2);
+    }
+
+    #[test]
+    fn elementwise_cannot_replicate_everything() {
+        // All-replicated is redundant computation; the op still picks a
+        // split form and pays to re-replicate its output.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 32]);
+        b.relu("relu", x);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let s: u64 = 64 * 32 * 4;
+        // input replicated (free to convert anywhere), output replicated:
+        // must compute split then all-gather: S.
+        assert_eq!(op_cost(&g, &op, &[REP], REP), s);
+    }
+
+    #[test]
+    fn bias_add_batch_split_replicates_bias() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 32]);
+        let bias = b.weight("b", &[32]);
+        b.bias_add("ba", x, bias);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // batch-split x + replicated bias -> batch-split out: free.
+        assert_eq!(op_cost(&g, &op, &[R, REP], R), 0);
+        // col-split x + col-split bias -> col-split out: free.
+        assert_eq!(op_cost(&g, &op, &[C, Tile::Split(0)], C), 0);
+        // batch-split x with split bias: must gather the bias (tiny).
+        let bias_bytes: u64 = 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[R, Tile::Split(0)], R), bias_bytes);
+    }
+
+    #[test]
+    fn bias_grad_reduction_forms() {
+        let mut b = GraphBuilder::new();
+        let dz = b.input("dz", &[64, 32]);
+        b.raw_op("db", OpKind::ReduceSumRows, vec![dz], &[32], TensorKind::WeightGrad);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // dz row-split -> partial sums -> red -> replicated vector: 2·|b|.
+        let bb: u64 = 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[R], REP), 2 * bb);
+        // dz col-split -> out split: free.
+        assert_eq!(op_cost(&g, &op, &[C], Tile::Split(0)), 0);
+    }
+
+    #[test]
+    fn softmax_only_batch_split() {
+        let mut b = GraphBuilder::new();
+        let logits = b.input("l", &[64, 10]);
+        let y = b.label("y", &[64, 10]);
+        b.softmax_xent("loss", logits, y);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // Batch-split inputs: free up to the scalar allreduce (8 bytes).
+        assert_eq!(op_cost(&g, &op, &[R, R], REP), 8);
+        // Class-split inputs must be converted: S/2 each.
+        let s: u64 = 64 * 10 * 4;
+        assert_eq!(op_cost(&g, &op, &[C, C], REP), s + 8);
+    }
+
+    #[test]
+    fn conv_forward_batch_split_free() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 6, 6, 4]);
+        let w = b.weight("w", &[3, 3, 4, 16]);
+        b.conv2d("c", x, w, 1, 1);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // Data parallelism on conv: batch-split activations, replicated
+        // filters, batch-split output — aligned form 1, free.
+        assert_eq!(op_cost(&g, &op, &[Tile::Split(0), REP], Tile::Split(0)), 0);
+        // Model parallelism: split output channels of the filter.
+        assert_eq!(op_cost(&g, &op, &[REP, Tile::Split(3)], Tile::Split(3)), 0);
+    }
+
+    #[test]
+    fn conv_bwd_filter_aggregation() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 6, 6, 4]);
+        let dz = b.input("dz", &[8, 6, 6, 16]);
+        b.raw_op(
+            "dw",
+            OpKind::Conv2dBwdFilter { stride: 1, pad: 1 },
+            vec![x, dz],
+            &[3, 3, 4, 16],
+            TensorKind::WeightGrad,
+        );
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // Batch-split x and dz, replicated dW: C·R->red then allreduce.
+        let bw: u64 = 3 * 3 * 4 * 16 * 4;
+        assert_eq!(op_cost(&g, &op, &[Tile::Split(0), Tile::Split(0)], REP), 2 * bw);
+    }
+
+    #[test]
+    fn infeasible_when_no_form_fits() {
+        // A matmul whose every dimension is odd cannot be evenly tiled.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[3, 5]);
+        let w = b.weight("w", &[5, 7]);
+        b.matmul("odd", x, w, false, false);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        assert_eq!(op_cost(&g, &op, &[REP, REP], REP), INFEASIBLE);
+    }
+
+    #[test]
+    fn sgd_update_same_split_free() {
+        let mut b = GraphBuilder::new();
+        let w = b.weight("w", &[300, 300]);
+        let gr = b.input("g", &[300, 300]);
+        b.raw_op("sgd", OpKind::SgdUpdate, vec![w, gr], &[300, 300], TensorKind::UpdatedWeight);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        assert_eq!(op_cost(&g, &op, &[R, R], R), 0);
+        assert_eq!(op_cost(&g, &op, &[C, C], C), 0);
+        // Replicated weights with replicated grads (post-aggregation DP):
+        // the update is applied redundantly on every device — free. This is
+        // the one operator where the all-replicated form is admitted.
+        assert_eq!(op_cost(&g, &op, &[REP, REP], REP), 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Ghost-area conversion costs (paper §4.2.1, Figure 7).
+//!
+//! The cost of converting a tensor from tiling `t1` to tiling `t2` across
+//! two devices equals the "ghost area" each device must fetch: the bytes of
+//! its target tile minus the bytes it already holds. Costs are totals over
+//! both devices, in bytes.
+
+use super::Tile;
+
+/// What an operator *produces* before the output-conversion phase: either a
+/// real tiling, or the intermediate reduction state `red` of Figure 6 (each
+/// device holds a full-shape partial sum that must still be added).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Produced {
+    Tile(Tile),
+    Red,
+}
+
+/// Total bytes moved (across both devices) to convert a tensor of
+/// `bytes` total size from `from` to tiling `to`.
+///
+/// The table, derived from the ghost-area rule:
+///
+/// | from \ to    | same split | other split | replicate |
+/// |--------------|-----------:|------------:|----------:|
+/// | `Split(d)`   | 0          | S/2         | S         |
+/// | `Rep`        | 0          | 0           | 0         |
+/// | `Red`        | S          | S           | 2S        |
+///
+/// - `Split -> other Split`: each device's target tile overlaps its current
+///   tile in a quarter of the tensor, so each fetches S/4; total S/2.
+/// - `Split -> Rep`: each device is missing the other half: total S.
+/// - `Rep -> anything`: every device already holds everything: free.
+/// - `Red -> t`: partial sums must cross the wire before they can be added;
+///   each device fetches the part of the *other device's* partial matrix
+///   overlapping its target tile (S/2 each for a split target, S each for
+///   replication — an all-reduce).
+pub fn conversion_cost(bytes: u64, from: Produced, to: Tile) -> u64 {
+    match (from, to) {
+        (Produced::Tile(Tile::Rep), _) => 0,
+        (Produced::Tile(a), b) if a == b => 0,
+        (Produced::Tile(Tile::Split(_)), Tile::Split(_)) => bytes / 2,
+        (Produced::Tile(Tile::Split(_)), Tile::Rep) => bytes,
+        (Produced::Red, Tile::Split(_)) => bytes,
+        (Produced::Red, Tile::Rep) => 2 * bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1000;
+
+    #[test]
+    fn identity_is_free() {
+        for t in [Tile::Split(0), Tile::Split(1), Tile::Rep] {
+            assert_eq!(conversion_cost(S, Produced::Tile(t), t), 0);
+        }
+    }
+
+    #[test]
+    fn replicated_source_is_free() {
+        // r already holds every element on every device.
+        for t in [Tile::Split(0), Tile::Split(1), Tile::Rep] {
+            assert_eq!(conversion_cost(S, Produced::Tile(Tile::Rep), t), 0);
+        }
+    }
+
+    #[test]
+    fn cross_split_moves_half() {
+        // Figure 7(b): C -> R, the yellow quarter per device.
+        assert_eq!(
+            conversion_cost(S, Produced::Tile(Tile::Split(1)), Tile::Split(0)),
+            S / 2
+        );
+        assert_eq!(
+            conversion_cost(S, Produced::Tile(Tile::Split(0)), Tile::Split(1)),
+            S / 2
+        );
+    }
+
+    #[test]
+    fn split_to_rep_is_allgather() {
+        assert_eq!(conversion_cost(S, Produced::Tile(Tile::Split(0)), Tile::Rep), S);
+    }
+
+    #[test]
+    fn red_to_rep_is_allreduce() {
+        // Gradient aggregation in data parallelism: 2S per cut.
+        assert_eq!(conversion_cost(S, Produced::Red, Tile::Rep), 2 * S);
+    }
+
+    #[test]
+    fn red_to_split_is_reduce_scatter() {
+        assert_eq!(conversion_cost(S, Produced::Red, Tile::Split(0)), S);
+    }
+
+    #[test]
+    fn costs_monotone_in_bytes() {
+        for (from, to) in [
+            (Produced::Tile(Tile::Split(0)), Tile::Split(1)),
+            (Produced::Tile(Tile::Split(0)), Tile::Rep),
+            (Produced::Red, Tile::Rep),
+        ] {
+            assert!(conversion_cost(2000, from, to) >= conversion_cost(1000, from, to));
+        }
+    }
+}

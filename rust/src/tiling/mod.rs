@@ -1,0 +1,25 @@
+//! The tiling algebra of paper §4.1–§4.2.1.
+//!
+//! Three basic tilings partition a tensor across two devices (or device
+//! groups): split along a dimension ([`Tile::Split`], the paper's `R`/`C`
+//! for matrices, generalized to `P_d` in §4.5) or replicate ([`Tile::Rep`],
+//! the paper's `r`). A k-cut tiling is a sequence of k basic tilings
+//! ([`TileSeq`]); composition is commutative up to shard layout (§4.4,
+//! Theorem 2 "flattening"), which both the placement logic and the k-cut
+//! optimality argument rely on.
+//!
+//! Communication is tiling *conversion* (§4.2.1): an operator's inputs are
+//! fetched into one of a handful of *aligned* tilings, computed locally, and
+//! its output is pushed from the produced tiling to the tiling the graph
+//! assigns it. [`conversion`] prices single conversions via the ghost-area
+//! rule; [`aligned`] enumerates the aligned forms per operator class and
+//! implements Eq. (2).
+
+pub mod aligned;
+pub mod conversion;
+pub mod paper_example;
+mod scheme;
+
+pub use aligned::{form_requirements, op_cost, op_cost_detailed, op_cost_with_form, Form, OpCostBreakdown};
+pub use conversion::{conversion_cost, Produced};
+pub use scheme::{candidate_tiles, describe_seq, shard_shape, Tile, TileSeq};

@@ -1,0 +1,106 @@
+//! The paper's §2.2 back-of-envelope accounting, reproduced as checked code.
+//!
+//! §2.2 compares data, model and hybrid parallelism on a 5-layer MLP
+//! (300-wide layers, batch 400, 16 GPUs) using a *simplified*
+//! parameter-server-style count: `bytes × devices × 2`. This is not the §4
+//! ghost-area model the optimizer uses (that one is in [`super::conversion`]);
+//! it exists so the paper's 57.6 / 76.8 / 33.6 MB arithmetic is reproduced
+//! bit-for-bit as a regression anchor (`soybean reproduce example22`).
+
+use crate::graph::Graph;
+
+/// §2.2 data parallelism: collect all parameter gradients and synchronize
+/// the updated parameters on every device.
+pub fn data_parallel_comm(g: &Graph, devices: u64) -> u64 {
+    g.weight_bytes() * devices * 2
+}
+
+/// §2.2 model parallelism: exchange activations and activation gradients in
+/// both propagation directions.
+pub fn model_parallel_comm(g: &Graph, devices: u64) -> u64 {
+    g.activation_bytes() * devices * 2
+}
+
+/// §2.2 hybrid: data parallelism across `groups`, model parallelism within
+/// each group of `devices / groups` members. Data parallelism shrinks the
+/// per-group activation volume by the group count.
+pub fn hybrid_comm(g: &Graph, devices: u64, groups: u64) -> u64 {
+    assert!(devices % groups == 0 && groups >= 1);
+    let within = devices / groups;
+    // A "parallelism" over a single device (or a single group) moves nothing.
+    let dp = if groups > 1 { g.weight_bytes() * groups * 2 } else { 0 };
+    let mp_per_group =
+        if within > 1 { (g.activation_bytes() / groups) * within * 2 } else { 0 };
+    dp + groups * mp_per_group
+}
+
+/// Builds the §2.2 example graph: 5 fully-connected 300×300 layers, batch
+/// 400 (forward only — §2.2 counts weights and activations, which the
+/// forward graph determines).
+pub fn example_graph() -> Graph {
+    let mut b = crate::graph::GraphBuilder::new();
+    let mut x = b.input("x", &[400, 300]);
+    for l in 0..5 {
+        let w = b.weight(&format!("w{l}"), &[300, 300]);
+        x = b.matmul(&format!("fc{l}"), x, w, false, false);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1e6;
+
+    #[test]
+    fn paper_numbers_exact() {
+        let g = example_graph();
+        // "the total communication is 1.8MB × 16 × 2 = 57.6MB"
+        assert_eq!(data_parallel_comm(&g, 16), 57_600_000);
+        // "model parallelism transfers ... 2.4MB × 16 × 2 = 76.8MB"
+        assert_eq!(model_parallel_comm(&g, 16), 76_800_000);
+        // "14.4MB + 4 × 4.8MB = 33.6MB"
+        assert_eq!(hybrid_comm(&g, 16, 4), 33_600_000);
+    }
+
+    #[test]
+    fn paper_savings_percentages() {
+        let g = example_graph();
+        let dp = data_parallel_comm(&g, 16) as f64 / MB;
+        let mp = model_parallel_comm(&g, 16) as f64 / MB;
+        let hy = hybrid_comm(&g, 16, 4) as f64 / MB;
+        // "communication savings of 41.7% and 56.2%" (the paper truncates
+        // 56.25 to 56.2).
+        let s_dp = (1.0 - hy / dp) * 100.0;
+        let s_mp = (1.0 - hy / mp) * 100.0;
+        assert!((s_dp - 41.7).abs() < 0.05, "dp saving {s_dp}");
+        assert!((s_mp - 56.25).abs() < 0.05, "mp saving {s_mp}");
+    }
+
+    #[test]
+    fn batch_vs_layer_crossover() {
+        // §2.2: "If the batch size is 300 while the layer size is 400,
+        // model parallelism becomes better."
+        let mut b = crate::graph::GraphBuilder::new();
+        let mut x = b.input("x", &[300, 400]);
+        for l in 0..5 {
+            let w = b.weight(&format!("w{l}"), &[400, 400]);
+            x = b.matmul(&format!("fc{l}"), x, w, false, false);
+        }
+        let g = b.finish();
+        assert!(model_parallel_comm(&g, 16) < data_parallel_comm(&g, 16));
+    }
+
+    #[test]
+    fn hybrid_never_worse_than_best_group_extreme() {
+        let g = example_graph();
+        // groups=16 degenerates to pure DP; groups=1 to pure MP.
+        assert_eq!(hybrid_comm(&g, 16, 16), data_parallel_comm(&g, 16));
+        assert_eq!(hybrid_comm(&g, 16, 1), model_parallel_comm(&g, 16));
+        // The interior optimum beats both extremes here.
+        let best = (1..=16).filter(|d| 16 % d == 0).map(|d| hybrid_comm(&g, 16, d)).min().unwrap();
+        assert!(best <= data_parallel_comm(&g, 16));
+        assert!(best <= model_parallel_comm(&g, 16));
+    }
+}

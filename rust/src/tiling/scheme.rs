@@ -1,0 +1,152 @@
+//! Basic tilings, k-cut sequences, and shard-shape arithmetic.
+
+use crate::graph::{TensorInfo, TensorKind};
+
+/// One basic tiling of a tensor across two devices (or device groups).
+///
+/// For a matrix, `Split(0)` is the paper's row tiling `R`, `Split(1)` is
+/// column tiling `C`, and `Rep` is replication `r`. Higher-rank tensors use
+/// the §4.5 generalization `P_d`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tile {
+    /// Partition dimension `d` into two equal halves.
+    Split(usize),
+    /// Replicate the whole tensor on both sides.
+    Rep,
+}
+
+impl Tile {
+    /// Paper notation: `R`, `C`, `P2`…, `r`.
+    pub fn describe(&self) -> String {
+        match self {
+            Tile::Split(0) => "R".to_string(),
+            Tile::Split(1) => "C".to_string(),
+            Tile::Split(d) => format!("P{d}"),
+            Tile::Rep => "r".to_string(),
+        }
+    }
+}
+
+/// A k-cut tiling: the basic tiling chosen at each cut, outermost (first
+/// cut, slowest interconnect) first. Definition 1 in the paper.
+pub type TileSeq = Vec<Tile>;
+
+/// Paper notation for a sequence, e.g. `"rR"` for hybrid weights.
+pub fn describe_seq(seq: &[Tile]) -> String {
+    if seq.is_empty() {
+        return "·".to_string();
+    }
+    seq.iter().map(Tile::describe).collect()
+}
+
+/// Shape of one shard after applying every cut in `seq` to `shape`.
+///
+/// Theorem 2 (flattening): the shard shape depends only on the *count* of
+/// splits per dimension, not their order — each `Split(d)` halves dimension
+/// `d`, `Rep` leaves the shape unchanged.
+pub fn shard_shape(shape: &[usize], seq: &[Tile]) -> Vec<usize> {
+    let mut out = shape.to_vec();
+    for t in seq {
+        if let Tile::Split(d) = t {
+            assert!(
+                out[*d] % 2 == 0,
+                "dimension {d} of {shape:?} not divisible under {seq:?}"
+            );
+            out[*d] /= 2;
+        }
+    }
+    out
+}
+
+/// The candidate basic tilings the planner enumerates for a tensor.
+///
+/// - scalars: replication only;
+/// - matrices / vectors: any even dimension, plus replication (`T^1`);
+/// - 4-D conv activations (NHWC): batch or channel — §4.5 shows image-dim
+///   tilings are dominated by data parallelism, so they are pruned exactly
+///   as in the paper's implementation;
+/// - 4-D conv filters (HWIO): input- or output-channel.
+pub fn candidate_tiles(t: &TensorInfo) -> Vec<Tile> {
+    let mut out = vec![Tile::Rep];
+    let dims: Vec<usize> = match (t.rank(), t.kind) {
+        (0, _) => vec![],
+        (4, TensorKind::Weight) | (4, TensorKind::WeightGrad) | (4, TensorKind::UpdatedWeight) => {
+            vec![2, 3]
+        }
+        (4, _) => vec![0, 3],
+        (r, _) => (0..r).collect(),
+    };
+    for d in dims {
+        if t.shape[d] >= 2 && t.shape[d] % 2 == 0 {
+            out.push(Tile::Split(d));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(shape: &[usize], kind: TensorKind) -> TensorInfo {
+        TensorInfo { id: 0, name: "t".into(), shape: shape.to_vec(), kind, dtype_bytes: 4 }
+    }
+
+    #[test]
+    fn describe_matches_paper_notation() {
+        assert_eq!(Tile::Split(0).describe(), "R");
+        assert_eq!(Tile::Split(1).describe(), "C");
+        assert_eq!(Tile::Rep.describe(), "r");
+        assert_eq!(describe_seq(&[Tile::Rep, Tile::Split(0)]), "rR");
+        assert_eq!(describe_seq(&[Tile::Split(0), Tile::Split(1)]), "RC");
+    }
+
+    #[test]
+    fn shard_shapes_flatten() {
+        // Figure 4(b): RR quarters the rows; RC quarters into blocks.
+        assert_eq!(shard_shape(&[8, 8], &[Tile::Split(0), Tile::Split(0)]), vec![2, 8]);
+        assert_eq!(shard_shape(&[8, 8], &[Tile::Split(0), Tile::Split(1)]), vec![4, 4]);
+        // Order independence (Theorem 2).
+        assert_eq!(
+            shard_shape(&[8, 8], &[Tile::Split(1), Tile::Split(0)]),
+            shard_shape(&[8, 8], &[Tile::Split(0), Tile::Split(1)])
+        );
+        // Replication leaves shapes alone.
+        assert_eq!(shard_shape(&[8, 8], &[Tile::Rep, Tile::Rep]), vec![8, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn uneven_split_rejected() {
+        shard_shape(&[3, 4], &[Tile::Split(0)]);
+    }
+
+    #[test]
+    fn matrix_candidates_are_t1() {
+        let c = candidate_tiles(&info(&[4, 6], TensorKind::Activation));
+        assert_eq!(c, vec![Tile::Rep, Tile::Split(0), Tile::Split(1)]);
+    }
+
+    #[test]
+    fn scalar_candidates_rep_only() {
+        assert_eq!(candidate_tiles(&info(&[], TensorKind::Scalar)), vec![Tile::Rep]);
+    }
+
+    #[test]
+    fn conv_activation_candidates_batch_and_channel() {
+        let c = candidate_tiles(&info(&[256, 24, 24, 64], TensorKind::Activation));
+        assert_eq!(c, vec![Tile::Rep, Tile::Split(0), Tile::Split(3)]);
+    }
+
+    #[test]
+    fn conv_filter_candidates_channels_only() {
+        let c = candidate_tiles(&info(&[3, 3, 64, 128], TensorKind::Weight));
+        assert_eq!(c, vec![Tile::Rep, Tile::Split(2), Tile::Split(3)]);
+    }
+
+    #[test]
+    fn odd_dims_not_splittable() {
+        let c = candidate_tiles(&info(&[7, 4], TensorKind::Activation));
+        assert_eq!(c, vec![Tile::Rep, Tile::Split(1)]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Tiny timing harness for the `cargo bench` targets (criterion is not in
+//! the offline vendor set).
+//!
+//! [`time_it`] warms up, then runs enough iterations to exceed a minimum
+//! measurement window and reports mean/min wall-clock per iteration.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Times `f`, returning mean/min per-iteration duration.
+///
+/// Runs `warmup` unmeasured iterations, then batches of measured runs until
+/// `min_time` has elapsed (at least 3 iterations).
+pub fn time_it<F: FnMut()>(warmup: u32, min_time: Duration, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut durations = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || durations.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        durations.push(t0.elapsed());
+        if durations.len() >= 10_000 {
+            break;
+        }
+    }
+    let total: Duration = durations.iter().sum();
+    Measurement {
+        iters: durations.len() as u32,
+        mean: total / durations.len() as u32,
+        min: *durations.iter().min().unwrap(),
+    }
+}
+
+/// Prints one aligned results row (shared formatting across bench targets).
+pub fn report_row(label: &str, columns: &[(&str, String)]) {
+    let cols: Vec<String> = columns.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("{label:<40} {}", cols.join("  "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = time_it(1, Duration::from_millis(5), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.mean);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small std-only utilities.
+//!
+//! The build environment is fully offline (only the `xla` crate tree is
+//! vendored), so the usual ecosystem crates are replaced by minimal
+//! in-tree implementations: a deterministic RNG ([`rng`]), a JSON parser
+//! for the artifact manifest ([`json`]), and a timing harness for the
+//! `cargo bench` targets ([`bench`]).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,178 @@
+//! Integration tests over the public API: the whole pipeline from model
+//! zoo through planner, simulator, and (where artifacts exist) the real
+//! PJRT engine — exactly the sequence a downstream user runs.
+
+use std::sync::Arc;
+
+use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, SyntheticData};
+use soybean::exec::build_shard_tasks;
+use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
+use soybean::planner::{baselines, classify, k_cut, Planner, Strategy};
+use soybean::runtime::{ArtifactRegistry, Client};
+use soybean::sim::{simulate, simulate_classic_dp, SimConfig};
+
+fn artifacts() -> ArtifactRegistry {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactRegistry::load(&dir).expect("run `make artifacts` first")
+}
+
+/// The paper's headline, end to end through the public API: for each of
+/// the four evaluation workloads, SOYBEAN's plan moves no more bytes than
+/// either baseline and the simulated step is at least as fast.
+#[test]
+fn soybean_dominates_baselines_across_the_zoo() {
+    let cfg = SimConfig::default();
+    let graphs = vec![
+        ("mlp8192", mlp(&MlpConfig::fig8(512, 8192))),
+        ("cnn5", cnn5(256, 6, 4, 512, 10)),
+        ("alexnet", alexnet(128)),
+        ("vgg16", vgg16(32)),
+    ];
+    for (name, g) in graphs {
+        let soy = Planner::plan(&g, 3, Strategy::Soybean);
+        let dp = Planner::plan(&g, 3, Strategy::DataParallel);
+        let mp = Planner::plan(&g, 3, Strategy::ModelParallel);
+        assert!(soy.total_cost() <= dp.total_cost(), "{name}: soy > dp bytes");
+        assert!(soy.total_cost() <= mp.total_cost(), "{name}: soy > mp bytes");
+        let rs = simulate(&g, &soy, &cfg);
+        let rd = simulate_classic_dp(&g, &dp, &cfg);
+        // SOYBEAN minimizes *bytes* (the paper's objective); the time model
+        // also prices shard-shape efficiency, which the planner does not
+        // see, so allow a small margin on simulated time.
+        assert!(rs.step_s <= rd.step_s * 1.15, "{name}: soy slower than DP");
+    }
+}
+
+/// The 1.5–4× headline: SOYBEAN vs data parallelism on AlexNet and VGG at
+/// the paper's batch sizes.
+#[test]
+fn headline_speedup_over_dp() {
+    let cfg = SimConfig::default();
+    for (g, batch, lo) in [(alexnet(256), 256usize, 1.3f64), (vgg16(64), 64, 1.3)] {
+        let soy = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg);
+        let dp = simulate_classic_dp(&g, &Planner::plan(&g, 3, Strategy::DataParallel), &cfg);
+        let speedup = dp.step_s / soy.step_s;
+        assert!(
+            speedup >= lo,
+            "batch {batch}: SOYBEAN only {speedup:.2}x faster than DP"
+        );
+        let _ = batch;
+    }
+}
+
+/// AlexNet's optimal plan is the mixed strategy of Krizhevsky's "one weird
+/// trick": conv filters data-parallel (replicated), FC weights split.
+#[test]
+fn alexnet_plan_is_one_weird_trick() {
+    let g = alexnet(256);
+    let plan = k_cut(&g, 3);
+    assert_eq!(classify(&g, &plan.tiles), "hybrid");
+    let tile_of = |name: &str| {
+        let t = g.tensors.iter().find(|t| t.name == name).unwrap();
+        plan.tiles[t.id].clone()
+    };
+    // Early conv filter: replicated at every cut (data parallelism).
+    assert!(
+        tile_of("conv1.w").iter().all(|t| *t == soybean::Tile::Rep),
+        "conv1 filter should be replicated, got {:?}",
+        tile_of("conv1.w")
+    );
+    // The 9216×4096 fc6 weight: split at least once (model parallelism).
+    assert!(
+        tile_of("fc6.w").iter().any(|t| matches!(t, soybean::Tile::Split(_))),
+        "fc6 weight should be split, got {:?}",
+        tile_of("fc6.w")
+    );
+}
+
+/// Every strategy's plan materializes into a realizable shard schedule on
+/// every model in the zoo (the §5 execution-graph construction).
+#[test]
+fn all_plans_materialize() {
+    for g in [mlp(&MlpConfig::e2e()), cnn5(64, 24, 4, 64, 10), alexnet(64), vgg16(16)] {
+        for strat in Strategy::all() {
+            for k in 0..=3 {
+                let plan = Planner::plan(&g, k, strat);
+                let tasks = build_shard_tasks(&g, &plan);
+                assert_eq!(tasks.len(), g.ops.len());
+            }
+        }
+    }
+}
+
+/// Ablation: hierarchy-aware cut ordering (Theorem 3 / §5.1). The optimal
+/// plan's outermost cut must not be more expensive than its innermost —
+/// so mapping cut 0 to the slowest link is the right placement.
+#[test]
+fn ablation_cut_ordering_matches_placement() {
+    for g in [mlp(&MlpConfig::fig8(512, 4096)), alexnet(128)] {
+        let plan = k_cut(&g, 3);
+        for j in 0..plan.cut_costs.len() - 1 {
+            let outer = plan.cut_costs[j];
+            let inner = plan.cut_costs[j + 1];
+            assert!(
+                outer <= 2 * inner.max(1),
+                "cut {j} ({outer}) exceeds 2x the next cut ({inner}) — Theorem 3"
+            );
+        }
+    }
+}
+
+/// Full-stack numerics: serial Pallas artifact == serial jnp artifact ==
+/// parallel engine, through the public trainer API.
+#[test]
+fn three_way_numerics_agreement() {
+    let dims = vec![64usize, 128, 128, 10];
+    let client = Arc::new(Client::cpu().expect("PJRT client"));
+    let reg = artifacts();
+    let params = init_mlp_params(123, &dims);
+    let mut jnp =
+        SerialTrainer::from_artifact(&client, &reg, "mlp_step_small", params.clone(), 0.1).unwrap();
+    let mut pallas =
+        SerialTrainer::from_artifact(&client, &reg, "mlp_step_small_pallas", params.clone(), 0.1)
+            .unwrap();
+    let g = mlp(&MlpConfig { batch: 32, dims: dims.clone(), bias: true });
+    let plan = Planner::plan(&g, 2, Strategy::Soybean);
+    let mut engine = ParallelTrainer::new(client, g, plan, &params, 0.1).unwrap();
+
+    let mut data = SyntheticData::new(11, 64, 10);
+    for _ in 0..3 {
+        let (x, y) = data.batch(32);
+        let a = jnp.step(&x, &y).unwrap();
+        let b = pallas.step(&x, &y).unwrap();
+        let c = engine.step(&x, &y).unwrap();
+        assert!((a - b).abs() < 1e-4, "jnp {a} vs pallas {b}");
+        assert!((a - c).abs() < 2e-3, "serial {a} vs engine {c}");
+    }
+}
+
+/// Data-parallel engine traffic at k=1 matches the analytic gradient
+/// volume: one allreduce of every parameter (2·|θ| across the pair).
+#[test]
+fn dp_engine_traffic_matches_theory() {
+    let dims = vec![64usize, 128, 10];
+    let g = mlp(&MlpConfig { batch: 32, dims: dims.clone(), bias: false });
+    let plan = baselines::data_parallel(&g, 1);
+    let client = Arc::new(Client::cpu().expect("PJRT client"));
+    let params = init_mlp_params(5, &dims)
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| i % 2 == 0) // weights only (bias=false graph)
+        .map(|(_, p)| p)
+        .collect::<Vec<_>>();
+    let mut t = ParallelTrainer::new(client, g.clone(), plan, &params, 0.1).unwrap();
+    let mut data = SyntheticData::new(1, 64, 10);
+    let (x, y) = data.batch(32);
+    t.step(&x, &y).unwrap();
+    let expected = 2 * g.weight_bytes(); // classic recursive-halving allreduce
+    let measured = t.engine.metrics.total_bytes();
+    let ratio = measured as f64 / expected as f64;
+    // The engine realizes Eq. (2)'s *minimal* forms, which can undercut the
+    // classic allreduce for small layers (shipping activations instead of
+    // the 10-wide head's gradient), so the measured traffic may sit below
+    // the classic figure.
+    assert!(
+        (0.5..=1.6).contains(&ratio),
+        "engine moved {measured} bytes, theory {expected} (ratio {ratio:.2})"
+    );
+}
