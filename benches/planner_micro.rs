@@ -2,7 +2,13 @@
 //!
 //! §3: "the runtime cost of the dataflow transformation can be amortized"
 //! — but only if planning is fast. Targets (see DESIGN.md §Perf): a full
-//! 8-device plan for VGG-16 in < 1 s.
+//! 8-device plan for VGG-16 in < 1 s, and the LUT-backed one-cut at least
+//! 5× faster than the pre-LUT reference on VGG-16.
+//!
+//! Each `one_cut/*` row times both implementations, asserts they return
+//! the identical optimal cost, and reports the speedup. Results are also
+//! written to `BENCH_planner.json` (machine-readable; schema documented in
+//! DESIGN.md §Perf) so the trajectory is tracked across PRs.
 //!
 //! Run with `cargo bench --bench planner_micro`.
 
@@ -10,8 +16,8 @@ use std::time::Duration;
 
 use soybean::graph::bfs_levels;
 use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
-use soybean::planner::{k_cut, one_cut};
-use soybean::util::bench::{report_row, time_it};
+use soybean::planner::{k_cut, one_cut, reference::one_cut_reference};
+use soybean::util::bench::{time_it, BenchLog};
 
 fn main() {
     println!("== planner micro-benchmarks ==");
@@ -22,30 +28,59 @@ fn main() {
         ("alexnet", alexnet(256)),
         ("vgg16", vgg16(64)),
     ];
+    let mut log = BenchLog::new("planner_micro");
 
     for (name, g) in &workloads {
         let lv = bfs_levels(g);
+        // Bit-identical equivalence is part of the bench contract: a fast
+        // wrong planner is not a speedup. Solve once for the check; the
+        // timed loops below only measure.
+        let fast = one_cut(g);
+        let slow = one_cut_reference(g);
+        assert_eq!(fast.cost, slow.cost, "{name}: cost diverged");
         let m = time_it(1, Duration::from_millis(300), || {
             std::hint::black_box(one_cut(g));
         });
-        report_row(
+        let m_ref = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(one_cut_reference(g));
+        });
+        let speedup = m_ref.mean.as_secs_f64() / m.mean.as_secs_f64();
+        log.row(
             &format!("one_cut/{name}"),
             &[
                 ("ms", format!("{:.2}", m.mean_ms())),
+                ("ref_ms", format!("{:.2}", m_ref.mean_ms())),
+                ("speedup", format!("{speedup:.1}")),
                 ("ops", g.ops.len().to_string()),
                 ("levels", lv.levels.len().to_string()),
                 ("maxwidth", lv.max_width().to_string()),
             ],
         );
+        if *name == "vgg16" {
+            // Target: >= 5x (DESIGN.md §Perf). Shared CI runners have noisy
+            // neighbors, so CI relaxes the gate via env var and tracks the
+            // real number through BENCH_planner.json instead.
+            let min_speedup: f64 = std::env::var("PLANNER_MICRO_MIN_SPEEDUP")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(5.0);
+            assert!(
+                speedup >= min_speedup,
+                "one_cut/vgg16 only {speedup:.1}x faster than the reference (floor {min_speedup}x)"
+            );
+        }
     }
 
     for (name, g) in &workloads {
         let m = time_it(1, Duration::from_millis(500), || {
             std::hint::black_box(k_cut(g, 3));
         });
-        report_row(&format!("k_cut3/{name}"), &[("ms", format!("{:.2}", m.mean_ms()))]);
+        log.row(&format!("k_cut3/{name}"), &[("ms", format!("{:.2}", m.mean_ms()))]);
         if *name == "vgg16" {
             assert!(m.mean.as_secs_f64() < 1.0, "VGG 8-device plan exceeded 1s target");
         }
     }
+
+    log.write_json("BENCH_planner.json").expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json ({} rows)", 2 * workloads.len());
 }

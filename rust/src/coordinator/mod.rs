@@ -12,7 +12,10 @@
 //! task so loss curves are meaningful.
 
 mod data;
+// The trainers drive the PJRT engine — gated with it (`pjrt` feature).
+#[cfg(feature = "pjrt")]
 mod trainer;
 
 pub use data::SyntheticData;
+#[cfg(feature = "pjrt")]
 pub use trainer::{init_mlp_params, ParallelTrainer, SerialTrainer};

@@ -30,7 +30,10 @@
 //!   runtime/overhead numbers of the paper's figures.
 //! - [`runtime`] — the PJRT side: HLO-text artifact registry, dynamic
 //!   `XlaBuilder` kernels, and the multi-worker execution engine (real
-//!   buffers, real transfers; Python never runs here).
+//!   buffers, real transfers; Python never runs here). Everything except
+//!   the host-tensor type is gated behind the `pjrt` cargo feature, which
+//!   needs the vendored `xla`/`anyhow` crates — the default build is
+//!   dependency-free.
 //! - [`coordinator`] — the training loop: BSP batches, SGD, metrics.
 //! - [`models`] — the model zoo: MLP, parametric CNN, AlexNet, VGG-16 as
 //!   semantic graphs (the paper's evaluation workloads).

@@ -13,11 +13,9 @@
 
 use std::collections::HashMap;
 
-use soybean::coordinator::{init_mlp_params, ParallelTrainer, SyntheticData};
 use soybean::figures;
 use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
 use soybean::planner::{classify, Planner, Strategy};
-use soybean::runtime::Client;
 use soybean::sim::{simulate, SimConfig};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -59,6 +57,47 @@ fn model_graph(flags: &HashMap<String, String>) -> soybean::Graph {
             std::process::exit(2);
         }
     }
+}
+
+/// Small real training run through the parallel PJRT engine (requires the
+/// `pjrt` feature and the vendored xla toolchain).
+#[cfg(feature = "pjrt")]
+fn train(flags: &HashMap<String, String>) {
+    use soybean::coordinator::{init_mlp_params, ParallelTrainer, SyntheticData};
+    use soybean::runtime::Client;
+
+    let steps = get(flags, "steps", 50usize);
+    let batch = get(flags, "batch", 32usize);
+    let k = get(flags, "k", 2usize);
+    let dims = vec![64usize, 128, 128, 10];
+    let g = mlp(&MlpConfig { batch, dims: dims.clone(), bias: true });
+    let plan = Planner::plan(&g, k, strategy_of(flags));
+    println!("plan: {} over {} devices", classify(&g, &plan.tiles), plan.devices());
+    let client = std::sync::Arc::new(Client::cpu().expect("PJRT client"));
+    let params = init_mlp_params(7, &dims);
+    let mut trainer = ParallelTrainer::new(client, g, plan, &params, 0.1).expect("engine");
+    let mut data = SyntheticData::new(3, dims[0], *dims.last().unwrap());
+    for s in 0..steps {
+        let (x, y) = data.batch(batch);
+        let loss = trainer.step(&x, &y).expect("step");
+        if s % 10 == 0 || s + 1 == steps {
+            println!("step {s:>4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "engine traffic: {:.2} MB over {} transfers",
+        trainer.engine.metrics.total_bytes() as f64 / 1e6,
+        trainer.engine.metrics.transfers
+    );
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn train(_flags: &HashMap<String, String>) {
+    eprintln!("`soybean train` needs the real PJRT engine, which this build omits.");
+    eprintln!("Enabling it takes two steps (see Cargo.toml's feature notes):");
+    eprintln!("  1. add the vendored `xla` and `anyhow` crates to [dependencies]");
+    eprintln!("  2. rebuild with `--features pjrt`");
+    std::process::exit(2);
 }
 
 fn main() {
@@ -120,32 +159,7 @@ fn main() {
                 println!("{}", figures::fig10("vgg", &[16, 32, 64, 128, 256], &cfg).0);
             }
         }
-        "train" => {
-            // Small real training run through the parallel engine.
-            let steps = get(&flags, "steps", 50usize);
-            let batch = get(&flags, "batch", 32usize);
-            let k = get(&flags, "k", 2usize);
-            let dims = vec![64usize, 128, 128, 10];
-            let g = mlp(&MlpConfig { batch, dims: dims.clone(), bias: true });
-            let plan = Planner::plan(&g, k, strategy_of(&flags));
-            println!("plan: {} over {} devices", classify(&g, &plan.tiles), plan.devices());
-            let client = std::sync::Arc::new(Client::cpu().expect("PJRT client"));
-            let params = init_mlp_params(7, &dims);
-            let mut trainer = ParallelTrainer::new(client, g, plan, &params, 0.1).expect("engine");
-            let mut data = SyntheticData::new(3, dims[0], *dims.last().unwrap());
-            for s in 0..steps {
-                let (x, y) = data.batch(batch);
-                let loss = trainer.step(&x, &y).expect("step");
-                if s % 10 == 0 || s + 1 == steps {
-                    println!("step {s:>4}  loss {loss:.4}");
-                }
-            }
-            println!(
-                "engine traffic: {:.2} MB over {} transfers",
-                trainer.engine.metrics.total_bytes() as f64 / 1e6,
-                trainer.engine.metrics.transfers
-            );
-        }
+        "train" => train(&flags),
         "inspect" => {
             let g = model_graph(&flags);
             println!("{}", g.dump());

@@ -103,7 +103,10 @@ mod tests {
 
     #[test]
     fn dp_matches_bruteforce_property() {
-        // Hand-rolled property test: 25 random graphs, DP == brute force.
+        // Hand-rolled property test over random graphs, exercising both
+        // pricing paths: the LUT-backed DP and the pre-LUT reference must
+        // both equal full enumeration (which prices via direct Eq. (2)
+        // evaluation — an oracle independent of the cost tables).
         let mut rng = Rng::new(0xC0FFEE);
         let mut checked = 0;
         while checked < 20 {
@@ -125,7 +128,34 @@ mod tests {
                 "optimality violated on random graph (seed case {checked}):\n{}",
                 g.dump()
             );
+            let reference = crate::planner::reference::one_cut_reference(&g);
+            assert_eq!(
+                reference.cost, bf.cost,
+                "reference impl diverged on random graph (seed case {checked}):\n{}",
+                g.dump()
+            );
+            assert_eq!(dp.tiles, reference.tiles, "tie-breaking diverged (case {checked})");
             checked += 1;
+        }
+    }
+
+    #[test]
+    fn lut_and_direct_pricing_agree_on_random_graphs() {
+        // The cost tables must reproduce direct Eq. (2) pricing for every
+        // assignment, not just optimal ones.
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..10 {
+            let g = random_graph(&mut rng);
+            let tables = crate::tiling::CostTables::build(&g);
+            let alias = g.steady_state_aliases();
+            for _ in 0..50 {
+                let mut tiles: Vec<Tile> =
+                    g.tensors.iter().map(|t| *rng.choose(&tables.cands[t.id])).collect();
+                for t in 0..tiles.len() {
+                    tiles[t] = tiles[alias[t]];
+                }
+                assert_eq!(tables.price(&tiles), price(&g, &tiles), "\n{}", g.dump());
+            }
         }
     }
 

@@ -11,7 +11,7 @@
 use crate::graph::{Graph, Op, OpKind, TensorKind};
 use crate::tiling::{describe_seq, op_cost, op_cost_with_form, Form, Tile, TileSeq};
 
-use super::onecut::one_cut;
+use super::onecut::{OneCutSolver, PlanError};
 
 /// The form stock data parallelism always uses: gradient aggregation via
 /// the reduction path (`C·R -> red` for weight-gradient matmuls/convs,
@@ -35,8 +35,10 @@ pub fn price_forced(
     forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
 ) -> u64 {
     let mut total = 0u64;
+    let mut ins: Vec<Tile> = Vec::new();
     for op in &g.ops {
-        let ins: Vec<Tile> = op.inputs.iter().map(|&t| tiles[t]).collect();
+        ins.clear();
+        ins.extend(op.inputs.iter().map(|&t| tiles[t]));
         let out = tiles[op.outputs[0]];
         let c = match forced(g, op) {
             Some(f) => op_cost_with_form(g, op, &ins, out, f)
@@ -111,21 +113,33 @@ pub fn apply_cut(g: &Graph, tiles: &[Tile]) -> Graph {
     sub
 }
 
-/// Algorithm 1: recursively one-cut, `k` times.
+/// Algorithm 1: recursively one-cut, `k` times. Panics on planner failure
+/// (see [`try_k_cut`]).
 pub fn k_cut(g: &Graph, k: usize) -> Plan {
+    try_k_cut(g, k).unwrap_or_else(|e| panic!("k-cut planning failed: {e}"))
+}
+
+/// Algorithm 1 with structured errors.
+///
+/// Halving shard shapes never changes the graph's *topology*, so the
+/// one-cut solver's levelization, alias map and component structure are
+/// built once and reused across all `k` recursion levels — only the
+/// numeric cost tables are re-derived for each halved graph.
+pub fn try_k_cut(g: &Graph, k: usize) -> Result<Plan, PlanError> {
     let nt = g.tensors.len();
     let mut tiles: Vec<TileSeq> = vec![Vec::with_capacity(k); nt];
     let mut cut_costs = Vec::with_capacity(k);
+    let solver = OneCutSolver::new(g);
     let mut cur = g.clone();
     for _ in 0..k {
-        let oc = one_cut(&cur);
+        let oc = solver.solve(&cur)?;
         cut_costs.push(oc.cost);
         for t in 0..nt {
             tiles[t].push(oc.tiles[t]);
         }
         cur = apply_cut(&cur, &oc.tiles);
     }
-    Plan { k, tiles, cut_costs }
+    Ok(Plan { k, tiles, cut_costs })
 }
 
 /// Re-price an arbitrary per-tensor `TileSeq` assignment cut by cut (used

@@ -11,14 +11,20 @@
 //! - [`bruteforce`] — exhaustive enumeration for small graphs; the
 //!   hand-rolled property tests check the DP against it (§4.4's optimality
 //!   claim, verified empirically).
+//! - [`reference`] — the pre-LUT one-cut implementation, kept as the
+//!   bit-identical oracle and the speedup baseline `planner_micro` times
+//!   the optimized [`OneCutSolver`] against (DESIGN.md §Perf).
 
 pub mod baselines;
 pub mod bruteforce;
 mod kcut;
 mod onecut;
+pub mod reference;
 
-pub use kcut::{apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, Plan};
-pub use onecut::{one_cut, OneCutPlan};
+pub use kcut::{
+    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, try_k_cut, Plan,
+};
+pub use onecut::{one_cut, price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
 
 use crate::graph::Graph;
 use crate::tiling::TileSeq;

@@ -18,13 +18,33 @@
 //!
 //! The search is exhaustive over the candidate tiling space, so the result
 //! is optimal for the cost model — the property tests in
-//! [`super::bruteforce`] check this against full enumeration.
+//! [`super::bruteforce`] check this against full enumeration and against
+//! the pre-LUT reference implementation in [`super::reference`].
+//!
+//! # Hot-path engineering (DESIGN.md §Perf)
+//!
+//! The inner loops never call [`crate::tiling::op_cost`]: every op's
+//! Eq. (2) surface is precomputed once per graph into a dense
+//! [`CostTables`] LUT, so a state visit is one mixed-radix index plus one
+//! table load per op. States are enumerated with odometer digit counters
+//! (no `decode` allocations), tensor→slot positions are precomputed
+//! (no linear `position()` scans), and both the per-component tabulation
+//! and the per-state DP sweep fan out across cores via
+//! [`crate::util::par::par_map_with`] — each state's result is computed
+//! independently, so threading never changes the returned plan.
+//!
+//! Topology-dependent structure (levelization, alias map, components) is
+//! computed once by [`OneCutSolver::new`] and reused across
+//! [`OneCutSolver::solve`] calls; the k-cut recursion exploits this by
+//! re-solving the same solver on successively halved graphs.
 
-use std::collections::HashMap;
+use std::fmt;
 
-use crate::graph::{bfs_levels, Graph, OpId, TensorId};
+use crate::graph::{bfs_levels, Graph, Levels, OpId, TensorId};
 use crate::tiling::aligned::INFEASIBLE;
-use crate::tiling::{candidate_tiles, op_cost, Tile};
+use crate::tiling::{CostTables, Tile};
+use crate::util::par::par_map_with;
+use crate::util::radix::{decode_digits, mults_of, odometer_inc};
 
 /// Result of the one-cut DP: a basic tiling per tensor and the total
 /// conversion cost (bytes moved across the cut for one training step).
@@ -35,60 +55,72 @@ pub struct OneCutPlan {
     pub cost: u64,
 }
 
-/// An enumerable assignment space over a fixed list of tensors.
-#[derive(Debug, Clone, Default)]
-struct Space {
-    ids: Vec<TensorId>,
-    cands: Vec<Vec<Tile>>,
+/// Structured planner failure — returned instead of panicking so callers
+/// embedding the planner (services, long sweeps) can degrade gracefully.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// One intra-level component's exhaustive tabulation would exceed the
+    /// solver's state limit (boundary states × internal states).
+    ComponentTooLarge { level: usize, ops: usize, states: u128, limit: u128 },
+    /// A level's DP state space cannot be indexed (astronomically wide
+    /// boundary — no practical graph reaches this).
+    BoundaryTooLarge { level: usize, states: u128 },
+    /// No feasible one-cut tiling exists (e.g. every dimension odd).
+    Infeasible,
 }
 
-impl Space {
-    fn new(ids: Vec<TensorId>, all_cands: &[Vec<Tile>]) -> Self {
-        let cands = ids.iter().map(|&t| all_cands[t].clone()).collect();
-        Space { ids, cands }
-    }
-
-    fn len(&self) -> usize {
-        self.cands.iter().map(Vec::len).product()
-    }
-
-    /// Decode a mixed-radix index into per-tensor tiles (same order as ids).
-    fn decode(&self, mut idx: usize) -> Vec<Tile> {
-        let mut out = Vec::with_capacity(self.cands.len());
-        for c in &self.cands {
-            out.push(c[idx % c.len()]);
-            idx /= c.len();
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::ComponentTooLarge { level, ops, states, limit } => write!(
+                f,
+                "level {level} component ({ops} ops) needs {states} states; limit {limit}"
+            ),
+            PlanError::BoundaryTooLarge { level, states } => {
+                write!(f, "level {level} boundary space has {states} states")
+            }
+            PlanError::Infeasible => write!(f, "no feasible one-cut tiling exists"),
         }
-        out
     }
 }
 
-/// One intra-level component: ops connected through internal tensors, plus
-/// the cost table over its touched boundary tensors.
-struct Component {
-    #[allow(dead_code)]
+impl std::error::Error for PlanError {}
+
+/// Default cap on per-component tabulation states (same magnitude the
+/// pre-LUT implementation asserted on).
+const DEFAULT_STATE_LIMIT: u128 = 50_000_000;
+
+/// Minimum (states × ops) work before a sweep is worth fork-join threads.
+const PAR_MIN_WORK: usize = 1 << 15;
+
+/// One intra-level component: ops connected through internal tensors.
+/// Tensor ids are steady-state alias representatives; `bids`/`iids` are
+/// sorted and deduplicated.
+struct CompStruct {
     ops: Vec<OpId>,
     /// Boundary tensors this component reads (subset of prev ∪ cur).
-    boundary_ids: Vec<TensorId>,
-    internal: Space,
-    /// Indexed by the mixed-radix assignment of `boundary_ids` (using the
-    /// global candidate lists); value = (min cost, best internal index).
-    table: Vec<(u64, usize)>,
-    /// Radix per boundary tensor (candidate count), same order as ids.
-    boundary_radix: Vec<usize>,
+    bids: Vec<TensorId>,
+    /// Tensors internal to this level, minimized over during tabulation.
+    iids: Vec<TensorId>,
 }
 
-impl Component {
-    /// Index into `table` given a lookup map from tensor to chosen tile.
-    fn index_of(&self, choose: &dyn Fn(TensorId) -> usize) -> usize {
-        let mut idx = 0;
-        let mut mult = 1;
-        for (i, &t) in self.boundary_ids.iter().enumerate() {
-            idx += choose(t) * mult;
-            mult *= self.boundary_radix[i];
-        }
-        idx
-    }
+/// A tabulated component: minimal cost and argmin internal assignment per
+/// mixed-radix boundary assignment.
+struct CompTab {
+    costs: Vec<u64>,
+    args: Vec<u32>,
+    /// Mixed-radix multiplier per boundary tensor (same order as `bids`).
+    bmults: Vec<usize>,
+}
+
+/// Per-op lookup descriptor inside one component: how much each boundary /
+/// internal digit contributes to the op's LUT index.
+struct OpTerms {
+    op: OpId,
+    /// `(position in bids, LUT multiplier)` — summed over occurrences.
+    bw: Vec<(usize, usize)>,
+    /// `(position in iids, LUT multiplier)`.
+    iw: Vec<(usize, usize)>,
 }
 
 /// Union-find for component construction.
@@ -100,286 +132,468 @@ fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
     x
 }
 
-pub fn one_cut(g: &Graph) -> OneCutPlan {
-    let nt = g.tensors.len();
-    let all_cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
-    if g.ops.is_empty() {
-        return OneCutPlan { tiles: vec![Tile::Rep; nt], cost: 0 };
-    }
-    // Steady-state constraint: updated parameters share their parameter's
-    // tiling variable (see Graph::steady_state_aliases).
-    let alias = g.steady_state_aliases();
+/// Reusable one-cut solver: the topology-dependent analysis (BFS levels,
+/// steady-state aliases, boundary membership, intra-level components) is
+/// computed once here; [`Self::solve`] then prices any graph with the same
+/// topology — in particular the shape-halved subproblems of the k-cut
+/// recursion, which would otherwise re-derive all of it from zero at every
+/// level.
+pub struct OneCutSolver {
+    ntensors: usize,
+    nops: usize,
+    alias: Vec<TensorId>,
+    lv: Levels,
+    /// tensor -> l if in boundary[l], else `usize::MAX`.
+    boundary_level: Vec<usize>,
+    /// Position of a tensor within its boundary list.
+    pos_in_boundary: Vec<usize>,
+    /// Per level: components of ops connected through internal tensors.
+    components: Vec<Vec<CompStruct>>,
+    state_limit: u128,
+}
 
-    let lv = bfs_levels(g);
-    let nlevels = lv.levels.len();
+impl OneCutSolver {
+    pub fn new(g: &Graph) -> Self {
+        let nt = g.tensors.len();
+        let alias = g.steady_state_aliases();
+        let lv = bfs_levels(g);
+        let nlevels = lv.levels.len();
 
-    // Membership maps for quick classification.
-    let mut boundary_level = vec![usize::MAX; nt]; // tensor -> l if in boundary[l]
-    for (l, b) in lv.boundary.iter().enumerate() {
-        for &t in b {
-            boundary_level[t] = l;
+        // Membership maps for quick classification.
+        let mut boundary_level = vec![usize::MAX; nt];
+        let mut pos_in_boundary = vec![usize::MAX; nt];
+        for (l, b) in lv.boundary.iter().enumerate() {
+            for (i, &t) in b.iter().enumerate() {
+                boundary_level[t] = l;
+                pos_in_boundary[t] = i;
+            }
         }
-    }
-    let mut internal_level = vec![usize::MAX; nt];
-    for (l, ts) in lv.internal.iter().enumerate() {
-        for &t in ts {
-            internal_level[t] = l;
+        let mut internal_level = vec![usize::MAX; nt];
+        for (l, ts) in lv.internal.iter().enumerate() {
+            for &t in ts {
+                internal_level[t] = l;
+            }
         }
-    }
 
-    // Build per-level components and their tables.
-    let mut level_components: Vec<Vec<Component>> = Vec::with_capacity(nlevels);
-    for (l, ops) in lv.levels.iter().enumerate() {
-        // Union ops sharing an internal tensor of this level.
-        let mut parent: Vec<usize> = (0..ops.len()).collect();
-        let mut internal_owner: HashMap<TensorId, usize> = HashMap::new();
-        for (oi, &op) in ops.iter().enumerate() {
-            let o = &g.ops[op];
-            for &t in o.inputs.iter().chain(o.outputs.iter()) {
-                let t = alias[t];
-                if internal_level[t] == l {
-                    match internal_owner.get(&t) {
-                        None => {
-                            internal_owner.insert(t, oi);
-                        }
-                        Some(&prev) => {
-                            let (a, b) = (find(&mut parent, prev), find(&mut parent, oi));
-                            if a != b {
-                                parent[a] = b;
+        // Per level: union ops sharing an internal tensor, then collect
+        // each group's boundary/internal tensor lists.
+        let mut components: Vec<Vec<CompStruct>> = Vec::with_capacity(nlevels);
+        for (l, ops) in lv.levels.iter().enumerate() {
+            let mut parent: Vec<usize> = (0..ops.len()).collect();
+            let mut internal_owner: Vec<(TensorId, usize)> = Vec::new();
+            for (oi, &op) in ops.iter().enumerate() {
+                let o = &g.ops[op];
+                for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                    let t = alias[t];
+                    if internal_level[t] == l {
+                        let owner = internal_owner
+                            .iter()
+                            .find(|&&(x, _)| x == t)
+                            .map(|&(_, first)| first);
+                        match owner {
+                            None => internal_owner.push((t, oi)),
+                            Some(prev) => {
+                                let (a, b) = (find(&mut parent, prev), find(&mut parent, oi));
+                                if a != b {
+                                    parent[a] = b;
+                                }
                             }
                         }
                     }
                 }
             }
-        }
-        let mut groups: HashMap<usize, Vec<OpId>> = HashMap::new();
-        for (oi, &op) in ops.iter().enumerate() {
-            groups.entry(find(&mut parent, oi)).or_default().push(op);
-        }
-
-        let mut comps = Vec::new();
-        let mut group_keys: Vec<usize> = groups.keys().copied().collect();
-        group_keys.sort_unstable();
-        for key in group_keys {
-            let comp_ops = groups[&key].clone();
-            let mut bids: Vec<TensorId> = Vec::new();
-            let mut iids: Vec<TensorId> = Vec::new();
-            for &op in &comp_ops {
-                let o = &g.ops[op];
-                for &t in o.inputs.iter().chain(o.outputs.iter()) {
-                    let t = alias[t];
-                    if internal_level[t] == l {
-                        if !iids.contains(&t) {
-                            iids.push(t);
-                        }
-                    } else if !bids.contains(&t) {
-                        bids.push(t);
-                    }
+            // Group ops by root, roots in ascending order (deterministic
+            // component order — ties in the DP resolve identically run to
+            // run and match the reference implementation).
+            let mut by_root: Vec<(usize, Vec<OpId>)> = Vec::new();
+            for (oi, &op) in ops.iter().enumerate() {
+                let root = find(&mut parent, oi);
+                match by_root.iter().position(|(r, _)| *r == root) {
+                    Some(i) => by_root[i].1.push(op),
+                    None => by_root.push((root, vec![op])),
                 }
             }
-            bids.sort_unstable();
-            iids.sort_unstable();
-            let internal = Space::new(iids, &all_cands);
-            let boundary_radix: Vec<usize> = bids.iter().map(|&t| all_cands[t].len()).collect();
-            let table_len: usize = boundary_radix.iter().product::<usize>().max(1);
-            assert!(
-                table_len.saturating_mul(internal.len().max(1)) < 50_000_000,
-                "level {l} component too large for exhaustive tabulation"
-            );
+            by_root.sort_unstable_by_key(|(r, _)| *r);
 
-            // Tabulate: for every boundary assignment, minimize over
-            // internal assignments.
-            let mut table = vec![(INFEASIBLE, 0usize); table_len];
-            let bspace = Space::new(bids.clone(), &all_cands);
-            for bidx in 0..table_len {
-                let btiles = bspace.decode(bidx);
-                let mut best = (INFEASIBLE, 0usize);
-                for iidx in 0..internal.len().max(1) {
-                    let itiles = if internal.ids.is_empty() {
-                        Vec::new()
-                    } else {
-                        internal.decode(iidx)
-                    };
-                    let lookup = |t: TensorId| -> Tile {
+            let mut comps = Vec::with_capacity(by_root.len());
+            for (_, comp_ops) in by_root {
+                let mut bids: Vec<TensorId> = Vec::new();
+                let mut iids: Vec<TensorId> = Vec::new();
+                for &op in &comp_ops {
+                    let o = &g.ops[op];
+                    for &t in o.inputs.iter().chain(o.outputs.iter()) {
                         let t = alias[t];
-                        if let Some(p) = bids.iter().position(|&x| x == t) {
-                            btiles[p]
-                        } else if let Some(p) = internal.ids.iter().position(|&x| x == t) {
-                            itiles[p]
-                        } else {
-                            unreachable!("tensor {t} not in component scope")
+                        if internal_level[t] == l {
+                            if !iids.contains(&t) {
+                                iids.push(t);
+                            }
+                        } else if !bids.contains(&t) {
+                            bids.push(t);
                         }
-                    };
+                    }
+                }
+                bids.sort_unstable();
+                iids.sort_unstable();
+                comps.push(CompStruct { ops: comp_ops, bids, iids });
+            }
+            components.push(comps);
+        }
+
+        OneCutSolver {
+            ntensors: nt,
+            nops: g.ops.len(),
+            alias,
+            lv,
+            boundary_level,
+            pos_in_boundary,
+            components,
+            state_limit: DEFAULT_STATE_LIMIT,
+        }
+    }
+
+    /// Override the per-component tabulation state cap (tests use a tiny
+    /// limit to exercise the [`PlanError::ComponentTooLarge`] path).
+    pub fn with_state_limit(mut self, limit: u128) -> Self {
+        self.state_limit = limit;
+        self
+    }
+
+    /// Solve the one-cut problem for `g`, which must share this solver's
+    /// topology (same tensors and ops; shapes may differ — that is the
+    /// k-cut reuse case).
+    pub fn solve(&self, g: &Graph) -> Result<OneCutPlan, PlanError> {
+        assert_eq!(g.tensors.len(), self.ntensors, "solver topology mismatch");
+        assert_eq!(g.ops.len(), self.nops, "solver topology mismatch");
+        if self.nops == 0 {
+            return Ok(OneCutPlan { tiles: vec![Tile::Rep; self.ntensors], cost: 0 });
+        }
+
+        // Phase 1: every op's Eq. (2) surface, evaluated once.
+        let tables = CostTables::build_with(g, &self.alias);
+        let cands = &tables.cands;
+        let nlevels = self.lv.levels.len();
+
+        // Phase 2: tabulate each component over its boundary assignments.
+        let mut tabs: Vec<Vec<CompTab>> = Vec::with_capacity(nlevels);
+        for (l, comps) in self.components.iter().enumerate() {
+            let mut level_tabs = Vec::with_capacity(comps.len());
+            for comp in comps {
+                level_tabs.push(self.tabulate(l, comp, &tables)?);
+            }
+            tabs.push(level_tabs);
+        }
+
+        // Phase 3: the g_l(τ_l) forward sweep. Boundary radices are shared
+        // between adjacent levels and the backtracking pass.
+        let bnd_radix: Vec<Vec<usize>> = self
+            .lv
+            .boundary
+            .iter()
+            .map(|ids| ids.iter().map(|&t| cands[t].len()).collect())
+            .collect();
+        // Boundary state counts in u128 (a usize product could wrap past
+        // the guard below on an astronomically wide boundary).
+        let bnd_len: Vec<u128> = bnd_radix.iter().map(|r| checked_product(r.iter())).collect();
+
+        let empty_radix: Vec<usize> = Vec::new();
+        let mut dp_cost: Vec<Vec<u64>> = Vec::with_capacity(nlevels);
+        let mut dp_from: Vec<Vec<u32>> = Vec::with_capacity(nlevels);
+        for l in 0..nlevels {
+            let (prev_radix, prev_states) =
+                if l == 0 { (&empty_radix, 1) } else { (&bnd_radix[l - 1], bnd_len[l - 1]) };
+            let (cur_radix, cur_states) = if l + 1 < nlevels {
+                (&bnd_radix[l], bnd_len[l])
+            } else {
+                (&empty_radix, 1)
+            };
+            // Guard both spaces before any state-sized allocation.
+            for states in [prev_states, cur_states] {
+                if states > u32::MAX as u128 {
+                    return Err(PlanError::BoundaryTooLarge { level: l, states });
+                }
+            }
+            let prev_len = prev_states as usize;
+            let cur_len = cur_states as usize;
+
+            // Split each component's table index into independent prev/cur
+            // contributions, tabulated per state — the sweep's inner loop
+            // is then one add + one load per component.
+            let comps = &tabs[l];
+            let ncomp = comps.len();
+            let mut comp_prev: Vec<Vec<u32>> = Vec::with_capacity(ncomp);
+            let mut comp_cur: Vec<Vec<u32>> = Vec::with_capacity(ncomp);
+            for (comp, tab) in self.components[l].iter().zip(comps) {
+                let mut wprev: Vec<(usize, usize)> = Vec::new();
+                let mut wcur: Vec<(usize, usize)> = Vec::new();
+                for (i, &t) in comp.bids.iter().enumerate() {
+                    let pos = self.pos_in_boundary[t];
+                    if l > 0 && self.boundary_level[t] == l - 1 {
+                        wprev.push((pos, tab.bmults[i]));
+                    } else {
+                        wcur.push((pos, tab.bmults[i]));
+                    }
+                }
+                comp_prev.push(space_contrib(prev_len, prev_radix, &wprev));
+                comp_cur.push(space_contrib(cur_len, cur_radix, &wcur));
+            }
+
+            let prev_cost: &[u64] = if l == 0 { &[] } else { &dp_cost[l - 1] };
+            let work = prev_len.saturating_mul(cur_len).saturating_mul(ncomp.max(1));
+            let states: Vec<(u64, u32)> = par_map_with(
+                cur_len,
+                work >= PAR_MIN_WORK && cur_len >= 2,
+                || (),
+                |_, q| {
+                    let mut best = (INFEASIBLE, 0u32);
+                    for p in 0..prev_len {
+                        let base = if l == 0 { 0 } else { prev_cost[p] };
+                        if base >= best.0 {
+                            continue;
+                        }
+                        let mut cost = base;
+                        for c in 0..ncomp {
+                            let idx = (comp_prev[c][p] + comp_cur[c][q]) as usize;
+                            cost = cost.saturating_add(comps[c].costs[idx]);
+                            if cost >= best.0 {
+                                break;
+                            }
+                        }
+                        if cost < best.0 {
+                            best = (cost, p as u32);
+                        }
+                    }
+                    best
+                },
+            );
+            dp_cost.push(states.iter().map(|s| s.0).collect());
+            dp_from.push(states.iter().map(|s| s.1).collect());
+        }
+
+        // Final answer: the last level has an empty "next" boundary.
+        let mut final_cost = u64::MAX;
+        let mut state = 0usize;
+        for (i, &c) in dp_cost[nlevels - 1].iter().enumerate() {
+            if c < final_cost {
+                final_cost = c;
+                state = i;
+            }
+        }
+        if final_cost >= INFEASIBLE {
+            return Err(PlanError::Infeasible);
+        }
+
+        // Backtrack boundary assignments (as candidate-index digits).
+        let mut bdigits: Vec<Vec<usize>> =
+            bnd_radix.iter().map(|r| vec![0usize; r.len()]).collect();
+        for l in (0..nlevels).rev() {
+            let prev_state = dp_from[l][state] as usize;
+            if l >= 1 {
+                decode_digits(prev_state, &bnd_radix[l - 1], &mut bdigits[l - 1]);
+            }
+            if l + 1 < nlevels {
+                decode_digits(state, &bnd_radix[l], &mut bdigits[l]);
+            }
+            state = prev_state;
+        }
+
+        // Assemble final tiles: boundaries from the DP traceback, internals
+        // from the component argmins.
+        let mut tiles = vec![Tile::Rep; self.ntensors];
+        for (l, ids) in self.lv.boundary.iter().enumerate() {
+            for (i, &t) in ids.iter().enumerate() {
+                tiles[t] = cands[t][bdigits[l][i]];
+            }
+        }
+        let mut idig: Vec<usize> = Vec::new();
+        for (comps, level_tabs) in self.components.iter().zip(&tabs) {
+            for (comp, tab) in comps.iter().zip(level_tabs) {
+                let mut idx = 0usize;
+                for (i, &t) in comp.bids.iter().enumerate() {
+                    idx += bdigits[self.boundary_level[t]][self.pos_in_boundary[t]]
+                        * tab.bmults[i];
+                }
+                let iradix: Vec<usize> = comp.iids.iter().map(|&t| cands[t].len()).collect();
+                idig.clear();
+                idig.resize(comp.iids.len(), 0);
+                decode_digits(tab.args[idx] as usize, &iradix, &mut idig);
+                for (i, &t) in comp.iids.iter().enumerate() {
+                    tiles[t] = cands[t][idig[i]];
+                }
+            }
+        }
+
+        // Resolve aliases: updated weights inherit their weight's tiling.
+        for t in 0..self.ntensors {
+            tiles[t] = tiles[self.alias[t]];
+        }
+
+        // Sanity: re-price the assembled tiling through direct Eq. (2)
+        // evaluation; must equal the DP cost.
+        debug_assert_eq!(price(g, &tiles), final_cost, "DP cost mismatch on reconstruction");
+
+        Ok(OneCutPlan { tiles, cost: final_cost })
+    }
+
+    /// Tabulate one component: for every boundary assignment, minimize the
+    /// LUT-summed cost over internal assignments.
+    fn tabulate(&self, l: usize, comp: &CompStruct, tables: &CostTables) -> Result<CompTab, PlanError> {
+        let cands = &tables.cands;
+        let bradix: Vec<usize> = comp.bids.iter().map(|&t| cands[t].len()).collect();
+        let iradix: Vec<usize> = comp.iids.iter().map(|&t| cands[t].len()).collect();
+        // Size the state space in u128 *before* building multipliers or
+        // allocating: usize products would wrap first on absurd
+        // components, defeating the very guard they feed.
+        let states = checked_product(bradix.iter().chain(&iradix));
+        // Clamp to u32::MAX regardless of the caller's limit: table
+        // indices and argmins are stored as u32, so anything larger would
+        // truncate into silently wrong plans rather than slow ones.
+        let limit = self.state_limit.min(u32::MAX as u128);
+        if states > limit {
+            return Err(PlanError::ComponentTooLarge {
+                level: l,
+                ops: comp.ops.len(),
+                states,
+                limit,
+            });
+        }
+        let (bmults, table_len) = mults_of(&bradix);
+        let internal_len: usize = iradix.iter().product();
+
+        // Map each op's LUT operands onto boundary/internal digit slots.
+        let terms: Vec<OpTerms> = comp
+            .ops
+            .iter()
+            .map(|&op| {
+                let ot = &tables.ops[op];
+                let mut bw: Vec<(usize, usize)> = Vec::new();
+                let mut iw: Vec<(usize, usize)> = Vec::new();
+                for (i, &t) in ot.operands.iter().enumerate() {
+                    let m = ot.mults[i];
+                    if let Some(p) = comp.bids.iter().position(|&x| x == t) {
+                        bw.push((p, m));
+                    } else {
+                        let p = comp
+                            .iids
+                            .iter()
+                            .position(|&x| x == t)
+                            .expect("operand outside component scope");
+                        iw.push((p, m));
+                    }
+                }
+                OpTerms { op, bw, iw }
+            })
+            .collect();
+
+        struct Scratch {
+            last: usize,
+            bdig: Vec<usize>,
+            idig: Vec<usize>,
+            base: Vec<usize>,
+        }
+        let work = table_len.saturating_mul(internal_len).saturating_mul(comp.ops.len());
+        let entries: Vec<(u64, u32)> = par_map_with(
+            table_len,
+            work >= PAR_MIN_WORK && table_len >= 2,
+            || Scratch {
+                last: usize::MAX,
+                bdig: vec![0usize; bradix.len()],
+                idig: vec![0usize; iradix.len()],
+                base: vec![0usize; terms.len()],
+            },
+            |s, bidx| {
+                // Advance the boundary odometer (or re-seed at a chunk
+                // start).
+                if s.last != usize::MAX && s.last + 1 == bidx {
+                    odometer_inc(&mut s.bdig, &bradix);
+                } else {
+                    decode_digits(bidx, &bradix, &mut s.bdig);
+                }
+                s.last = bidx;
+                for (k, t) in terms.iter().enumerate() {
+                    let mut b = 0usize;
+                    for &(p, m) in &t.bw {
+                        b += s.bdig[p] * m;
+                    }
+                    s.base[k] = b;
+                }
+                for d in s.idig.iter_mut() {
+                    *d = 0;
+                }
+                let mut best = (INFEASIBLE, 0u32);
+                for iidx in 0..internal_len {
                     let mut cost = 0u64;
-                    for &op in &comp_ops {
-                        let o = &g.ops[op];
-                        let ins: Vec<Tile> = o.inputs.iter().map(|&t| lookup(t)).collect();
-                        let out = lookup(o.outputs[0]);
-                        cost = cost.saturating_add(op_cost(g, o, &ins, out));
+                    for (k, t) in terms.iter().enumerate() {
+                        let mut idx = s.base[k];
+                        for &(p, m) in &t.iw {
+                            idx += s.idig[p] * m;
+                        }
+                        cost = cost.saturating_add(tables.ops[t.op].costs[idx]);
                         if cost >= best.0 {
                             break;
                         }
                     }
                     if cost < best.0 {
-                        best = (cost, iidx);
+                        best = (cost, iidx as u32);
                     }
+                    odometer_inc(&mut s.idig, &iradix);
                 }
-                table[bidx] = best;
-            }
-            comps.push(Component {
-                ops: comp_ops,
-                boundary_ids: bids,
-                internal,
-                table,
-                boundary_radix,
-            });
-        }
-        level_components.push(comps);
+                best
+            },
+        );
+
+        Ok(CompTab {
+            costs: entries.iter().map(|e| e.0).collect(),
+            args: entries.iter().map(|e| e.1).collect(),
+            bmults,
+        })
     }
-
-    // DP over boundary assignments. boundary[l] exists for l in 0..nlevels-1.
-    let spaces: Vec<Space> = (0..nlevels.saturating_sub(1))
-        .map(|l| Space::new(lv.boundary[l].clone(), &all_cands))
-        .collect();
-    // Position of a tensor within its boundary space (for fast lookups).
-    let mut pos_in_boundary = vec![usize::MAX; nt];
-    for sp in &spaces {
-        for (i, &t) in sp.ids.iter().enumerate() {
-            pos_in_boundary[t] = i;
-        }
-    }
-
-    // g[l][state over boundary[l]] = (cost, best prev state index)
-    let empty = Space::default();
-    let mut dp: Vec<Vec<(u64, usize)>> = Vec::with_capacity(nlevels);
-    for l in 0..nlevels {
-        let prev_space = if l == 0 { &empty } else { &spaces[l - 1] };
-        let cur_space = if l + 1 < nlevels { &spaces[l] } else { &empty };
-        let prev_len = prev_space.len().max(1);
-        let cur_len = cur_space.len().max(1);
-
-        // Decompose each component's table index into contributions from
-        // prev/cur choices: choose(t) = index of t's tile in its candidate
-        // list, read from whichever decoded assignment contains it.
-        let mut cur_dp = vec![(INFEASIBLE, 0usize); cur_len];
-        // Pre-decode candidate index vectors (not tiles) once per state:
-        // the mixed-radix digits ARE the candidate indices.
-        let digits = |space: &Space, mut idx: usize| -> Vec<usize> {
-            space
-                .cands
-                .iter()
-                .map(|c| {
-                    let d = idx % c.len();
-                    idx /= c.len();
-                    d
-                })
-                .collect()
-        };
-        let prev_digit_cache: Vec<Vec<usize>> =
-            (0..prev_len).map(|i| digits(prev_space, i)).collect();
-
-        for cur_idx in 0..cur_len {
-            let cur_digits = digits(cur_space, cur_idx);
-            let mut best = (INFEASIBLE, 0usize);
-            for prev_idx in 0..prev_len {
-                let prev_cost = if l == 0 { 0 } else { dp[l - 1][prev_idx].0 };
-                if prev_cost >= best.0 {
-                    continue;
-                }
-                let prev_digits = &prev_digit_cache[prev_idx];
-                let choose = |t: TensorId| -> usize {
-                    let p = pos_in_boundary[t];
-                    if boundary_level[t] + 1 == l + 0 {
-                        // t in boundary[l-1] -> prev space
-                        prev_digits[p]
-                    } else {
-                        cur_digits[p]
-                    }
-                };
-                let mut cost = prev_cost;
-                for comp in &level_components[l] {
-                    let idx = comp.index_of(&choose);
-                    cost = cost.saturating_add(comp.table[idx].0);
-                    if cost >= best.0 {
-                        break;
-                    }
-                }
-                if cost < best.0 {
-                    best = (cost, prev_idx);
-                }
-            }
-            cur_dp[cur_idx] = best;
-        }
-        dp.push(cur_dp);
-    }
-
-    // Final answer: the last level has an empty "next" boundary.
-    let (final_cost, mut state) = dp[nlevels - 1]
-        .iter()
-        .enumerate()
-        .map(|(i, &(c, p))| (c, i, p))
-        .min()
-        .map(|(c, i, _)| (c, i))
-        .unwrap();
-    assert!(final_cost < INFEASIBLE, "no feasible one-cut tiling exists");
-
-    // Backtrack boundary assignments.
-    let mut boundary_assign: Vec<Vec<Tile>> = vec![Vec::new(); spaces.len()];
-    for l in (0..nlevels).rev() {
-        let prev_state = dp[l][state].1;
-        if l >= 1 {
-            boundary_assign[l - 1] = spaces[l - 1].decode(prev_state);
-        }
-        if l + 1 < nlevels && l < spaces.len() {
-            boundary_assign[l] = spaces[l].decode(state);
-        }
-        state = prev_state;
-    }
-
-    // Assemble final tiles: boundaries from the DP traceback, internals
-    // from the component argmins.
-    let mut tiles = vec![Tile::Rep; nt];
-    for (l, sp) in spaces.iter().enumerate() {
-        for (i, &t) in sp.ids.iter().enumerate() {
-            tiles[t] = boundary_assign[l][i];
-        }
-    }
-    let choose_final = |t: TensorId| -> usize {
-        let l = boundary_level[t];
-        let tile = boundary_assign[l][pos_in_boundary[t]];
-        all_cands[t].iter().position(|&c| c == tile).unwrap()
-    };
-    for comps in &level_components {
-        for comp in comps {
-            let idx = comp.index_of(&choose_final);
-            let (_, best_internal) = comp.table[idx];
-            if !comp.internal.ids.is_empty() {
-                let itiles = comp.internal.decode(best_internal);
-                for (i, &t) in comp.internal.ids.iter().enumerate() {
-                    tiles[t] = itiles[i];
-                }
-            }
-        }
-    }
-
-    // Resolve aliases: updated weights inherit their weight's tiling.
-    for t in 0..nt {
-        tiles[t] = tiles[alias[t]];
-    }
-
-    // Sanity: re-price the assembled tiling; must equal the DP cost.
-    let repriced = price(g, &tiles);
-    debug_assert_eq!(repriced, final_cost, "DP cost mismatch on reconstruction");
-
-    OneCutPlan { tiles, cost: final_cost }
 }
 
-/// Total conversion cost of a complete tiling assignment (Eq. 3).
+/// Overflow-proof state count: `Π radix`, saturating at `u128::MAX` (the
+/// guards that consume this only care that huge is huge).
+fn checked_product<'a>(radix: impl Iterator<Item = &'a usize>) -> u128 {
+    radix
+        .try_fold(1u128, |acc, &r| acc.checked_mul(r as u128))
+        .unwrap_or(u128::MAX)
+}
+
+/// Tabulate `Σ digits[pos]·mult` for every state of a mixed-radix space
+/// (the per-state slice of a component's table index).
+fn space_contrib(len: usize, radix: &[usize], w: &[(usize, usize)]) -> Vec<u32> {
+    let mut out = vec![0u32; len];
+    let mut dig = vec![0usize; radix.len()];
+    for slot in out.iter_mut() {
+        let mut s = 0usize;
+        for &(p, m) in w {
+            s += dig[p] * m;
+        }
+        *slot = s as u32;
+        odometer_inc(&mut dig, radix);
+    }
+    out
+}
+
+/// One-shot one-cut: build a solver and solve. Panics on planner failure
+/// (see [`try_one_cut`] for the error-returning variant).
+pub fn one_cut(g: &Graph) -> OneCutPlan {
+    try_one_cut(g).unwrap_or_else(|e| panic!("one-cut planning failed: {e}"))
+}
+
+/// One-shot one-cut returning structured errors.
+pub fn try_one_cut(g: &Graph) -> Result<OneCutPlan, PlanError> {
+    OneCutSolver::new(g).solve(g)
+}
+
+/// Total conversion cost of a complete tiling assignment (Eq. 3), by
+/// direct Eq. (2) evaluation — deliberately *not* LUT-backed, so it serves
+/// as the independent oracle the tables are checked against.
 pub fn price(g: &Graph, tiles: &[Tile]) -> u64 {
     let mut total = 0u64;
+    let mut ins: Vec<Tile> = Vec::new();
     for op in &g.ops {
-        let ins: Vec<Tile> = op.inputs.iter().map(|&t| tiles[t]).collect();
-        total = total.saturating_add(op_cost(g, op, &ins, tiles[op.outputs[0]]));
+        ins.clear();
+        ins.extend(op.inputs.iter().map(|&t| tiles[t]));
+        total = total.saturating_add(crate::tiling::op_cost(g, op, &ins, tiles[op.outputs[0]]));
     }
     total
 }
@@ -388,6 +602,7 @@ pub fn price(g: &Graph, tiles: &[Tile]) -> u64 {
 mod tests {
     use super::*;
     use crate::graph::{append_backward, GraphBuilder};
+    use crate::planner::apply_cut;
     use crate::tiling::Tile;
 
     fn mlp_train(batch: usize, dims: &[usize]) -> Graph {
@@ -485,5 +700,46 @@ mod tests {
         let g = Graph::default();
         let plan = one_cut(&g);
         assert_eq!(plan.cost, 0);
+    }
+
+    #[test]
+    fn component_size_guard_returns_structured_error() {
+        let g = mlp_train(16, &[8, 8, 8]);
+        let err = OneCutSolver::new(&g).with_state_limit(1).solve(&g).unwrap_err();
+        match err {
+            PlanError::ComponentTooLarge { states, limit, .. } => {
+                assert!(states > limit);
+                assert_eq!(limit, 1);
+            }
+            other => panic!("expected ComponentTooLarge, got {other:?}"),
+        }
+        // The error formats without panicking.
+        assert!(format!("{err}").contains("states"));
+    }
+
+    #[test]
+    fn solver_reuse_matches_fresh_solves_on_halved_graphs() {
+        // The k-cut reuse contract: one solver built from the full graph
+        // prices the shape-halved subproblem identically to a fresh solver.
+        let g = mlp_train(128, &[64, 32, 16]);
+        let solver = OneCutSolver::new(&g);
+        let first = solver.solve(&g).unwrap();
+        assert_eq!(first.cost, one_cut(&g).cost);
+        let halved = apply_cut(&g, &first.tiles);
+        let reused = solver.solve(&halved).unwrap();
+        let fresh = one_cut(&halved);
+        assert_eq!(reused.cost, fresh.cost);
+        assert_eq!(reused.tiles, fresh.tiles);
+    }
+
+    #[test]
+    fn infeasible_graph_reports_error() {
+        // Every dimension odd: no aligned form is realizable anywhere.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[3, 5]);
+        let w = b.weight("w", &[5, 7]);
+        b.matmul("odd", x, w, false, false);
+        let g = b.finish();
+        assert_eq!(try_one_cut(&g).unwrap_err(), PlanError::Infeasible);
     }
 }

@@ -1,0 +1,368 @@
+//! The pre-LUT one-cut implementation, preserved verbatim in spirit.
+//!
+//! This is the straightforward rendering of the paper's DP that shipped
+//! before the cost-table overhaul: Eq. (2) is re-derived through
+//! [`op_cost`] inside the tabulation loops, states are decoded into
+//! per-visit `Vec<Tile>`s, and tensors are resolved by linear scans. It is
+//! kept for two jobs:
+//!
+//! - **equivalence**: the optimized [`super::one_cut`] must return exactly
+//!   the same cost on every workload (asserted by unit, property and
+//!   integration tests — the paper's optimality claim doesn't survive an
+//!   "almost equal" refactor);
+//! - **measurement**: `benches/planner_micro.rs` times this against the
+//!   LUT path and reports the speedup, so the perf trajectory is tracked
+//!   rather than asserted into folklore (DESIGN.md §Perf).
+//!
+//! Nothing else may call into this module — new planner work goes through
+//! [`super::OneCutSolver`].
+
+use std::collections::HashMap;
+
+use crate::graph::{bfs_levels, Graph, TensorId};
+use crate::tiling::aligned::INFEASIBLE;
+use crate::tiling::{candidate_tiles, op_cost, Tile};
+
+use super::onecut::{price, OneCutPlan};
+
+/// An enumerable assignment space over a fixed list of tensors.
+#[derive(Debug, Clone, Default)]
+struct Space {
+    ids: Vec<TensorId>,
+    cands: Vec<Vec<Tile>>,
+}
+
+impl Space {
+    fn new(ids: Vec<TensorId>, all_cands: &[Vec<Tile>]) -> Self {
+        let cands = ids.iter().map(|&t| all_cands[t].clone()).collect();
+        Space { ids, cands }
+    }
+
+    fn len(&self) -> usize {
+        self.cands.iter().map(Vec::len).product()
+    }
+
+    /// Decode a mixed-radix index into per-tensor tiles (same order as ids).
+    fn decode(&self, mut idx: usize) -> Vec<Tile> {
+        let mut out = Vec::with_capacity(self.cands.len());
+        for c in &self.cands {
+            out.push(c[idx % c.len()]);
+            idx /= c.len();
+        }
+        out
+    }
+}
+
+/// One intra-level component with its tabulated cost table.
+struct Component {
+    boundary_ids: Vec<TensorId>,
+    internal: Space,
+    table: Vec<(u64, usize)>,
+    boundary_radix: Vec<usize>,
+}
+
+impl Component {
+    fn index_of(&self, choose: &dyn Fn(TensorId) -> usize) -> usize {
+        let mut idx = 0;
+        let mut mult = 1;
+        for (i, &t) in self.boundary_ids.iter().enumerate() {
+            idx += choose(t) * mult;
+            mult *= self.boundary_radix[i];
+        }
+        idx
+    }
+}
+
+fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+    while parent[x] != x {
+        parent[x] = parent[parent[x]];
+        x = parent[x];
+    }
+    x
+}
+
+/// The pre-optimization one-cut DP. Same result as [`super::one_cut`],
+/// several times slower — see module docs for why it is kept.
+pub fn one_cut_reference(g: &Graph) -> OneCutPlan {
+    let nt = g.tensors.len();
+    let all_cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
+    if g.ops.is_empty() {
+        return OneCutPlan { tiles: vec![Tile::Rep; nt], cost: 0 };
+    }
+    let alias = g.steady_state_aliases();
+
+    let lv = bfs_levels(g);
+    let nlevels = lv.levels.len();
+
+    let mut boundary_level = vec![usize::MAX; nt];
+    for (l, b) in lv.boundary.iter().enumerate() {
+        for &t in b {
+            boundary_level[t] = l;
+        }
+    }
+    let mut internal_level = vec![usize::MAX; nt];
+    for (l, ts) in lv.internal.iter().enumerate() {
+        for &t in ts {
+            internal_level[t] = l;
+        }
+    }
+
+    // Build per-level components and their tables.
+    let mut level_components: Vec<Vec<Component>> = Vec::with_capacity(nlevels);
+    for (l, ops) in lv.levels.iter().enumerate() {
+        let mut parent: Vec<usize> = (0..ops.len()).collect();
+        let mut internal_owner: HashMap<TensorId, usize> = HashMap::new();
+        for (oi, &op) in ops.iter().enumerate() {
+            let o = &g.ops[op];
+            for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                let t = alias[t];
+                if internal_level[t] == l {
+                    match internal_owner.get(&t) {
+                        None => {
+                            internal_owner.insert(t, oi);
+                        }
+                        Some(&prev) => {
+                            let (a, b) = (find(&mut parent, prev), find(&mut parent, oi));
+                            if a != b {
+                                parent[a] = b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (oi, &op) in ops.iter().enumerate() {
+            groups.entry(find(&mut parent, oi)).or_default().push(op);
+        }
+
+        let mut comps = Vec::new();
+        let mut group_keys: Vec<usize> = groups.keys().copied().collect();
+        group_keys.sort_unstable();
+        for key in group_keys {
+            let comp_ops = groups[&key].clone();
+            let mut bids: Vec<TensorId> = Vec::new();
+            let mut iids: Vec<TensorId> = Vec::new();
+            for &op in &comp_ops {
+                let o = &g.ops[op];
+                for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                    let t = alias[t];
+                    if internal_level[t] == l {
+                        if !iids.contains(&t) {
+                            iids.push(t);
+                        }
+                    } else if !bids.contains(&t) {
+                        bids.push(t);
+                    }
+                }
+            }
+            bids.sort_unstable();
+            iids.sort_unstable();
+            let internal = Space::new(iids, &all_cands);
+            let boundary_radix: Vec<usize> = bids.iter().map(|&t| all_cands[t].len()).collect();
+            let table_len: usize = boundary_radix.iter().product::<usize>().max(1);
+            assert!(
+                table_len.saturating_mul(internal.len().max(1)) < 50_000_000,
+                "level {l} component too large for exhaustive tabulation"
+            );
+
+            let mut table = vec![(INFEASIBLE, 0usize); table_len];
+            let bspace = Space::new(bids.clone(), &all_cands);
+            for (bidx, entry) in table.iter_mut().enumerate() {
+                let btiles = bspace.decode(bidx);
+                let mut best = (INFEASIBLE, 0usize);
+                for iidx in 0..internal.len().max(1) {
+                    let itiles = if internal.ids.is_empty() {
+                        Vec::new()
+                    } else {
+                        internal.decode(iidx)
+                    };
+                    let lookup = |t: TensorId| -> Tile {
+                        let t = alias[t];
+                        if let Some(p) = bids.iter().position(|&x| x == t) {
+                            btiles[p]
+                        } else if let Some(p) = internal.ids.iter().position(|&x| x == t) {
+                            itiles[p]
+                        } else {
+                            unreachable!("tensor {t} not in component scope")
+                        }
+                    };
+                    let mut cost = 0u64;
+                    for &op in &comp_ops {
+                        let o = &g.ops[op];
+                        let ins: Vec<Tile> = o.inputs.iter().map(|&t| lookup(t)).collect();
+                        let out = lookup(o.outputs[0]);
+                        cost = cost.saturating_add(op_cost(g, o, &ins, out));
+                        if cost >= best.0 {
+                            break;
+                        }
+                    }
+                    if cost < best.0 {
+                        best = (cost, iidx);
+                    }
+                }
+                *entry = best;
+            }
+            comps.push(Component { boundary_ids: bids, internal, table, boundary_radix });
+        }
+        level_components.push(comps);
+    }
+
+    // DP over boundary assignments. boundary[l] exists for l in 0..nlevels-1.
+    let spaces: Vec<Space> = (0..nlevels.saturating_sub(1))
+        .map(|l| Space::new(lv.boundary[l].clone(), &all_cands))
+        .collect();
+    let mut pos_in_boundary = vec![usize::MAX; nt];
+    for sp in &spaces {
+        for (i, &t) in sp.ids.iter().enumerate() {
+            pos_in_boundary[t] = i;
+        }
+    }
+
+    let empty = Space::default();
+    let mut dp: Vec<Vec<(u64, usize)>> = Vec::with_capacity(nlevels);
+    for l in 0..nlevels {
+        let prev_space = if l == 0 { &empty } else { &spaces[l - 1] };
+        let cur_space = if l + 1 < nlevels { &spaces[l] } else { &empty };
+        let prev_len = prev_space.len().max(1);
+        let cur_len = cur_space.len().max(1);
+
+        let mut cur_dp = vec![(INFEASIBLE, 0usize); cur_len];
+        let digits = |space: &Space, mut idx: usize| -> Vec<usize> {
+            space
+                .cands
+                .iter()
+                .map(|c| {
+                    let d = idx % c.len();
+                    idx /= c.len();
+                    d
+                })
+                .collect()
+        };
+        let prev_digit_cache: Vec<Vec<usize>> =
+            (0..prev_len).map(|i| digits(prev_space, i)).collect();
+
+        for (cur_idx, slot) in cur_dp.iter_mut().enumerate() {
+            let cur_digits = digits(cur_space, cur_idx);
+            let mut best = (INFEASIBLE, 0usize);
+            for prev_idx in 0..prev_len {
+                let prev_cost = if l == 0 { 0 } else { dp[l - 1][prev_idx].0 };
+                if prev_cost >= best.0 {
+                    continue;
+                }
+                let prev_digits = &prev_digit_cache[prev_idx];
+                let choose = |t: TensorId| -> usize {
+                    let p = pos_in_boundary[t];
+                    if l > 0 && boundary_level[t] == l - 1 {
+                        prev_digits[p]
+                    } else {
+                        cur_digits[p]
+                    }
+                };
+                let mut cost = prev_cost;
+                for comp in &level_components[l] {
+                    let idx = comp.index_of(&choose);
+                    cost = cost.saturating_add(comp.table[idx].0);
+                    if cost >= best.0 {
+                        break;
+                    }
+                }
+                if cost < best.0 {
+                    best = (cost, prev_idx);
+                }
+            }
+            *slot = best;
+        }
+        dp.push(cur_dp);
+    }
+
+    let (final_cost, mut state) = dp[nlevels - 1]
+        .iter()
+        .enumerate()
+        .map(|(i, &(c, p))| (c, i, p))
+        .min()
+        .map(|(c, i, _)| (c, i))
+        .unwrap();
+    assert!(final_cost < INFEASIBLE, "no feasible one-cut tiling exists");
+
+    let mut boundary_assign: Vec<Vec<Tile>> = vec![Vec::new(); spaces.len()];
+    for l in (0..nlevels).rev() {
+        let prev_state = dp[l][state].1;
+        if l >= 1 {
+            boundary_assign[l - 1] = spaces[l - 1].decode(prev_state);
+        }
+        if l + 1 < nlevels && l < spaces.len() {
+            boundary_assign[l] = spaces[l].decode(state);
+        }
+        state = prev_state;
+    }
+
+    let mut tiles = vec![Tile::Rep; nt];
+    for (l, sp) in spaces.iter().enumerate() {
+        for (i, &t) in sp.ids.iter().enumerate() {
+            tiles[t] = boundary_assign[l][i];
+        }
+    }
+    let choose_final = |t: TensorId| -> usize {
+        let l = boundary_level[t];
+        let tile = boundary_assign[l][pos_in_boundary[t]];
+        all_cands[t].iter().position(|&c| c == tile).unwrap()
+    };
+    for comps in &level_components {
+        for comp in comps {
+            let idx = comp.index_of(&choose_final);
+            let (_, best_internal) = comp.table[idx];
+            if !comp.internal.ids.is_empty() {
+                let itiles = comp.internal.decode(best_internal);
+                for (i, &t) in comp.internal.ids.iter().enumerate() {
+                    tiles[t] = itiles[i];
+                }
+            }
+        }
+    }
+
+    for t in 0..nt {
+        tiles[t] = tiles[alias[t]];
+    }
+
+    let repriced = price(g, &tiles);
+    debug_assert_eq!(repriced, final_cost, "reference DP cost mismatch on reconstruction");
+
+    OneCutPlan { tiles, cost: final_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+    use crate::planner::one_cut;
+
+    fn mlp_train(batch: usize, dims: &[usize]) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        for l in 0..dims.len() - 1 {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn reference_and_lut_agree_bit_for_bit() {
+        for (batch, dims) in [
+            (64usize, vec![32usize, 48, 16]),
+            (512, vec![256, 256, 256]),
+            (8, vec![1024, 1024]),
+            (400, vec![300; 6]),
+        ] {
+            let g = mlp_train(batch, &dims);
+            let a = one_cut_reference(&g);
+            let b = one_cut(&g);
+            assert_eq!(a.cost, b.cost, "cost diverged for {batch} {dims:?}");
+            assert_eq!(a.tiles, b.tiles, "tiles diverged for {batch} {dims:?}");
+        }
+    }
+}

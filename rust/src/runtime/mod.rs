@@ -10,14 +10,26 @@
 //! - [`engine`] — the BSP virtual-device executor realizing a tiling plan
 //!   with real buffers and metered transfers.
 
+// Host tensors are std-only and used by the simulator-side coordinator;
+// everything touching the PJRT FFI (and its `xla`/`anyhow` dependencies)
+// is gated behind the `pjrt` cargo feature so the default build stays
+// dependency-free in the offline image.
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod dynamic;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use artifacts::ArtifactRegistry;
+#[cfg(feature = "pjrt")]
 pub use client::{Client, Executable};
+#[cfg(feature = "pjrt")]
 pub use dynamic::{KernelCache, KernelKind, KernelSig};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Metrics};
 pub use tensor::HostTensor;

@@ -126,14 +126,20 @@ pub fn simulate_forced(
 
     // Communication: per cut j, 2^j group pairs each move the per-op
     // conversion bytes of the j-times-halved graph across tier j.
+    // Scratch vectors are hoisted out of the metering loops — the figure
+    // benches sweep this over many (model, k, strategy) points.
     let mut tier_bytes = vec![0u64; k];
     let mut tier_ops = vec![0u64; k];
     let mut cur = g.clone();
+    let mut cut: Vec<Tile> = Vec::with_capacity(g.tensors.len());
+    let mut ins: Vec<Tile> = Vec::new();
     for j in 0..k {
-        let cut: Vec<Tile> = plan.tiles.iter().map(|s| s[j]).collect();
+        cut.clear();
+        cut.extend(plan.tiles.iter().map(|s| s[j]));
         let pairs = 1u64 << j;
         for op in &cur.ops {
-            let ins: Vec<Tile> = op.inputs.iter().map(|&t| cut[t]).collect();
+            ins.clear();
+            ins.extend(op.inputs.iter().map(|&t| cut[t]));
             let out = cut[op.outputs[0]];
             let c = match forced(&cur, op) {
                 Some(f) => op_cost_with_form(&cur, op, &ins, out, f)

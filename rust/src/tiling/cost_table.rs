@@ -1,0 +1,225 @@
+//! Precomputed per-op cost lookup tables — the planner's hot-path fuel.
+//!
+//! Eq. (2) is a pure function of `(op, input tiles, output tile)`, and a
+//! tensor has at most `rank + 1` candidate tiles ([`candidate_tiles`]), so
+//! the full cost surface of one operator fits in a tiny dense table: a
+//! matmul over matrices is 3×3×3 = 27 entries, a 4-D grid op at most
+//! 3⁴ = 81. [`CostTables::build_with`] evaluates every combination once
+//! per graph; after that the one-cut DP's component tabulation and level
+//! sweep ([`crate::planner`]) are pure table-lookup + add — no aligned-form
+//! re-derivation, no per-visit allocation.
+//!
+//! Indexing is mixed-radix over *candidate indices*: operand `i` (inputs in
+//! op order, then the first output) contributes `digit_i · mults[i]`, where
+//! `digit_i` is the position of the chosen tile in the operand's candidate
+//! list. Operands are steady-state alias representatives
+//! ([`Graph::steady_state_aliases`]), matching the variables the planner
+//! actually enumerates; an aliased tensor (e.g. an updated weight) shares
+//! its representative's digit.
+
+use crate::graph::{Graph, TensorId};
+use crate::util::radix::{mults_of, odometer_inc};
+
+use super::aligned::op_cost;
+use super::scheme::{candidate_tiles, Tile};
+
+/// The dense Eq. (2) table of one operator.
+#[derive(Debug, Clone)]
+pub struct OpCostTable {
+    /// Operand tensors as alias representatives: the op's inputs in order,
+    /// then its first output.
+    pub operands: Vec<TensorId>,
+    /// Mixed-radix multiplier per operand; the radix of operand `i` is its
+    /// representative's candidate count.
+    pub mults: Vec<usize>,
+    /// `costs[Σ digit_i · mults[i]]` — `INFEASIBLE` where no aligned form
+    /// is realizable.
+    pub costs: Vec<u64>,
+}
+
+impl OpCostTable {
+    /// Table index for a digit assignment supplied per tensor. A tensor
+    /// appearing as several operands (e.g. the weight of an `SgdUpdate`,
+    /// which is both input and aliased output) must receive the same digit
+    /// each time — exactly what a per-tensor assignment guarantees.
+    pub fn index_by(&self, digit_of: impl Fn(TensorId) -> usize) -> usize {
+        let mut idx = 0;
+        for (i, &t) in self.operands.iter().enumerate() {
+            idx += digit_of(t) * self.mults[i];
+        }
+        idx
+    }
+}
+
+/// All per-op cost tables of one graph, plus the candidate lists and alias
+/// map they are indexed under.
+#[derive(Debug, Clone)]
+pub struct CostTables {
+    /// Steady-state alias map the tables were built under.
+    pub alias: Vec<TensorId>,
+    /// Candidate tiles per tensor id (authoritative for representatives).
+    pub cands: Vec<Vec<Tile>>,
+    /// One table per op, indexed by `OpId`.
+    pub ops: Vec<OpCostTable>,
+}
+
+impl CostTables {
+    /// Build the tables for `g` under its own steady-state alias map.
+    pub fn build(g: &Graph) -> Self {
+        Self::build_with(g, &g.steady_state_aliases())
+    }
+
+    /// Build the tables for `g` under a caller-supplied alias map. The
+    /// k-cut recursion reuses one alias map (topology never changes across
+    /// cuts) while rebuilding the numeric tables for each halved graph.
+    pub fn build_with(g: &Graph, alias: &[TensorId]) -> Self {
+        let cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
+        let mut ops = Vec::with_capacity(g.ops.len());
+        let mut ins: Vec<Tile> = Vec::new();
+        let mut digits: Vec<usize> = Vec::new();
+        for op in &g.ops {
+            let mut operands: Vec<TensorId> = op.inputs.iter().map(|&t| alias[t]).collect();
+            operands.push(alias[op.outputs[0]]);
+            let radix: Vec<usize> = operands.iter().map(|&t| cands[t].len()).collect();
+            let (mults, total) = mults_of(&radix);
+
+            // Enumerate every combination with a mixed-radix odometer.
+            let mut costs = vec![0u64; total];
+            digits.clear();
+            digits.resize(operands.len(), 0);
+            ins.clear();
+            ins.resize(op.inputs.len(), Tile::Rep);
+            for entry in costs.iter_mut() {
+                for (i, &t) in operands.iter().enumerate() {
+                    let tile = cands[t][digits[i]];
+                    if i < op.inputs.len() {
+                        ins[i] = tile;
+                    }
+                }
+                let out = cands[operands[op.inputs.len()]][digits[op.inputs.len()]];
+                *entry = op_cost(g, op, &ins, out);
+                odometer_inc(&mut digits, &radix);
+            }
+            ops.push(OpCostTable { operands, mults, costs });
+        }
+        CostTables { alias: alias.to_vec(), cands, ops }
+    }
+
+    /// Total plan cost read through the tables — the LUT twin of
+    /// [`crate::planner::price`], used to cross-check table contents
+    /// against direct Eq. (2) evaluation. `tiles` must be alias-resolved
+    /// (every tensor carries its representative's tile).
+    pub fn price(&self, tiles: &[Tile]) -> u64 {
+        let mut total = 0u64;
+        for t in &self.ops {
+            let idx = t.index_by(|tid| {
+                self.cands[tid]
+                    .iter()
+                    .position(|&c| c == tiles[tid])
+                    .expect("tile outside the candidate set")
+            });
+            total = total.saturating_add(t.costs[idx]);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{append_backward, GraphBuilder};
+    use crate::tiling::aligned::INFEASIBLE;
+    use crate::util::Rng;
+
+    const R: Tile = Tile::Split(0);
+    const C: Tile = Tile::Split(1);
+
+    fn train_graph(batch: usize, dims: &[usize]) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut h = b.input("x", &[batch, dims[0]]);
+        let y = b.label("y", &[batch, *dims.last().unwrap()]);
+        for l in 0..dims.len() - 1 {
+            let w = b.weight(&format!("w{l}"), &[dims[l], dims[l + 1]]);
+            h = b.matmul(&format!("fc{l}"), h, w, false, false);
+        }
+        let loss = b.softmax_xent("loss", h, y);
+        append_backward(&mut b, loss);
+        b.finish()
+    }
+
+    #[test]
+    fn table_entries_equal_direct_op_cost() {
+        let g = train_graph(64, &[32, 48, 16]);
+        let tables = CostTables::build(&g);
+        // Spot-check every entry of every table against a fresh Eq. (2)
+        // evaluation via explicit digit decoding.
+        for (op, t) in g.ops.iter().zip(&tables.ops) {
+            let total = t.costs.len();
+            for idx in 0..total {
+                let mut rem = idx;
+                let tiles: Vec<Tile> = t
+                    .operands
+                    .iter()
+                    .map(|&tid| {
+                        let r = tables.cands[tid].len();
+                        let tile = tables.cands[tid][rem % r];
+                        rem /= r;
+                        tile
+                    })
+                    .collect();
+                let ins = &tiles[..op.inputs.len()];
+                let out = tiles[op.inputs.len()];
+                assert_eq!(t.costs[idx], op_cost(&g, op, ins, out), "op {} idx {idx}", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_table_matches_known_corners() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[400, 300]);
+        let w = b.weight("w", &[300, 300]);
+        b.matmul("fc", x, w, false, false);
+        let g = b.finish();
+        let tables = CostTables::build(&g);
+        let t = &tables.ops[0];
+        let digit = |tid: usize, tile: Tile| {
+            tables.cands[tid].iter().position(|&c| c == tile).unwrap()
+        };
+        let idx = |ix: Tile, iw: Tile, iz: Tile| {
+            digit(0, ix) * t.mults[0] + digit(1, iw) * t.mults[1] + digit(2, iz) * t.mults[2]
+        };
+        // Data-parallel forward is free; model-parallel pays the output.
+        assert_eq!(t.costs[idx(R, Tile::Rep, R)], 0);
+        assert_eq!(t.costs[idx(C, R, C)], 400 * 300 * 4);
+    }
+
+    #[test]
+    fn infeasible_combinations_are_marked() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[3, 5]);
+        let w = b.weight("w", &[5, 7]);
+        b.matmul("odd", x, w, false, false);
+        let g = b.finish();
+        let tables = CostTables::build(&g);
+        // Every dimension odd: only replication is a candidate and no
+        // aligned form fits — the single entry is INFEASIBLE.
+        assert_eq!(tables.ops[0].costs, vec![INFEASIBLE]);
+    }
+
+    #[test]
+    fn lut_price_matches_direct_price_on_random_assignments() {
+        let g = train_graph(16, &[8, 4, 6]);
+        let tables = CostTables::build(&g);
+        let alias = g.steady_state_aliases();
+        let mut rng = Rng::new(99);
+        for _ in 0..300 {
+            let mut tiles: Vec<Tile> =
+                g.tensors.iter().map(|t| *rng.choose(&tables.cands[t.id])).collect();
+            for t in 0..tiles.len() {
+                tiles[t] = tiles[alias[t]];
+            }
+            assert_eq!(tables.price(&tiles), crate::planner::price(&g, &tiles));
+        }
+    }
+}

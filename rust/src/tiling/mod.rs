@@ -13,13 +13,17 @@
 //! its output is pushed from the produced tiling to the tiling the graph
 //! assigns it. [`conversion`] prices single conversions via the ghost-area
 //! rule; [`aligned`] enumerates the aligned forms per operator class and
-//! implements Eq. (2).
+//! implements Eq. (2); [`cost_table`] precomputes every op's Eq. (2)
+//! surface into dense lookup tables so the planner's inner loops never
+//! re-derive aligned forms.
 
 pub mod aligned;
 pub mod conversion;
+pub mod cost_table;
 pub mod paper_example;
 mod scheme;
 
 pub use aligned::{form_requirements, op_cost, op_cost_detailed, op_cost_with_form, Form, OpCostBreakdown};
 pub use conversion::{conversion_cost, Produced};
+pub use cost_table::{CostTables, OpCostTable};
 pub use scheme::{candidate_tiles, describe_seq, shard_shape, Tile, TileSeq};

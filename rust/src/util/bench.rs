@@ -3,8 +3,12 @@
 //!
 //! [`time_it`] warms up, then runs enough iterations to exceed a minimum
 //! measurement window and reports mean/min wall-clock per iteration.
+//! [`BenchLog`] collects the printed rows and additionally emits them as a
+//! machine-readable JSON file (e.g. `BENCH_planner.json`) so the perf
+//! trajectory can be tracked across PRs by tooling instead of eyeballs.
 
-use std::time::{Duration, Instant};
+use std::io::Write as _;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 /// Result of one measured benchmark.
 #[derive(Debug, Clone, Copy)]
@@ -52,6 +56,86 @@ pub fn report_row(label: &str, columns: &[(&str, String)]) {
     println!("{label:<40} {}", cols.join("  "));
 }
 
+/// Collects bench rows for both console output and JSON export.
+#[derive(Debug, Clone)]
+pub struct BenchLog {
+    /// Bench target name, recorded in the JSON header.
+    pub bench: String,
+    rows: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl BenchLog {
+    pub fn new(bench: &str) -> Self {
+        BenchLog { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Print one row (same formatting as [`report_row`]) and record it.
+    pub fn row(&mut self, label: &str, columns: &[(&str, String)]) {
+        report_row(label, columns);
+        self.rows.push((
+            label.to_string(),
+            columns.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        ));
+    }
+
+    /// Serialize the collected rows as a JSON document. Values that parse
+    /// as finite numbers are emitted as JSON numbers, everything else as
+    /// strings — consumers get `{"label": ..., "ms": 12.3}` rows they can
+    /// diff across commits.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": {},\n", json_str(&self.bench)));
+        let unix = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        s.push_str(&format!("  \"generated_unix\": {unix},\n"));
+        s.push_str("  \"rows\": [\n");
+        for (i, (label, cols)) in self.rows.iter().enumerate() {
+            s.push_str(&format!("    {{\"label\": {}", json_str(label)));
+            for (k, v) in cols {
+                // Re-format parsed numbers so the output is valid JSON even
+                // for inputs Rust parses but JSON doesn't (`+5`, `.5`).
+                let val = match v.parse::<f64>() {
+                    Ok(n) if n.is_finite() => n.to_string(),
+                    _ => json_str(v),
+                };
+                s.push_str(&format!(", {}: {}", json_str(k), val));
+            }
+            s.push_str(if i + 1 < self.rows.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
+/// Minimal JSON string escaping (labels and column keys are ASCII-ish, but
+/// stay correct regardless).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +147,20 @@ mod tests {
         });
         assert!(m.iters >= 3);
         assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn bench_log_json_roundtrips() {
+        let mut log = BenchLog::new("planner_micro");
+        log.row("one_cut/vgg16", &[("ms", "12.5".to_string()), ("note", "a \"b\"".to_string())]);
+        log.row("k_cut3/vgg16", &[("ms", "99".to_string())]);
+        let parsed = crate::util::json::parse(&log.to_json()).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("planner_micro"));
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("label").unwrap().as_str(), Some("one_cut/vgg16"));
+        // Numeric column became a JSON number, text stayed a string.
+        assert_eq!(rows[0].get("ms").unwrap(), &crate::util::json::Json::Num(12.5));
+        assert_eq!(rows[0].get("note").unwrap().as_str(), Some("a \"b\""));
     }
 }

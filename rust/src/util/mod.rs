@@ -8,6 +8,8 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
+pub mod radix;
 pub mod rng;
 
 pub use rng::Rng;

@@ -1,0 +1,111 @@
+//! Minimal std-thread fork-join helper (rayon is not in the offline vendor
+//! set).
+//!
+//! [`par_map_with`] maps a pure function over an index range with one
+//! worker per core, giving every worker its own scratch value so hot-loop
+//! allocations can be hoisted. Results are **bit-identical** regardless of
+//! thread count: each index is computed independently and chunks are
+//! concatenated in index order, so parallelism never changes what the
+//! planner returns (the DP's tie-breaking happens *inside* one index's
+//! computation, never across indices).
+
+use std::num::NonZeroUsize;
+
+/// Number of worker threads fork-join helpers use.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Map `f` over `0..n` into a `Vec`, in parallel when `parallel` is set
+/// and more than one core is available.
+///
+/// Each worker calls `init` once and reuses the scratch across its whole
+/// contiguous chunk; within a chunk, indices are visited in ascending
+/// order, so incremental scratch state (e.g. a mixed-radix odometer) sees
+/// the same index sequence a serial sweep would. Workers return their
+/// chunk as a `Vec`, concatenated in chunk order — no per-slot `Option`
+/// overhead on multi-million-entry sweeps. `f` must depend only on its
+/// index (plus read-only captures) for the output to be deterministic.
+pub fn par_map_with<S, T, I, F>(n: usize, parallel: bool, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let threads = if parallel { num_threads().min(n) } else { 1 };
+    if threads <= 1 {
+        let mut scratch = init();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
+    }
+    let chunk = (n + threads - 1) / threads;
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        // Spawn everything first, then drain in chunk order.
+        let handles: Vec<_> = (0..threads)
+            .filter_map(|ci| {
+                let start = ci * chunk;
+                if start >= n {
+                    return None;
+                }
+                let end = (start + chunk).min(n);
+                let (init, f) = (&init, &f);
+                Some(scope.spawn(move || {
+                    let mut scratch = init();
+                    (start..end).map(|i| f(&mut scratch, i)).collect::<Vec<T>>()
+                }))
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let serial: Vec<u64> = (0..1000).map(|i| (i as u64) * 3 + 1).collect();
+        let par = par_map_with(1000, true, || (), |_, i| (i as u64) * 3 + 1);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn empty_and_tiny_ranges() {
+        assert_eq!(par_map_with(0, true, || (), |_, i| i), Vec::<usize>::new());
+        assert_eq!(par_map_with(1, true, || (), |_, i| i), vec![0]);
+    }
+
+    #[test]
+    fn scratch_sees_ascending_indices_within_chunk() {
+        // Each worker's scratch records the last index it saw; indices must
+        // strictly increase within a chunk.
+        let ok = par_map_with(
+            4096,
+            true,
+            || None::<usize>,
+            |last, i| {
+                let fine = last.map_or(true, |l| i == l + 1);
+                *last = Some(i);
+                fine
+            },
+        );
+        assert!(ok.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sequential_path_used_when_parallel_off() {
+        let out = par_map_with(100, false, || 0usize, |count, i| {
+            *count += 1;
+            (*count - 1, i)
+        });
+        // One worker saw every index in order.
+        for (j, &(seen, i)) in out.iter().enumerate() {
+            assert_eq!(seen, j);
+            assert_eq!(i, j);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Mixed-radix digit arithmetic shared by the cost LUTs and the planner.
+//!
+//! A state index `idx` over digits `d_i` with radices `r_i` uses the
+//! little-endian convention `idx = Σ d_i · Π_{j<i} r_j` everywhere —
+//! [`decode_digits`] and [`odometer_inc`] visit assignments in the same
+//! order, so incremental enumeration and direct decoding are
+//! interchangeable (the planner's parallel chunks rely on this).
+
+/// Decode `idx` into per-slot digits (little-endian: slot 0 is least
+/// significant).
+pub fn decode_digits(mut idx: usize, radix: &[usize], out: &mut [usize]) {
+    for (d, &r) in out.iter_mut().zip(radix) {
+        *d = idx % r;
+        idx /= r;
+    }
+}
+
+/// Advance `digits` to the next assignment (wraps to all-zero after the
+/// last one) — the O(1)-amortized twin of [`decode_digits`].
+pub fn odometer_inc(digits: &mut [usize], radix: &[usize]) {
+    for (d, &r) in digits.iter_mut().zip(radix) {
+        *d += 1;
+        if *d < r {
+            return;
+        }
+        *d = 0;
+    }
+}
+
+/// Per-slot multipliers and the total state count for `radix`.
+pub fn mults_of(radix: &[usize]) -> (Vec<usize>, usize) {
+    let mut mults = vec![0usize; radix.len()];
+    let mut total = 1usize;
+    for (m, &r) in mults.iter_mut().zip(radix) {
+        *m = total;
+        total *= r;
+    }
+    (mults, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odometer_matches_decode() {
+        let radix = [3usize, 1, 2, 4];
+        let (_, total) = mults_of(&radix);
+        assert_eq!(total, 24);
+        let mut dig = vec![0usize; radix.len()];
+        let mut expect = vec![0usize; radix.len()];
+        for idx in 0..total {
+            decode_digits(idx, &radix, &mut expect);
+            assert_eq!(dig, expect, "at idx {idx}");
+            odometer_inc(&mut dig, &radix);
+        }
+        // Wraps back to zero.
+        assert_eq!(dig, vec![0; radix.len()]);
+    }
+
+    #[test]
+    fn mults_are_prefix_products() {
+        let (m, total) = mults_of(&[3, 3, 3]);
+        assert_eq!(m, vec![1, 3, 9]);
+        assert_eq!(total, 27);
+        let (m, total) = mults_of(&[]);
+        assert!(m.is_empty());
+        assert_eq!(total, 1);
+    }
+}
