@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Perf-trajectory diff for the BENCH_*.json files the micro-benches emit.
+
+Usage: diff_bench.py <baseline.json> <current.json> [--threshold 1.30]
+
+Compares every numeric timing column (``ms``, ``ref_ms``) per row label and
+emits a GitHub Actions ``::warning::`` annotation when the current value
+exceeds baseline * threshold (default +30%). Always exits 0: shared CI
+runners time noisily, so the gate warns instead of failing — the committed
+baseline plus the uploaded artifact keep the trajectory reviewable.
+
+Refreshing the baseline: download ``bench-json`` from a representative
+green run and copy the files into ci/baselines/ (see ci/baselines/README.md).
+"""
+import json
+import sys
+
+TIMING_KEYS = ("ms", "ref_ms")
+
+
+def rows_by_label(doc):
+    return {r.get("label"): r for r in doc.get("rows", []) if isinstance(r, dict)}
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    threshold = 1.30
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::notice::no usable baseline at {baseline_path} ({e}); recording only")
+        return 0
+    with open(current_path) as f:
+        current = json.load(f)
+
+    base_rows = rows_by_label(baseline)
+    cur_rows = rows_by_label(current)
+    if not base_rows:
+        print(
+            f"::notice::baseline {baseline_path} has no rows yet — seed it from a green "
+            "run's bench-json artifact (ci/baselines/README.md)"
+        )
+        return 0
+
+    regressions = 0
+    for label, cur in sorted(cur_rows.items()):
+        base = base_rows.get(label)
+        if base is None:
+            print(f"  {label}: new row (no baseline)")
+            continue
+        for key in TIMING_KEYS:
+            b, c = base.get(key), cur.get(key)
+            if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) or b <= 0:
+                continue
+            ratio = c / b
+            status = "ok"
+            if ratio > threshold:
+                regressions += 1
+                status = "REGRESSION"
+                print(
+                    f"::warning title=plan-time regression::{label} {key}: "
+                    f"{b:.2f} -> {c:.2f} ms ({ratio:.2f}x, threshold {threshold:.2f}x)"
+                )
+            print(f"  {label} {key}: {b:.2f} -> {c:.2f} ms ({ratio:.2f}x) {status}")
+
+    missing = sorted(set(base_rows) - set(cur_rows))
+    for label in missing:
+        print(f"::warning title=missing bench row::{label} present in baseline but not in run")
+    print(f"diff_bench: {len(cur_rows)} rows, {regressions} over-threshold (warn-only gate)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -10,7 +10,7 @@
 //! Run with: `cargo run --release --example plan_inspector`
 
 use soybean::exec::Placement;
-use soybean::models::{alexnet, mlp, MlpConfig};
+use soybean::models::{alexnet, mlp, transformer, MlpConfig, TransformerConfig};
 use soybean::planner::{classify, Planner, Strategy};
 use soybean::tiling::describe_seq;
 
@@ -46,4 +46,19 @@ fn main() {
     println!("\nReading: conv filters replicated (data parallelism) while the\n\
               FC weights split (model parallelism) — the mixed strategy of\n\
               Krizhevsky's 'one weird trick', discovered automatically.");
+
+    // 3. The post-paper workload: a GPT-2-style encoder stack.
+    let g = transformer(&TransformerConfig::micro());
+    let plan = Planner::plan(&g, 3, Strategy::Soybean);
+    println!("\n=== transformer encoder (4 layers, 4 heads, d_model 256), 8 devices ===");
+    println!("classification: {}", classify(&g, &plan.tiles));
+    println!(
+        "total comm: {:.1} MB (DP baseline: {:.1} MB)",
+        plan.total_cost() as f64 / 1e6,
+        soybean::planner::baselines::data_parallel(&g, 3).total_cost() as f64 / 1e6
+    );
+    for name in ["l0.wqkv", "l0.wo", "l0.ff1.w", "l0.slice_q.out", "l0.scores.out"] {
+        let t = g.tensors.iter().find(|t| t.name == name).unwrap();
+        println!("  {:<16} {:<18} {}", t.name, format!("{:?}", t.shape), describe_seq(&plan.tiles[t.id]));
+    }
 }

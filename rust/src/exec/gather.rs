@@ -73,7 +73,12 @@ pub fn gather_sources(
                     (0..devices)
                         .filter(|&d| residents[d].contains(&cell))
                         .min_by_key(|&d| (d ^ me).count_ones())
-                        .unwrap_or_else(|| panic!("cell {cell:?} owned by nobody (shape {shape:?} seq {seq:?} devices {devices} me {me} target {target:?})"))
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "cell {cell:?} owned by nobody (shape {shape:?} seq {seq:?} \
+                                 devices {devices} me {me} target {target:?})"
+                            )
+                        })
                 };
                 pieces.push(SourcePiece { src, region: cell });
             }

@@ -20,4 +20,4 @@ mod shard;
 pub use gather::{gather_sources, remote_bytes, SourcePiece};
 pub use placement::{cut_of_pair, group_peers, Placement};
 pub use region::{cut_bit, resident_region, Region};
-pub use shard::{build_shard_tasks, ShardTask};
+pub use shard::{build_shard_tasks, try_build_shard_tasks, ShardTask};

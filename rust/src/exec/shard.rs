@@ -17,7 +17,7 @@
 //! cost (documented in DESIGN.md).
 
 use crate::graph::{Graph, OpId};
-use crate::planner::Plan;
+use crate::planner::{Plan, PlanError};
 use crate::tiling::{form_requirements, op_cost_detailed, Produced, Tile, TileSeq};
 
 /// The realized schedule of one operator under a plan.
@@ -38,8 +38,17 @@ pub struct ShardTask {
 /// Build the shard schedule for every op in `g` under `plan`.
 ///
 /// Panics if the plan admits no feasible form at some cut (the planner
-/// never produces such plans; hand-written ones might).
+/// never produces such plans; hand-written ones might) — see
+/// [`try_build_shard_tasks`] for the error-returning variant.
 pub fn build_shard_tasks(g: &Graph, plan: &Plan) -> Vec<ShardTask> {
+    try_build_shard_tasks(g, plan).unwrap_or_else(|e| panic!("shard schedule failed: {e}"))
+}
+
+/// Like [`build_shard_tasks`] but returning the structured
+/// [`PlanError::NoFeasibleForm`] when a plan admits no aligned form for
+/// some op at some cut, so embedding callers (services, sweeps over
+/// hand-written plans) can degrade gracefully instead of unwinding.
+pub fn try_build_shard_tasks(g: &Graph, plan: &Plan) -> Result<Vec<ShardTask>, PlanError> {
     let k = plan.k;
     g.ops
         .iter()
@@ -55,9 +64,8 @@ pub fn build_shard_tasks(g: &Graph, plan: &Plan) -> Vec<ShardTask> {
             for i in 0..k {
                 let ins: Vec<Tile> = op.inputs.iter().map(|&t| plan.tiles[t][i]).collect();
                 let out = plan.tiles[op.outputs[0]][i];
-                let bd = op_cost_detailed(&local, op, &ins, out).unwrap_or_else(|| {
-                    panic!("no feasible aligned form for op {} at cut {i}", op.name)
-                });
+                let bd = op_cost_detailed(&local, op, &ins, out)
+                    .ok_or_else(|| PlanError::NoFeasibleForm { op: op.name.clone(), cut: i })?;
                 let (reqs, prod) = form_requirements(&local, op, bd.form);
                 // Stack requirements + halve the local shapes accordingly.
                 for (slot, r) in reqs.into_iter().enumerate() {
@@ -79,7 +87,7 @@ pub fn build_shard_tasks(g: &Graph, plan: &Plan) -> Vec<ShardTask> {
                     }
                 }
             }
-            ShardTask { op: op.id, required_ins, produced, reduce_cuts }
+            Ok(ShardTask { op: op.id, required_ins, produced, reduce_cuts })
         })
         .collect()
 }
@@ -166,6 +174,43 @@ mod tests {
         ] {
             let plan = Planner::plan(&g, k, strat);
             let tasks = build_shard_tasks(&g, &plan);
+            assert_realizable(&g, &tasks);
+        }
+    }
+
+    #[test]
+    fn infeasible_plan_returns_structured_error() {
+        // A hand-written plan over a graph with no realizable form: the
+        // builder reports PlanError::NoFeasibleForm instead of panicking.
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input("x", &[3, 5]);
+        let w = b.weight("w", &[5, 7]);
+        b.matmul("odd", x, w, false, false);
+        let g = b.finish();
+        let plan = Plan {
+            k: 1,
+            tiles: vec![vec![Tile::Rep]; g.tensors.len()],
+            cut_costs: vec![0],
+        };
+        let err = try_build_shard_tasks(&g, &plan).unwrap_err();
+        match err {
+            crate::planner::PlanError::NoFeasibleForm { ref op, cut } => {
+                assert_eq!(op, "odd");
+                assert_eq!(cut, 0);
+            }
+            other => panic!("expected NoFeasibleForm, got {other:?}"),
+        }
+        assert!(format!("{err}").contains("odd"));
+    }
+
+    #[test]
+    fn transformer_plans_materialize() {
+        // The §5 execution-graph construction covers the new op set.
+        let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
+        for k in 0..=2 {
+            let plan = Planner::plan(&g, k, Strategy::Soybean);
+            let tasks = build_shard_tasks(&g, &plan);
+            assert_eq!(tasks.len(), g.ops.len());
             assert_realizable(&g, &tasks);
         }
     }

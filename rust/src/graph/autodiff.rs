@@ -35,6 +35,9 @@ pub fn append_backward(b: &mut GraphBuilder, loss: TensorId) -> HashMap<TensorId
 
     // grads[t] = gradient tensor of t (accumulated if multiple consumers).
     let mut grads: HashMap<TensorId, TensorId> = HashMap::new();
+    // Collected q/k/v head-view gradients per fused projection tensor; the
+    // last-processed slice emits one QkvConcat over all three.
+    let mut qkv_parts: HashMap<TensorId, [Option<TensorId>; 3]> = HashMap::new();
     let mut order = b.graph.topo_order();
     order.reverse();
 
@@ -186,8 +189,176 @@ pub fn append_backward(b: &mut GraphBuilder, loss: TensorId) -> HashMap<TensorId
                     accumulate(b, &mut grads, inp, dz);
                 }
             }
+            OpKind::Ew(EwKind::Gelu) => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::Ew(EwKind::GeluGrad),
+                    vec![dz, x],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::Ew(EwKind::Ident) => {
+                // The gradient wire mirrors the forward wire as a real op,
+                // keeping the backward graph as layered as the forward one.
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::Ew(EwKind::Ident),
+                    vec![dz],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::BatchedMatMul { ta, tb } => {
+                assert!(!ta, "autodiff only supports untransposed-lhs batched matmuls");
+                let (a, y) = (op.inputs[0], op.inputs[1]);
+                let dz = d_out.unwrap();
+                let sa = b.graph.tensors[a].shape.clone();
+                let sy = b.graph.tensors[y].shape.clone();
+                let (da, db) = if !tb {
+                    // Z = A·B: dA = dZ·Bᵀ, dB = Aᵀ·dZ.
+                    let da = b.raw_op(
+                        &format!("{}.bwd_a", op.name),
+                        OpKind::BatchedMatMul { ta: false, tb: true },
+                        vec![dz, y],
+                        &sa,
+                        TensorKind::Gradient,
+                    );
+                    let db = b.raw_op(
+                        &format!("{}.bwd_b", op.name),
+                        OpKind::BatchedMatMul { ta: true, tb: false },
+                        vec![a, dz],
+                        &sy,
+                        TensorKind::Gradient,
+                    );
+                    (da, db)
+                } else {
+                    // Z = A·Bᵀ: dA = dZ·B, dB = dZᵀ·A.
+                    let da = b.raw_op(
+                        &format!("{}.bwd_a", op.name),
+                        OpKind::BatchedMatMul { ta: false, tb: false },
+                        vec![dz, y],
+                        &sa,
+                        TensorKind::Gradient,
+                    );
+                    let db = b.raw_op(
+                        &format!("{}.bwd_b", op.name),
+                        OpKind::BatchedMatMul { ta: true, tb: false },
+                        vec![dz, a],
+                        &sy,
+                        TensorKind::Gradient,
+                    );
+                    (da, db)
+                };
+                accumulate(b, &mut grads, a, da);
+                accumulate(b, &mut grads, y, db);
+            }
+            OpKind::Softmax => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::SoftmaxGrad,
+                    vec![dz, out],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::LayerNorm => {
+                let (x, gamma, beta) = (op.inputs[0], op.inputs[1], op.inputs[2]);
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::LayerNormGrad,
+                    vec![dz, x, gamma],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+                let sg = b.graph.tensors[gamma].shape.clone();
+                let dg = b.raw_op(
+                    &format!("{}.bwd_g", op.name),
+                    OpKind::LayerNormGammaGrad,
+                    vec![dz, x],
+                    &sg,
+                    TensorKind::WeightGrad,
+                );
+                accumulate(b, &mut grads, gamma, dg);
+                let sb = b.graph.tensors[beta].shape.clone();
+                let db = b.raw_op(
+                    &format!("{}.bwd_b", op.name),
+                    OpKind::ReduceSumRows,
+                    vec![dz],
+                    &sb,
+                    TensorKind::WeightGrad,
+                );
+                accumulate(b, &mut grads, beta, db);
+            }
+            OpKind::SplitHeads { heads } => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::MergeHeads { heads },
+                    vec![dz],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::MergeHeads { heads } => {
+                let x = op.inputs[0];
+                let dz = d_out.unwrap();
+                let sx = b.graph.tensors[x].shape.clone();
+                let dx = b.raw_op(
+                    &format!("{}.bwd", op.name),
+                    OpKind::SplitHeads { heads },
+                    vec![dz],
+                    &sx,
+                    TensorKind::Gradient,
+                );
+                accumulate(b, &mut grads, x, dx);
+            }
+            OpKind::QkvSlice { part } => {
+                let src = op.inputs[0];
+                let dz = d_out.unwrap();
+                let entry = qkv_parts.entry(src).or_insert([None; 3]);
+                entry[part] = Some(dz);
+                if let [Some(dq), Some(dk), Some(dv)] = *entry {
+                    let s_src = b.graph.tensors[src].shape.clone();
+                    let name = format!("{}.qkv_bwd", b.graph.tensors[src].name);
+                    let d_src = b.raw_op(
+                        &name,
+                        OpKind::QkvConcat,
+                        vec![dq, dk, dv],
+                        &s_src,
+                        TensorKind::Gradient,
+                    );
+                    accumulate(b, &mut grads, src, d_src);
+                }
+            }
             other => panic!("no gradient rule for forward op {other:?}"),
         }
+    }
+
+    for (src, parts) in &qkv_parts {
+        assert!(
+            parts.iter().all(Option::is_some),
+            "fused projection {} has dead q/k/v slices; cannot form its gradient",
+            b.graph.tensors[*src].name
+        );
     }
 
     // SGD updates for every parameter that received a gradient.

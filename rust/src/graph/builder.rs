@@ -138,6 +138,121 @@ impl GraphBuilder {
             .1
     }
 
+    pub fn gelu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        self.add_op(name, OpKind::Ew(EwKind::Gelu), vec![x], &sx, TensorKind::Activation)
+            .1
+    }
+
+    /// Identity wire — a free relay op. The transformer builder threads
+    /// residual skip connections through chains of these so the BFS
+    /// levelization stays layered (DESIGN.md §Transformer).
+    pub fn ident(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        let kind = self.graph.tensors[x].kind;
+        let out_kind = if kind == TensorKind::Gradient { kind } else { TensorKind::Activation };
+        self.add_op(name, OpKind::Ew(EwKind::Ident), vec![x], &sx, out_kind).1
+    }
+
+    /// Row-wise layer normalization with affine parameters.
+    pub fn layer_norm(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        gamma: TensorId,
+        beta: TensorId,
+    ) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(sx.len(), 2, "{name}: layer norm input must be rank 2, got {sx:?}");
+        for (p, label) in [(gamma, "gamma"), (beta, "beta")] {
+            let sp = self.shape(p);
+            assert_eq!(sp.len(), 1, "{name}: {label} must be rank 1");
+            assert_eq!(sp[0], sx[1], "{name}: {label} length mismatch");
+        }
+        self.add_op(name, OpKind::LayerNorm, vec![x, gamma, beta], &sx, TensorKind::Activation)
+            .1
+    }
+
+    /// Softmax over the last axis (attention probabilities).
+    pub fn softmax_rows(&mut self, name: &str, x: TensorId) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert!(
+            (2..=3).contains(&sx.len()),
+            "{name}: row softmax input must be rank 2 or 3, got {sx:?}"
+        );
+        self.add_op(name, OpKind::Softmax, vec![x], &sx, TensorKind::Activation).1
+    }
+
+    /// Batched matmul over a shared leading batch/head axis, with optional
+    /// per-matrix transposes (`QKᵀ` is `ta=false, tb=true`).
+    pub fn batched_matmul(
+        &mut self,
+        name: &str,
+        a: TensorId,
+        b: TensorId,
+        ta: bool,
+        tb: bool,
+    ) -> TensorId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 3, "{name}: lhs must be rank 3, got {sa:?}");
+        assert_eq!(sb.len(), 3, "{name}: rhs must be rank 3, got {sb:?}");
+        assert_eq!(sa[0], sb[0], "{name}: batch axis mismatch {sa:?}x{sb:?}");
+        let (m, ka) = if ta { (sa[2], sa[1]) } else { (sa[1], sa[2]) };
+        let (kb, n) = if tb { (sb[2], sb[1]) } else { (sb[1], sb[2]) };
+        assert_eq!(ka, kb, "{name}: contraction mismatch {sa:?}x{sb:?} (ta={ta}, tb={tb})");
+        let kind = self.out_kind_for(a, b);
+        self.add_op(name, OpKind::BatchedMatMul { ta, tb }, vec![a, b], &[sa[0], m, n], kind)
+            .1
+    }
+
+    /// `[B·S, D] -> [B·H, S, D/H]` head split.
+    pub fn split_heads(&mut self, name: &str, x: TensorId, heads: usize, seq: usize) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(sx.len(), 2, "{name}: split_heads input must be rank 2");
+        assert_eq!(sx[0] % seq, 0, "{name}: rows {} not divisible by seq {seq}", sx[0]);
+        assert_eq!(sx[1] % heads, 0, "{name}: width {} not divisible by heads {heads}", sx[1]);
+        let batch = sx[0] / seq;
+        assert!(batch % 2 == 0, "{name}: batch {batch} must be even for batch-axis tiling");
+        let out = [batch * heads, seq, sx[1] / heads];
+        self.add_op(name, OpKind::SplitHeads { heads }, vec![x], &out, TensorKind::Activation)
+            .1
+    }
+
+    /// `[B·H, S, D/H] -> [B·S, D]` — inverse of [`Self::split_heads`].
+    pub fn merge_heads(&mut self, name: &str, x: TensorId, heads: usize) -> TensorId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(sx.len(), 3, "{name}: merge_heads input must be rank 3");
+        assert_eq!(sx[0] % heads, 0, "{name}: groups {} not divisible by heads {heads}", sx[0]);
+        let batch = sx[0] / heads;
+        let out = [batch * sx[1], heads * sx[2]];
+        self.add_op(name, OpKind::MergeHeads { heads }, vec![x], &out, TensorKind::Activation)
+            .1
+    }
+
+    /// Slice q/k/v (`part` 0/1/2) out of a fused `[B·S, 3·D]` projection
+    /// into the `[B·H, S, D/H]` attention view.
+    pub fn qkv_slice(
+        &mut self,
+        name: &str,
+        qkv: TensorId,
+        part: usize,
+        heads: usize,
+        seq: usize,
+    ) -> TensorId {
+        let sx = self.shape(qkv).to_vec();
+        assert_eq!(sx.len(), 2, "{name}: qkv_slice input must be rank 2");
+        assert!(part < 3, "{name}: part must be 0 (q), 1 (k) or 2 (v)");
+        assert_eq!(sx[1] % 3, 0, "{name}: width {} not divisible into q/k/v", sx[1]);
+        let d = sx[1] / 3;
+        assert_eq!(sx[0] % seq, 0, "{name}: rows {} not divisible by seq {seq}", sx[0]);
+        assert_eq!(d % heads, 0, "{name}: d_model {d} not divisible by heads {heads}");
+        let batch = sx[0] / seq;
+        assert!(batch % 2 == 0, "{name}: batch {batch} must be even for batch-axis tiling");
+        let out = [batch * heads, seq, d / heads];
+        self.add_op(name, OpKind::QkvSlice { part }, vec![qkv], &out, TensorKind::Activation)
+            .1
+    }
+
     pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
         let sa = self.shape(a).to_vec();
         assert_eq!(sa, self.shape(b), "{name}: elementwise shape mismatch");
@@ -226,6 +341,54 @@ mod tests {
         let x = b.input("x", &[4, 5]);
         let w = b.weight("w", &[6, 7]);
         b.matmul("bad", x, w, false, false);
+    }
+
+    #[test]
+    fn transformer_op_shapes() {
+        // batch 2, seq 4, d_model 8, heads 2: the head-view round trip.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8, 8]); // [B·S, D]
+        let wqkv = b.weight("wqkv", &[8, 24]);
+        let qkv = b.matmul("qkv", x, wqkv, false, false);
+        assert_eq!(b.shape(qkv), &[8, 24]);
+        let qh = b.qkv_slice("sq", qkv, 0, 2, 4);
+        let kh = b.qkv_slice("sk", qkv, 1, 2, 4);
+        let vh = b.qkv_slice("sv", qkv, 2, 2, 4);
+        assert_eq!(b.shape(qh), &[4, 4, 4]); // [B·H, S, D/H]
+        let sc = b.batched_matmul("scores", qh, kh, false, true);
+        assert_eq!(b.shape(sc), &[4, 4, 4]); // [B·H, S, S]
+        let pr = b.softmax_rows("probs", sc);
+        let ct = b.batched_matmul("ctx", pr, vh, false, false);
+        assert_eq!(b.shape(ct), &[4, 4, 4]);
+        let cm = b.merge_heads("mh", ct, 2);
+        assert_eq!(b.shape(cm), &[8, 8]); // back to [B·S, D]
+        // split_heads is the non-fused inverse of merge_heads.
+        let hs = b.split_heads("sh", cm, 2, 4);
+        assert_eq!(b.shape(hs), &[4, 4, 4]);
+        // layer norm + gelu + ident keep shapes.
+        let g_ = b.weight("g", &[8]);
+        let be = b.weight("be", &[8]);
+        let ln = b.layer_norm("ln", cm, g_, be);
+        let ge = b.gelu("gelu", ln);
+        let id = b.ident("wire", ge);
+        assert_eq!(b.shape(id), &[8, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch axis mismatch")]
+    fn batched_matmul_batch_check() {
+        let mut b = GraphBuilder::new();
+        let a = b.input("a", &[4, 2, 2]);
+        let c = b.input("c", &[6, 2, 2]);
+        b.batched_matmul("bad", a, c, false, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn split_heads_rejects_odd_batch() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[12, 8]); // batch 3, seq 4
+        b.split_heads("sh", x, 2, 4);
     }
 
     #[test]

@@ -3,7 +3,12 @@
 //! The set covers everything the paper's evaluation needs: dense matmul
 //! (MLP layers and their backward passes), 2-D convolution with its two
 //! backward operators (CNN/AlexNet/VGG), elementwise activation functions,
-//! bias broadcast/reduction, softmax cross-entropy, and the SGD update.
+//! bias broadcast/reduction, softmax cross-entropy, and the SGD update —
+//! plus the transformer-encoder vocabulary added after the paper's 2018
+//! evaluation set: layer normalization, GeLU, batched matmul (QKᵀ and
+//! attention·V, whose leading batch/head axis tiles like a data axis), row
+//! softmax, and the head-split/merge reshapes between the folded
+//! `[B·S, D]` activations and the `[B·H, S, D/H]` attention view.
 
 use super::TensorId;
 
@@ -18,6 +23,16 @@ pub enum EwKind {
     ReluGrad,
     Add,
     Mul,
+    /// Tanh-approximation GeLU (the transformer FF activation).
+    Gelu,
+    /// `gelu_grad(dy, x)` — needs the *pre-activation* input, unlike ReLU.
+    GeluGrad,
+    /// Identity wire. Semantically a no-op (free when input and output
+    /// share a tiling); inserted by the transformer builder on residual
+    /// skip paths so the undirected BFS levelization (§4.2.2) sees a
+    /// layered chain instead of collapsing a whole block into one level —
+    /// see DESIGN.md §Transformer.
+    Ident,
 }
 
 /// Operator kinds. Shape legality is enforced by the [`GraphBuilder`];
@@ -66,6 +81,50 @@ pub enum OpKind {
     /// `w' = w - lr * g`. The learning rate is a scalar attribute (not a
     /// graph tensor) so the tiling problem sees exactly the paper's graph.
     SgdUpdate,
+
+    // -- transformer operators (post-paper workload class) ------------------
+    /// Batched matmul `Z[g] = op(A[g]) · op(B[g])` over a shared leading
+    /// batch/head axis. Both operands are rank 3; the batch axis tiles like
+    /// a data axis (splitting it is the free, data-parallel aligned form),
+    /// and the per-matrix row/col/contraction splits generalize Figure 6.
+    BatchedMatMul { ta: bool, tb: bool },
+
+    /// `y = (x - mean(x)) / std(x) * gamma + beta` row-wise over `[M, N]`
+    /// with `gamma`/`beta` of shape `[N]`. The mean/variance reduce along
+    /// the row (non-batch) axis, so only batch splits avoid cross-device
+    /// reduction — like `SoftmaxXent`, a row-wise op (§4.5).
+    LayerNorm,
+    /// `dx = ln_grad(dy, x, gamma)` — same row-wise restriction.
+    LayerNormGrad,
+    /// `dgamma = Σ_rows dy ⊙ x̂` — a two-input column reduction shaped
+    /// like [`OpKind::ReduceSumRows`] (`dbeta` reuses `ReduceSumRows`).
+    LayerNormGammaGrad,
+
+    /// Row softmax over the *last* axis of a rank-2/3 tensor (attention
+    /// probabilities). Any axis but the normalization axis may split.
+    Softmax,
+    /// `dx = y ⊙ (dy - rowsum(dy ⊙ y))` — inputs `(dy, y)`, same
+    /// splittability as [`OpKind::Softmax`].
+    SoftmaxGrad,
+
+    /// `[B·S, D] -> [B·H, S, D/H]` head split (batch-major on both sides:
+    /// halving rows of the input is halving the batch, which is halving
+    /// the leading axis of the output — the one tiling the two views
+    /// share, and the only split this op admits). Output shapes are fixed
+    /// at build time; `heads` is carried for the autodiff inverse.
+    SplitHeads { heads: usize },
+    /// `[B·H, S, D/H] -> [B·S, D]` — inverse of [`OpKind::SplitHeads`].
+    MergeHeads { heads: usize },
+
+    /// Slice one of Q/K/V out of a fused `[B·S, 3·D]` projection directly
+    /// into the `[B·H, S, D/H]` attention view. Fusing the three
+    /// projections into one matmul keeps the one-cut DP's per-level
+    /// boundary narrow (DESIGN.md §Transformer); `part` selects q=0, k=1,
+    /// v=2.
+    QkvSlice { part: usize },
+    /// Gradient counterpart: concatenate `(dq, dk, dv)` head views back
+    /// into the fused `[B·S, 3·D]` gradient.
+    QkvConcat,
 }
 
 impl OpKind {
@@ -80,10 +139,22 @@ impl OpKind {
         )
     }
 
-    /// True for operators that the paper restricts to batch-dimension
-    /// partitioning (§4.5 "all other operators").
+    /// True for operators restricted to batch-dimension partitioning: the
+    /// paper's row-wise losses (§4.5 "all other operators") plus the
+    /// transformer ops whose only aligned split is the batch/head axis
+    /// (layer norm's row-wise statistics, the head-view reshapes).
     pub fn batch_only(&self) -> bool {
-        matches!(self, OpKind::SoftmaxXent | OpKind::SoftmaxXentGrad)
+        matches!(
+            self,
+            OpKind::SoftmaxXent
+                | OpKind::SoftmaxXentGrad
+                | OpKind::LayerNorm
+                | OpKind::LayerNormGrad
+                | OpKind::SplitHeads { .. }
+                | OpKind::MergeHeads { .. }
+                | OpKind::QkvSlice { .. }
+                | OpKind::QkvConcat
+        )
     }
 }
 
@@ -109,5 +180,18 @@ mod tests {
         assert!(!OpKind::BiasAdd.is_matmul_like());
         assert!(OpKind::SoftmaxXent.batch_only());
         assert!(!OpKind::Ew(EwKind::Relu).batch_only());
+    }
+
+    #[test]
+    fn transformer_classification() {
+        // Batched matmul is grid-shaped (its batch form subsumes Fig. 6),
+        // not one of the three §4 matmul operators.
+        assert!(!OpKind::BatchedMatMul { ta: false, tb: true }.is_matmul_like());
+        assert!(OpKind::LayerNorm.batch_only());
+        assert!(OpKind::SplitHeads { heads: 4 }.batch_only());
+        assert!(OpKind::QkvSlice { part: 1 }.batch_only());
+        // Row softmax over rank-3 scores may split batch *and* query rows.
+        assert!(!OpKind::Softmax.batch_only());
+        assert!(!OpKind::Ew(EwKind::Gelu).batch_only());
     }
 }

@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! soybean plan     --model mlp --batch 512 --hidden 8192 --k 3 [--strategy soybean]
+//! soybean plan     --model transformer --batch 8 --seq 128 --dmodel 256 --heads 4 --layers 4 --k 3
 //! soybean simulate --model alexnet --batch 256 --k 3
 //! soybean reproduce fig8a|fig8b|fig8c|fig9a|fig9b|fig10a|fig10b|example22|all
 //! soybean train    --steps 100 --batch 32 [--k 2] [--strategy dp]
@@ -14,7 +15,7 @@
 use std::collections::HashMap;
 
 use soybean::figures;
-use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
+use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 use soybean::planner::{classify, Planner, Strategy};
 use soybean::sim::{simulate, SimConfig};
 
@@ -52,6 +53,18 @@ fn model_graph(flags: &HashMap<String, String>) -> soybean::Graph {
         "cnn" => cnn5(batch, get(flags, "image", 6), 4, get(flags, "filters", 2048), 10),
         "alexnet" => alexnet(batch),
         "vgg" => vgg16(batch),
+        "transformer" => {
+            let micro = TransformerConfig::micro();
+            transformer(&TransformerConfig {
+                batch: get(flags, "batch", micro.batch),
+                seq: get(flags, "seq", micro.seq),
+                d_model: get(flags, "dmodel", micro.d_model),
+                heads: get(flags, "heads", micro.heads),
+                d_ff: get(flags, "dff", micro.d_ff),
+                layers: get(flags, "layers", micro.layers),
+                classes: get(flags, "classes", micro.classes),
+            })
+        }
         other => {
             eprintln!("unknown model {other}");
             std::process::exit(2);

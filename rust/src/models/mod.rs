@@ -8,14 +8,18 @@
 //! - [`cnn5`] — the 5-layer CNN of Figures 9(a–b), parameterized by image
 //!   size and filter count;
 //! - [`alexnet`] — Figure 10(a);
-//! - [`vgg16`] — Figure 10(b).
+//! - [`vgg16`] — Figure 10(b);
+//! - [`transformer`] — the post-paper workload class: a pre-LN GPT-2-style
+//!   encoder stack (attention + feed-forward blocks) with a linear head.
 
 mod alexnet;
 mod cnn;
 mod mlp;
+mod transformer;
 mod vgg;
 
 pub use alexnet::alexnet;
 pub use cnn::cnn5;
 pub use mlp::{mlp, mlp_with_loss, MlpConfig};
+pub use transformer::{attention_probe, transformer, TransformerConfig};
 pub use vgg::vgg16;

@@ -1,0 +1,257 @@
+//! Transformer encoder training graphs — the repo's first post-paper
+//! workload class (pre-LN GPT-2-style blocks with a classification head).
+//!
+//! Each block is: `x + Wo·Attn(LN(x))` followed by `x + W2·gelu(W1·LN(x))`,
+//! expressed over *folded* `[B·S, D]` activations (batch and sequence share
+//! the row axis, so row splits are batch splits) with the attention core in
+//! the `[B·H, S, D/H]` head view, whose leading axis tiles like a data
+//! axis. The 1/√(D/H) score scaling is absorbed into the fused projection
+//! weight — it is tiling-neutral and keeps the graph exactly the operator
+//! set the planner prices.
+//!
+//! Two graph-shape decisions exist purely for the one-cut DP (see
+//! DESIGN.md §Transformer for the measurements):
+//!
+//! - **Fused q/k/v projection** (`Wqkv: [D, 3D]` + [`OpKind::QkvSlice`]):
+//!   three separate projections put {qᵒ, kᵒ, vᵒ, dqᵒ, dkᵒ, dvᵒ, Wq, Wk,
+//!   Wv, dWq, dWk, dWv} into one DP boundary — ~3¹² states where the
+//!   paper's workloads have ≤ 3⁵. Fusing collapses that to one
+//!   activation/gradient/weight triple.
+//! - **Identity wires on skip paths** ([`crate::graph::EwKind::Ident`]):
+//!   a direct residual edge makes the undirected op graph's diameter tiny,
+//!   so BFS levelization (§4.2.2) folds a whole block into a handful of
+//!   levels with enormous boundaries. Free identity relays on the skip
+//!   (and on the V path into attention·V) length-match every parallel
+//!   path, restoring the layered-chain structure the DP's complexity
+//!   argument assumes. Wires cost nothing under Eq. (2) when input and
+//!   output tilings agree, so plan costs are unchanged.
+//!
+//! [`OpKind::QkvSlice`]: crate::graph::OpKind
+
+use crate::graph::{append_backward, Graph, GraphBuilder, TensorId};
+
+/// Transformer encoder configuration.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    /// Sequences per step. Must be even (and divisible by `2^k` for a
+    /// k-cut plan to keep batch-tiling the attention view).
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub layers: usize,
+    /// Output classes of the linear head (per-position labels).
+    pub classes: usize,
+}
+
+impl TransformerConfig {
+    /// The `transformer_micro` bench workload: a small GPT-2-block stack
+    /// (4 layers, 4 heads, d_model 256, seq 128) planned for 8 devices.
+    pub fn micro() -> Self {
+        TransformerConfig {
+            batch: 8,
+            seq: 128,
+            d_model: 256,
+            heads: 4,
+            d_ff: 1024,
+            layers: 4,
+            classes: 256,
+        }
+    }
+
+    /// Single tiny block for tests: same graph topology as [`Self::micro`]
+    /// per layer (so DP state spaces match), toy dimensions.
+    pub fn tiny() -> Self {
+        TransformerConfig {
+            batch: 4,
+            seq: 4,
+            d_model: 8,
+            heads: 2,
+            d_ff: 16,
+            layers: 1,
+            classes: 8,
+        }
+    }
+}
+
+/// Chain of free identity relays (see module docs).
+fn wire(b: &mut GraphBuilder, name: &str, mut x: TensorId, hops: usize) -> TensorId {
+    for i in 0..hops {
+        x = b.ident(&format!("{name}{i}"), x);
+    }
+    x
+}
+
+/// Build the full training-step graph (forward + backward + SGD) of a
+/// transformer encoder stack.
+pub fn transformer(cfg: &TransformerConfig) -> Graph {
+    assert!(cfg.layers >= 1, "at least one encoder layer");
+    assert_eq!(cfg.d_model % cfg.heads, 0, "d_model must divide into heads");
+    assert!(cfg.batch % 2 == 0, "batch must be even for batch-axis tiling");
+    let rows = cfg.batch * cfg.seq;
+    let d = cfg.d_model;
+
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[rows, d]);
+    let y = b.label("y", &[rows, cfg.classes]);
+    let mut h = x;
+    for l in 0..cfg.layers {
+        let p = |s: &str| format!("l{l}.{s}");
+        // Attention half: x + Wo·Attn(LN(x)).
+        let g1 = b.weight(&p("ln1.g"), &[d]);
+        let b1 = b.weight(&p("ln1.b"), &[d]);
+        let h1 = b.layer_norm(&p("ln1"), h, g1, b1);
+        let wqkv = b.weight(&p("wqkv"), &[d, 3 * d]);
+        let qkv = b.matmul(&p("qkv"), h1, wqkv, false, false);
+        let qh = b.qkv_slice(&p("slice_q"), qkv, 0, cfg.heads, cfg.seq);
+        let kh = b.qkv_slice(&p("slice_k"), qkv, 1, cfg.heads, cfg.seq);
+        let vh = b.qkv_slice(&p("slice_v"), qkv, 2, cfg.heads, cfg.seq);
+        let sc = b.batched_matmul(&p("scores"), qh, kh, false, true);
+        let pr = b.softmax_rows(&p("probs"), sc);
+        // V waits two stages (scores, probs) before attention·V reads it.
+        let vw = wire(&mut b, &p("v.wire"), vh, 2);
+        let ct = b.batched_matmul(&p("ctx"), pr, vw, false, false);
+        let cm = b.merge_heads(&p("merge"), ct, cfg.heads);
+        let wo = b.weight(&p("wo"), &[d, d]);
+        let ao = b.matmul(&p("proj"), cm, wo, false, false);
+        // Skip path length-matched to the 8-op attention branch.
+        let hs = wire(&mut b, &p("res1.wire"), h, 8);
+        h = b.add(&p("res1"), hs, ao);
+
+        // Feed-forward half: x + W2·gelu(W1·LN(x)).
+        let g2 = b.weight(&p("ln2.g"), &[d]);
+        let b2 = b.weight(&p("ln2.b"), &[d]);
+        let h2 = b.layer_norm(&p("ln2"), h, g2, b2);
+        let w1 = b.weight(&p("ff1.w"), &[d, cfg.d_ff]);
+        let f1 = b.matmul(&p("ff1"), h2, w1, false, false);
+        let ge = b.gelu(&p("gelu"), f1);
+        let w2 = b.weight(&p("ff2.w"), &[cfg.d_ff, d]);
+        let f2 = b.matmul(&p("ff2"), ge, w2, false, false);
+        let hs2 = wire(&mut b, &p("res2.wire"), h, 4);
+        h = b.add(&p("res2"), hs2, f2);
+    }
+    let gf = b.weight("lnf.g", &[d]);
+    let bf = b.weight("lnf.b", &[d]);
+    let hf = b.layer_norm("lnf", h, gf, bf);
+    let wh = b.weight("head.w", &[d, cfg.classes]);
+    let logits = b.matmul("head", hf, wh, false, false);
+    let loss = b.softmax_xent("loss", logits, y);
+    append_backward(&mut b, loss);
+    b.finish()
+}
+
+/// A forward-only attention core small enough for *exhaustive* tiling
+/// enumeration (~15k assignments): fused-projection slices, QKᵀ, row
+/// softmax, attention·V, head merge, linear head, loss. The brute-force
+/// property tests pin the one-cut DP on exactly this graph.
+pub fn attention_probe() -> Graph {
+    let mut b = GraphBuilder::new();
+    let qkv = b.input("qkv", &[8, 24]); // batch 2, seq 4, d_model 8, heads 2
+    let y = b.label("y", &[8, 8]);
+    let qh = b.qkv_slice("slice_q", qkv, 0, 2, 4);
+    let kh = b.qkv_slice("slice_k", qkv, 1, 2, 4);
+    let vh = b.qkv_slice("slice_v", qkv, 2, 2, 4);
+    let sc = b.batched_matmul("scores", qh, kh, false, true);
+    let pr = b.softmax_rows("probs", sc);
+    let ct = b.batched_matmul("ctx", pr, vh, false, false);
+    let cm = b.merge_heads("merge", ct, 2);
+    let w = b.weight("head.w", &[8, 8]);
+    let logits = b.matmul("head", cm, w, false, false);
+    b.softmax_xent("loss", logits, y);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bfs_levels, OpKind, TensorKind};
+    use crate::tiling::candidate_tiles;
+
+    #[test]
+    fn tiny_block_op_census() {
+        let g = transformer(&TransformerConfig::tiny());
+        let count = |f: &dyn Fn(&OpKind) -> bool| g.ops.iter().filter(|o| f(&o.kind)).count();
+        // 2 forward batched matmuls + 4 backward per layer.
+        assert_eq!(count(&|k| matches!(k, OpKind::BatchedMatMul { .. })), 6);
+        // 3 layer norms (2 in-block + final) with one grad + gamma-grad each.
+        assert_eq!(count(&|k| matches!(k, OpKind::LayerNorm)), 3);
+        assert_eq!(count(&|k| matches!(k, OpKind::LayerNormGrad)), 3);
+        assert_eq!(count(&|k| matches!(k, OpKind::LayerNormGammaGrad)), 3);
+        // Fused projection: 3 slices forward, 1 concat backward.
+        assert_eq!(count(&|k| matches!(k, OpKind::QkvSlice { .. })), 3);
+        assert_eq!(count(&|k| matches!(k, OpKind::QkvConcat)), 1);
+        assert_eq!(count(&|k| matches!(k, OpKind::Softmax)), 1);
+        assert_eq!(count(&|k| matches!(k, OpKind::SoftmaxGrad)), 1);
+        // merge forward + its split backward, plus the ctx-grad view swap.
+        assert!(count(&|k| matches!(k, OpKind::MergeHeads { .. })) >= 1);
+        assert!(count(&|k| matches!(k, OpKind::SplitHeads { .. })) >= 1);
+    }
+
+    #[test]
+    fn every_weight_updated() {
+        let g = transformer(&TransformerConfig::tiny());
+        let weights = g.tensors.iter().filter(|t| t.kind == TensorKind::Weight).count();
+        let updates = g.ops.iter().filter(|o| o.kind == OpKind::SgdUpdate).count();
+        assert_eq!(weights, updates);
+        // 2 LN pairs + wqkv + wo + 2 ff per layer, + final LN pair + head.
+        assert_eq!(weights, 8 * 1 + 3);
+    }
+
+    #[test]
+    fn graph_is_acyclic_and_levelizable() {
+        let g = transformer(&TransformerConfig::tiny());
+        assert_eq!(g.topo_order().len(), g.ops.len());
+        // The wires keep the undirected levelization layered: narrow
+        // levels are what keeps the one-cut DP polynomial here.
+        let lv = bfs_levels(&g);
+        assert!(lv.levels.len() >= 10, "transformer block collapsed to {} levels", lv.levels.len());
+        assert!(lv.max_width() <= 12, "level width {} too wide for the DP", lv.max_width());
+    }
+
+    #[test]
+    fn dp_boundary_spaces_stay_small() {
+        // The fused-qkv + wire design caps every DP boundary state space;
+        // this pins the graph-shape contract the planner's runtime relies
+        // on (see module docs).
+        let g = transformer(&TransformerConfig::micro());
+        let lv = bfs_levels(&g);
+        for (l, b) in lv.boundary.iter().enumerate() {
+            let states: u128 = b
+                .iter()
+                .map(|&t| candidate_tiles(&g.tensors[t]).len() as u128)
+                .product();
+            assert!(states <= 10_000, "boundary {l} has {states} states");
+        }
+    }
+
+    #[test]
+    fn head_view_shapes() {
+        let cfg = TransformerConfig::micro();
+        let g = transformer(&cfg);
+        let t = |name: &str| {
+            g.tensors
+                .iter()
+                .find(|t| t.name == name)
+                .unwrap_or_else(|| panic!("no tensor {name}"))
+                .shape
+                .clone()
+        };
+        assert_eq!(t("l0.slice_q.out"), vec![8 * 4, 128, 64]); // [B·H, S, D/H]
+        assert_eq!(t("l0.scores.out"), vec![8 * 4, 128, 128]); // [B·H, S, S]
+        assert_eq!(t("l0.merge.out"), vec![8 * 128, 256]); // back to [B·S, D]
+    }
+
+    #[test]
+    fn attention_probe_is_enumerable() {
+        let g = attention_probe();
+        let states: u128 = g
+            .steady_state_aliases()
+            .iter()
+            .enumerate()
+            .filter(|&(t, &a)| a == t)
+            .map(|(t, _)| candidate_tiles(&g.tensors[t]).len() as u128)
+            .product();
+        assert!(states <= 100_000, "probe space {states} too big for brute force");
+    }
+}

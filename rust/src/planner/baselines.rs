@@ -21,7 +21,9 @@ pub fn data_parallel_tiles(g: &Graph, k: usize) -> Vec<TileSeq> {
                     // Batch is dimension 0 for every non-parameter tensor in
                     // the zoo; fall back to replication if it cannot be
                     // split k times.
-                    if t.rank() >= 1 && t.shape[0] % (1 << k) == 0 && t.shape[0] >= (1 << k) * if k > 0 {1} else {1} && (t.shape[0] >> k) >= 1 {
+                    let splits_evenly =
+                        t.rank() >= 1 && t.shape[0] % (1 << k) == 0 && (t.shape[0] >> k) >= 1;
+                    if splits_evenly {
                         Tile::Split(0)
                     } else {
                         Tile::Rep

@@ -160,6 +160,51 @@ mod tests {
     }
 
     #[test]
+    fn dp_matches_bruteforce_on_attention_probe() {
+        // The transformer op set against full enumeration: the one-cut DP,
+        // the pre-LUT reference, and brute force (which prices via direct
+        // Eq. (2) evaluation, never the LUTs) must all agree bit for bit.
+        let g = crate::models::attention_probe();
+        let dp = one_cut(&g);
+        let bf = brute_force(&g, 100_000);
+        assert_eq!(dp.cost, bf.cost, "DP vs brute force on attention probe:\n{}", g.dump());
+        let reference = crate::planner::reference::one_cut_reference(&g);
+        assert_eq!(reference.cost, bf.cost, "reference diverged on attention probe");
+        assert_eq!(dp.tiles, reference.tiles, "tie-breaking diverged on attention probe");
+        // Batch-tiled attention is data parallelism: the only unavoidable
+        // traffic in this forward-only core is the scalar loss allreduce.
+        assert_eq!(bf.cost, 8);
+    }
+
+    #[test]
+    fn dp_matches_bruteforce_on_tiny_attention_variants() {
+        // A few hand-picked head/seq shapes (odd seq kills query-row and
+        // score splits, heads=1 degenerates the view) — brute force must
+        // still agree.
+        let cases = [(2usize, 4usize, 8usize, 2usize), (2, 2, 4, 1), (4, 2, 8, 2), (2, 3, 8, 2)];
+        for (batch, seq, d, heads) in cases {
+            let mut b = GraphBuilder::new();
+            let rows = batch * seq;
+            let qkv = b.input("qkv", &[rows, 3 * d]);
+            let y = b.label("y", &[rows, d]);
+            let qh = b.qkv_slice("sq", qkv, 0, heads, seq);
+            let kh = b.qkv_slice("sk", qkv, 1, heads, seq);
+            let vh = b.qkv_slice("sv", qkv, 2, heads, seq);
+            let sc = b.batched_matmul("scores", qh, kh, false, true);
+            let pr = b.softmax_rows("probs", sc);
+            let ct = b.batched_matmul("ctx", pr, vh, false, false);
+            let cm = b.merge_heads("mh", ct, heads);
+            let w = b.weight("w", &[d, d]);
+            let logits = b.matmul("head", cm, w, false, false);
+            b.softmax_xent("loss", logits, y);
+            let g = b.finish();
+            let dp = one_cut(&g);
+            let bf = brute_force(&g, 400_000);
+            assert_eq!(dp.cost, bf.cost, "case b{batch} s{seq} d{d} h{heads}:\n{}", g.dump());
+        }
+    }
+
+    #[test]
     fn dp_never_worse_than_random_assignments() {
         // Weaker but broader property: DP beats 200 random assignments on a
         // mid-sized graph too big for brute force.

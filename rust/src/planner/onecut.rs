@@ -67,6 +67,10 @@ pub enum PlanError {
     BoundaryTooLarge { level: usize, states: u128 },
     /// No feasible one-cut tiling exists (e.g. every dimension odd).
     Infeasible,
+    /// A (typically hand-written) plan admits no feasible aligned form for
+    /// an operator at some cut — reported by the execution-graph builder
+    /// ([`crate::exec::try_build_shard_tasks`]) instead of panicking.
+    NoFeasibleForm { op: String, cut: usize },
 }
 
 impl fmt::Display for PlanError {
@@ -80,6 +84,9 @@ impl fmt::Display for PlanError {
                 write!(f, "level {level} boundary space has {states} states")
             }
             PlanError::Infeasible => write!(f, "no feasible one-cut tiling exists"),
+            PlanError::NoFeasibleForm { op, cut } => {
+                write!(f, "no feasible aligned form for op {op} at cut {cut}")
+            }
         }
     }
 }

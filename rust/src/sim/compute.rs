@@ -8,7 +8,7 @@
 //! PJRT CPU measurements (`table1_shapes` bench) via [`EffModel`].
 
 use crate::exec::{resident_region, ShardTask};
-use crate::graph::{Graph, Op, OpKind};
+use crate::graph::{EwKind, Graph, Op, OpKind};
 
 /// Shape-dependent fraction of peak a GEMM of local shape (m, k, n)
 /// achieves.
@@ -58,6 +58,23 @@ pub fn shard_flops(g: &Graph, op: &Op, task: &ShardTask) -> f64 {
             let n = out[1];
             2.0 * m as f64 * kk as f64 * n as f64
         }
+        OpKind::BatchedMatMul { ta, .. } => {
+            // 2 · G · M · K · N with shard dims.
+            let (m, kk) = if ta { (ins[0][2], ins[0][1]) } else { (ins[0][1], ins[0][2]) };
+            2.0 * ins[0][0] as f64 * m as f64 * kk as f64 * out[2] as f64
+        }
+        // Row-wise normalizations: a handful of passes per element.
+        OpKind::LayerNorm | OpKind::LayerNormGrad | OpKind::Softmax | OpKind::SoftmaxGrad => {
+            8.0 * vol(&ins[0])
+        }
+        // Pure views and levelization wires: a real runtime executes
+        // nothing for these (the builder inserts wires solely for the DP's
+        // graph shape — DESIGN.md §Transformer), so they cost no flops.
+        OpKind::Ew(EwKind::Ident)
+        | OpKind::SplitHeads { .. }
+        | OpKind::MergeHeads { .. }
+        | OpKind::QkvSlice { .. }
+        | OpKind::QkvConcat => 0.0,
         OpKind::Conv2d { .. } | OpKind::Conv2dBwdData { .. } | OpKind::Conv2dBwdFilter { .. } => {
             // 2 · N·OH·OW · KH·KW·CIN · COUT with shard dims. Identify the
             // filter operand by rank-4 HWIO shape on the weight slot.
@@ -88,6 +105,11 @@ pub fn shard_seconds(g: &Graph, op: &Op, task: &ShardTask, peak_flops: f64, eff:
             let (m, kk) = if ta { (ins[0][1], ins[0][0]) } else { (ins[0][0], ins[0][1]) };
             eff.gemm_eff(m as f64, kk as f64, out[1] as f64)
         }
+        OpKind::BatchedMatMul { ta, .. } => {
+            // Per-batch-element GEMM shapes drive the BLAS efficiency.
+            let (m, kk) = if ta { (ins[0][2], ins[0][1]) } else { (ins[0][1], ins[0][2]) };
+            eff.gemm_eff(m as f64, kk as f64, out[2] as f64)
+        }
         OpKind::Conv2d { .. } | OpKind::Conv2dBwdData { .. } | OpKind::Conv2dBwdFilter { .. } => {
             // Convs im2col to fat GEMMs; penalize only tiny channel counts.
             let c = *out.last().unwrap() as f64;
@@ -112,6 +134,30 @@ mod tests {
         assert!(m.gemm_eff(8192.0, 8192.0, 8192.0) > m.gemm_eff(64.0, 8192.0, 8192.0));
         assert_eq!(m.gemm_eff(512.0, 512.0, 512.0), 1.0);
         assert!(m.gemm_eff(1.0, 1.0, 1.0) >= m.floor);
+    }
+
+    #[test]
+    fn wires_and_views_cost_no_flops() {
+        // Levelization wires and head-view reshapes are free on a real
+        // runtime; the compute model must agree or transformer step times
+        // would include phantom work.
+        let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
+        let plan = k_cut(&g, 1);
+        let tasks = build_shard_tasks(&g, &plan);
+        for op in &g.ops {
+            let f = shard_flops(&g, op, &tasks[op.id]);
+            match op.kind {
+                OpKind::Ew(EwKind::Ident)
+                | OpKind::SplitHeads { .. }
+                | OpKind::MergeHeads { .. }
+                | OpKind::QkvSlice { .. }
+                | OpKind::QkvConcat => assert_eq!(f, 0.0, "view op {} costed flops", op.name),
+                OpKind::MatMul { .. } | OpKind::BatchedMatMul { .. } => {
+                    assert!(f > 0.0, "matmul {} costed no flops", op.name)
+                }
+                _ => {}
+            }
+        }
     }
 
     #[test]

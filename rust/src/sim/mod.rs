@@ -15,4 +15,7 @@ pub mod compute;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
-pub use simulate::{simulate, simulate_classic_dp, simulate_forced, SimConfig, SimReport};
+pub use simulate::{
+    simulate, simulate_classic_dp, simulate_forced, try_simulate, try_simulate_forced, SimConfig,
+    SimReport,
+};

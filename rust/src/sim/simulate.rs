@@ -8,9 +8,9 @@
 //! theory — the metered bytes equal the plan's Theorem-1 cost bit for bit
 //! (asserted in tests). Compute uses the shape-aware model in [`compute`].
 
-use crate::exec::build_shard_tasks;
+use crate::exec::try_build_shard_tasks;
 use crate::graph::{Graph, Op};
-use crate::planner::{apply_cut, classic_dp_form, Plan};
+use crate::planner::{apply_cut, classic_dp_form, Plan, PlanError};
 use crate::tiling::{op_cost, op_cost_with_form, Form, Tile};
 
 use super::compute::{shard_seconds, EffModel};
@@ -97,9 +97,16 @@ impl SimReport {
     }
 }
 
-/// Simulate one training step of `g` under `plan`.
+/// Simulate one training step of `g` under `plan`. Panics on plans with
+/// no realizable shard schedule (see [`try_simulate`]).
 pub fn simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
     simulate_forced(g, plan, cfg, &|_, _| None)
+}
+
+/// [`simulate`] returning the structured [`PlanError`] path instead of
+/// panicking when the plan admits no feasible form at some cut.
+pub fn try_simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> Result<SimReport, PlanError> {
+    try_simulate_forced(g, plan, cfg, &|_, _| None)
 }
 
 /// Simulate the stock data-parallel execution: gradient aggregation via
@@ -115,8 +122,19 @@ pub fn simulate_forced(
     cfg: &SimConfig,
     forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
 ) -> SimReport {
+    try_simulate_forced(g, plan, cfg, forced)
+        .unwrap_or_else(|e| panic!("simulation failed: {e}"))
+}
+
+/// [`simulate_forced`] with structured errors.
+pub fn try_simulate_forced(
+    g: &Graph,
+    plan: &Plan,
+    cfg: &SimConfig,
+    forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
+) -> Result<SimReport, PlanError> {
     let k = plan.k;
-    let tasks = build_shard_tasks(g, plan);
+    let tasks = try_build_shard_tasks(g, plan)?;
 
     // Compute: per-device local work (even tiling: identical on all).
     let mut compute_s = 0.0f64;
@@ -166,7 +184,7 @@ pub fn simulate_forced(
     }
 
     let overhead_s = (comm_s - cfg.overlap * compute_s).max(0.0);
-    SimReport {
+    Ok(SimReport {
         devices: plan.devices(),
         compute_s,
         comm_s,
@@ -174,7 +192,7 @@ pub fn simulate_forced(
         step_s: compute_s + overhead_s,
         total_bytes: tier_bytes.iter().sum(),
         tier_bytes,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -213,6 +231,41 @@ mod tests {
                 simulate(&g, &plan, &cfg())
             };
             assert_eq!(r.total_bytes, plan.total_cost(), "{}", strat.name());
+        }
+    }
+
+    #[test]
+    fn infeasible_plan_propagates_structured_error() {
+        // A hand-written plan with no realizable form surfaces through
+        // try_simulate as PlanError::NoFeasibleForm, not a panic.
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input("x", &[3, 5]);
+        let w = b.weight("w", &[5, 7]);
+        b.matmul("odd", x, w, false, false);
+        let g = b.finish();
+        let plan = crate::planner::Plan {
+            k: 1,
+            tiles: vec![vec![crate::tiling::Tile::Rep]; g.tensors.len()],
+            cut_costs: vec![0],
+        };
+        match try_simulate(&g, &plan, &cfg()) {
+            Err(crate::planner::PlanError::NoFeasibleForm { op, cut }) => {
+                assert_eq!(op, "odd");
+                assert_eq!(cut, 0);
+            }
+            other => panic!("expected NoFeasibleForm, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn transformer_sim_bytes_equal_plan_cost() {
+        // The new op set stays on the one-theory contract: metered bytes
+        // equal the plan's Theorem-1 cost bit for bit.
+        let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
+        for k in 1..=2 {
+            let plan = Planner::plan(&g, k, Strategy::Soybean);
+            let r = simulate(&g, &plan, &cfg());
+            assert_eq!(r.total_bytes, plan.total_cost(), "k={k}");
         }
     }
 

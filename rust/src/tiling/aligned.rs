@@ -187,6 +187,90 @@ fn semantics(g: &Graph, op: &Op) -> Sem {
                 allow_replicated: true,
             }
         }
+        // Batched matmul: logical grid (batch, m, n, k). Splitting the
+        // batch axis is the data-parallel form (all operands split dim 0,
+        // free when already batch-tiled); the m/n/k axes reproduce the
+        // three Figure-6 matmul forms per batch element, with transposes
+        // handled by the stored-dimension maps exactly as for `MatMul`.
+        OpKind::BatchedMatMul { ta, tb } => {
+            let (am, ak) = if ta { (2, 1) } else { (1, 2) };
+            let (bk, bn) = if tb { (2, 1) } else { (1, 2) };
+            Sem::Grid {
+                splittable: vec![true, true, true, true],
+                in_maps: vec![
+                    vec![Some(0), Some(am), None, Some(ak)],
+                    vec![Some(0), None, Some(bn), Some(bk)],
+                ],
+                out_map: vec![Some(0), Some(1), Some(2), None],
+                allow_replicated: false,
+            }
+        }
+        // Layer norm reduces along the row (feature) axis for its
+        // statistics, so only batch splits avoid cross-device reductions —
+        // the gain/bias vectors ride along like a bias broadcast.
+        OpKind::LayerNorm => Sem::Grid {
+            splittable: vec![true, false],
+            in_maps: vec![ident(2), vec![None, Some(0)], vec![None, Some(0)]],
+            out_map: ident(2),
+            allow_replicated: false,
+        },
+        OpKind::LayerNormGrad => Sem::Grid {
+            splittable: vec![true, false],
+            in_maps: vec![ident(2), ident(2), vec![None, Some(0)]],
+            out_map: ident(2),
+            allow_replicated: false,
+        },
+        // dgamma: a column reduction over (dy, x) — batch splits produce
+        // partial sums (`red`), feature splits are free, like
+        // `ReduceSumRows` with two operands.
+        OpKind::LayerNormGammaGrad => Sem::Grid {
+            splittable: vec![true, true],
+            in_maps: vec![ident(2), ident(2)],
+            out_map: vec![None, Some(0)],
+            allow_replicated: false,
+        },
+        // Row softmax: normalization runs along the last axis; every other
+        // axis (batch/head, and query rows of rank-3 scores) may split.
+        OpKind::Softmax => {
+            let rank = g.tensors[op.inputs[0]].rank();
+            let mut splittable = vec![true; rank];
+            splittable[rank - 1] = false;
+            Sem::Grid {
+                splittable,
+                in_maps: vec![ident(rank)],
+                out_map: ident(rank),
+                allow_replicated: false,
+            }
+        }
+        OpKind::SoftmaxGrad => {
+            let rank = g.tensors[op.inputs[0]].rank();
+            let mut splittable = vec![true; rank];
+            splittable[rank - 1] = false;
+            Sem::Grid {
+                splittable,
+                in_maps: vec![ident(rank), ident(rank)],
+                out_map: ident(rank),
+                allow_replicated: false,
+            }
+        }
+        // Head-view reshapes: the folded `[B·S, D]` matrix and the
+        // `[B·H, S, D/H]` view share exactly one tiling — halving the
+        // batch halves dim 0 of both (batch-major layouts). That is the
+        // single aligned form; any other assigned tiling pays conversion.
+        OpKind::SplitHeads { .. } | OpKind::MergeHeads { .. } | OpKind::QkvSlice { .. } => {
+            Sem::Grid {
+                splittable: vec![true],
+                in_maps: vec![vec![Some(0)]],
+                out_map: vec![Some(0)],
+                allow_replicated: false,
+            }
+        }
+        OpKind::QkvConcat => Sem::Grid {
+            splittable: vec![true],
+            in_maps: vec![vec![Some(0)]; 3],
+            out_map: vec![Some(0)],
+            allow_replicated: false,
+        },
     }
 }
 
@@ -600,6 +684,184 @@ mod tests {
         let g = b.finish();
         let op = g.ops[0].clone();
         assert_eq!(op_cost(&g, &op, &[REP, REP], REP), INFEASIBLE);
+    }
+
+    #[test]
+    fn batched_matmul_batch_split_free() {
+        // ctx = probs · V over batch/head groups: the batch form is free
+        // when everything is batch-tiled — the data-parallel attention.
+        let mut b = GraphBuilder::new();
+        let p = b.input("p", &[4, 6, 8]);
+        let v = b.input("v", &[4, 8, 10]);
+        b.batched_matmul("ctx", p, v, false, false);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let s0 = Tile::Split(0);
+        assert_eq!(op_cost(&g, &op, &[s0, s0], s0), 0);
+        // All-replicated: must compute split and re-gather the output.
+        let bz: u64 = 4 * 6 * 10 * 4;
+        assert_eq!(op_cost(&g, &op, &[REP, REP], REP), bz);
+    }
+
+    #[test]
+    fn batched_matmul_contraction_reduces() {
+        // QKᵀ with the contraction axis split: C·R->red per batch element,
+        // then red -> batch-split costs the output bytes.
+        let mut b = GraphBuilder::new();
+        let q = b.input("q", &[2, 4, 6]);
+        let k = b.input("k", &[2, 8, 6]);
+        b.batched_matmul("scores", q, k, false, true);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let s0 = Tile::Split(0);
+        // Feature-split inputs (the contraction dim, stored dim 2 of both
+        // under tb=true): the k-axis form applies with no input conversion,
+        // output produced red then scattered to Split(0).
+        let bz: u64 = 2 * 4 * 8 * 4;
+        assert_eq!(op_cost(&g, &op, &[Tile::Split(2), Tile::Split(2)], s0), bz);
+    }
+
+    #[test]
+    fn layer_norm_row_wise() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 32]);
+        let ga = b.weight("g", &[32]);
+        let be = b.weight("b", &[32]);
+        b.layer_norm("ln", x, ga, be);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // Batch-split x with replicated params: the aligned form itself.
+        assert_eq!(op_cost(&g, &op, &[R, REP, REP], R), 0);
+        // Column-split x must be converted (row statistics): S_x/2.
+        let bx: u64 = 64 * 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[C, REP, REP], R), bx / 2);
+        // Split params must be gathered (tiny vectors).
+        let bv: u64 = 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[R, Tile::Split(0), Tile::Split(0)], R), 2 * bv);
+    }
+
+    #[test]
+    fn layer_norm_gamma_grad_reduction_forms() {
+        let mut b = GraphBuilder::new();
+        let dy = b.input("dy", &[64, 32]);
+        let x = b.input("x", &[64, 32]);
+        b.raw_op("dg", OpKind::LayerNormGammaGrad, vec![dy, x], &[32], TensorKind::WeightGrad);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        // Batch-split operands -> partial sums -> replicated vector: 2·|g|.
+        let bv: u64 = 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[R, R], REP), 2 * bv);
+        // Feature-split operands -> split output: free.
+        assert_eq!(op_cost(&g, &op, &[C, C], Tile::Split(0)), 0);
+    }
+
+    #[test]
+    fn softmax_rows_never_splits_last_axis() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 6, 8]);
+        b.softmax_rows("probs", x);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let s0 = Tile::Split(0);
+        assert_eq!(op_cost(&g, &op, &[s0], s0), 0);
+        // Query-row splits are also aligned (axis 1).
+        assert_eq!(op_cost(&g, &op, &[Tile::Split(1)], Tile::Split(1)), 0);
+        // A last-axis tiling has no aligned form of its own: convert in
+        // and out through a row form, paying S/2 each way.
+        let s: u64 = 4 * 6 * 8 * 4;
+        assert_eq!(op_cost(&g, &op, &[Tile::Split(2)], Tile::Split(2)), s);
+    }
+
+    #[test]
+    fn head_view_reshapes_share_batch_tiling() {
+        // qkv [B·S, 3D] -> slice -> [B·H, S, D/H]: batch split on both
+        // sides is the one free form; anything else converts.
+        let mut b = GraphBuilder::new();
+        let qkv = b.input("qkv", &[8, 24]);
+        let qh = b.qkv_slice("sq", qkv, 0, 2, 4);
+        b.merge_heads("mh", qh, 2);
+        let g = b.finish();
+        let slice = g.ops[0].clone();
+        let merge = g.ops[1].clone();
+        let s0 = Tile::Split(0);
+        assert_eq!(op_cost(&g, &slice, &[s0], s0), 0);
+        assert_eq!(op_cost(&g, &merge, &[s0], s0), 0);
+        // Column-split qkv arrives misaligned: S_qkv/2 to re-tile rows.
+        let b_qkv: u64 = 8 * 24 * 4;
+        assert_eq!(op_cost(&g, &slice, &[C], s0), b_qkv / 2);
+        // Replicated slice output costs the (smaller) head-view bytes.
+        let b_qh: u64 = 4 * 4 * 4 * 4;
+        assert_eq!(op_cost(&g, &slice, &[s0], REP), b_qh);
+    }
+
+    #[test]
+    fn qkv_concat_batch_form() {
+        let mut b = GraphBuilder::new();
+        let dq = b.input("dq", &[4, 4, 4]);
+        let dk = b.input("dk", &[4, 4, 4]);
+        let dv = b.input("dv", &[4, 4, 4]);
+        b.raw_op("cat", OpKind::QkvConcat, vec![dq, dk, dv], &[8, 24], TensorKind::Gradient);
+        let g = b.finish();
+        let op = g.ops[0].clone();
+        let s0 = Tile::Split(0);
+        assert_eq!(op_cost(&g, &op, &[s0, s0, s0], s0), 0);
+        // Gathering the concatenated gradient costs its full size.
+        let b_out: u64 = 8 * 24 * 4;
+        assert_eq!(op_cost(&g, &op, &[s0, s0, s0], REP), b_out);
+    }
+
+    #[test]
+    fn batch_only_classifier_matches_grid_semantics() {
+        // `OpKind::batch_only` and the aligned-form tables are two
+        // encodings of one fact; pin them together over the transformer op
+        // set (plus a row-wise loss and an elementwise counterexample):
+        // each of these ops is batch-only iff its grid admits exactly one
+        // splittable logical axis.
+        let mut b = GraphBuilder::new();
+        let qkv = b.input("qkv", &[8, 24]);
+        let qh = b.qkv_slice("sq", qkv, 0, 2, 4);
+        let kh = b.qkv_slice("sk", qkv, 1, 2, 4);
+        b.batched_matmul("scores", qh, kh, false, true);
+        b.softmax_rows("probs", qh);
+        b.merge_heads("mh", qh, 2);
+        let x = b.input("x", &[8, 8]);
+        let ga = b.weight("g", &[8]);
+        let be = b.weight("be", &[8]);
+        b.layer_norm("ln", x, ga, be);
+        let y = b.label("y", &[8, 8]);
+        b.softmax_xent("loss", x, y);
+        b.relu("relu", x);
+        let g = b.finish();
+        for op in &g.ops {
+            match semantics(&g, op) {
+                Sem::Grid { splittable, .. } => {
+                    let n_split = splittable.iter().filter(|&&s| s).count();
+                    assert_eq!(
+                        op.kind.batch_only(),
+                        n_split == 1,
+                        "batch_only disagrees with grid semantics for {}",
+                        op.name
+                    );
+                }
+                Sem::MatMulLike { .. } => assert!(!op.kind.batch_only(), "{}", op.name),
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_and_ident_are_elementwise() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[64, 32]);
+        let ge = b.gelu("gelu", x);
+        b.ident("wire", ge);
+        let g = b.finish();
+        let gelu = g.ops[0].clone();
+        let wire = g.ops[1].clone();
+        let s: u64 = 64 * 32 * 4;
+        assert_eq!(op_cost(&g, &gelu, &[R], R), 0);
+        assert_eq!(op_cost(&g, &wire, &[C], C), 0);
+        // A wire hop with a tiling change prices exactly one conversion.
+        assert_eq!(op_cost(&g, &wire, &[R], C), s / 2);
     }
 
     #[test]

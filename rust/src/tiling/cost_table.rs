@@ -222,4 +222,37 @@ mod tests {
             assert_eq!(tables.price(&tiles), crate::planner::price(&g, &tiles));
         }
     }
+
+    #[test]
+    fn lut_price_matches_direct_price_on_transformer_graph() {
+        // The full tiny transformer training step: every new op kind
+        // (batched matmuls with both transpose patterns, layer norm +
+        // grads, row softmax + grad, gelu, head-view reshapes, identity
+        // wires) goes through the LUT path and must reprice identically to
+        // direct Eq. (2) evaluation on random assignments.
+        let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
+        let tables = CostTables::build(&g);
+        let alias = g.steady_state_aliases();
+        let mut rng = Rng::new(0x5EED);
+        for _ in 0..200 {
+            let mut tiles: Vec<Tile> =
+                g.tensors.iter().map(|t| *rng.choose(&tables.cands[t.id])).collect();
+            for t in 0..tiles.len() {
+                tiles[t] = tiles[alias[t]];
+            }
+            assert_eq!(tables.price(&tiles), crate::planner::price(&g, &tiles));
+        }
+    }
+
+    #[test]
+    fn transformer_tables_stay_dense_and_small() {
+        // Rank-3 candidate pruning keeps every per-op table tiny: the
+        // biggest surface is a batched matmul over three rank-3 operands
+        // (2³ = 8 entries padded by the rank-2 neighbours' radix).
+        let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
+        let tables = CostTables::build(&g);
+        for (op, t) in g.ops.iter().zip(&tables.ops) {
+            assert!(t.costs.len() <= 81, "op {} table has {} entries", op.name, t.costs.len());
+        }
+    }
 }

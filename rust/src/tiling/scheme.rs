@@ -62,6 +62,13 @@ pub fn shard_shape(shape: &[usize], seq: &[Tile]) -> Vec<usize> {
 ///
 /// - scalars: replication only;
 /// - matrices / vectors: any even dimension, plus replication (`T^1`);
+/// - 3-D attention tensors (`[B·H, S, D/H]` head views, `[B·H, S, S]`
+///   score/probability maps): the leading batch/head axis only — the
+///   §4.5 pruning argument for conv image dimensions applies verbatim:
+///   seq/feature splits of these tensors are dominated by batch splits
+///   (every aligned form that uses them pays reshape conversions at the
+///   head-view boundaries), and admitting them would square the one-cut
+///   DP's boundary spaces;
 /// - 4-D conv activations (NHWC): batch or channel — §4.5 shows image-dim
 ///   tilings are dominated by data parallelism, so they are pruned exactly
 ///   as in the paper's implementation;
@@ -70,6 +77,7 @@ pub fn candidate_tiles(t: &TensorInfo) -> Vec<Tile> {
     let mut out = vec![Tile::Rep];
     let dims: Vec<usize> = match (t.rank(), t.kind) {
         (0, _) => vec![],
+        (3, _) => vec![0],
         (4, TensorKind::Weight) | (4, TensorKind::WeightGrad) | (4, TensorKind::UpdatedWeight) => {
             vec![2, 3]
         }
@@ -148,5 +156,15 @@ mod tests {
     fn odd_dims_not_splittable() {
         let c = candidate_tiles(&info(&[7, 4], TensorKind::Activation));
         assert_eq!(c, vec![Tile::Rep, Tile::Split(1)]);
+    }
+
+    #[test]
+    fn rank3_candidates_batch_axis_only() {
+        // Attention head views: only the leading batch/head axis tiles.
+        let c = candidate_tiles(&info(&[32, 128, 64], TensorKind::Activation));
+        assert_eq!(c, vec![Tile::Rep, Tile::Split(0)]);
+        // Odd batch axis: replication only.
+        let c = candidate_tiles(&info(&[3, 128, 64], TensorKind::Gradient));
+        assert_eq!(c, vec![Tile::Rep]);
     }
 }

@@ -9,7 +9,7 @@ use std::sync::Arc;
 #[cfg(feature = "pjrt")]
 use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, SyntheticData};
 use soybean::exec::build_shard_tasks;
-use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
+use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 #[cfg(feature = "pjrt")]
 use soybean::planner::baselines;
 use soybean::planner::{classify, k_cut, Planner, Strategy};
@@ -162,6 +162,50 @@ fn all_plans_materialize() {
             }
         }
     }
+}
+
+/// The transformer workload end to end through the public API: plan an
+/// encoder stack, pin the DP cost against direct Eq. (2) repricing, check
+/// reference equivalence, materialize the schedule, and assert the
+/// simulator meters exactly the plan's Theorem-1 cost — the same
+/// one-theory contract the paper workloads are held to.
+#[test]
+fn transformer_workload_end_to_end() {
+    // One-cut on the 1-layer stack: LUT-backed DP == pre-LUT reference,
+    // bit for bit (the 2-layer reference solve is release-bench territory;
+    // `transformer_micro` asserts it there on every CI run).
+    let g1 = transformer(&TransformerConfig::tiny());
+    let fast = soybean::planner::one_cut(&g1);
+    let slow = soybean::planner::reference::one_cut_reference(&g1);
+    assert_eq!(fast.cost, slow.cost, "transformer one_cut cost diverged from reference");
+    assert_eq!(fast.tiles, slow.tiles, "transformer one_cut tiles diverged from reference");
+
+    let cfg = TransformerConfig { layers: 2, ..TransformerConfig::tiny() };
+    let g = transformer(&cfg);
+    let fast = soybean::planner::one_cut(&g);
+    assert_eq!(soybean::planner::price(&g, &fast.tiles), fast.cost);
+
+    // k-cut plan: per-cut costs reprice identically through direct
+    // evaluation on the halved graphs.
+    let plan = k_cut(&g, 2);
+    let re = soybean::planner::eval_plan(&g, &plan.tiles);
+    assert_eq!(plan.cut_costs, re.cut_costs, "transformer k_cut costs changed under repricing");
+
+    // Schedule + simulator: metered bytes equal the Theorem-1 total.
+    let tasks = build_shard_tasks(&g, &plan);
+    assert_eq!(tasks.len(), g.ops.len());
+    let sim_cfg = SimConfig::default();
+    let r = simulate(&g, &plan, &sim_cfg);
+    assert_eq!(r.total_bytes, plan.total_cost(), "sim bytes != transformer plan cost");
+
+    // And the plan moves no more bytes than stock data parallelism.
+    let dp = Planner::plan(&g, 2, Strategy::DataParallel);
+    assert!(
+        plan.total_cost() <= dp.total_cost(),
+        "transformer: soy {} > dp {}",
+        plan.total_cost(),
+        dp.total_cost()
+    );
 }
 
 /// Ablation: hierarchy-aware cut ordering (Theorem 3 / §5.1). The optimal

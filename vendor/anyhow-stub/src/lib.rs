@@ -1,0 +1,174 @@
+//! Offline stub of the `anyhow` error-handling surface used by the
+//! `pjrt`-gated runtime (`Error`, `Result`, `Context`, the `anyhow!` /
+//! `bail!` / `ensure!` macros).
+//!
+//! Exists so `cargo check --features pjrt` works in the offline image —
+//! the feature gate is compile-checked in CI instead of rotting silently.
+//! Behavior matches the real crate closely enough for that job: errors are
+//! a message string plus a context chain rendered through `Display`.
+
+use std::fmt;
+
+/// String-backed error with context frames (outermost first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => write!(f, "{c}: {}", self.msg),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+// Same shape as the real crate: any std error converts into `Error`
+// (which itself deliberately does *not* implement `std::error::Error`,
+// keeping the blanket impl coherent).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// Sealed conversion covering both std errors and `Error` itself, so
+// `.context(...)` works on `Result<_, anyhow::Error>` too — the same
+// two-impl shape the real crate uses.
+mod ext {
+    use super::Error;
+
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::msg(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().push_context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e = io_err().context("reading artifact").unwrap_err();
+        assert_eq!(format!("{e}"), "reading artifact: boom");
+        let e2: Error = io_err().unwrap_err().into();
+        assert_eq!(format!("{e2}"), "boom");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert!(format!("{}", f(false).unwrap_err()).contains("false"));
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(5u32).with_context(|| "unused").unwrap(), 5);
+    }
+}
