@@ -1,0 +1,102 @@
+//! Lowering + discrete-event engine micro-benchmark (ISSUE-3 acceptance
+//! gates):
+//!
+//! - lowering **plus** event-engine simulation of the 8-device (`k = 3`)
+//!   4-layer transformer plan completes in **< 1 s**;
+//! - the lowered per-instruction bytes sum exactly to the plan's
+//!   Theorem-1 cost, and the engine's per-tier meter matches
+//!   `sim::try_simulate` bit for bit;
+//! - the engine's step time stays inside the documented envelope of the
+//!   analytic model (DESIGN.md §Lowering).
+//!
+//! Results go to `BENCH_engine.json` (the `BENCH_planner.json` schema) for
+//! the CI perf-trajectory diff, and the transformer run's Chrome-trace
+//! timeline to `engine_trace.json` — CI uploads it as an artifact; load it
+//! in `chrome://tracing` or Perfetto to inspect the schedule.
+//!
+//! Run with `cargo bench --bench engine_micro`.
+
+use std::time::Duration;
+
+use soybean::lower::lower;
+use soybean::models::{alexnet, transformer, TransformerConfig};
+use soybean::planner::k_cut;
+use soybean::sim::{chrome_trace_json, run_program, try_simulate, SimConfig, Topology};
+use soybean::util::bench::{time_it, BenchLog};
+
+fn main() {
+    println!("== SPMD lowering + event-engine micro-benchmarks ==");
+    let mut log = BenchLog::new("engine_micro");
+    let cfg = SimConfig::default();
+    let topo = Topology::from_sim(&cfg, 3);
+
+    let workloads: Vec<(&str, soybean::Graph)> = vec![
+        ("alexnet", alexnet(64)),
+        ("encoder-4L", transformer(&TransformerConfig::micro())),
+    ];
+
+    let mut gate = None;
+    for (name, g) in &workloads {
+        let plan = k_cut(g, 3);
+        let p = lower(g, &plan, &cfg);
+        let sim = try_simulate(g, &plan, &cfg).expect("plan simulates");
+
+        // One-theory contract before any timing: lowered bytes == plan's
+        // Theorem-1 cost == per-tier simulator meter.
+        assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != plan cost");
+        assert_eq!(p.tier_bytes(), sim.tier_bytes, "{name}: tier meter != sim");
+
+        let r = run_program(&p, &topo);
+        assert_eq!(r.compute_s, sim.compute_s, "{name}: compute model diverged");
+        let slack = cfg.latency * r.transfers_per_device as f64 + 1e-9;
+        assert!(
+            r.step_s >= sim.compute_s && r.step_s <= sim.compute_s + sim.comm_s + slack,
+            "{name}: engine step {} outside the documented envelope",
+            r.step_s
+        );
+
+        let m_lower = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(lower(g, &plan, &cfg));
+        });
+        let m_engine = time_it(1, Duration::from_millis(300), || {
+            std::hint::black_box(run_program(&p, &topo));
+        });
+        log.row(
+            &format!("lower/{name}"),
+            &[
+                ("ms", format!("{:.2}", m_lower.mean_ms())),
+                ("instrs", p.programs[0].instrs.len().to_string()),
+                ("collectives", p.transfers.len().to_string()),
+                ("bytes", p.total_bytes().to_string()),
+            ],
+        );
+        log.row(
+            &format!("engine/{name}"),
+            &[
+                ("ms", format!("{:.2}", m_engine.mean_ms())),
+                ("step_ms", format!("{:.3}", r.step_s * 1e3)),
+                ("sim_step_ms", format!("{:.3}", sim.step_s * 1e3)),
+                ("compute_ms", format!("{:.3}", r.compute_s * 1e3)),
+                ("events", r.trace.len().to_string()),
+            ],
+        );
+
+        if *name == "encoder-4L" {
+            gate = Some(m_lower.mean.as_secs_f64() + m_engine.mean.as_secs_f64());
+            // The artifact CI uploads: the 8-device transformer timeline.
+            std::fs::write("engine_trace.json", chrome_trace_json(&r, &topo))
+                .expect("writing engine_trace.json");
+            println!("wrote engine_trace.json ({} events)", r.trace.len());
+        }
+    }
+
+    let gate = gate.expect("transformer workload ran");
+    assert!(
+        gate < 1.0,
+        "lowering + event simulation of the 8-device transformer took {:.0} ms (target < 1 s)",
+        gate * 1e3
+    );
+
+    log.write_json("BENCH_engine.json").expect("writing BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
+}

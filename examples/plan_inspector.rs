@@ -8,13 +8,57 @@
 //! the cuts land on the interconnect tiers accordingly.
 //!
 //! Run with: `cargo run --release --example plan_inspector`
+//!
+//! With `--lower`, each 8-device plan is additionally compiled into
+//! explicit per-device SPMD collective programs (vgg16, alexnet, and the
+//! transformer encoder), printing the instruction mix, the per-tier byte
+//! meter (which must equal the plan's Theorem-1 cost bit for bit — it is
+//! asserted here), and the head of device 0's stream. With `--trace`, the
+//! discrete-event engine schedules each program over the p2.8xlarge
+//! topology and writes `plan_trace_<model>.json` — load it in
+//! `chrome://tracing` or Perfetto to see the timeline.
 
 use soybean::exec::Placement;
-use soybean::models::{alexnet, mlp, transformer, MlpConfig, TransformerConfig};
+use soybean::lower::lower;
+use soybean::models::{alexnet, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 use soybean::planner::{classify, Planner, Strategy};
+use soybean::sim::{chrome_trace_json, run_program, simulate, SimConfig, Topology};
 use soybean::tiling::describe_seq;
 
+/// Compile the plan to SPMD programs and (optionally) schedule it.
+fn lower_and_trace(name: &str, g: &soybean::Graph, trace: bool) {
+    let cfg = SimConfig::default();
+    let topo = Topology::p2_8xlarge();
+    let plan = Planner::plan(g, 3, Strategy::Soybean);
+    let p = lower(g, &plan, &cfg);
+    assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != Theorem-1 cost");
+    println!("\n--- {name}: lowered SPMD program (8 devices) ---");
+    let mix: Vec<String> = p.histogram().iter().map(|(k, c)| format!("{c} {k}")).collect();
+    println!("instruction mix per device: {}", mix.join(", "));
+    for (j, (bytes, tier)) in p.tier_bytes().iter().zip(&topo.tiers).enumerate() {
+        println!("  tier {j} ({:>12}): {:.3} MB", tier.name, *bytes as f64 / 1e6);
+    }
+    println!("device 0 stream (head):");
+    print!("{}", p.describe_device(0, 14));
+    if trace {
+        let r = run_program(&p, &topo);
+        let sim = simulate(g, &plan, &cfg);
+        println!(
+            "event-engine step {:.3} ms (analytic model {:.3} ms, compute floor {:.3} ms)",
+            r.step_s * 1e3,
+            sim.step_s * 1e3,
+            r.compute_s * 1e3
+        );
+        let path = format!("plan_trace_{name}.json");
+        std::fs::write(&path, chrome_trace_json(&r, &topo)).expect("writing trace");
+        println!("wrote {path} ({} events) — open in chrome://tracing", r.trace.len());
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let do_lower = args.iter().any(|a| a == "--lower");
+    let do_trace = args.iter().any(|a| a == "--trace");
     let placement = Placement::p2_8xlarge();
 
     // 1. The §2.2 MLP: hybrid wins.
@@ -60,5 +104,14 @@ fn main() {
     for name in ["l0.wqkv", "l0.wo", "l0.ff1.w", "l0.slice_q.out", "l0.scores.out"] {
         let t = g.tensors.iter().find(|t| t.name == name).unwrap();
         println!("  {:<16} {:<18} {}", t.name, format!("{:?}", t.shape), describe_seq(&plan.tiles[t.id]));
+    }
+
+    // 4. `--lower [--trace]`: the back half of the system — compile each
+    // plan into explicit per-device collective programs and (with
+    // `--trace`) schedule them on the event engine.
+    if do_lower || do_trace {
+        lower_and_trace("vgg16", &vgg16(32), do_trace);
+        lower_and_trace("alexnet", &alexnet(128), do_trace);
+        lower_and_trace("transformer", &transformer(&TransformerConfig::micro()), do_trace);
     }
 }

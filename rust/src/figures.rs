@@ -123,9 +123,12 @@ pub fn example22() -> String {
     let mut s = String::new();
     let _ = writeln!(s, "== §2.2 worked example: 5-layer MLP(300), batch 400, 16 devices ==");
     let _ = writeln!(s, "paper accounting (bytes × devices × 2):");
-    let _ = writeln!(s, "  data parallelism : {:>6.1} MB (paper: 57.6)", paper_example::data_parallel_comm(&g, 16) as f64 / 1e6);
-    let _ = writeln!(s, "  model parallelism: {:>6.1} MB (paper: 76.8)", paper_example::model_parallel_comm(&g, 16) as f64 / 1e6);
-    let _ = writeln!(s, "  hybrid (4 groups): {:>6.1} MB (paper: 33.6)", paper_example::hybrid_comm(&g, 16, 4) as f64 / 1e6);
+    let dp_mb = paper_example::data_parallel_comm(&g, 16) as f64 / 1e6;
+    let mp_mb = paper_example::model_parallel_comm(&g, 16) as f64 / 1e6;
+    let hy_mb = paper_example::hybrid_comm(&g, 16, 4) as f64 / 1e6;
+    let _ = writeln!(s, "  data parallelism : {dp_mb:>6.1} MB (paper: 57.6)");
+    let _ = writeln!(s, "  model parallelism: {mp_mb:>6.1} MB (paper: 76.8)");
+    let _ = writeln!(s, "  hybrid (4 groups): {hy_mb:>6.1} MB (paper: 33.6)");
 
     // The §4 conversion model on the full training graph, 16 devices.
     let gt = mlp(&MlpConfig { batch: 400, dims: vec![300; 6], bias: false });
@@ -135,7 +138,12 @@ pub fn example22() -> String {
     let _ = writeln!(s, "§4 conversion-cost model (full training step, k=4):");
     let _ = writeln!(s, "  data parallelism : {:>6.1} MB", dp.total_cost() as f64 / 1e6);
     let _ = writeln!(s, "  model parallelism: {:>6.1} MB", mp.total_cost() as f64 / 1e6);
-    let _ = writeln!(s, "  SOYBEAN optimal  : {:>6.1} MB ({})", soy.total_cost() as f64 / 1e6, crate::planner::classify(&gt, &soy.tiles));
+    let _ = writeln!(
+        s,
+        "  SOYBEAN optimal  : {:>6.1} MB ({})",
+        soy.total_cost() as f64 / 1e6,
+        crate::planner::classify(&gt, &soy.tiles)
+    );
     s
 }
 

@@ -25,9 +25,15 @@
 //! - [`exec`] — §5: partitioning each operator into `2^k` sub-operators,
 //!   inserting three-phase tiling conversions, and placing shards on the
 //!   device hierarchy.
-//! - [`sim`] — the testbed substitute: a PCIe-tree interconnect and
-//!   shape-aware compute model that turns communication volumes into the
-//!   runtime/overhead numbers of the paper's figures.
+//! - [`lower`] — the SPMD lowering engine: compiles a `(Graph, Plan)` pair
+//!   into explicit per-device collective programs (`AllGather` /
+//!   `ReduceScatter` / `AllToAll` / `SendRecv` / `Wait` + local computes),
+//!   with per-instruction bytes that sum to the plan's Theorem-1 cost bit
+//!   for bit.
+//! - [`sim`] — the testbed substitute: the closed-form step model of the
+//!   paper figures, plus a discrete-event engine ([`sim::engine`]) that
+//!   schedules lowered programs over configurable hierarchical topologies
+//!   and emits Chrome-trace timelines.
 //! - [`runtime`] — the PJRT side: HLO-text artifact registry, dynamic
 //!   `XlaBuilder` kernels, and the multi-worker execution engine (real
 //!   buffers, real transfers; Python never runs here). Everything except
@@ -42,6 +48,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod figures;
 pub mod graph;
+pub mod lower;
 pub mod models;
 pub mod planner;
 pub mod runtime;

@@ -1,0 +1,291 @@
+//! The SPMD instruction set and lowered-program containers.
+//!
+//! A lowered program is one instruction stream *per device*. The streams
+//! are aligned: every device executes the same sequence of instruction
+//! kinds (SPMD), differing only in the byte share each device contributes
+//! to a collective. Transfers are *split-phase*: a collective instruction
+//! starts the transfer asynchronously and [`Instr::Wait`] joins it, which
+//! is what lets the event engine overlap communication with the compute of
+//! independent operators instead of applying a scalar overlap factor.
+//!
+//! Every transfer instruction references a [`TransferMeta`] by `gid`
+//! (global transfer id, shared by all participating devices), which records
+//! the tiling-conversion pattern the collective realizes and the bytes
+//! moved within each group pair — the unit the §4 cost model prices.
+
+use crate::graph::{OpId, TensorId};
+use crate::tiling::{Produced, Tile};
+
+/// Which collective realizes a tiling conversion (see
+/// [`super::lowering`] for the inference rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// `Split -> Rep`: every group fetches the half it is missing.
+    AllGather,
+    /// `Red -> Split`: partial sums cross the wire once, landing scattered.
+    ReduceScatter,
+    /// `Split(a) -> Split(b)`: each group swaps the off-diagonal quarter.
+    AllToAll,
+    /// Point-to-point ghost fetch between paired devices — the §5.2
+    /// realization for conversions with no symmetric collective shape
+    /// (e.g. the scalar loss allreduce, which cannot be scattered).
+    SendRecv,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllGather => "all_gather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::AllToAll => "all_to_all",
+            CollectiveKind::SendRecv => "send_recv",
+        }
+    }
+}
+
+/// One logical collective: the conversion it realizes and its group-pair
+/// byte volume. Shared by the instructions of every participating device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferMeta {
+    pub gid: usize,
+    pub kind: CollectiveKind,
+    /// The tensor being converted (id in the original, un-halved graph).
+    pub tensor: TensorId,
+    /// The cut (= interconnect tier, outermost first) this transfer
+    /// crosses. `2^cut` group pairs run the collective simultaneously.
+    pub cut: usize,
+    /// The layout the data leaves (producer side of the conversion).
+    pub from: Produced,
+    /// The layout the data arrives in.
+    pub to: Tile,
+    /// Bytes moved within *each* group pair — the §4.2.1 conversion cost of
+    /// this pattern at this cut's halved granularity. Tier traffic is
+    /// `pair_bytes << cut`; Theorem 1's weights fall out of that product.
+    pub pair_bytes: u64,
+}
+
+/// One SPMD instruction on one device.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// Execute this device's shard of `op` locally (all `k` cuts applied).
+    Compute { op: OpId, seconds: f64 },
+    /// Start an all-gather; `bytes` is this device's share of the pair
+    /// volume (shares over a pair sum to `TransferMeta::pair_bytes`).
+    AllGather { gid: usize, bytes: u64 },
+    /// Start a reduce-scatter of partial sums.
+    ReduceScatter { gid: usize, bytes: u64 },
+    /// Start an all-to-all re-tiling exchange.
+    AllToAll { gid: usize, bytes: u64 },
+    /// Start a point-to-point exchange with `peer` (the device mirrored
+    /// across the transfer's cut).
+    SendRecv { gid: usize, peer: usize, bytes: u64 },
+    /// Block until the transfer `gid` (started earlier on this device)
+    /// completes for this device's group pair.
+    Wait { gid: usize },
+}
+
+impl Instr {
+    /// Bytes this device moves for this instruction (0 for compute/wait).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Instr::AllGather { bytes, .. }
+            | Instr::ReduceScatter { bytes, .. }
+            | Instr::AllToAll { bytes, .. }
+            | Instr::SendRecv { bytes, .. } => *bytes,
+            Instr::Compute { .. } | Instr::Wait { .. } => 0,
+        }
+    }
+
+    /// The transfer this instruction starts, if it is a transfer start.
+    pub fn started_gid(&self) -> Option<usize> {
+        match self {
+            Instr::AllGather { gid, .. }
+            | Instr::ReduceScatter { gid, .. }
+            | Instr::AllToAll { gid, .. }
+            | Instr::SendRecv { gid, .. } => Some(*gid),
+            Instr::Compute { .. } | Instr::Wait { .. } => None,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Instr::Compute { .. } => "compute",
+            Instr::AllGather { .. } => "all_gather",
+            Instr::ReduceScatter { .. } => "reduce_scatter",
+            Instr::AllToAll { .. } => "all_to_all",
+            Instr::SendRecv { .. } => "send_recv",
+            Instr::Wait { .. } => "wait",
+        }
+    }
+}
+
+/// The instruction stream of one device.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceProgram {
+    pub device: usize,
+    pub instrs: Vec<Instr>,
+}
+
+impl DeviceProgram {
+    /// Total bytes this device contributes across all collectives.
+    pub fn bytes(&self) -> u64 {
+        self.instrs.iter().map(Instr::bytes).sum()
+    }
+
+    /// Number of transfer-start instructions.
+    pub fn transfer_count(&self) -> usize {
+        self.instrs.iter().filter(|i| i.started_gid().is_some()).count()
+    }
+
+    /// Seconds of local compute along this device's stream.
+    pub fn compute_seconds(&self) -> f64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Compute { seconds, .. } => *seconds,
+                _ => 0.0,
+            })
+            .sum()
+    }
+}
+
+/// A `(Graph, Plan)` pair compiled into explicit per-device SPMD programs.
+#[derive(Debug, Clone)]
+pub struct LoweredProgram {
+    /// Number of cuts (`devices == 2^k`).
+    pub k: usize,
+    pub devices: usize,
+    /// One aligned instruction stream per device.
+    pub programs: Vec<DeviceProgram>,
+    /// Per-`gid` collective metadata.
+    pub transfers: Vec<TransferMeta>,
+    /// Debug labels carried over from the graph (indexed by `OpId` /
+    /// `TensorId`) so dumps and traces stay readable without the graph.
+    pub op_names: Vec<String>,
+    pub tensor_names: Vec<String>,
+}
+
+impl LoweredProgram {
+    /// Total bytes across every device's instructions. Equals the plan's
+    /// Theorem-1 cost bit for bit (asserted in tests: the lowering derives
+    /// both from the same Eq. (2) form selection).
+    pub fn total_bytes(&self) -> u64 {
+        self.programs.iter().map(DeviceProgram::bytes).sum()
+    }
+
+    /// Bytes crossing each interconnect tier (index = cut, outermost
+    /// first), from the per-collective metadata.
+    pub fn tier_bytes(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.k];
+        for m in &self.transfers {
+            out[m.cut] += m.pair_bytes << m.cut;
+        }
+        out
+    }
+
+    /// Instruction-kind histogram over one device (streams are aligned, so
+    /// every device reports the same counts).
+    pub fn histogram(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: Vec<(&'static str, usize)> = Vec::new();
+        for i in &self.programs[0].instrs {
+            let name = i.kind_name();
+            match counts.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((name, 1)),
+            }
+        }
+        counts
+    }
+
+    /// Human-readable dump of one device's stream (first `limit`
+    /// instructions; `usize::MAX` for all).
+    pub fn describe_device(&self, device: usize, limit: usize) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let prog = &self.programs[device];
+        for (i, instr) in prog.instrs.iter().take(limit).enumerate() {
+            let line = match instr {
+                Instr::Compute { op, seconds } => {
+                    format!("compute        {:<24} {:.1} us", self.op_names[*op], seconds * 1e6)
+                }
+                Instr::Wait { gid } => {
+                    let m = &self.transfers[*gid];
+                    format!("wait           g{gid} ({} {})", m.kind.name(), self.tensor_names[m.tensor])
+                }
+                Instr::SendRecv { gid, peer, bytes } => {
+                    let m = &self.transfers[*gid];
+                    format!(
+                        "send_recv      {:<24} g{gid} cut{} peer{} {} B",
+                        self.tensor_names[m.tensor], m.cut, peer, bytes
+                    )
+                }
+                other => {
+                    let gid = other.started_gid().unwrap();
+                    let m = &self.transfers[gid];
+                    format!(
+                        "{:<14} {:<24} g{gid} cut{} {} B",
+                        other.kind_name(),
+                        self.tensor_names[m.tensor],
+                        m.cut,
+                        other.bytes()
+                    )
+                }
+            };
+            let _ = writeln!(s, "  [{i:>4}] {line}");
+        }
+        if prog.instrs.len() > limit {
+            let _ = writeln!(s, "  ... {} more", prog.instrs.len() - limit);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instr_accessors() {
+        let c = Instr::Compute { op: 0, seconds: 1.0 };
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.started_gid(), None);
+        let ag = Instr::AllGather { gid: 3, bytes: 128 };
+        assert_eq!(ag.bytes(), 128);
+        assert_eq!(ag.started_gid(), Some(3));
+        assert_eq!(Instr::Wait { gid: 3 }.started_gid(), None);
+        assert_eq!(Instr::SendRecv { gid: 1, peer: 2, bytes: 8 }.bytes(), 8);
+    }
+
+    #[test]
+    fn tier_bytes_apply_theorem1_weights() {
+        let p = LoweredProgram {
+            k: 2,
+            devices: 4,
+            programs: vec![DeviceProgram::default(); 4],
+            transfers: vec![
+                TransferMeta {
+                    gid: 0,
+                    kind: CollectiveKind::AllGather,
+                    tensor: 0,
+                    cut: 0,
+                    from: Produced::Tile(Tile::Split(0)),
+                    to: Tile::Rep,
+                    pair_bytes: 40,
+                },
+                TransferMeta {
+                    gid: 1,
+                    kind: CollectiveKind::ReduceScatter,
+                    tensor: 0,
+                    cut: 1,
+                    from: Produced::Red,
+                    to: Tile::Split(0),
+                    pair_bytes: 10,
+                },
+            ],
+            op_names: vec![],
+            tensor_names: vec!["t".into()],
+        };
+        // Cut 0 runs in one pair, cut 1 in two: 40 and 2*10.
+        assert_eq!(p.tier_bytes(), vec![40, 20]);
+    }
+}

@@ -1,0 +1,31 @@
+//! SPMD lowering: compiling a `(Graph, Plan)` pair into explicit
+//! per-device collective programs (the paper's §5 "parallel dataflow
+//! graph", made concrete).
+//!
+//! The planner stops at a tiling assignment plus analytic cost totals;
+//! this module builds the missing back half of the system: a small
+//! instruction set ([`Instr`]) of local computes and collectives
+//! (`AllGather` / `ReduceScatter` / `AllToAll` / `SendRecv` / `Wait`),
+//! one aligned stream per device, where every collective is *inferred*
+//! from the tiling-conversion pattern between the form a producer emits
+//! and the form a consumer requires ([`lowering`]'s table). Per-
+//! instruction byte counts are exactly the §4.2.1 conversion costs, so a
+//! lowered program's total traffic equals the plan's Theorem-1 cost bit
+//! for bit — the optimizer, the analytic simulator
+//! ([`crate::sim::try_simulate`]) and the discrete-event engine
+//! ([`crate::sim::engine`]) all stay on one theory.
+//!
+//! Consumers:
+//! - [`crate::sim::engine`] schedules lowered programs over a
+//!   hierarchical [`crate::sim::engine::Topology`] and emits
+//!   Chrome-trace timelines;
+//! - `plan_inspector --lower [--trace]` dumps programs and timelines for
+//!   the paper workloads;
+//! - `benches/engine_micro.rs` gates lowering + simulation wall-clock and
+//!   records the perf trajectory (`BENCH_engine.json`).
+
+mod ir;
+mod lowering;
+
+pub use ir::{CollectiveKind, DeviceProgram, Instr, LoweredProgram, TransferMeta};
+pub use lowering::{gather_realized_bytes, lower, try_lower, try_lower_forced};

@@ -79,6 +79,13 @@ impl Plan {
             .sum()
     }
 
+    /// The basic tiling of every tensor at cut `j` (outermost first) — the
+    /// slice plan consumers (simulator metering, SPMD lowering) walk cut by
+    /// cut over the `j`-times-halved graphs.
+    pub fn cut_tiles(&self, j: usize) -> Vec<Tile> {
+        self.tiles.iter().map(|s| s[j]).collect()
+    }
+
     /// Table of tensor tilings in paper notation (`soybean plan` output).
     pub fn describe(&self, g: &Graph) -> String {
         use std::fmt::Write as _;

@@ -1,0 +1,606 @@
+//! Discrete-event execution of lowered SPMD programs.
+//!
+//! Where [`super::try_simulate`] sums closed-form per-tier costs and
+//! credits overlap with a scalar fudge factor, this engine *schedules* the
+//! explicit per-device programs of [`crate::lower`]: devices advance
+//! instruction by instruction, transfers are split-phase (started
+//! asynchronously, joined by `Wait`), and compute/communication overlap
+//! falls out of the dependency structure instead of a knob — the
+//! FlexFlow/PaSE argument that simulated task graphs, not analytic
+//! totals, are what make strategy search trustworthy on real clusters.
+//!
+//! ## Topology
+//!
+//! [`Topology`] generalizes [`SimConfig`]'s flat tier lists into named
+//! per-tier links with bandwidth, latency, and a contention cap
+//! ([`TierLink::slots`]): the `2^cut` group pairs of a cut-`cut`
+//! collective run simultaneously, sharing the tier's aggregate
+//! `bandwidth · min(slots, 2^cut)` (§6.2's PCIe-contention observation,
+//! the same rule `try_simulate` applies). Tier lists extend beyond their
+//! length by the one [`super::extend_tier`] rule.
+//!
+//! ## Scheduling discipline
+//!
+//! Each device owns a ready pointer into its instruction stream. Computes
+//! occupy the device; transfer starts are free; a collective instance (one
+//! group pair of one `gid`) begins once **all** pair members have issued
+//! it and completes `transfer_seconds` later; `Wait` blocks the device
+//! until its pair's instance completes. Programs are SPMD-aligned, so the
+//! engine never deadlocks (every wait's transfer was issued earlier in the
+//! same stream on every device).
+//!
+//! ## Envelope (documented contract, asserted in tests)
+//!
+//! With a [`Topology::from_sim`] topology, the engine's step time is
+//! bracketed by the analytic model:
+//!
+//! `compute_s  <=  step_s  <=  compute_s + xfer_chain_s`
+//!
+//! where `compute_s` equals `try_simulate`'s compute term bit for bit
+//! (same shard model, same summation order) and `xfer_chain_s` — the
+//! per-device sum of transfer durations — exceeds `try_simulate`'s
+//! `comm_s` only by the extra per-instruction latency charges (the
+//! analytic model charges latency once per costed op-cut; the engine
+//! charges it once per collective phase). Metered bytes per tier are
+//! identical bit for bit.
+//!
+//! The engine additionally emits Chrome-trace JSON
+//! ([`chrome_trace_json`]): open `chrome://tracing` (or Perfetto) and load
+//! the file to see device compute/wait lanes and per-link transfer spans.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::lower::{Instr, LoweredProgram};
+
+use super::simulate::{extend_tier_index, SimConfig};
+
+/// One interconnect tier: a named link class crossed by one cut.
+#[derive(Debug, Clone)]
+pub struct TierLink {
+    pub name: String,
+    /// Per-transfer link bandwidth in bytes/s.
+    pub bandwidth: f64,
+    /// Fixed startup latency per transfer (s).
+    pub latency: f64,
+    /// Contention cap: how many simultaneous group-pair transfers the tier
+    /// sustains at full bandwidth before its aggregate saturates.
+    /// Fractional values mirror [`SimConfig::tier_parallel`].
+    pub slots: f64,
+}
+
+/// A hierarchical interconnect: `tiers[0]` is the slowest link, crossed by
+/// the outermost (first) cut — §5.1's placement. Indexing past the end
+/// repeats the last tier ([`extend_tier`]'s rule).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub tiers: Vec<TierLink>,
+}
+
+impl Topology {
+    /// The link crossed by cut `cut` (the shared [`extend_tier_index`]
+    /// rule: indexing past the configured depth repeats the last tier).
+    pub fn link(&self, cut: usize) -> &TierLink {
+        &self.tiers[extend_tier_index(self.tiers.len(), cut)]
+    }
+
+    /// Lift a [`SimConfig`]'s tier lists into an explicit `k`-tier
+    /// topology (both sides use [`extend_tier`], so they agree at every
+    /// depth). This is the topology under which the engine's envelope
+    /// against [`super::try_simulate`] holds.
+    pub fn from_sim(cfg: &SimConfig, k: usize) -> Self {
+        let tiers = (0..k.max(1))
+            .map(|j| TierLink {
+                name: format!("tier{j}"),
+                bandwidth: cfg.bw(j),
+                latency: cfg.latency,
+                slots: cfg.parallel(j),
+            })
+            .collect();
+        Topology { tiers }
+    }
+
+    /// The paper's testbed: QPI above PCIe switches above direct PCIe.
+    pub fn p2_8xlarge() -> Self {
+        let mut t = Self::from_sim(&SimConfig::default(), 3);
+        for (link, name) in t.tiers.iter_mut().zip(["QPI", "PCIe-switch", "PCIe"]) {
+            link.name = name.to_string();
+        }
+        t
+    }
+
+    /// A uniform hierarchy of `k` identical links.
+    pub fn flat(k: usize, bandwidth: f64, latency: f64, slots: f64) -> Self {
+        Topology {
+            tiers: (0..k.max(1))
+                .map(|j| TierLink { name: format!("flat{j}"), bandwidth, latency, slots })
+                .collect(),
+        }
+    }
+
+    /// Wall-clock of one group-pair transfer of `pair_bytes` at `cut`,
+    /// with all `2^cut` pairs sharing the tier's contention-capped
+    /// aggregate (the symmetric-peak rule `try_simulate` prices).
+    pub fn transfer_seconds(&self, cut: usize, pair_bytes: u64) -> f64 {
+        let l = self.link(cut);
+        if pair_bytes == 0 {
+            return l.latency;
+        }
+        let pairs = (1u64 << cut) as f64;
+        let agg = l.bandwidth * l.slots.min(pairs);
+        pair_bytes as f64 * pairs / agg + l.latency
+    }
+}
+
+/// Where a trace span lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// A device timeline (compute and wait spans).
+    Device(usize),
+    /// An interconnect link instance: tier `cut`, group pair `pair`.
+    Link { cut: usize, pair: usize },
+}
+
+/// One timeline span, convertible to a Chrome-trace complete event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub lane: Lane,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub bytes: u64,
+}
+
+/// Result of one engine run.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub devices: usize,
+    /// Makespan: when the last device retires its last instruction.
+    pub step_s: f64,
+    /// Per-device local compute seconds (streams are symmetric; this is
+    /// the max, and equals `try_simulate`'s compute term bit for bit).
+    pub compute_s: f64,
+    /// Per-device sum of transfer durations — the full-serialization upper
+    /// bound: `step_s <= compute_s + xfer_chain_s` (module docs).
+    pub xfer_chain_s: f64,
+    /// Bytes crossing each tier (index = cut); identical to the lowered
+    /// program's accounting and to `try_simulate`'s meter.
+    pub tier_bytes: Vec<u64>,
+    pub total_bytes: u64,
+    pub transfers_per_device: usize,
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Event-queue entry; min-heap by (time, seq) via reversed `Ord`.
+struct Ev {
+    time: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+enum EvKind {
+    /// Device `d` resumes executing its stream.
+    Dev(usize),
+    /// Transfer instance `(gid, pair)` completed.
+    Done(usize, usize),
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we pop the earliest event;
+        // `seq` breaks ties deterministically.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One group pair's share of one collective.
+#[derive(Debug, Clone, Default)]
+struct Instance {
+    bytes: u64,
+    issued: usize,
+    /// Latest issue time among pair members.
+    ready: f64,
+    completion: Option<f64>,
+    /// Devices parked in `Wait` until this instance completes.
+    waiters: Vec<usize>,
+}
+
+/// Run `program` over `topo` to completion and report the timeline.
+pub fn run_program(program: &LoweredProgram, topo: &Topology) -> EngineReport {
+    let devices = program.devices;
+    let k = program.k;
+    let mut instances: Vec<Vec<Instance>> = program
+        .transfers
+        .iter()
+        .map(|m| vec![Instance::default(); 1usize << m.cut])
+        .collect();
+    let mut pc = vec![0usize; devices];
+    let mut end = vec![0.0f64; devices];
+    let mut finished = vec![false; devices];
+    let mut parked_at = vec![0.0f64; devices];
+    let mut parked = vec![false; devices];
+    let mut xfer_chain = vec![0.0f64; devices];
+    let mut trace: Vec<TraceEvent> = Vec::new();
+
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for d in 0..devices {
+        seq += 1;
+        heap.push(Ev { time: 0.0, seq, kind: EvKind::Dev(d) });
+    }
+
+    while let Some(ev) = heap.pop() {
+        let d = match ev.kind {
+            EvKind::Done(gid, pair) => {
+                for w in std::mem::take(&mut instances[gid][pair].waiters) {
+                    seq += 1;
+                    heap.push(Ev { time: ev.time, seq, kind: EvKind::Dev(w) });
+                }
+                continue;
+            }
+            EvKind::Dev(d) => d,
+        };
+        let instrs = &program.programs[d].instrs;
+        let mut t = ev.time;
+        loop {
+            if pc[d] == instrs.len() {
+                end[d] = t;
+                finished[d] = true;
+                break;
+            }
+            match &instrs[pc[d]] {
+                Instr::Compute { op, seconds } => {
+                    if *seconds > 0.0 {
+                        trace.push(TraceEvent {
+                            name: program.op_names[*op].clone(),
+                            lane: Lane::Device(d),
+                            start_s: t,
+                            dur_s: *seconds,
+                            bytes: 0,
+                        });
+                    }
+                    t += *seconds;
+                    pc[d] += 1;
+                }
+                Instr::Wait { gid } => {
+                    let m = &program.transfers[*gid];
+                    let pair = d >> (k - m.cut);
+                    let inst = &mut instances[*gid][pair];
+                    match inst.completion {
+                        Some(c) => {
+                            let wait_from = if parked[d] { parked_at[d] } else { t };
+                            parked[d] = false;
+                            if c > wait_from {
+                                trace.push(TraceEvent {
+                                    name: format!("wait:{}", program.tensor_names[m.tensor]),
+                                    lane: Lane::Device(d),
+                                    start_s: wait_from,
+                                    dur_s: c - wait_from,
+                                    bytes: 0,
+                                });
+                            }
+                            if c > t {
+                                t = c;
+                            }
+                            pc[d] += 1;
+                        }
+                        None => {
+                            inst.waiters.push(d);
+                            parked[d] = true;
+                            parked_at[d] = t;
+                            break;
+                        }
+                    }
+                }
+                instr => {
+                    let gid = instr.started_gid().expect("non-compute, non-wait is a transfer");
+                    let m = &program.transfers[gid];
+                    let pair = d >> (k - m.cut);
+                    let members = devices >> m.cut;
+                    let inst = &mut instances[gid][pair];
+                    inst.bytes += instr.bytes();
+                    inst.issued += 1;
+                    if t > inst.ready {
+                        inst.ready = t;
+                    }
+                    if inst.issued == members {
+                        let dur = topo.transfer_seconds(m.cut, inst.bytes);
+                        let comp = inst.ready + dur;
+                        inst.completion = Some(comp);
+                        trace.push(TraceEvent {
+                            name: format!("{}:{}", m.kind.name(), program.tensor_names[m.tensor]),
+                            lane: Lane::Link { cut: m.cut, pair },
+                            start_s: inst.ready,
+                            dur_s: dur,
+                            bytes: inst.bytes,
+                        });
+                        for chain in &mut xfer_chain[pair * members..(pair + 1) * members] {
+                            *chain += dur;
+                        }
+                        seq += 1;
+                        heap.push(Ev { time: comp, seq, kind: EvKind::Done(gid, pair) });
+                    }
+                    pc[d] += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        finished.iter().all(|&f| f),
+        "engine wedged: a device never retired its stream (non-SPMD program?)"
+    );
+
+    EngineReport {
+        devices,
+        step_s: end.iter().fold(0.0f64, |a, &b| a.max(b)),
+        compute_s: program
+            .programs
+            .iter()
+            .map(|p| p.compute_seconds())
+            .fold(0.0f64, f64::max),
+        xfer_chain_s: xfer_chain.iter().fold(0.0f64, |a, &b| a.max(b)),
+        tier_bytes: program.tier_bytes(),
+        total_bytes: program.total_bytes(),
+        transfers_per_device: program.programs[0].transfer_count(),
+        trace,
+    }
+}
+
+/// Render a report's timeline as Chrome-trace JSON (`chrome://tracing` /
+/// Perfetto "load trace"). Devices appear as pid 0 threads, interconnect
+/// link instances as pid 1 threads named after their tier.
+pub fn chrome_trace_json(report: &EngineReport, topo: &Topology) -> String {
+    use std::fmt::Write as _;
+    fn esc(s: &str) -> String {
+        s.chars()
+            .flat_map(|c| match c {
+                '"' => "\\\"".chars().collect::<Vec<_>>(),
+                '\\' => "\\\\".chars().collect(),
+                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                c => vec![c],
+            })
+            .collect()
+    }
+    let link_tid = |cut: usize, pair: usize| (cut << 16) | pair;
+
+    let mut s = String::new();
+    s.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n");
+    let mut first = true;
+    let push = |s: &mut String, line: String, first: &mut bool| {
+        if !*first {
+            s.push_str(",\n");
+        }
+        *first = false;
+        s.push_str(&line);
+    };
+    for (pid, pname) in [(0, "devices"), (1, "interconnect")] {
+        push(
+            &mut s,
+            format!(
+                "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\"args\":{{\"name\":\"{pname}\"}}}}"
+            ),
+            &mut first,
+        );
+    }
+    for d in 0..report.devices {
+        push(
+            &mut s,
+            format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":0,\"tid\":{d},\"args\":{{\"name\":\"gpu{d}\"}}}}"
+            ),
+            &mut first,
+        );
+    }
+    // Name every link lane that actually carried traffic.
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for e in &report.trace {
+        if let Lane::Link { cut, pair } = e.lane {
+            if !seen.contains(&(cut, pair)) {
+                seen.push((cut, pair));
+                let lane_name = format!("{} pair{pair}", esc(&topo.link(cut).name));
+                let tid = link_tid(cut, pair);
+                push(
+                    &mut s,
+                    format!(
+                        "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{tid},\
+                         \"args\":{{\"name\":\"{lane_name}\"}}}}"
+                    ),
+                    &mut first,
+                );
+            }
+        }
+    }
+    for e in &report.trace {
+        let (pid, tid) = match e.lane {
+            Lane::Device(d) => (0usize, d),
+            Lane::Link { cut, pair } => (1, link_tid(cut, pair)),
+        };
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{{\"ph\":\"X\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3}",
+            esc(&e.name),
+            e.start_s * 1e6,
+            e.dur_s * 1e6
+        );
+        if e.bytes > 0 {
+            let _ = write!(line, ",\"args\":{{\"bytes\":{}}}", e.bytes);
+        }
+        line.push('}');
+        push(&mut s, line, &mut first);
+    }
+    s.push_str("\n]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{lower, try_lower_forced};
+    use crate::models::{mlp, transformer, MlpConfig, TransformerConfig};
+    use crate::planner::{classic_dp_form, Planner, Strategy};
+    use crate::sim::{try_simulate, SimConfig};
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn serial_program_is_pure_compute_time() {
+        let g = mlp(&MlpConfig::fig8(64, 32));
+        let plan = Planner::plan(&g, 0, Strategy::Soybean);
+        let p = lower(&g, &plan, &cfg());
+        let r = run_program(&p, &Topology::from_sim(&cfg(), 0));
+        assert_eq!(r.step_s, r.compute_s);
+        assert_eq!(r.total_bytes, 0);
+        assert_eq!(r.transfers_per_device, 0);
+        // One compute span per op on the single device lane.
+        assert_eq!(r.trace.len(), g.ops.len());
+    }
+
+    #[test]
+    fn engine_meter_matches_analytic_sim_bit_for_bit() {
+        let g = mlp(&MlpConfig::fig8(64, 64));
+        for k in 1..=3 {
+            let plan = Planner::plan(&g, k, Strategy::Soybean);
+            let p = lower(&g, &plan, &cfg());
+            let r = run_program(&p, &Topology::from_sim(&cfg(), k));
+            let sim = try_simulate(&g, &plan, &cfg()).unwrap();
+            assert_eq!(r.tier_bytes, sim.tier_bytes, "k={k}");
+            assert_eq!(r.total_bytes, plan.total_cost(), "k={k}");
+            // Same shard compute model, same summation order: exact.
+            assert_eq!(r.compute_s, sim.compute_s, "k={k}");
+        }
+    }
+
+    #[test]
+    fn step_time_within_documented_envelope() {
+        // The module-docs contract: compute <= step <= compute + chain.
+        let workloads: Vec<(&str, crate::graph::Graph, Vec<Strategy>)> = vec![
+            ("mlp", mlp(&MlpConfig::fig8(512, 1024)), Strategy::all().to_vec()),
+            (
+                "transformer",
+                transformer(&TransformerConfig::tiny()),
+                vec![Strategy::Soybean, Strategy::DataParallel],
+            ),
+        ];
+        for (name, g, strategies) in &workloads {
+            for &strat in strategies {
+                let plan = Planner::plan(g, 2, strat);
+                let p = if strat == Strategy::DataParallel {
+                    try_lower_forced(g, &plan, &cfg(), &classic_dp_form).unwrap()
+                } else {
+                    lower(g, &plan, &cfg())
+                };
+                let r = run_program(&p, &Topology::from_sim(&cfg(), 2));
+                assert!(r.step_s >= r.compute_s, "{name}/{}", strat.name());
+                assert!(
+                    r.step_s <= r.compute_s + r.xfer_chain_s + 1e-9,
+                    "{name}/{}: step {} > compute {} + chain {}",
+                    strat.name(),
+                    r.step_s,
+                    r.compute_s,
+                    r.xfer_chain_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dependency_driven_overlap_beats_full_serialization() {
+        // Gradient aggregation overlaps with the rest of the backward
+        // pass: the engine must land strictly under compute + chain.
+        let g = mlp(&MlpConfig::fig8(512, 4096));
+        let plan = Planner::plan(&g, 3, Strategy::DataParallel);
+        let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
+        let r = run_program(&p, &Topology::from_sim(&cfg(), 3));
+        assert!(r.xfer_chain_s > 0.0);
+        assert!(
+            r.step_s < r.compute_s + r.xfer_chain_s,
+            "no overlap: step {} == compute {} + chain {}",
+            r.step_s,
+            r.compute_s,
+            r.xfer_chain_s
+        );
+    }
+
+    #[test]
+    fn infinite_bandwidth_zero_latency_collapses_to_compute() {
+        let g = mlp(&MlpConfig::fig8(128, 256));
+        let plan = Planner::plan(&g, 2, Strategy::Soybean);
+        let p = lower(&g, &plan, &cfg());
+        let r = run_program(&p, &Topology::flat(2, f64::INFINITY, 0.0, 4.0));
+        assert_eq!(r.step_s, r.compute_s);
+        assert!(r.total_bytes > 0, "bytes still metered, just free");
+    }
+
+    #[test]
+    fn trace_spans_fit_inside_the_step() {
+        let g = transformer(&TransformerConfig::tiny());
+        let plan = Planner::plan(&g, 2, Strategy::Soybean);
+        let p = lower(&g, &plan, &cfg());
+        let r = run_program(&p, &Topology::p2_8xlarge());
+        assert!(!r.trace.is_empty());
+        for e in &r.trace {
+            assert!(e.start_s >= 0.0 && e.dur_s >= 0.0, "{}", e.name);
+            assert!(e.start_s + e.dur_s <= r.step_s + 1e-9, "{} spills past the step", e.name);
+        }
+        // Both lane families show up.
+        assert!(r.trace.iter().any(|e| matches!(e.lane, Lane::Device(_))));
+        assert!(r.trace.iter().any(|e| matches!(e.lane, Lane::Link { .. })));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
+        let plan = Planner::plan(&g, 1, Strategy::Soybean);
+        let p = lower(&g, &plan, &cfg());
+        let topo = Topology::p2_8xlarge();
+        let r = run_program(&p, &topo);
+        let json = chrome_trace_json(&r, &topo);
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.len() >= g.ops.len());
+        // Every complete event carries non-negative microsecond stamps.
+        for e in events {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
+                assert!(e.get("ts").is_some() && e.get("dur").is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn topology_extends_past_configured_tiers_by_one_rule() {
+        let topo = Topology::from_sim(&cfg(), 5);
+        // SimConfig default has 3 tiers; depths 3+ repeat the innermost.
+        assert_eq!(topo.link(4).bandwidth, cfg().bw(4));
+        assert_eq!(topo.link(4).slots, cfg().parallel(4));
+        assert_eq!(topo.link(4).bandwidth, topo.link(2).bandwidth);
+        assert_eq!(topo.link(4).slots, topo.link(2).slots);
+    }
+
+    #[test]
+    fn deeper_pairs_share_the_tier_aggregate() {
+        // 4 simultaneous pairs on a 2-slot tier take twice as long per
+        // byte as 2 pairs on the same tier.
+        let topo = Topology::flat(4, 1e9, 0.0, 2.0);
+        let one = topo.transfer_seconds(1, 1_000_000); // 2 pairs, 2 slots
+        let two = topo.transfer_seconds(2, 1_000_000); // 4 pairs, 2 slots
+        assert!((two / one - 2.0).abs() < 1e-12, "{one} vs {two}");
+    }
+}

@@ -11,11 +11,21 @@
 //! (runtime minus compute-only runtime — the paper's metric, which credits
 //! overlap).
 
+//! Two accountings share the metering theory:
+//!
+//! - the closed-form step model in [`simulate`] (per-tier byte sums,
+//!   scalar overlap credit) drives the paper-figure sweeps;
+//! - the discrete-event engine in [`engine`] schedules the explicit
+//!   per-device programs of [`crate::lower`] over a hierarchical
+//!   [`engine::Topology`] and emits Chrome-trace timelines.
+
 pub mod compute;
+pub mod engine;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
+pub use engine::{chrome_trace_json, run_program, EngineReport, TierLink, Topology};
 pub use simulate::{
-    simulate, simulate_classic_dp, simulate_forced, try_simulate, try_simulate_forced, SimConfig,
-    SimReport,
+    extend_tier, extend_tier_index, simulate, simulate_classic_dp, simulate_forced,
+    try_simulate, try_simulate_forced, SimConfig, SimReport,
 };

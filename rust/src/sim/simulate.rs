@@ -65,13 +65,33 @@ impl SimConfig {
         self
     }
 
-    fn bw(&self, tier: usize) -> f64 {
-        *self.tier_bandwidth.get(tier).unwrap_or_else(|| self.tier_bandwidth.last().unwrap())
+    /// Bandwidth of interconnect tier `tier`, under the shared
+    /// [`extend_tier`] rule.
+    pub fn bw(&self, tier: usize) -> f64 {
+        extend_tier(&self.tier_bandwidth, tier)
     }
 
-    fn parallel(&self, tier: usize) -> f64 {
-        *self.tier_parallel.get(tier).unwrap_or_else(|| self.tier_parallel.last().unwrap())
+    /// Contention cap of tier `tier`, under the shared [`extend_tier`]
+    /// rule — bandwidth and parallelism always extend in lockstep.
+    pub fn parallel(&self, tier: usize) -> f64 {
+        extend_tier(&self.tier_parallel, tier)
     }
+}
+
+/// THE extension rule for per-tier parameter lists: indexing past the end
+/// repeats the last entry. Every consumer (`tier_bandwidth`,
+/// `tier_parallel`, [`super::engine::Topology`] links) goes through this
+/// one helper, so a `k` deeper than the configured hierarchy can never
+/// pick up a mismatched bandwidth/contention pair.
+pub fn extend_tier<T: Copy>(list: &[T], tier: usize) -> T {
+    list[extend_tier_index(list.len(), tier)]
+}
+
+/// The index form of [`extend_tier`], for consumers holding non-`Copy`
+/// per-tier lists (e.g. [`super::engine::Topology`]'s named links).
+pub fn extend_tier_index(len: usize, tier: usize) -> usize {
+    assert!(len > 0, "per-tier parameter list must not be empty");
+    tier.min(len - 1)
 }
 
 /// Simulation result for one training step.
@@ -318,6 +338,27 @@ mod tests {
         let r1 = simulate(&g, &Planner::plan(&g, 1, Strategy::Soybean), &cfg());
         let r3 = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
         assert!(r3.compute_s < r1.compute_s);
+    }
+
+    #[test]
+    fn tier_lists_extend_by_one_rule() {
+        // Bandwidth and contention must extend in lockstep past the
+        // configured hierarchy: both go through `extend_tier`, so a deep k
+        // can never pair tier-3 bandwidth with tier-0 parallelism.
+        let mut c = cfg();
+        c.tier_bandwidth = vec![8.0e9, 10.0e9, 12.0e9];
+        c.tier_parallel = vec![1.0, 2.0];
+        for tier in 0..8 {
+            assert_eq!(c.bw(tier), c.tier_bandwidth[tier.min(2)], "tier {tier}");
+            assert_eq!(c.parallel(tier), c.tier_parallel[tier.min(1)], "tier {tier}");
+        }
+        assert_eq!(extend_tier(&[5u64], 100), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not be empty")]
+    fn empty_tier_list_rejected() {
+        extend_tier::<f64>(&[], 0);
     }
 
     #[test]

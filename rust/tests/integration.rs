@@ -9,13 +9,17 @@ use std::sync::Arc;
 #[cfg(feature = "pjrt")]
 use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, SyntheticData};
 use soybean::exec::build_shard_tasks;
+use soybean::lower::{lower, try_lower_forced, Instr};
 use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 #[cfg(feature = "pjrt")]
 use soybean::planner::baselines;
-use soybean::planner::{classify, k_cut, Planner, Strategy};
+use soybean::planner::{classic_dp_form, classify, k_cut, Planner, Strategy};
 #[cfg(feature = "pjrt")]
 use soybean::runtime::{ArtifactRegistry, Client};
-use soybean::sim::{simulate, simulate_classic_dp, SimConfig};
+use soybean::sim::{
+    chrome_trace_json, run_program, simulate, simulate_classic_dp, try_simulate, SimConfig,
+    Topology,
+};
 
 #[cfg(feature = "pjrt")]
 fn artifacts() -> ArtifactRegistry {
@@ -224,6 +228,75 @@ fn ablation_cut_ordering_matches_placement() {
             );
         }
     }
+}
+
+/// The ISSUE-3 acceptance gate, end to end through the public API: for
+/// vgg16, alexnet, and the 4-layer transformer at 8 devices, the lowered
+/// SPMD programs' per-instruction bytes sum **exactly** to the plan's
+/// Theorem-1 cost (and to the analytic simulator's per-tier meter), and
+/// the discrete-event engine's step time sits inside the documented
+/// envelope of `sim::try_simulate` under the default topology:
+///
+/// `sim.compute_s <= step_s <= sim.compute_s + sim.comm_s + L·transfers`
+///
+/// where `L` is the per-transfer latency (the engine charges latency per
+/// collective phase; the analytic model once per costed op-cut — see
+/// DESIGN.md §Lowering).
+#[test]
+fn lowering_acceptance_vgg_alexnet_transformer_8_devices() {
+    let sim_cfg = SimConfig::default();
+    let topo = Topology::from_sim(&sim_cfg, 3);
+    let workloads: Vec<(&str, soybean::Graph)> = vec![
+        ("vgg16", vgg16(16)),
+        ("alexnet", alexnet(64)),
+        ("transformer-4L", transformer(&TransformerConfig::micro())),
+    ];
+    for (name, g) in &workloads {
+        let plan = Planner::plan(g, 3, Strategy::Soybean);
+        let p = lower(g, &plan, &sim_cfg);
+        assert_eq!(p.devices, 8, "{name}");
+        assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != Theorem-1 cost");
+
+        let sim = try_simulate(g, &plan, &sim_cfg).unwrap();
+        assert_eq!(p.tier_bytes(), sim.tier_bytes, "{name}: per-tier meter diverged");
+
+        let r = run_program(&p, &topo);
+        assert_eq!(r.compute_s, sim.compute_s, "{name}: compute model diverged");
+        assert_eq!(r.total_bytes, sim.total_bytes, "{name}");
+        assert!(r.step_s >= sim.compute_s, "{name}: step below compute floor");
+        let slack = sim_cfg.latency * r.transfers_per_device as f64 + 1e-9;
+        assert!(
+            r.step_s <= sim.compute_s + sim.comm_s + slack,
+            "{name}: step {} outside envelope [{}, {}]",
+            r.step_s,
+            sim.compute_s,
+            sim.compute_s + sim.comm_s + slack
+        );
+    }
+}
+
+/// The classic-DP lowering keeps the same contract on the DP baseline
+/// plans (gradient aggregation as reduce-scatter + all-gather), and the
+/// Chrome trace of a lowered run is well-formed JSON.
+#[test]
+fn classic_dp_lowering_and_trace_roundtrip() {
+    let sim_cfg = SimConfig::default();
+    let g = alexnet(64);
+    let plan = Planner::plan(&g, 2, Strategy::DataParallel);
+    let p = try_lower_forced(&g, &plan, &sim_cfg, &classic_dp_form).unwrap();
+    assert_eq!(p.total_bytes(), plan.total_cost(), "DP lowered bytes != plan cost");
+    let sim = simulate_classic_dp(&g, &plan, &sim_cfg);
+    assert_eq!(p.tier_bytes(), sim.tier_bytes);
+    // Aggregation dominates DP traffic: reduce-scatter volume present.
+    assert!(
+        p.programs[0].instrs.iter().any(|i| matches!(i, Instr::ReduceScatter { .. })),
+        "DP program has no reduce-scatter phase"
+    );
+    let topo = Topology::from_sim(&sim_cfg, 2);
+    let r = run_program(&p, &topo);
+    let trace = chrome_trace_json(&r, &topo);
+    let doc = soybean::util::json::parse(&trace).expect("chrome trace parses");
+    assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
 }
 
 /// Full-stack numerics: serial Pallas artifact == serial jnp artifact ==

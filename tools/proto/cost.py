@@ -1,0 +1,256 @@
+#!/usr/bin/env python3
+"""Mirror of tiling/aligned.rs op_cost for the new transformer ops.
+Validates: (a) every op in the V3 graph has a feasible aligned form under
+candidate tilings at every k-cut level; (b) brute-force optimum on a tiny
+attention core behaves sensibly (batch splits win; cost plausible)."""
+import itertools
+from topo import *
+
+REP = ("rep",)
+def S(d): return ("split", d)
+
+INF = (1 << 54)
+
+def bytes_of(g, t):
+    p = 4
+    for d in g.shape(t):
+        p *= d
+    return p
+
+def conv_cost(nbytes, frm, to):
+    # frm: ("tile", t) or ("red",); to: tile
+    if frm[0] == "tile":
+        a = frm[1]
+        if a == REP: return 0
+        if a == to: return 0
+        if a[0] == "split" and to[0] == "split": return nbytes // 2
+        if a[0] == "split" and to == REP: return nbytes
+        raise AssertionError((frm, to))
+    else:  # red
+        if to[0] == "split": return nbytes
+        return 2 * nbytes
+
+def feasible(g, t, tile):
+    if tile == REP: return True
+    d = tile[1]
+    sh = g.shape(t)
+    return d < len(sh) and sh[d] >= 2 and sh[d] % 2 == 0
+
+def ew_splittable(rank, weight_like):
+    if rank == 4 and not weight_like: return [True, False, False, True]
+    if rank == 4 and weight_like: return [False, False, True, True]
+    return [True] * rank
+
+def ident_map(rank): return [("d", i) for i in range(rank)]
+NONE = ("none",)
+
+def semantics(g, op):
+    """returns ('grid', splittable, in_maps, out_map, allow_rep) or ('mm', xmap, ymap, zmap)"""
+    name, kind, ins, outs = op
+    k0 = kind[0]
+    if k0 == "MatMul":
+        _, ta, tb = kind
+        x = (("d", 1 if ta else 0), ("d", 0 if ta else 1))
+        y = (("d", 1 if tb else 0), ("d", 0 if tb else 1))
+        z = (("d", 0), ("d", 1))
+        return ("mm", x, y, z)
+    if k0 == "BMM":
+        _, ta, tb = kind
+        am, ak = (2, 1) if ta else (1, 2)
+        bk, bn = (1, 2) if tb else (2, 1)
+        bn, bk = (1, 2) if tb else (2, 1)
+        # careful: B stored [G, x, y]; k_dim = tb?2:1 ; n_dim = tb?1:2
+        bk = 2 if tb else 1
+        bn = 1 if tb else 2
+        in_a = [("d",0), ("d",am), NONE, ("d",ak)]
+        in_b = [("d",0), NONE, ("d",bn), ("d",bk)]
+        out  = [("d",0), ("d",1), ("d",2), NONE]
+        return ("grid", [True]*4, [in_a, in_b], out, False)
+    if k0 == "Ew":
+        rank = len(g.shape(op[3][0]))
+        return ("grid", ew_splittable(rank, False), [ident_map(rank) for _ in ins], ident_map(rank), False)
+    if k0 == "BiasAdd":
+        rank = len(g.shape(ins[0]))
+        bm = [NONE]*rank; bm[rank-1] = ("d",0)
+        return ("grid", ew_splittable(rank, False), [ident_map(rank), bm], ident_map(rank), False)
+    if k0 == "SoftmaxXent":
+        return ("grid", [True, False], [ident_map(2), ident_map(2)], [NONE, NONE], False)
+    if k0 == "SoftmaxXentGrad":
+        return ("grid", [True, False], [ident_map(2), ident_map(2)], ident_map(2), False)
+    if k0 == "ReduceSumRows":
+        return ("grid", [True, True], [ident_map(2)], [NONE, ("d",0)], False)
+    if k0 == "SgdUpdate":
+        rank = len(g.shape(ins[0]))
+        return ("grid", ew_splittable(rank, rank == 4), [ident_map(rank)]*2, ident_map(rank), True)
+    if k0 == "LayerNorm":
+        affine = kind[1]
+        maps = [ident_map(2)]
+        if affine: maps += [[NONE, ("d",0)], [NONE, ("d",0)]]
+        return ("grid", [True, False], maps, ident_map(2), False)
+    if k0 == "LayerNormGrad":
+        maps = [ident_map(2), ident_map(2)] + ([[NONE, ("d",0)]] if len(ins) == 3 else [])
+        return ("grid", [True, False], maps, ident_map(2), False)
+    if k0 == "LayerNormGammaGrad":
+        return ("grid", [True, True], [ident_map(2), ident_map(2)], [NONE, ("d",0)], False)
+    if k0 == "Softmax":
+        rank = len(g.shape(ins[0]))
+        return ("grid", [True]*(rank-1) + [False], [ident_map(rank)], ident_map(rank), False)
+    if k0 == "SoftmaxGrad":
+        rank = len(g.shape(ins[0]))
+        return ("grid", [True]*(rank-1) + [False], [ident_map(rank)]*2, ident_map(rank), False)
+    if k0 in ("SplitHeads", "MergeHeads", "SliceHeads"):
+        return ("grid", [True], [[("d",0)] for _ in ins], [("d",0)], False)
+    if k0 == "ConcatHeads":
+        return ("grid", [True], [[("d",0)] for _ in ins], [("d",0)], False)
+    raise AssertionError(k0)
+
+def req_tile(m):
+    return REP if m == NONE else S(m[1])
+
+def op_cost(g, op, ins_t, out_t):
+    name, kind, ins, outs = op
+    sem = semantics(g, op)
+    best = INF
+    bz = bytes_of(g, outs[0])
+    if sem[0] == "mm":
+        _, x, y, z = sem
+        tx, ty, tz = ins[0], ins[1], outs[0]
+        bx, by = bytes_of(g, tx), bytes_of(g, ty)
+        forms = [
+            (req_tile(("d", x[0][1])), REP, ("tile", req_tile(("d", z[0][1])))),
+            (REP, req_tile(("d", y[1][1])), ("tile", req_tile(("d", z[1][1])))),
+            (req_tile(("d", x[1][1])), req_tile(("d", y[0][1])), ("red",)),
+        ]
+        for rx, ry, prod in forms:
+            if not feasible(g, tx, rx) or not feasible(g, ty, ry): continue
+            if prod[0] == "tile" and not feasible(g, tz, prod[1]): continue
+            c = conv_cost(bx, ("tile", ins_t[0]), rx) + conv_cost(by, ("tile", ins_t[1]), ry)
+            c += conv_cost(bz, prod, out_t)
+            best = min(best, c)
+        return best
+    _, splittable, in_maps, out_map, allow_rep = sem
+    if allow_rep:
+        c = sum(conv_cost(bytes_of(g, t), ("tile", ins_t[i]), REP) for i, t in enumerate(ins))
+        c += conv_cost(bz, ("tile", REP), out_t)
+        best = min(best, c)
+    for ax, ok in enumerate(splittable):
+        if not ok: continue
+        c = 0
+        bad = False
+        for i, m in enumerate(in_maps):
+            r = req_tile(m[ax])
+            if not feasible(g, ins[i], r): bad = True; break
+            c += conv_cost(bytes_of(g, ins[i]), ("tile", ins_t[i]), r)
+        if bad: continue
+        if out_map[ax] == NONE:
+            prod = ("red",)
+        else:
+            t = S(out_map[ax][1])
+            if not feasible(g, outs[0], t): continue
+            prod = ("tile", t)
+        c += conv_cost(bz, prod, out_t)
+        best = min(best, c)
+    return best
+
+def candidates(g, t, rank3_dims=(0,)):
+    nm, shape, kind = g.tensors[t]
+    r = len(shape)
+    out = [REP]
+    if r == 0: return out
+    if r == 4 and kind in (WEIGHT, WGRAD, UPD): dims = [2, 3]
+    elif r == 4: dims = [0, 3]
+    elif r == 3: dims = list(rank3_dims)
+    else: dims = list(range(r))
+    for d in dims:
+        if shape[d] >= 2 and shape[d] % 2 == 0: out.append(S(d))
+    return out
+
+def price(g, tiles):
+    tot = 0
+    for op in g.ops:
+        _, _, ins, outs = op
+        c = op_cost(g, op, [tiles[t] for t in ins], tiles[outs[0]])
+        tot += c
+        if c >= INF: return INF
+    return tot
+
+def dp_assignment(g):
+    """The classic data-parallel assignment: params Rep, rest Split(0) if even."""
+    tiles = []
+    for t, (nm, shape, kind) in enumerate(g.tensors):
+        if kind in (WEIGHT, WGRAD, UPD, SCALAR) or not shape:
+            tiles.append(REP)
+        elif shape[0] % 2 == 0:
+            tiles.append(S(0))
+        else:
+            tiles.append(REP)
+    return tiles
+
+def apply_cut(g, tiles):
+    import copy
+    g2 = G()
+    g2.tensors = [[n, list(s), k] for n, s, k in g.tensors]
+    g2.ops = [[n, k, list(i), list(o)] for n, k, i, o in g.ops]
+    for t, tile in enumerate(tiles):
+        if tile != REP:
+            d = tile[1]
+            assert g2.tensors[t][1][d] % 2 == 0
+            g2.tensors[t][1][d] //= 2
+    return g2
+
+if __name__ == "__main__":
+    # (a) feasibility of DP assignment across 3 k-cut levels on micro config
+    g = transformer_v2(8, 128, 256, 4, 1024, 4, 256, fused=True)
+    alias = aliases(g)
+    cur = g
+    for cut in range(3):
+        tiles = dp_assignment(cur)
+        for t in range(len(tiles)):
+            tiles[t] = tiles[alias[t]]
+        c = price(cur, tiles)
+        assert c < INF, f"cut {cut}: DP assignment infeasible"
+        wb = sum(bytes_of(cur, t) for t, (n, s, k) in enumerate(cur.tensors) if k == WEIGHT)
+        print(f"cut {cut}: DP-style price = {c:,} bytes (2*|w| = {2*wb:,})")
+        cur = apply_cut(cur, tiles)
+    # every op must have a finite-cost entry for at least one candidate combo, each cut
+    cur = g
+    for cut in range(3):
+        for op in cur.ops:
+            _, _, ins, outs = op
+            ok = False
+            for combo in itertools.product(*[candidates(cur, t) for t in ins + [outs[0]]]):
+                if op_cost(cur, op, list(combo[:-1]), combo[-1]) < INF:
+                    ok = True
+                    break
+            assert ok, f"cut {cut}: op {op[0]} has no feasible candidate combo"
+        tiles = dp_assignment(cur)
+        for t in range(len(tiles)):
+            tiles[t] = tiles[alias[t]]
+        cur = apply_cut(cur, tiles)
+    print("feasibility: every op has a feasible combo at cuts 0..2")
+
+    # (b) brute force tiny attention core (forward only)
+    tg = G()
+    qkv = tg.t("qkv", [8, 24], INPUT)   # rows=8 (B=2,S=4), 3D=24 (D=8, heads=2, dh=4)
+    y = tg.t("y", [8, 8], LABEL)
+    qh = slice_heads(tg, "sq", qkv, 0, 2, 4)
+    kh = slice_heads(tg, "sk", qkv, 1, 2, 4)
+    vh = slice_heads(tg, "sv", qkv, 2, 2, 4)
+    sc = bmm(tg, "scores", qh, kh, False, True)
+    pr = softmax_rows(tg, "probs", sc)
+    ct = bmm(tg, "ctx", pr, vh, False, False)
+    cm = merge_heads(tg, "mh", ct, 2)
+    w = tg.t("w", [8, 8], WEIGHT)
+    logits = matmul(tg, "head", cm, w)
+    loss = softmax_xent(tg, "loss", logits, y)
+    cands = [candidates(tg, t) for t in range(len(tg.tensors))]
+    states = 1
+    for c in cands: states *= len(c)
+    print(f"attention core: {len(tg.tensors)} tensors, brute-force states = {states:,}")
+    best, bt = INF, None
+    for combo in itertools.product(*cands):
+        c = price(tg, list(combo))
+        if c < best: best, bt = c, combo
+    print(f"brute-force optimum = {best:,} bytes")
+    for t, tile in enumerate(bt):
+        print(f"  {tg.tensors[t][0]:14} {tile}")

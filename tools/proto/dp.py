@@ -1,0 +1,239 @@
+#!/usr/bin/env python3
+"""Full one-cut DP mirror (levels -> components -> tabulation -> sweep ->
+traceback), to predict the Rust planner's results on transformer configs:
+optimal costs per cut, k-cut totals, and the soy-vs-DP-baseline comparison
+the integration test asserts."""
+import sys
+from collections import defaultdict
+from topo import *
+from cost import (op_cost, candidates, price, dp_assignment, apply_cut,
+                  bytes_of, REP, S, INF)
+
+def one_cut(g):
+    alias = aliases(g)
+    levels, boundary, internal, level_of = bfs_levels(g)
+    nl = len(levels)
+    nt = len(g.tensors)
+    cands = [candidates(g, t) for t in range(nt)]
+    internal_level = [-1] * nt
+    for l, ts in enumerate(internal):
+        for t in ts:
+            internal_level[t] = l
+    boundary_level = [-1] * nt
+    pos_in_boundary = [-1] * nt
+    for l, b in enumerate(boundary):
+        for i, t in enumerate(b):
+            boundary_level[t] = l
+            pos_in_boundary[t] = i
+
+    # components per level
+    comps_per_level = []
+    for l, ops in enumerate(levels):
+        parent = list(range(len(ops)))
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+        owner = {}
+        for oi, op in enumerate(ops):
+            _, _, ins, outs = g.ops[op]
+            for t in ins + outs:
+                t = alias[t]
+                if internal_level[t] == l:
+                    if t not in owner:
+                        owner[t] = oi
+                    else:
+                        a, b_ = find(owner[t]), find(oi)
+                        if a != b_:
+                            parent[a] = b_
+        groups = defaultdict(list)
+        for oi, op in enumerate(ops):
+            groups[find(oi)].append(op)
+        comps = []
+        for root in sorted(groups):
+            comp_ops = groups[root]
+            bids, iids = [], []
+            for op in comp_ops:
+                _, _, ins, outs = g.ops[op]
+                for t in ins + outs:
+                    t = alias[t]
+                    if internal_level[t] == l:
+                        if t not in iids: iids.append(t)
+                    elif t not in bids: bids.append(t)
+            bids.sort(); iids.sort()
+            comps.append((comp_ops, bids, iids))
+        comps_per_level.append(comps)
+
+    # tabulate each component
+    def dec(idx, rad):
+        out = []
+        for r in rad:
+            out.append(idx % r); idx //= r
+        return out
+
+    tabs_per_level = []
+    for l, comps in enumerate(comps_per_level):
+        tabs = []
+        for comp_ops, bids, iids in comps:
+            brad = [len(cands[t]) for t in bids]
+            irad = [len(cands[t]) for t in iids]
+            blen = 1
+            for r in brad: blen *= r
+            ilen = 1
+            for r in irad: ilen *= r
+            table = []
+            for bidx in range(blen):
+                bdig = dec(bidx, brad)
+                best = (INF, 0)
+                for iidx in range(ilen):
+                    idig = dec(iidx, irad)
+                    assign = {}
+                    for i, t in enumerate(bids): assign[t] = cands[t][bdig[i]]
+                    for i, t in enumerate(iids): assign[t] = cands[t][idig[i]]
+                    cost = 0
+                    for op in comp_ops:
+                        _, _, ins, outs = g.ops[op]
+                        c = op_cost(g, g.ops[op],
+                                    [assign[alias[t]] for t in ins],
+                                    assign[alias[outs[0]]])
+                        cost += c
+                        if cost >= best[0]: break
+                    if cost < best[0]:
+                        best = (cost, iidx)
+                table.append(best)
+            tabs.append((table, brad, bids, iids, irad))
+        tabs_per_level.append(tabs)
+
+    # DP sweep
+    bnd_rad = [[len(cands[t]) for t in b] for b in boundary]
+    bnd_len = []
+    for rad in bnd_rad:
+        p = 1
+        for r in rad: p *= r
+        bnd_len.append(p)
+
+    dp = []
+    for l in range(nl):
+        prev_len = bnd_len[l-1] if l > 0 else 1
+        cur_len = bnd_len[l] if l + 1 < nl else 1
+        # precompute per-comp prev/cur index contributions
+        comp_contrib = []
+        for (table, brad, bids, iids, irad) in tabs_per_level[l]:
+            mults = []
+            m = 1
+            for r in brad:
+                mults.append(m); m *= r
+            wprev, wcur = [], []
+            for i, t in enumerate(bids):
+                if l > 0 and boundary_level[t] == l - 1:
+                    wprev.append((pos_in_boundary[t], mults[i]))
+                else:
+                    wcur.append((pos_in_boundary[t], mults[i]))
+            def contrib(ln, rad, w):
+                out = [0] * ln
+                dig = [0] * len(rad)
+                for slot in range(ln):
+                    s = 0
+                    for (p_, m_) in w:
+                        s += dig[p_] * m_
+                    out[slot] = s
+                    for j in range(len(rad)):
+                        dig[j] += 1
+                        if dig[j] < rad[j]: break
+                        dig[j] = 0
+                return out
+            cp = contrib(prev_len, bnd_rad[l-1] if l > 0 else [], wprev)
+            cc = contrib(cur_len, bnd_rad[l] if l + 1 < nl else [], wcur)
+            comp_contrib.append((table, cp, cc))
+        cur_dp = [(INF, 0)] * cur_len
+        for q in range(cur_len):
+            best = (INF, 0)
+            for p in range(prev_len):
+                base = 0 if l == 0 else dp[l-1][p][0]
+                if base >= best[0]: continue
+                cost = base
+                for (table, cp, cc) in comp_contrib:
+                    cost += table[cp[p] + cc[q]][0]
+                    if cost >= best[0]: break
+                if cost < best[0]:
+                    best = (cost, p)
+            cur_dp[q] = best
+        dp.append(cur_dp)
+
+    final_cost, state = min((c, i) for i, (c, _) in enumerate(dp[nl-1]))
+    assert final_cost < INF, "infeasible"
+
+    # traceback
+    bdig = [None] * len(boundary)
+    for l in range(nl - 1, -1, -1):
+        prev_state = dp[l][state][1]
+        if l >= 1:
+            bdig[l-1] = dec(prev_state, bnd_rad[l-1])
+        if l + 1 < nl:
+            bdig[l] = dec(state, bnd_rad[l])
+        state = prev_state
+    tiles = [REP] * nt
+    for l, b in enumerate(boundary):
+        for i, t in enumerate(b):
+            tiles[t] = cands[t][bdig[l][i]]
+    for l, tabs in enumerate(tabs_per_level):
+        for (table, brad, bids, iids, irad) in tabs:
+            mults = []
+            m = 1
+            for r in brad:
+                mults.append(m); m *= r
+            idx = 0
+            for i, t in enumerate(bids):
+                idx += bdig[boundary_level[t]][pos_in_boundary[t]] * mults[i]
+            iidx = table[idx][1]
+            idig = dec(iidx, irad)
+            for i, t in enumerate(iids):
+                tiles[t] = cands[t][idig[i]]
+    for t in range(nt):
+        tiles[t] = tiles[alias[t]]
+    repriced = price(g, tiles)
+    assert repriced == final_cost, f"reconstruction mismatch {repriced} != {final_cost}"
+    return final_cost, tiles
+
+def k_cut(g, k):
+    cur = g
+    costs = []
+    tiles_seq = None
+    for i in range(k):
+        c, tiles = one_cut(cur)
+        costs.append(c)
+        cur = apply_cut(cur, tiles)
+    total = sum((1 << i) * c for i, c in enumerate(costs))
+    return costs, total
+
+def dp_baseline(g, k):
+    """mirror of baselines::data_parallel with forced classic forms —
+    upper bound: price the DP tiles unforced (forced >= unforced, so if
+    soy_total <= unforced_dp_total we're safe a fortiori... careful:
+    actually forced >= unforced so dp_forced >= dp_unforced; asserting
+    soy <= dp_unforced is the STRONGER claim)."""
+    cur = g
+    alias = aliases(g)
+    costs = []
+    for i in range(k):
+        tiles = dp_assignment(cur)
+        for t in range(len(tiles)):
+            tiles[t] = tiles[alias[t]]
+        costs.append(price(cur, tiles))
+        cur = apply_cut(cur, tiles)
+    total = sum((1 << i) * c for i, c in enumerate(costs))
+    return costs, total
+
+if __name__ == "__main__":
+    for label, cfgargs, k in [
+        ("tiny-1L", (4, 4, 8, 2, 16, 1, 8), 2),
+        ("tiny-2L", (4, 4, 8, 2, 16, 2, 8), 2),
+        ("micro-4L", (8, 128, 256, 4, 1024, 4, 256), 3),
+    ]:
+        g = transformer_v2(*cfgargs, fused=True)
+        soy_costs, soy_total = k_cut(g, k)
+        dp_costs, dp_total = dp_baseline(g, k)
+        ok = "OK" if soy_total <= dp_total else "*** VIOLATION ***"
+        print(f"{label}: soy cuts={soy_costs} total={soy_total:,} | "
+              f"dp(unforced) cuts={dp_costs} total={dp_total:,} {ok}")

@@ -1,0 +1,149 @@
+"""Mirror of rust/src/lower/lowering.rs pass-1 + emission byte accounting.
+
+Verifies, on real workload graphs, that the lowered per-device instruction
+bytes sum EXACTLY to the k-cut plan's Theorem-1 total — the acceptance
+criterion the Rust tests assert. Uses the PR-2 cost/dp mirrors.
+"""
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from topo import *          # graph builders
+from cost import (S, REP, bytes_of, conv_cost, feasible, semantics, req_tile,
+                  op_cost, price, apply_cut, INF)
+from dp import one_cut, k_cut
+
+NONE = ("none",)
+
+def op_cost_detailed(g, op, ins_t, out_t):
+    """Same candidate order + strict-min tie-breaking as Rust op_cost_detailed.
+    Returns (total, [per-input req tiles], prod)."""
+    name, kind, ins, outs = op
+    sem = semantics(g, op)
+    bz = bytes_of(g, outs[0])
+    best = None
+    def consider(total, reqs, prod):
+        nonlocal best
+        if best is None or total < best[0]:
+            best = (total, reqs, prod)
+    if sem[0] == "mm":
+        _, x, y, z = sem
+        tx, ty, tz = ins[0], ins[1], outs[0]
+        bx, by = bytes_of(g, tx), bytes_of(g, ty)
+        forms = [
+            (req_tile(("d", x[0][1])), REP, ("tile", req_tile(("d", z[0][1])))),
+            (REP, req_tile(("d", y[1][1])), ("tile", req_tile(("d", z[1][1])))),
+            (req_tile(("d", x[1][1])), req_tile(("d", y[0][1])), ("red",)),
+        ]
+        for rx, ry, prod in forms:
+            if not feasible(g, tx, rx) or not feasible(g, ty, ry): continue
+            if prod[0] == "tile" and not feasible(g, tz, prod[1]): continue
+            c = conv_cost(bx, ("tile", ins_t[0]), rx) + conv_cost(by, ("tile", ins_t[1]), ry)
+            c += conv_cost(bz, prod, out_t)
+            consider(c, [rx, ry], prod)
+        return best
+    _, splittable, in_maps, out_map, allow_rep = sem
+    if allow_rep:
+        c = sum(conv_cost(bytes_of(g, t), ("tile", ins_t[i]), REP) for i, t in enumerate(ins))
+        c += conv_cost(bz, ("tile", REP), out_t)
+        consider(c, [REP]*len(ins), ("tile", REP))
+    for ax, ok in enumerate(splittable):
+        if not ok: continue
+        c = 0; reqs = []; bad = False
+        for i, m in enumerate(in_maps):
+            r = req_tile(m[ax])
+            if not feasible(g, ins[i], r): bad = True; break
+            c += conv_cost(bytes_of(g, ins[i]), ("tile", ins_t[i]), r)
+            reqs.append(r)
+        if bad: continue
+        if out_map[ax] == NONE or out_map[ax] == ("none",) or (isinstance(out_map[ax], tuple) and out_map[ax][0] == "none"):
+            prod = ("red",)
+        else:
+            t = S(out_map[ax][1])
+            if not feasible(g, outs[0], t): continue
+            prod = ("tile", t)
+        c += conv_cost(bz, prod, out_t)
+        consider(c, reqs, prod)
+    return best
+
+def scatter_axis(shape):
+    for i, d in enumerate(shape):
+        if d >= 2 and d % 2 == 0: return i
+    return None
+
+def share(P, n, r):
+    return P // n + (1 if r < P % n else 0)
+
+def lower_bytes(g, tiles_per_cut, k):
+    """Mirror of pass 1 + Emitter::start share distribution. Returns
+    (total bytes across all devices, per-tier bytes)."""
+    devices = 1 << k
+    cur = g
+    total = 0
+    tier = [0]*k
+    for j in range(k):
+        tiles = tiles_per_cut[j]
+        n = devices >> j               # devices per pair
+        pairs = 1 << j
+        for op in cur.ops:
+            name, kind, ins, outs = op
+            ins_t = [tiles[t] for t in ins]
+            out_t = tiles[outs[0]]
+            det = op_cost_detailed(cur, op, ins_t, out_t)
+            assert det is not None, (name, j)
+            c_total, reqs, prod = det
+            pieces = []   # pair-level byte volumes for this op/cut
+            for i, t in enumerate(ins):
+                b = conv_cost(bytes_of(cur, t), ("tile", ins_t[i]), reqs[i])
+                if b > 0:
+                    # classify: must be a collective (given != Rep, != req)
+                    given = ins_t[i]
+                    assert given != REP and given != reqs[i]
+                    pieces.append(b)
+            tz = outs[0]
+            ob = conv_cost(bytes_of(cur, tz), prod, out_t)
+            if ob > 0:
+                if prod[0] == "tile":
+                    pieces.append(ob)
+                else:  # red
+                    if out_t == REP:
+                        ax = scatter_axis(cur.tensors[tz][1])
+                        if ax is not None:
+                            pieces.append(ob // 2)          # RS
+                            pieces.append(ob - ob // 2)     # AG
+                        else:
+                            pieces.append(ob)               # SendRecv exchange
+                    else:
+                        pieces.append(ob)                   # ReduceScatter
+            assert sum(pieces) == c_total, (name, j, pieces, c_total)
+            for P in pieces:
+                # per-device shares across each pair, all pairs
+                per_pair = sum(share(P, n, r) for r in range(n))
+                assert per_pair == P
+                total += per_pair * pairs
+                tier[j] += P * pairs
+        cur = apply_cut(cur, tiles)
+    return total, tier
+
+def run(label, g, k):
+    # Soybean k-cut plan: collect per-cut tiles
+    cur = g
+    tiles_per_cut = []
+    costs = []
+    for i in range(k):
+        c, tiles = one_cut(cur)
+        costs.append(c)
+        tiles_per_cut.append(tiles)
+        cur = apply_cut(cur, tiles)
+    theorem1 = sum((1 << i) * c for i, c in enumerate(costs))
+    lowered, tier = lower_bytes(g, tiles_per_cut, k)
+    ok = "OK" if lowered == theorem1 == sum(tier) else "*** MISMATCH ***"
+    print(f"{label:24} k={k} theorem1={theorem1:>14,} lowered={lowered:>14,} {ok}")
+    assert lowered == theorem1, (label, lowered, theorem1)
+    assert sum(tier) == theorem1
+
+run("mlp-§2.2",  mlp_graph(400, [300]*6), 3)
+run("mlp-fig8",  mlp_graph(512, [8192]*5, bias=False), 3)
+run("mlp-bias",  mlp_graph(64, [32, 128, 128, 10], bias=True), 3)
+# conv ops are not modeled by the PR-2 cost mirror; Rust covers them
+run("tiny-1L",   transformer_v2(4, 4, 8, 2, 16, 1, 8, fused=True), 2)
+run("micro-4L",  transformer_v2(8, 128, 256, 4, 1024, 4, 256, fused=True), 3)
+print("ALL LOWERING BYTE IDENTITIES HOLD")
