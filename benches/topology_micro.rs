@@ -1,0 +1,112 @@
+//! Topology-aware planning micro-benchmark (ISSUE-4 acceptance gates).
+//!
+//! Plans vgg16 and the 4-layer transformer encoder for a 2×4 two-tier
+//! machine (2 nodes of 4 GPUs: ethernet between nodes, a shared PCIe bus
+//! inside — [`Topology::two_tier`]) **both ways**: the byte-objective flat
+//! plan and [`try_plan_topology_aware`]'s simulator-scored plan. Each plan
+//! is lowered to SPMD programs and scheduled by the discrete-event engine
+//! on that topology, and the gates assert the loop actually closed:
+//!
+//! - the topology-aware plan's engine-simulated step is **never worse**
+//!   than the flat plan's (structural: the flat plan is in the candidate
+//!   portfolio and ties go to it), and **strictly better on at least one**
+//!   of the two models;
+//! - both plans keep the one-theory contract (lowered bytes equal the
+//!   Theorem-1 total);
+//! - planning both models both ways stays under the wall-clock budget.
+//!
+//! Results go to `BENCH_topology.json` (the `BENCH_planner.json` schema)
+//! for the CI perf-trajectory diff.
+//!
+//! Run with `cargo bench --bench topology_micro`.
+
+use std::time::Duration;
+
+use soybean::lower::try_lower;
+use soybean::models::{transformer, vgg16, TransformerConfig};
+use soybean::planner::{k_cut, try_plan_topology_aware};
+use soybean::sim::{run_program, Topology};
+use soybean::util::bench::{time_it, BenchLog};
+
+fn main() {
+    println!("== topology-aware planning micro-benchmarks ==");
+    let mut log = BenchLog::new("topology_micro");
+    let topo = Topology::two_tier(3);
+    let cfg = topo.to_sim_config();
+
+    let workloads: Vec<(&str, soybean::Graph)> = vec![
+        ("vgg16", vgg16(32)),
+        ("encoder-4L", transformer(&TransformerConfig::micro())),
+    ];
+
+    let mut strictly_better = Vec::new();
+    let mut total_plan_s = 0.0;
+    for (name, g) in &workloads {
+        let m_plan = time_it(0, Duration::from_millis(1), || {
+            std::hint::black_box(try_plan_topology_aware(g, 8, &topo).unwrap());
+        });
+        total_plan_s += m_plan.min.as_secs_f64();
+
+        let aware = try_plan_topology_aware(g, 8, &topo).unwrap();
+        let flat = k_cut(g, 3);
+
+        // One-theory contract on both plans: lowered bytes == Theorem-1.
+        let p_flat = try_lower(g, &flat, &cfg).unwrap();
+        let p_aware = try_lower(g, &aware.plan, &cfg).unwrap();
+        assert_eq!(p_flat.total_bytes(), flat.total_cost(), "{name}: flat bytes != plan");
+        assert_eq!(p_aware.total_bytes(), aware.plan.total_cost(), "{name}: aware bytes != plan");
+
+        // Engine-simulated steps on the two-tier topology — the bench
+        // re-runs the exact pipeline the planner scored candidates with,
+        // so the report's numbers must reproduce.
+        let flat_step = run_program(&p_flat, &topo).step_s;
+        let aware_step = run_program(&p_aware, &topo).step_s;
+        assert_eq!(flat_step, aware.flat_step_s, "{name}: flat step not reproducible");
+        assert_eq!(aware_step, aware.step_s, "{name}: aware step not reproducible");
+        assert!(
+            aware_step <= flat_step,
+            "{name}: topology-aware step {aware_step} worse than flat {flat_step}"
+        );
+        if aware_step < flat_step {
+            strictly_better.push(*name);
+        }
+
+        log.row(
+            &format!("topology/{name}"),
+            &[
+                ("ms", format!("{:.2}", m_plan.mean_ms())),
+                ("flat_step_ms", format!("{:.3}", flat_step * 1e3)),
+                ("topo_step_ms", format!("{:.3}", aware_step * 1e3)),
+                ("speedup", format!("{:.4}", flat_step / aware_step)),
+                ("chosen", aware.chosen.to_string()),
+                ("flat_bytes", flat.total_cost().to_string()),
+                ("topo_bytes", aware.plan.total_cost().to_string()),
+            ],
+        );
+        for s in &aware.scores {
+            println!(
+                "  {name}: candidate {:<14} step {:.3} ms, {:.1} MB",
+                s.name,
+                s.step_s * 1e3,
+                s.total_bytes as f64 / 1e6
+            );
+        }
+    }
+
+    // The ISSUE-4 acceptance gate: on the two-tier 2×4 preset the
+    // topology-aware plan is strictly faster on at least one model.
+    assert!(
+        !strictly_better.is_empty(),
+        "topology-aware planning never strictly beat the flat plan on the two-tier preset"
+    );
+    println!("strictly better on: {}", strictly_better.join(", "));
+
+    assert!(
+        total_plan_s < 10.0,
+        "topology-aware planning of both models took {:.0} ms (target < 10 s)",
+        total_plan_s * 1e3
+    );
+
+    log.write_json("BENCH_topology.json").expect("writing BENCH_topology.json");
+    println!("wrote BENCH_topology.json");
+}

@@ -17,11 +17,17 @@
 //! discrete-event engine schedules each program over the p2.8xlarge
 //! topology and writes `plan_trace_<model>.json` — load it in
 //! `chrome://tracing` or Perfetto to see the timeline.
+//!
+//! With `--topology <flat|two-tier|fat-tree>`, vgg16 and the transformer
+//! encoder are planned **both ways** for 8 devices on the named preset —
+//! the byte-objective flat plan and the topology-aware plan
+//! (`plan_topology_aware`, docs/topology.md) — and the full candidate
+//! scoreboard plus both engine-simulated step times are printed.
 
 use soybean::exec::Placement;
 use soybean::lower::lower;
 use soybean::models::{alexnet, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
-use soybean::planner::{classify, Planner, Strategy};
+use soybean::planner::{classify, try_plan_topology_aware, Planner, Strategy};
 use soybean::sim::{chrome_trace_json, run_program, simulate, SimConfig, Topology};
 use soybean::tiling::describe_seq;
 
@@ -55,10 +61,35 @@ fn lower_and_trace(name: &str, g: &soybean::Graph, trace: bool) {
     }
 }
 
+/// Plan one workload both ways on `topo` and print the scoreboard.
+fn topology_report(name: &str, g: &soybean::Graph, preset: &str, topo: &Topology) {
+    let aware = try_plan_topology_aware(g, 8, topo).expect("topology-aware planning");
+    println!("\n--- {name}: topology-aware vs flat on `{preset}` (8 devices) ---");
+    for s in &aware.scores {
+        let marker = if s.name == aware.chosen { " <- chosen" } else { "" };
+        println!(
+            "  {:<14} step {:8.3} ms   {:9.1} MB{marker}",
+            s.name,
+            s.step_s * 1e3,
+            s.total_bytes as f64 / 1e6
+        );
+    }
+    println!(
+        "  flat {:.3} ms -> topology-aware {:.3} ms ({:+.1}%)",
+        aware.flat_step_s * 1e3,
+        aware.step_s * 1e3,
+        (aware.step_s / aware.flat_step_s - 1.0) * 100.0
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let do_lower = args.iter().any(|a| a == "--lower");
     let do_trace = args.iter().any(|a| a == "--trace");
+    let topo_preset = args
+        .iter()
+        .position(|a| a == "--topology")
+        .map(|i| args.get(i + 1).expect("--topology needs a preset name").as_str());
     let placement = Placement::p2_8xlarge();
 
     // 1. The §2.2 MLP: hybrid wins.
@@ -113,5 +144,29 @@ fn main() {
         lower_and_trace("vgg16", &vgg16(32), do_trace);
         lower_and_trace("alexnet", &alexnet(128), do_trace);
         lower_and_trace("transformer", &transformer(&TransformerConfig::micro()), do_trace);
+    }
+
+    // 5. `--topology <preset>`: close the planner/topology loop — plan
+    // both ways on a hierarchical interconnect and show the candidate
+    // scoreboard (docs/topology.md).
+    if let Some(preset) = topo_preset {
+        let topo = match preset {
+            "flat" => Topology::flat(3, 10.0e9, 20e-6, 4.0),
+            "two-tier" => Topology::two_tier(3),
+            "fat-tree" => Topology::fat_tree(3),
+            other => panic!("unknown --topology preset `{other}` (flat|two-tier|fat-tree)"),
+        };
+        println!("\n=== topology preset `{preset}` ===");
+        for (j, tier) in topo.tiers.iter().enumerate() {
+            println!(
+                "  tier {j} ({:>12}): {:.1} GB/s, {:.0} us latency, {} slot(s)",
+                tier.name,
+                tier.bandwidth / 1e9,
+                tier.latency * 1e6,
+                tier.slots
+            );
+        }
+        topology_report("vgg16", &vgg16(32), preset, &topo);
+        topology_report("transformer", &transformer(&TransformerConfig::micro()), preset, &topo);
     }
 }

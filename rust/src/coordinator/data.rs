@@ -7,14 +7,19 @@
 use crate::runtime::HostTensor;
 use crate::util::Rng;
 
+/// Deterministic synthetic classification stream: class-conditional
+/// Gaussian clusters, reproducible from the seed.
 pub struct SyntheticData {
+    /// Input feature dimension.
     pub din: usize,
+    /// Number of classes (one cluster mean each).
     pub classes: usize,
     means: Vec<Vec<f32>>,
     rng: Rng,
 }
 
 impl SyntheticData {
+    /// New stream with `classes` cluster means drawn from `seed`.
     pub fn new(seed: u64, din: usize, classes: usize) -> Self {
         let mut rng = Rng::new(seed);
         let means = (0..classes).map(|_| rng.normal_vec(din, 1.2)).collect();

@@ -27,11 +27,14 @@ pub fn init_mlp_params(seed: u64, dims: &[usize]) -> Vec<HostTensor> {
 /// inputs `(x, y, lr, w0, b0, …)`, outputs `(loss, w0', b0', …)`.
 pub struct SerialTrainer {
     exe: Arc<Executable>,
+    /// Current parameter values, replaced after every step.
     pub params: Vec<HostTensor>,
+    /// SGD learning rate.
     pub lr: f32,
 }
 
 impl SerialTrainer {
+    /// Bind a registered AOT artifact to initial parameters.
     pub fn from_artifact(
         client: &Client,
         reg: &ArtifactRegistry,
@@ -63,6 +66,7 @@ impl SerialTrainer {
 /// Drives the parallel engine: same semantics as [`SerialTrainer`], with
 /// the step distributed across the plan's virtual devices.
 pub struct ParallelTrainer {
+    /// The underlying multi-device execution engine.
     pub engine: Engine,
     x_id: TensorId,
     y_id: TensorId,
@@ -110,6 +114,7 @@ impl ParallelTrainer {
         Ok(ParallelTrainer { engine, x_id, y_id, weight_ids })
     }
 
+    /// One SGD step; returns the batch loss.
     pub fn step(&mut self, x: &HostTensor, y: &HostTensor) -> Result<f32> {
         self.engine.load(self.x_id, x);
         self.engine.load(self.y_id, y);

@@ -15,7 +15,9 @@ use super::region::{resident_region, Region};
 /// pieces are local copies (free).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SourcePiece {
+    /// Device holding the piece.
     pub src: usize,
+    /// The box to fetch, in tensor coordinates.
     pub region: Region,
 }
 

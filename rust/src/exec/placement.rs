@@ -10,6 +10,7 @@
 /// by the first cut), `tiers[k-1]` the fastest.
 #[derive(Debug, Clone)]
 pub struct Placement {
+    /// Tier names, slowest (outermost cut) first.
     pub tiers: Vec<String>,
 }
 
@@ -28,6 +29,7 @@ impl Placement {
         Placement { tiers: (0..k).map(|i| format!("{name}{i}")).collect() }
     }
 
+    /// Number of tiers (= the deepest k this placement names).
     pub fn k(&self) -> usize {
         self.tiers.len()
     }

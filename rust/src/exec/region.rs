@@ -11,19 +11,24 @@ use crate::tiling::{Tile, TileSeq};
 /// An axis-aligned box within a tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Region {
+    /// Lower corner, one entry per tensor dimension.
     pub offset: Vec<usize>,
+    /// Extent along each dimension.
     pub shape: Vec<usize>,
 }
 
 impl Region {
+    /// The whole tensor.
     pub fn full(shape: &[usize]) -> Self {
         Region { offset: vec![0; shape.len()], shape: shape.to_vec() }
     }
 
+    /// Element count of the box.
     pub fn elements(&self) -> u64 {
         self.shape.iter().map(|&d| d as u64).product()
     }
 
+    /// Whether any extent is zero.
     pub fn is_empty(&self) -> bool {
         self.shape.iter().any(|&d| d == 0)
     }

@@ -23,6 +23,7 @@ use crate::tiling::{form_requirements, op_cost_detailed, Produced, Tile, TileSeq
 /// The realized schedule of one operator under a plan.
 #[derive(Debug, Clone)]
 pub struct ShardTask {
+    /// The op this schedule realizes.
     pub op: OpId,
     /// Per input (same order as `op.inputs`): the layout the ghost gather
     /// must produce before local execution.

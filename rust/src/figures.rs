@@ -15,11 +15,17 @@ use crate::tiling::paper_example;
 /// One measured point: strategy × device count.
 #[derive(Debug, Clone)]
 pub struct Point {
+    /// Strategy short name (`"DP"`, `"MP"`, `"SOYBEAN"`).
     pub strategy: &'static str,
+    /// Device count (`2^k`).
     pub devices: usize,
+    /// Simulated per-step runtime (compute + overhead).
     pub runtime_s: f64,
+    /// Communication overhead after overlap credit.
     pub overhead_s: f64,
+    /// Compute-only seconds.
     pub compute_s: f64,
+    /// Total conversion bytes (the plan's Theorem-1 cost).
     pub comm_bytes: u64,
 }
 

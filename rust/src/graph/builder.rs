@@ -10,14 +10,17 @@ use super::{EwKind, Graph, Op, OpId, OpKind, TensorId, TensorInfo, TensorKind};
 /// Builder over an owned [`Graph`].
 #[derive(Debug, Default)]
 pub struct GraphBuilder {
+    /// The graph under construction (taken by [`Self::finish`]).
     pub graph: Graph,
 }
 
 impl GraphBuilder {
+    /// Start an empty graph.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Consume the builder and return the finished graph.
     pub fn finish(self) -> Graph {
         self.graph
     }
@@ -60,14 +63,17 @@ impl GraphBuilder {
 
     // -- graph inputs -------------------------------------------------------
 
+    /// Declare a mini-batch input tensor.
     pub fn input(&mut self, name: &str, shape: &[usize]) -> TensorId {
         self.add_tensor(name, shape, TensorKind::Input)
     }
 
+    /// Declare a label tensor.
     pub fn label(&mut self, name: &str, shape: &[usize]) -> TensorId {
         self.add_tensor(name, shape, TensorKind::Label)
     }
 
+    /// Declare a trainable parameter tensor.
     pub fn weight(&mut self, name: &str, shape: &[usize]) -> TensorId {
         self.add_tensor(name, shape, TensorKind::Weight)
     }
@@ -123,6 +129,7 @@ impl GraphBuilder {
         self.add_op(name, OpKind::Flatten, vec![x], &out, TensorKind::Activation).1
     }
 
+    /// `z = x + b` with `b` broadcast along the rows.
     pub fn bias_add(&mut self, name: &str, x: TensorId, b: TensorId) -> TensorId {
         let sx = self.shape(x).to_vec();
         let sb = self.shape(b).to_vec();
@@ -132,12 +139,14 @@ impl GraphBuilder {
             .1
     }
 
+    /// Elementwise `max(x, 0)`.
     pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
         let sx = self.shape(x).to_vec();
         self.add_op(name, OpKind::Ew(EwKind::Relu), vec![x], &sx, TensorKind::Activation)
             .1
     }
 
+    /// Elementwise GeLU (the transformer FF activation).
     pub fn gelu(&mut self, name: &str, x: TensorId) -> TensorId {
         let sx = self.shape(x).to_vec();
         self.add_op(name, OpKind::Ew(EwKind::Gelu), vec![x], &sx, TensorKind::Activation)
@@ -253,6 +262,7 @@ impl GraphBuilder {
             .1
     }
 
+    /// Elementwise sum (residual connections, gradient accumulation).
     pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
         let sa = self.shape(a).to_vec();
         assert_eq!(sa, self.shape(b), "{name}: elementwise shape mismatch");

@@ -26,15 +26,19 @@ pub use tensor::{TensorId, TensorInfo, TensorKind};
 /// graph input / parameter) and any number of consumers.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// All tensors, indexed by [`TensorId`].
     pub tensors: Vec<TensorInfo>,
+    /// All ops in topological order, indexed by [`OpId`].
     pub ops: Vec<Op>,
 }
 
 impl Graph {
+    /// The tensor record for `id`.
     pub fn tensor(&self, id: TensorId) -> &TensorInfo {
         &self.tensors[id]
     }
 
+    /// The op record for `id`.
     pub fn op(&self, id: OpId) -> &Op {
         &self.ops[id]
     }

@@ -18,10 +18,13 @@ pub type OpId = usize;
 /// Elementwise operator flavors (same shape in, same shape out).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EwKind {
+    /// `max(x, 0)`.
     Relu,
     /// `relu_grad(dy, y)` — mask the upstream gradient by `y > 0`.
     ReluGrad,
+    /// Elementwise sum (residual adds, gradient accumulation).
     Add,
+    /// Elementwise product.
     Mul,
     /// Tanh-approximation GeLU (the transformer FF activation).
     Gelu,
@@ -35,7 +38,8 @@ pub enum EwKind {
     Ident,
 }
 
-/// Operator kinds. Shape legality is enforced by the [`GraphBuilder`];
+/// Operator kinds. Shape legality is enforced by the
+/// [`GraphBuilder`](super::GraphBuilder);
 /// tiling semantics (aligned tilings, communication costs) are derived from
 /// these in `tiling::aligned`.
 ///
@@ -161,9 +165,13 @@ impl OpKind {
 /// One operator instance: kind + operand/result tensor ids.
 #[derive(Debug, Clone)]
 pub struct Op {
+    /// Dense index of this op within its graph.
     pub id: OpId,
+    /// What the op computes (drives aligned forms and FLOP counts).
     pub kind: OpKind,
+    /// Operand tensor ids, in the op kind's fixed order.
     pub inputs: Vec<TensorId>,
+    /// Result tensor ids (exactly one for every current op kind).
     pub outputs: Vec<TensorId>,
     /// Debug label, e.g. `"fc1.fwd"` or `"conv3.bwd_filter"`.
     pub name: String,

@@ -29,20 +29,25 @@ pub enum TensorKind {
 /// Shape + role record for one tensor.
 #[derive(Debug, Clone)]
 pub struct TensorInfo {
+    /// Dense index of this tensor within its graph.
     pub id: TensorId,
+    /// Human-readable name (layer-derived, e.g. `fc0.out`).
     pub name: String,
     /// Logical dimensions. Scalars have an empty shape.
     pub shape: Vec<usize>,
+    /// The role this tensor plays in the training step.
     pub kind: TensorKind,
     /// Bytes per element (4 for f32 throughout the paper's workloads).
     pub dtype_bytes: usize,
 }
 
 impl TensorInfo {
+    /// Number of logical dimensions (0 for scalars).
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn elements(&self) -> u64 {
         self.shape.iter().map(|&d| d as u64).product()
     }

@@ -43,6 +43,13 @@
 //! - [`coordinator`] — the training loop: BSP batches, SGD, metrics.
 //! - [`models`] — the model zoo: MLP, parametric CNN, AlexNet, VGG-16 as
 //!   semantic graphs (the paper's evaluation workloads).
+//!
+//! The narrative walkthrough of the whole pipeline — serial graph →
+//! aligned forms → cost LUT → one-cut/k-cut DP → SPMD lowering → event
+//! engine, with a worked 2-device MLP example — lives in [`book`]
+//! (sources under `docs/`).
+
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod exec;
@@ -59,3 +66,30 @@ pub mod util;
 
 pub use graph::{Graph, GraphBuilder, Op, OpId, OpKind, TensorId, TensorInfo};
 pub use tiling::{Tile, TileSeq};
+
+/// The narrative documentation book (sources under `docs/`), compiled
+/// into rustdoc so its worked examples run as doctests and its
+/// cross-references are checked by CI's docs job.
+pub mod book {
+    /// The book's index: one chapter per pipeline stage.
+    #[doc = include_str!("../../docs/README.md")]
+    pub mod index {}
+
+    /// The pipeline end to end and the one-theory contract.
+    #[doc = include_str!("../../docs/architecture.md")]
+    pub mod architecture {}
+
+    /// Tiling algebra, Eq. (2), cost LUTs, the one-cut/k-cut DP, and the
+    /// worked 2-device MLP example.
+    #[doc = include_str!("../../docs/planner.md")]
+    pub mod planner {}
+
+    /// SPMD lowering and the two simulators.
+    #[doc = include_str!("../../docs/lowering-and-sim.md")]
+    pub mod lowering_and_sim {}
+
+    /// Topology-aware planning: weighted LUTs and the simulator-scored
+    /// portfolio.
+    #[doc = include_str!("../../docs/topology.md")]
+    pub mod topology {}
+}

@@ -33,6 +33,7 @@ pub enum CollectiveKind {
 }
 
 impl CollectiveKind {
+    /// Lowercase wire name (trace labels, instruction dumps).
     pub fn name(&self) -> &'static str {
         match self {
             CollectiveKind::AllGather => "all_gather",
@@ -47,7 +48,9 @@ impl CollectiveKind {
 /// byte volume. Shared by the instructions of every participating device.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TransferMeta {
+    /// Dense collective id; instructions reference it.
     pub gid: usize,
+    /// Which collective realizes the conversion.
     pub kind: CollectiveKind,
     /// The tensor being converted (id in the original, un-halved graph).
     pub tensor: TensorId,
@@ -107,6 +110,7 @@ impl Instr {
         }
     }
 
+    /// Lowercase mnemonic for dumps and histograms.
     pub fn kind_name(&self) -> &'static str {
         match self {
             Instr::Compute { .. } => "compute",
@@ -122,7 +126,9 @@ impl Instr {
 /// The instruction stream of one device.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceProgram {
+    /// The device this stream runs on.
     pub device: usize,
+    /// The instruction stream, in issue order.
     pub instrs: Vec<Instr>,
 }
 
@@ -154,6 +160,7 @@ impl DeviceProgram {
 pub struct LoweredProgram {
     /// Number of cuts (`devices == 2^k`).
     pub k: usize,
+    /// Total device count (`2^k`).
     pub devices: usize,
     /// One aligned instruction stream per device.
     pub programs: Vec<DeviceProgram>,
@@ -162,6 +169,7 @@ pub struct LoweredProgram {
     /// Debug labels carried over from the graph (indexed by `OpId` /
     /// `TensorId`) so dumps and traces stay readable without the graph.
     pub op_names: Vec<String>,
+    /// Tensor labels, same purpose as `op_names`.
     pub tensor_names: Vec<String>,
 }
 

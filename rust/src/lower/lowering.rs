@@ -78,6 +78,22 @@ fn scatter_axis(shape: &[usize]) -> Option<usize> {
 
 /// Lower `(g, plan)` into per-device SPMD programs. Panics on plans with
 /// no feasible form (see [`try_lower`]).
+///
+/// # Examples
+///
+/// ```
+/// use soybean::lower::lower;
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::planner::k_cut;
+/// use soybean::sim::SimConfig;
+///
+/// let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 32], bias: false });
+/// let plan = k_cut(&g, 2);
+/// let program = lower(&g, &plan, &SimConfig::default());
+/// assert_eq!(program.devices, 4);
+/// // The one-theory contract: per-instruction bytes sum to Theorem 1.
+/// assert_eq!(program.total_bytes(), plan.total_cost());
+/// ```
 pub fn lower(g: &Graph, plan: &Plan, cfg: &SimConfig) -> LoweredProgram {
     try_lower(g, plan, cfg).unwrap_or_else(|e| panic!("lowering failed: {e}"))
 }

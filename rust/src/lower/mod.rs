@@ -8,7 +8,8 @@
 //! (`AllGather` / `ReduceScatter` / `AllToAll` / `SendRecv` / `Wait`),
 //! one aligned stream per device, where every collective is *inferred*
 //! from the tiling-conversion pattern between the form a producer emits
-//! and the form a consumer requires ([`lowering`]'s table). Per-
+//! and the form a consumer requires (the conversion table in the
+//! lowering pass). Per-
 //! instruction byte counts are exactly the §4.2.1 conversion costs, so a
 //! lowered program's total traffic equals the plan's Theorem-1 cost bit
 //! for bit — the optimizer, the analytic simulator

@@ -7,7 +7,9 @@ use crate::graph::{append_backward, Graph, GraphBuilder, TensorId};
 /// count; every interior entry a hidden layer.
 #[derive(Debug, Clone)]
 pub struct MlpConfig {
+    /// Rows per training step.
     pub batch: usize,
+    /// Layer widths, input first (L = `dims.len() - 1` matmuls).
     pub dims: Vec<usize>,
     /// Include bias vectors (the paper's MLP experiments are pure matmul
     /// chains; the e2e example uses biases).

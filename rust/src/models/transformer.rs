@@ -36,10 +36,15 @@ pub struct TransformerConfig {
     /// Sequences per step. Must be even (and divisible by `2^k` for a
     /// k-cut plan to keep batch-tiling the attention view).
     pub batch: usize,
+    /// Tokens per sequence.
     pub seq: usize,
+    /// Embedding width.
     pub d_model: usize,
+    /// Attention heads (must divide `d_model`).
     pub heads: usize,
+    /// Feed-forward hidden width.
     pub d_ff: usize,
+    /// Encoder block count.
     pub layers: usize,
     /// Output classes of the linear head (per-position labels).
     pub classes: usize,

@@ -53,6 +53,7 @@ pub fn price_forced(
 /// A complete k-cut tiling plan.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Plan {
+    /// Number of cuts (the plan spans `2^k` devices).
     pub k: usize,
     /// Per tensor (indexed by `TensorId`): the basic tiling chosen at each
     /// cut, outermost first.
@@ -62,6 +63,7 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Device count this plan spans (`2^k`).
     pub fn devices(&self) -> usize {
         1 << self.k
     }
@@ -140,6 +142,39 @@ pub fn try_k_cut(g: &Graph, k: usize) -> Result<Plan, PlanError> {
     let mut cur = g.clone();
     for _ in 0..k {
         let oc = solver.solve(&cur)?;
+        cut_costs.push(oc.cost);
+        for t in 0..nt {
+            tiles[t].push(oc.tiles[t]);
+        }
+        cur = apply_cut(&cur, &oc.tiles);
+    }
+    Ok(Plan { k, tiles, cut_costs })
+}
+
+/// Algorithm 1 under a topology weighting: cut `j`'s one-cut DP minimizes
+/// *modeled time on tier `j`* ([`OneCutSolver::solve_weighted`] — Eq. (2)
+/// bytes re-priced through the cut's
+/// [`CutCostModel`](crate::tiling::CutCostModel)) instead of raw bytes.
+/// The returned [`Plan`] stays in the byte currency (`cut_costs` are the
+/// chosen tilings' Eq. (3) byte totals), so Theorem 1, the simulator meter
+/// and the lowering identity all keep working unchanged.
+///
+/// This is the "weighted-dp" candidate of
+/// [`super::plan_topology_aware`]'s portfolio; on a uniform zero-latency
+/// weighting it reproduces [`try_k_cut`] bit for bit.
+pub fn try_k_cut_weighted(
+    g: &Graph,
+    k: usize,
+    model: &super::topology::TopologyModel,
+) -> Result<Plan, PlanError> {
+    assert!(model.k() >= k, "topology model prices {} cuts, need {k}", model.k());
+    let nt = g.tensors.len();
+    let mut tiles: Vec<TileSeq> = vec![Vec::with_capacity(k); nt];
+    let mut cut_costs = Vec::with_capacity(k);
+    let solver = OneCutSolver::new(g);
+    let mut cur = g.clone();
+    for j in 0..k {
+        let oc = solver.solve_weighted(&cur, model.cut(j))?;
         cut_costs.push(oc.cost);
         for t in 0..nt {
             tiles[t].push(oc.tiles[t]);
@@ -242,6 +277,27 @@ mod tests {
                     p.cut_costs[j + 1]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn weighted_kcut_with_zero_latency_matches_byte_kcut() {
+        // Within one cut a pure per-byte scale is strictly monotone, so a
+        // zero-latency weighting — whatever its per-tier bandwidths —
+        // reproduces the byte plan cut for cut, bit for bit.
+        use crate::planner::topology::TopologyModel;
+        use crate::sim::Topology;
+        let g = mlp_train(400, &[300; 6]);
+        let k = 3;
+        let byte = k_cut(&g, k);
+        for topo in [
+            Topology::flat(k, 5.0e9, 0.0, 2.0),
+            Topology::flat(1, 1.0e9, 0.0, 1.0),
+        ] {
+            let model = TopologyModel::new(&topo, k);
+            let weighted = try_k_cut_weighted(&g, k, &model).unwrap();
+            assert_eq!(weighted.tiles, byte.tiles);
+            assert_eq!(weighted.cut_costs, byte.cut_costs);
         }
     }
 

@@ -14,17 +14,26 @@
 //! - [`reference`] — the pre-LUT one-cut implementation, kept as the
 //!   bit-identical oracle and the speedup baseline `planner_micro` times
 //!   the optimized [`OneCutSolver`] against (DESIGN.md §Perf).
+//! - [`topology`] — topology-aware planning: the weighted (seconds) DP
+//!   objective plus the simulator-scored candidate portfolio behind
+//!   [`plan_topology_aware`] (docs/topology.md).
 
 pub mod baselines;
 pub mod bruteforce;
 mod kcut;
 mod onecut;
 pub mod reference;
+pub mod topology;
 
 pub use kcut::{
-    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, try_k_cut, Plan,
+    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, try_k_cut,
+    try_k_cut_weighted, Plan,
 };
 pub use onecut::{one_cut, price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
+pub use topology::{
+    modeled_step_s, plan_topology_aware, try_plan_topology_aware, CandidateScore, TopologyModel,
+    TopologyPlan,
+};
 
 use crate::graph::Graph;
 use crate::tiling::TileSeq;
@@ -41,6 +50,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Short display name (`"DP"`, `"MP"`, `"SOYBEAN"`).
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::Soybean => "SOYBEAN",
@@ -49,6 +59,7 @@ impl Strategy {
         }
     }
 
+    /// Every strategy, baselines first (figure line order).
     pub fn all() -> [Strategy; 3] {
         [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean]
     }
@@ -59,6 +70,20 @@ pub struct Planner;
 
 impl Planner {
     /// Produce a k-cut plan for `2^k` devices under the given strategy.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use soybean::models::{mlp, MlpConfig};
+    /// use soybean::planner::{Planner, Strategy};
+    ///
+    /// let g = mlp(&MlpConfig { batch: 128, dims: vec![64, 64], bias: false });
+    /// let soy = Planner::plan(&g, 2, Strategy::Soybean);
+    /// let dp = Planner::plan(&g, 2, Strategy::DataParallel);
+    /// assert_eq!(soy.devices(), 4);
+    /// // The optimum never moves more bytes than a fixed baseline.
+    /// assert!(soy.total_cost() <= dp.total_cost());
+    /// ```
     pub fn plan(g: &Graph, k: usize, strategy: Strategy) -> Plan {
         match strategy {
             Strategy::Soybean => k_cut(g, k),

@@ -42,7 +42,7 @@ use std::fmt;
 
 use crate::graph::{bfs_levels, Graph, Levels, OpId, TensorId};
 use crate::tiling::aligned::INFEASIBLE;
-use crate::tiling::{CostTables, Tile};
+use crate::tiling::{CostTables, CutCostModel, Tile};
 use crate::util::par::par_map_with;
 use crate::util::radix::{decode_digits, mults_of, odometer_inc};
 
@@ -52,6 +52,7 @@ use crate::util::radix::{decode_digits, mults_of, odometer_inc};
 pub struct OneCutPlan {
     /// Indexed by `TensorId`; tensors not touched by any op get `Rep`.
     pub tiles: Vec<Tile>,
+    /// Total Eq. (3) conversion bytes of the chosen tiling.
     pub cost: u64,
 }
 
@@ -160,6 +161,7 @@ pub struct OneCutSolver {
 }
 
 impl OneCutSolver {
+    /// Analyze `g`'s topology (levels, aliases, components) once.
     pub fn new(g: &Graph) -> Self {
         let nt = g.tensors.len();
         let alias = g.steady_state_aliases();
@@ -269,14 +271,34 @@ impl OneCutSolver {
     /// topology (same tensors and ops; shapes may differ — that is the
     /// k-cut reuse case).
     pub fn solve(&self, g: &Graph) -> Result<OneCutPlan, PlanError> {
+        self.solve_with(g, None)
+    }
+
+    /// Like [`Self::solve`], but the odometer DP minimizes *modeled time*
+    /// instead of bytes: every Eq. (2) table entry is re-priced onto one
+    /// interconnect tier through `w` ([`CostTables::weighted`]) before
+    /// tabulation, so the argmin trades conversion bytes against
+    /// per-transfer latency at that tier's effective bandwidth. The
+    /// returned [`OneCutPlan::cost`] stays in **bytes** (re-priced through
+    /// direct Eq. (2) evaluation) so Theorem-1 totals remain comparable
+    /// across planners.
+    pub fn solve_weighted(&self, g: &Graph, w: &CutCostModel) -> Result<OneCutPlan, PlanError> {
+        self.solve_with(g, Some(w))
+    }
+
+    fn solve_with(&self, g: &Graph, w: Option<&CutCostModel>) -> Result<OneCutPlan, PlanError> {
         assert_eq!(g.tensors.len(), self.ntensors, "solver topology mismatch");
         assert_eq!(g.ops.len(), self.nops, "solver topology mismatch");
         if self.nops == 0 {
             return Ok(OneCutPlan { tiles: vec![Tile::Rep; self.ntensors], cost: 0 });
         }
 
-        // Phase 1: every op's Eq. (2) surface, evaluated once.
-        let tables = CostTables::build_with(g, &self.alias);
+        // Phase 1: every op's Eq. (2) surface, evaluated once — re-priced
+        // from bytes to tier picoseconds when a weight model is given.
+        let mut tables = CostTables::build_with(g, &self.alias);
+        if let Some(w) = w {
+            tables = tables.weighted(w);
+        }
         let cands = &tables.cands;
         let nlevels = self.lv.levels.len();
 
@@ -386,6 +408,16 @@ impl OneCutSolver {
             }
         }
         if final_cost >= INFEASIBLE {
+            // Under a weighted objective, a sum of clamped-but-finite
+            // entries can saturate past the sentinel on astronomically
+            // slow tiers (a cut modeling >~70 s) even though the graph is
+            // feasible. Disambiguate by falling back to the byte
+            // objective, whose sums stay far below the sentinel on any
+            // realizable workload — the caller gets the byte-optimal plan
+            // instead of a spurious `Infeasible`.
+            if w.is_some() {
+                return self.solve_with(g, None);
+            }
             return Err(PlanError::Infeasible);
         }
 
@@ -434,11 +466,21 @@ impl OneCutSolver {
             tiles[t] = tiles[self.alias[t]];
         }
 
-        // Sanity: re-price the assembled tiling through direct Eq. (2)
-        // evaluation; must equal the DP cost.
-        debug_assert_eq!(price(g, &tiles), final_cost, "DP cost mismatch on reconstruction");
+        // Sanity: re-price the assembled tiling through the tables the DP
+        // ran on; must equal the DP cost (for the byte path this is also
+        // checked against direct Eq. (2) evaluation).
+        debug_assert_eq!(tables.price(&tiles), final_cost, "DP cost mismatch on reconstruction");
 
-        Ok(OneCutPlan { tiles, cost: final_cost })
+        // Weighted solves report the chosen tiling's cost in *bytes* so
+        // Theorem-1 stays the common currency across planners.
+        let cost = match w {
+            None => {
+                debug_assert_eq!(price(g, &tiles), final_cost, "LUT diverged from Eq. (2)");
+                final_cost
+            }
+            Some(_) => price(g, &tiles),
+        };
+        Ok(OneCutPlan { tiles, cost })
     }
 
     /// Tabulate one component: for every boundary assignment, minimize the
@@ -737,6 +779,68 @@ mod tests {
         let fresh = one_cut(&halved);
         assert_eq!(reused.cost, fresh.cost);
         assert_eq!(reused.tiles, fresh.tiles);
+    }
+
+    #[test]
+    fn weighted_solve_with_byte_model_is_bit_identical() {
+        // CutCostModel::bytes() maps every LUT entry to itself, so the
+        // weighted path must reproduce the byte path exactly — tiles and
+        // cost.
+        use crate::tiling::CutCostModel;
+        for (batch, dims) in [(512usize, vec![256usize, 256, 256]), (8, vec![1024, 1024])] {
+            let g = mlp_train(batch, &dims);
+            let solver = OneCutSolver::new(&g);
+            let byte = solver.solve(&g).unwrap();
+            let weighted = solver.solve_weighted(&g, &CutCostModel::bytes()).unwrap();
+            assert_eq!(byte.tiles, weighted.tiles);
+            assert_eq!(byte.cost, weighted.cost);
+        }
+    }
+
+    #[test]
+    fn uniform_weight_without_latency_preserves_the_argmin() {
+        // A pure positive per-byte scale is strictly monotone: same
+        // enumeration order, same strict-min tie-breaking, same plan.
+        use crate::tiling::CutCostModel;
+        let g = mlp_train(128, &[64, 96, 32]);
+        let solver = OneCutSolver::new(&g);
+        let byte = solver.solve(&g).unwrap();
+        let w = CutCostModel { ps_per_byte_fp: 12_345, latency_fp: 0 };
+        let weighted = solver.solve_weighted(&g, &w).unwrap();
+        assert_eq!(byte.tiles, weighted.tiles);
+        assert_eq!(byte.cost, weighted.cost, "cost is re-priced in bytes");
+    }
+
+    #[test]
+    fn weighted_solve_is_optimal_for_its_own_objective() {
+        // The DP is exact: under the weighted tables, no plan — in
+        // particular not the byte-optimal one — models faster than the
+        // weighted argmin.
+        use crate::tiling::{CostTables, CutCostModel};
+        let g = mlp_train(64, &[48, 48, 48]);
+        let solver = OneCutSolver::new(&g);
+        // A high-latency slow tier: 800 ps/byte, 50 us per transfer.
+        let w = CutCostModel::from_seconds(8e-10, 50e-6);
+        let weighted = solver.solve_weighted(&g, &w).unwrap();
+        let byte = solver.solve(&g).unwrap();
+        let wt = CostTables::build(&g).weighted(&w);
+        assert!(wt.price(&weighted.tiles) <= wt.price(&byte.tiles));
+        // And in bytes the ordering flips (or ties): the byte plan is the
+        // byte optimum.
+        assert!(byte.cost <= weighted.cost);
+    }
+
+    #[test]
+    fn weighted_saturation_falls_back_to_bytes_not_infeasible() {
+        // A tier so slow that weighted sums saturate past the sentinel
+        // must not turn a feasible graph into PlanError::Infeasible — the
+        // solver falls back to the byte objective instead.
+        use crate::tiling::CutCostModel;
+        let g = mlp_train(64, &[48, 48, 48]);
+        let w = CutCostModel { ps_per_byte_fp: u64::MAX / 4, latency_fp: u64::MAX / 4 };
+        let plan = OneCutSolver::new(&g).solve_weighted(&g, &w).unwrap();
+        assert_eq!(price(&g, &plan.tiles), plan.cost);
+        assert!(plan.cost < INFEASIBLE);
     }
 
     #[test]

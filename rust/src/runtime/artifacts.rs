@@ -18,9 +18,13 @@ use super::client::{Client, Executable};
 /// One artifact's manifest entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Registry key (e.g. `mlp_step_784_2048`).
     pub name: String,
+    /// HLO-text file name inside the artifact directory.
     pub file: String,
+    /// Input shapes, in call order.
     pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
     pub output_shapes: Vec<Vec<usize>>,
     /// Free-form tags from the Python side (kind, dims, batch, pallas...).
     pub tags: HashMap<String, String>,
@@ -29,6 +33,7 @@ pub struct ArtifactMeta {
 /// Lazily-compiling artifact registry.
 pub struct ArtifactRegistry {
     dir: PathBuf,
+    /// Every manifest entry, in manifest order.
     pub metas: Vec<ArtifactMeta>,
     compiled: Mutex<HashMap<String, usize>>, // name -> index into `exes`
     exes: Mutex<Vec<std::sync::Arc<Executable>>>,
@@ -92,6 +97,7 @@ impl ArtifactRegistry {
         })
     }
 
+    /// The manifest entry for `name`, if registered.
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.metas.iter().find(|m| m.name == name)
     }

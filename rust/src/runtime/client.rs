@@ -23,10 +23,12 @@ pub struct Executable {
 }
 
 impl Client {
+    /// A PJRT client on the host CPU platform.
     pub fn cpu() -> Result<Self> {
         Ok(Client { inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
     }
 
+    /// Backing platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.inner.platform_name()
     }

@@ -18,7 +18,9 @@ use super::client::{Client, Executable};
 /// Signature of a dynamic kernel: op kind + input shapes.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct KernelSig {
+    /// Which kernel to build.
     pub kind: KernelKind,
+    /// Input shapes, in call order (cache key together with `kind`).
     pub in_shapes: Vec<Vec<usize>>,
 }
 
@@ -26,11 +28,22 @@ pub struct KernelSig {
 /// models are planned and simulated but not executed — see DESIGN.md).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
-    MatMul { ta: bool, tb: bool },
+    /// Dense matmul with optional operand transposes.
+    MatMul {
+        /// Transpose the left operand.
+        ta: bool,
+        /// Transpose the right operand.
+        tb: bool,
+    },
+    /// Row-broadcast bias add.
     BiasAdd,
+    /// Elementwise `max(x, 0)`.
     Relu,
+    /// Gradient mask `dy · [y > 0]`.
     ReluGrad,
+    /// Elementwise sum.
     Add,
+    /// Column sums (bias gradients).
     ReduceSumRows,
     /// Sum (not mean) of per-row softmax cross-entropies; the engine
     /// divides by the global batch after shard reduction.
@@ -160,18 +173,22 @@ pub struct KernelCache {
 }
 
 impl KernelCache {
+    /// Empty cache bound to `client`.
     pub fn new(client: Arc<Client>) -> Self {
         KernelCache { client, cache: Mutex::new(HashMap::new()) }
     }
 
+    /// Number of compiled kernels.
     pub fn len(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 
+    /// Whether no kernel has been compiled yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Get (compiling and caching on first use) the kernel for `sig`.
     pub fn get(&self, sig: &KernelSig) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(sig) {
             return Ok(e.clone());
@@ -182,6 +199,7 @@ impl KernelCache {
         Ok(exe)
     }
 
+    /// The PJRT client kernels are compiled against.
     pub fn client(&self) -> &Arc<Client> {
         &self.client
     }

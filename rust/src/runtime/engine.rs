@@ -30,8 +30,11 @@ use super::tensor::HostTensor;
 /// Per-tier transfer accounting from real engine traffic.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Bytes crossing each interconnect tier (index = cut).
     pub tier_bytes: Vec<u64>,
+    /// Count of non-local transfers.
     pub transfers: u64,
+    /// Count of kernel executions.
     pub kernel_launches: u64,
 }
 
@@ -49,6 +52,7 @@ impl Metrics {
         }
     }
 
+    /// Sum over all tiers.
     pub fn total_bytes(&self) -> u64 {
         self.tier_bytes.iter().sum()
     }
@@ -63,12 +67,16 @@ pub struct Engine {
     devices: usize,
     stores: Vec<HashMap<TensorId, HostTensor>>,
     cache: KernelCache,
+    /// SGD learning rate applied by the update kernels.
     pub lr: f32,
+    /// Running transfer/kernel accounting.
     pub metrics: Metrics,
     aliases: Vec<TensorId>,
 }
 
 impl Engine {
+    /// Build an engine for `(g, plan)`: verifies every op is executable,
+    /// materializes the shard schedule, and prepares per-device stores.
     pub fn new(client: Arc<Client>, g: Graph, plan: Plan, lr: f32) -> Result<Self> {
         // Verify every op is executable up front.
         for op in &g.ops {
@@ -124,10 +132,12 @@ impl Engine {
         })
     }
 
+    /// The training graph this engine executes.
     pub fn graph(&self) -> &Graph {
         &self.g
     }
 
+    /// The tiling plan shards are laid out under.
     pub fn plan(&self) -> &Plan {
         &self.plan
     }

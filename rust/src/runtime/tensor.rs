@@ -8,25 +8,31 @@ use crate::exec::Region;
 /// A dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Logical dimensions (empty for scalars).
     pub shape: Vec<usize>,
+    /// Row-major element storage, `shape.iter().product()` long.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// All-zero tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap existing row-major storage (length-checked).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor { shape: shape.to_vec(), data }
     }
 
+    /// Rank-0 tensor holding `v`.
     pub fn scalar(v: f32) -> Self {
         HostTensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.data.len()
     }

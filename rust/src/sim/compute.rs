@@ -28,6 +28,7 @@ impl Default for EffModel {
 }
 
 impl EffModel {
+    /// Fraction of peak a GEMM of local shape `(m, k, n)` achieves.
     pub fn gemm_eff(&self, m: f64, k: f64, n: f64) -> f64 {
         let mind = m.min(k).min(n);
         (mind / self.knee).sqrt().clamp(self.floor, 1.0)

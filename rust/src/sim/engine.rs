@@ -53,11 +53,13 @@ use std::collections::BinaryHeap;
 
 use crate::lower::{Instr, LoweredProgram};
 
-use super::simulate::{extend_tier_index, SimConfig};
+use super::extend_tier_index;
+use super::simulate::SimConfig;
 
 /// One interconnect tier: a named link class crossed by one cut.
 #[derive(Debug, Clone)]
 pub struct TierLink {
+    /// Display name (trace lanes, reports), e.g. `"QPI"`.
     pub name: String,
     /// Per-transfer link bandwidth in bytes/s.
     pub bandwidth: f64,
@@ -71,9 +73,10 @@ pub struct TierLink {
 
 /// A hierarchical interconnect: `tiers[0]` is the slowest link, crossed by
 /// the outermost (first) cut — §5.1's placement. Indexing past the end
-/// repeats the last tier ([`extend_tier`]'s rule).
+/// repeats the last tier ([`super::extend_tier`]'s rule).
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Tier links, slowest (outermost cut) first.
     pub tiers: Vec<TierLink>,
 }
 
@@ -85,7 +88,7 @@ impl Topology {
     }
 
     /// Lift a [`SimConfig`]'s tier lists into an explicit `k`-tier
-    /// topology (both sides use [`extend_tier`], so they agree at every
+    /// topology (both sides use [`super::extend_tier`], so they agree at every
     /// depth). This is the topology under which the engine's envelope
     /// against [`super::try_simulate`] holds.
     pub fn from_sim(cfg: &SimConfig, k: usize) -> Self {
@@ -118,6 +121,73 @@ impl Topology {
         }
     }
 
+    /// The two-tier preset of ISSUE-4's topology bench: commodity
+    /// ethernet between nodes (1.25 GB/s, 50 µs, no parallel pairs) above
+    /// a shared intra-node PCIe bus (12.5 GB/s, 20 µs, one slot — §6.2's
+    /// contention observation). `k = 3` models 2 nodes × 4 GPUs: cut 0
+    /// crosses ethernet, cuts 1+ stay on the node-local bus.
+    pub fn two_tier(k: usize) -> Self {
+        let mut tiers = vec![TierLink {
+            name: "ethernet".to_string(),
+            bandwidth: 1.25e9,
+            latency: 50e-6,
+            slots: 1.0,
+        }];
+        for _ in 1..k.max(2) {
+            tiers.push(TierLink {
+                name: "PCIe".to_string(),
+                bandwidth: 12.5e9,
+                latency: 20e-6,
+                slots: 1.0,
+            });
+        }
+        Topology { tiers }
+    }
+
+    /// A full-bisection fat tree: every level offers the same per-link
+    /// bandwidth, and level `j` sustains all `2^j` simultaneous group
+    /// pairs (`slots = 2^j`), so per-pair bandwidth never degrades with
+    /// depth — the no-contention contrast case to [`Self::two_tier`].
+    pub fn fat_tree(k: usize) -> Self {
+        Topology {
+            tiers: (0..k.max(1))
+                .map(|j| TierLink {
+                    name: format!("fat-tree-l{j}"),
+                    bandwidth: 10.0e9,
+                    latency: 20e-6,
+                    slots: (1u64 << j) as f64,
+                })
+                .collect(),
+        }
+    }
+
+    /// Whether every tier is identical — the case where the byte objective
+    /// already is the time objective (up to one positive scale), so the
+    /// topology-aware planner falls back to the byte-LUT path
+    /// ([`crate::planner::plan_topology_aware`]'s bit-identity guarantee).
+    pub fn is_flat(&self) -> bool {
+        self.tiers.iter().all(|t| {
+            t.bandwidth == self.tiers[0].bandwidth
+                && t.latency == self.tiers[0].latency
+                && t.slots == self.tiers[0].slots
+        })
+    }
+
+    /// Project this topology onto a [`SimConfig`] (tier bandwidth /
+    /// contention lists plus the outermost tier's latency), keeping the
+    /// default compute-side parameters. The lowering pipeline takes a
+    /// `SimConfig` for its shard compute model; deriving it here keeps the
+    /// planner's candidate scoring and the topology bench on identical
+    /// configurations.
+    pub fn to_sim_config(&self) -> SimConfig {
+        SimConfig {
+            tier_bandwidth: self.tiers.iter().map(|t| t.bandwidth).collect(),
+            tier_parallel: self.tiers.iter().map(|t| t.slots).collect(),
+            latency: self.tiers[0].latency,
+            ..SimConfig::default()
+        }
+    }
+
     /// Wall-clock of one group-pair transfer of `pair_bytes` at `cut`,
     /// with all `2^cut` pairs sharing the tier's contention-capped
     /// aggregate (the symmetric-peak rule `try_simulate` prices).
@@ -144,16 +214,22 @@ pub enum Lane {
 /// One timeline span, convertible to a Chrome-trace complete event.
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
+    /// Span label (op name, `wait:<tensor>`, `<kind>:<tensor>`).
     pub name: String,
+    /// Which timeline the span belongs to.
     pub lane: Lane,
+    /// Span start, seconds from step start.
     pub start_s: f64,
+    /// Span duration in seconds.
     pub dur_s: f64,
+    /// Bytes carried (0 for compute and wait spans).
     pub bytes: u64,
 }
 
 /// Result of one engine run.
 #[derive(Debug, Clone)]
 pub struct EngineReport {
+    /// Number of devices scheduled.
     pub devices: usize,
     /// Makespan: when the last device retires its last instruction.
     pub step_s: f64,
@@ -166,8 +242,11 @@ pub struct EngineReport {
     /// Bytes crossing each tier (index = cut); identical to the lowered
     /// program's accounting and to `try_simulate`'s meter.
     pub tier_bytes: Vec<u64>,
+    /// Sum over all tiers.
     pub total_bytes: u64,
+    /// Transfer-start instructions per device stream.
     pub transfers_per_device: usize,
+    /// Every recorded span (device and link lanes).
     pub trace: Vec<TraceEvent>,
 }
 
@@ -592,6 +671,31 @@ mod tests {
         assert_eq!(topo.link(4).slots, cfg().parallel(4));
         assert_eq!(topo.link(4).bandwidth, topo.link(2).bandwidth);
         assert_eq!(topo.link(4).slots, topo.link(2).slots);
+    }
+
+    #[test]
+    fn preset_flatness_classification() {
+        assert!(Topology::flat(3, 1e9, 1e-6, 2.0).is_flat());
+        assert!(!Topology::two_tier(3).is_flat());
+        assert!(!Topology::fat_tree(3).is_flat());
+        assert!(!Topology::p2_8xlarge().is_flat());
+        // two_tier: cut 0 is the slow inter-node link, deeper cuts repeat
+        // the node-local bus.
+        let t = Topology::two_tier(3);
+        assert_eq!(t.link(0).name, "ethernet");
+        assert_eq!(t.link(1).name, "PCIe");
+        assert_eq!(t.link(7).name, "PCIe");
+    }
+
+    #[test]
+    fn to_sim_config_keeps_tier_lists_in_lockstep() {
+        let topo = Topology::two_tier(3);
+        let cfg = topo.to_sim_config();
+        for j in 0..4 {
+            assert_eq!(cfg.bw(j), topo.link(j).bandwidth, "tier {j}");
+            assert_eq!(cfg.parallel(j), topo.link(j).slots, "tier {j}");
+        }
+        assert_eq!(cfg.latency, topo.tiers[0].latency);
     }
 
     #[test]

@@ -13,11 +13,24 @@
 
 //! Two accountings share the metering theory:
 //!
-//! - the closed-form step model in [`simulate`] (per-tier byte sums,
+//! - the closed-form step model in [`simulate()`] (per-tier byte sums,
 //!   scalar overlap credit) drives the paper-figure sweeps;
 //! - the discrete-event engine in [`engine`] schedules the explicit
 //!   per-device programs of [`crate::lower`] over a hierarchical
 //!   [`engine::Topology`] and emits Chrome-trace timelines.
+//!
+//! ## The one tier-assignment rule
+//!
+//! Cut `j`'s conversions cross interconnect tier `j` (§5.1 placement), and
+//! every per-tier parameter list extends past its configured depth by
+//! repeating the last entry. Both halves of that rule live here, in
+//! [`extend_tier`] / [`extend_tier_index`], and every consumer — the
+//! analytic [`SimConfig`] meters, the event engine's [`Topology`] links,
+//! and the planner-side [`crate::planner::TopologyModel`] weights — goes
+//! through these two functions. Planner-predicted seconds and
+//! engine-simulated seconds therefore price any given transfer against the
+//! *same* link by construction (pinned by the hand-computed 2×2 case in
+//! this module's tests).
 
 pub mod compute;
 pub mod engine;
@@ -26,6 +39,93 @@ mod simulate;
 pub use compute::{shard_flops, EffModel};
 pub use engine::{chrome_trace_json, run_program, EngineReport, TierLink, Topology};
 pub use simulate::{
-    extend_tier, extend_tier_index, simulate, simulate_classic_dp, simulate_forced,
-    try_simulate, try_simulate_forced, SimConfig, SimReport,
+    simulate, simulate_classic_dp, simulate_forced, try_simulate, try_simulate_forced, SimConfig,
+    SimReport,
 };
+
+/// THE extension rule for per-tier parameter lists: indexing past the end
+/// repeats the last entry. Every consumer (`tier_bandwidth`,
+/// `tier_parallel`, [`engine::Topology`] links, the planner-side
+/// [`crate::planner::TopologyModel`]) goes through this one helper, so a
+/// `k` deeper than the configured hierarchy can never pick up a mismatched
+/// bandwidth/contention pair — and the planner can never price a cut
+/// against a different tier than the engine schedules it on.
+pub fn extend_tier<T: Copy>(list: &[T], tier: usize) -> T {
+    list[extend_tier_index(list.len(), tier)]
+}
+
+/// The index form of [`extend_tier`], for consumers holding non-`Copy`
+/// per-tier lists (e.g. [`engine::Topology`]'s named links).
+pub fn extend_tier_index(len: usize, tier: usize) -> usize {
+    assert!(len > 0, "per-tier parameter list must not be empty");
+    tier.min(len - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_lists_extend_by_one_rule() {
+        // Bandwidth and contention must extend in lockstep past the
+        // configured hierarchy: both go through `extend_tier`, so a deep k
+        // can never pair tier-3 bandwidth with tier-0 parallelism.
+        let mut c = SimConfig::default();
+        c.tier_bandwidth = vec![8.0e9, 10.0e9, 12.0e9];
+        c.tier_parallel = vec![1.0, 2.0];
+        for tier in 0..8 {
+            assert_eq!(c.bw(tier), c.tier_bandwidth[tier.min(2)], "tier {tier}");
+            assert_eq!(c.parallel(tier), c.tier_parallel[tier.min(1)], "tier {tier}");
+        }
+        assert_eq!(extend_tier(&[5u64], 100), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not be empty")]
+    fn empty_tier_list_rejected() {
+        extend_tier::<f64>(&[], 0);
+    }
+
+    /// The ISSUE-4 drift guard: on a hand-computed 2×2 machine (k = 2, two
+    /// tiers), the planner-side [`crate::planner::TopologyModel`] and the
+    /// engine's [`Topology`] must (a) assign every cut to the same tier via
+    /// [`extend_tier_index`] and (b) price a transfer to the same seconds.
+    #[test]
+    fn planner_and_engine_agree_on_hand_computed_2x2_case() {
+        use crate::planner::TopologyModel;
+
+        // 2 nodes × 2 GPUs: tier 0 = 1 GB/s (1 slot), tier 1 = 4 GB/s
+        // (2 slots). k = 2, so cut 0 -> tier 0 and cut 1 -> tier 1.
+        let topo = Topology {
+            tiers: vec![
+                TierLink { name: "inter".into(), bandwidth: 1.0e9, latency: 10e-6, slots: 1.0 },
+                TierLink { name: "intra".into(), bandwidth: 4.0e9, latency: 2e-6, slots: 2.0 },
+            ],
+        };
+        let model = TopologyModel::new(&topo, 2);
+
+        // Tier assignment: both sides resolve cut -> tier through
+        // extend_tier_index, including past the configured depth.
+        for cut in 0..4 {
+            assert_eq!(extend_tier_index(topo.tiers.len(), cut), cut.min(1));
+            assert_eq!(topo.link(cut).name, topo.tiers[cut.min(1)].name);
+        }
+
+        // Hand-computed seconds for a 1 MB pair transfer.
+        // Cut 0: 1 pair on 1 GB/s, agg = 1e9 * min(1, 1) = 1e9.
+        //   1e6 bytes * 1 pair / 1e9 = 1.0 ms (+ 10 us latency).
+        let s0 = topo.transfer_seconds(0, 1_000_000);
+        assert!((s0 - (1.0e-3 + 10e-6)).abs() < 1e-12, "{s0}");
+        // Cut 1: 2 pairs on 4 GB/s with 2 slots, agg = 8e9.
+        //   1e6 bytes * 2 pairs / 8e9 = 0.25 ms (+ 2 us latency).
+        let s1 = topo.transfer_seconds(1, 1_000_000);
+        assert!((s1 - (0.25e-3 + 2e-6)).abs() < 1e-12, "{s1}");
+
+        // The planner model prices the same bytes to the same seconds
+        // (within its 1/256-ps fixed-point grid).
+        let p0 = model.cut(0).seconds(1_000_000);
+        assert!((p0 - s0).abs() < 1e-9, "planner {p0} vs engine {s0}");
+        let p1 = model.cut(1).seconds(1_000_000);
+        assert!((p1 - s1).abs() < 1e-9, "planner {p1} vs engine {s1}");
+    }
+}

@@ -6,7 +6,8 @@
 //! `j`-times-halved graph, and that traffic crosses interconnect tier `j`
 //! (§5.1 placement). This keeps the simulator and the optimizer on one
 //! theory — the metered bytes equal the plan's Theorem-1 cost bit for bit
-//! (asserted in tests). Compute uses the shape-aware model in [`compute`].
+//! (asserted in tests). Compute uses the shape-aware model in
+//! [`super::compute`].
 
 use crate::exec::try_build_shard_tasks;
 use crate::graph::{Graph, Op};
@@ -14,6 +15,7 @@ use crate::planner::{apply_cut, classic_dp_form, Plan, PlanError};
 use crate::tiling::{op_cost, op_cost_with_form, Form, Tile};
 
 use super::compute::{shard_seconds, EffModel};
+use super::extend_tier;
 
 /// Testbed parameters. Defaults model the paper's p2.8xlarge: 8 GK210
 /// GPUs (~2.9 TFLOP/s fp32 each) on a PCIe tree with ~10 GB/s effective
@@ -78,25 +80,10 @@ impl SimConfig {
     }
 }
 
-/// THE extension rule for per-tier parameter lists: indexing past the end
-/// repeats the last entry. Every consumer (`tier_bandwidth`,
-/// `tier_parallel`, [`super::engine::Topology`] links) goes through this
-/// one helper, so a `k` deeper than the configured hierarchy can never
-/// pick up a mismatched bandwidth/contention pair.
-pub fn extend_tier<T: Copy>(list: &[T], tier: usize) -> T {
-    list[extend_tier_index(list.len(), tier)]
-}
-
-/// The index form of [`extend_tier`], for consumers holding non-`Copy`
-/// per-tier lists (e.g. [`super::engine::Topology`]'s named links).
-pub fn extend_tier_index(len: usize, tier: usize) -> usize {
-    assert!(len > 0, "per-tier parameter list must not be empty");
-    tier.min(len - 1)
-}
-
 /// Simulation result for one training step.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Number of devices simulated.
     pub devices: usize,
     /// Per-device compute seconds (even tiling — all devices identical).
     pub compute_s: f64,
@@ -108,10 +95,12 @@ pub struct SimReport {
     pub step_s: f64,
     /// Total bytes crossing each tier (index = cut, outermost first).
     pub tier_bytes: Vec<u64>,
+    /// Sum over all tiers.
     pub total_bytes: u64,
 }
 
 impl SimReport {
+    /// Samples per second at this step time.
     pub fn throughput(&self, batch: usize) -> f64 {
         batch as f64 / self.step_s
     }
@@ -119,6 +108,21 @@ impl SimReport {
 
 /// Simulate one training step of `g` under `plan`. Panics on plans with
 /// no realizable shard schedule (see [`try_simulate`]).
+///
+/// # Examples
+///
+/// ```
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::planner::k_cut;
+/// use soybean::sim::{simulate, SimConfig};
+///
+/// let g = mlp(&MlpConfig { batch: 128, dims: vec![64, 64], bias: false });
+/// let plan = k_cut(&g, 3);
+/// let report = simulate(&g, &plan, &SimConfig::default());
+/// assert_eq!(report.devices, 8);
+/// // The simulator meters the same theory the optimizer priced.
+/// assert_eq!(report.total_bytes, plan.total_cost());
+/// ```
 pub fn simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
     simulate_forced(g, plan, cfg, &|_, _| None)
 }
@@ -338,27 +342,6 @@ mod tests {
         let r1 = simulate(&g, &Planner::plan(&g, 1, Strategy::Soybean), &cfg());
         let r3 = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
         assert!(r3.compute_s < r1.compute_s);
-    }
-
-    #[test]
-    fn tier_lists_extend_by_one_rule() {
-        // Bandwidth and contention must extend in lockstep past the
-        // configured hierarchy: both go through `extend_tier`, so a deep k
-        // can never pair tier-3 bandwidth with tier-0 parallelism.
-        let mut c = cfg();
-        c.tier_bandwidth = vec![8.0e9, 10.0e9, 12.0e9];
-        c.tier_parallel = vec![1.0, 2.0];
-        for tier in 0..8 {
-            assert_eq!(c.bw(tier), c.tier_bandwidth[tier.min(2)], "tier {tier}");
-            assert_eq!(c.parallel(tier), c.tier_parallel[tier.min(1)], "tier {tier}");
-        }
-        assert_eq!(extend_tier(&[5u64], 100), 5);
-    }
-
-    #[test]
-    #[should_panic(expected = "must not be empty")]
-    fn empty_tier_list_rejected() {
-        extend_tier::<f64>(&[], 0);
     }
 
     #[test]

@@ -305,6 +305,7 @@ pub enum Form {
 }
 
 impl Form {
+    /// Paper-notation label (`R·r->R`, `C·R->red`, ...).
     pub fn label(&self) -> String {
         match self {
             Form::MatMul(0) => "R·r->R".to_string(),
@@ -320,12 +321,16 @@ impl Form {
 /// picked and the conversion bytes per phase.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct OpCostBreakdown {
+    /// The winning aligned form.
     pub form: Form,
+    /// Conversion bytes to fetch the inputs into the form's layouts.
     pub input_bytes: u64,
+    /// Conversion bytes to push the output to its assigned tiling.
     pub output_bytes: u64,
 }
 
 impl OpCostBreakdown {
+    /// Input plus output conversion bytes — the op's Eq. (2) cost.
     pub fn total(&self) -> u64 {
         self.input_bytes.saturating_add(self.output_bytes)
     }

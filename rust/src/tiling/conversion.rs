@@ -12,7 +12,9 @@ use super::Tile;
 /// device holds a full-shape partial sum that must still be added).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Produced {
+    /// A realized tiling.
     Tile(Tile),
+    /// Full-shape partial sums awaiting reduction (Figure 6's `red`).
     Red,
 }
 

@@ -20,8 +20,84 @@
 use crate::graph::{Graph, TensorId};
 use crate::util::radix::{mults_of, odometer_inc};
 
-use super::aligned::op_cost;
+use super::aligned::{op_cost, INFEASIBLE};
 use super::scheme::{candidate_tiles, Tile};
+
+/// Fixed-point picosecond pricing of one cut's conversions — the bridge
+/// between the byte-valued Eq. (2) tables and a tier of a hierarchical
+/// interconnect (ISSUE-4's topology-aware planning).
+///
+/// Byte counts are exact integers; wall-clock is not. To keep the one-cut
+/// DP's integer arithmetic (and its deterministic tie-breaking), seconds
+/// are modeled on a `1/256` picosecond grid:
+///
+/// `weighted(bytes) = bytes · ps_per_byte_fp + latency_fp · [bytes > 0]`
+///
+/// where `ps_per_byte_fp` is the tier's *effective* picoseconds per
+/// pair-byte (`2^j / (bandwidth · min(slots, 2^j))`, all `2^j`
+/// simultaneous group pairs of cut `j` sharing the contention-capped
+/// aggregate — the same rule [`crate::sim::Topology::transfer_seconds`]
+/// prices) and `latency_fp` charges the tier's startup latency once per
+/// costed op, mirroring the analytic model's per-op-cut latency term.
+///
+/// The map is strictly monotone in bytes (`ps_per_byte_fp >= 1`), so for a
+/// *uniform* hierarchy with zero latency the weighted argmin is exactly the
+/// byte argmin — hierarchy and latency are the only two ways a weighted
+/// plan can diverge from the byte plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CutCostModel {
+    /// Picoseconds per pair-byte across this cut, ×[`Self::FP_ONE`].
+    pub ps_per_byte_fp: u64,
+    /// Fixed startup charge per costed op at this cut, ×[`Self::FP_ONE`].
+    pub latency_fp: u64,
+}
+
+impl CutCostModel {
+    /// Fixed-point scale: stored weights are picoseconds × 256.
+    pub const FP_ONE: u64 = 256;
+
+    /// Build from SI seconds (per pair-byte, and per-transfer latency).
+    /// The per-byte weight is floored at one fixed-point unit so the map
+    /// stays strictly monotone even for near-infinite bandwidth.
+    pub fn from_seconds(seconds_per_byte: f64, latency_s: f64) -> Self {
+        let fp = Self::FP_ONE as f64;
+        CutCostModel {
+            ps_per_byte_fp: ((seconds_per_byte * 1e12 * fp).round() as u64).max(1),
+            latency_fp: (latency_s * 1e12 * fp).round() as u64,
+        }
+    }
+
+    /// The byte objective itself (weight 1, no latency): weighted tables
+    /// built with this model order plans exactly like the byte tables.
+    pub fn bytes() -> Self {
+        CutCostModel { ps_per_byte_fp: 1, latency_fp: 0 }
+    }
+
+    /// Price `bytes` of conversion volume, clamped below
+    /// [`INFEASIBLE`](crate::tiling::aligned::INFEASIBLE) so a weighted
+    /// entry can never masquerade as "no aligned form". Sums of weighted
+    /// entries can still saturate past the sentinel once a single cut
+    /// models more than ~70 seconds (`INFEASIBLE` fixed-point units);
+    /// the weighted DP detects that and falls back to the byte objective
+    /// ([`crate::planner::OneCutSolver::solve_weighted`]) rather than
+    /// reporting a feasible plan as infeasible.
+    pub fn weight(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        bytes
+            .saturating_mul(self.ps_per_byte_fp)
+            .saturating_add(self.latency_fp)
+            .min(INFEASIBLE - 1)
+    }
+
+    /// Decode a weighted total back to SI seconds (approximate — latency
+    /// charges are folded in), for reports and the drift-pinning test in
+    /// [`crate::sim`].
+    pub fn seconds(&self, bytes: u64) -> f64 {
+        self.weight(bytes) as f64 / (Self::FP_ONE as f64 * 1e12)
+    }
+}
 
 /// The dense Eq. (2) table of one operator.
 #[derive(Debug, Clone)]
@@ -103,6 +179,28 @@ impl CostTables {
             ops.push(OpCostTable { operands, mults, costs });
         }
         CostTables { alias: alias.to_vec(), cands, ops }
+    }
+
+    /// The per-tier *weighted* twin of these tables: every finite entry is
+    /// re-priced from conversion bytes to fixed-point picoseconds under
+    /// `w` ([`CutCostModel::weight`]); `INFEASIBLE` entries stay
+    /// `INFEASIBLE`. Because Eq. (2) minimizes over aligned forms and the
+    /// weighting is monotone nondecreasing in bytes, mapping the already-
+    /// minimized table is exact: `min_form w(bytes(form)) =
+    /// w(min_form bytes(form))`.
+    ///
+    /// This is what [`crate::planner::OneCutSolver::solve_weighted`] feeds
+    /// the odometer DP, so the DP minimizes *modeled time on the cut's
+    /// tier* instead of raw bytes. Consumes `self` and re-prices in place
+    /// — the weighted solve path stays allocation-free beyond the byte
+    /// tables it starts from.
+    pub fn weighted(mut self, w: &CutCostModel) -> CostTables {
+        for t in &mut self.ops {
+            for c in &mut t.costs {
+                *c = if *c >= INFEASIBLE { INFEASIBLE } else { w.weight(*c) };
+            }
+        }
+        self
     }
 
     /// Total plan cost read through the tables — the LUT twin of
@@ -242,6 +340,55 @@ mod tests {
             }
             assert_eq!(tables.price(&tiles), crate::planner::price(&g, &tiles));
         }
+    }
+
+    #[test]
+    fn weighted_tables_map_entries_pointwise() {
+        let g = train_graph(64, &[32, 48, 16]);
+        let tables = CostTables::build(&g);
+        let w = CutCostModel { ps_per_byte_fp: 800, latency_fp: 5_000_000 };
+        let wt = CostTables::build(&g).weighted(&w);
+        for (t, tw) in tables.ops.iter().zip(&wt.ops) {
+            assert_eq!(t.operands, tw.operands);
+            assert_eq!(t.mults, tw.mults);
+            for (&c, &cw) in t.costs.iter().zip(&tw.costs) {
+                if c >= INFEASIBLE {
+                    assert_eq!(cw, INFEASIBLE);
+                } else if c == 0 {
+                    assert_eq!(cw, 0);
+                } else {
+                    assert_eq!(cw, c * 800 + 5_000_000);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_model_weighting_is_identity() {
+        let g = train_graph(16, &[8, 4, 6]);
+        let tables = CostTables::build(&g);
+        let wt = CostTables::build(&g).weighted(&CutCostModel::bytes());
+        for (t, tw) in tables.ops.iter().zip(&wt.ops) {
+            assert_eq!(t.costs, tw.costs);
+        }
+    }
+
+    #[test]
+    fn cut_cost_model_from_seconds_rounds_on_fp_grid() {
+        // 1 GB/s, 1 pair, 10 us latency: 1000 ps/byte and 1e7 ps.
+        let w = CutCostModel::from_seconds(1.0 / 1.0e9, 10e-6);
+        assert_eq!(w.ps_per_byte_fp, 1000 * CutCostModel::FP_ONE);
+        assert_eq!(w.latency_fp, 10_000_000 * CutCostModel::FP_ONE);
+        assert_eq!(w.weight(0), 0);
+        assert_eq!(w.weight(100), 100 * 1000 * 256 + 10_000_000 * 256);
+        // Infinite bandwidth floors at one fixed-point unit per byte —
+        // strict monotonicity survives.
+        let free = CutCostModel::from_seconds(0.0, 0.0);
+        assert_eq!(free.ps_per_byte_fp, 1);
+        assert!(free.weight(5) < free.weight(6));
+        // Weighted prices never collide with the infeasibility sentinel.
+        let w = CutCostModel { ps_per_byte_fp: u64::MAX / 2, latency_fp: u64::MAX / 2 };
+        assert!(w.weight(u64::MAX / 2) < INFEASIBLE);
     }
 
     #[test]

@@ -25,5 +25,5 @@ mod scheme;
 
 pub use aligned::{form_requirements, op_cost, op_cost_detailed, op_cost_with_form, Form, OpCostBreakdown};
 pub use conversion::{conversion_cost, Produced};
-pub use cost_table::{CostTables, OpCostTable};
+pub use cost_table::{CostTables, CutCostModel, OpCostTable};
 pub use scheme::{candidate_tiles, describe_seq, shard_shape, Tile, TileSeq};

@@ -13,12 +13,16 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 /// Result of one measured benchmark.
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
+    /// Measured iterations (excluding warmup).
     pub iters: u32,
+    /// Mean wall-clock per iteration.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl Measurement {
+    /// Mean per-iteration milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
     }
@@ -65,6 +69,7 @@ pub struct BenchLog {
 }
 
 impl BenchLog {
+    /// Empty log for the named bench target.
     pub fn new(bench: &str) -> Self {
         BenchLog { bench: bench.to_string(), rows: Vec::new() }
     }

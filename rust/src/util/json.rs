@@ -8,17 +8,25 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (parsed as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object member lookup (`None` for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -26,6 +34,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -33,6 +42,7 @@ impl Json {
         }
     }
 
+    /// The array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -40,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The value as a usize, if it is a non-negative integer number.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -47,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -55,6 +67,7 @@ impl Json {
     }
 }
 
+/// Parse a complete JSON document (trailing garbage is an error).
 pub fn parse(s: &str) -> Result<Json, String> {
     let bytes: Vec<char> = s.chars().collect();
     let mut p = Parser { chars: bytes, pos: 0 };

@@ -13,10 +13,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (same seed, same sequence).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

@@ -1,0 +1,652 @@
+#!/usr/bin/env python3
+"""Topology-aware candidate-search mirror (ISSUE-4 design validation).
+
+Pipeline per candidate plan: per-cut tiles -> lowering pass 1+2 (programs)
+-> shard compute model -> discrete-event engine on a hierarchical topology.
+Searches per-cut choice vectors over {B(yte-greedy), W(eighted-greedy),
+D(ata-parallel), M(odel-parallel)}^k on the transformer micro-4L workload
+and reports engine step times. This is how the `Topology::two_tier`
+preset and the candidate portfolio of `planner::plan_topology_aware` were
+chosen: under ethernet (1.25 GB/s, 50 us) over a one-slot PCIe bus
+(12.5 GB/s, 20 us), the weighted-greedy plan (W at the inner cuts —
+identical to the all-W `try_k_cut_weighted` plan after dedup) pays
+~0.5 MB more bytes at the contended innermost cut to drop 4 collectives
+and lands a ~5% strictly faster engine step than byte-greedy; every
+strategy-mix candidate (D/M at any cut) is worse. Run: PRESET=ethpcie
+python3 topo_search.py (takes a few minutes; 13+ DP solves in pure
+Python).
+"""
+import heapq, itertools, math, os, sys, io, contextlib
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+with contextlib.redirect_stdout(io.StringIO()):
+    from topo import (G, INPUT, LABEL, WEIGHT, ACT, GRAD, WGRAD, UPD, SCALAR,
+                      aliases, bfs_levels, mlp_graph, transformer_v2)
+from cost import (op_cost, candidates, price, dp_assignment, apply_cut,
+                  bytes_of, REP, S, INF, semantics, feasible, req_tile, conv_cost)
+from collections import defaultdict
+
+NONE = ("none",)
+
+def op_cost_detailed(g, op, ins_t, out_t):
+    name, kind, ins, outs = op
+    sem = semantics(g, op)
+    bz = bytes_of(g, outs[0])
+    best = None
+    def consider(total, reqs, prod):
+        nonlocal best
+        if best is None or total < best[0]:
+            best = (total, reqs, prod)
+    if sem[0] == "mm":
+        _, x, y, z = sem
+        tx, ty, tz = ins[0], ins[1], outs[0]
+        bx, by = bytes_of(g, tx), bytes_of(g, ty)
+        forms = [
+            (req_tile(("d", x[0][1])), REP, ("tile", req_tile(("d", z[0][1])))),
+            (REP, req_tile(("d", y[1][1])), ("tile", req_tile(("d", z[1][1])))),
+            (req_tile(("d", x[1][1])), req_tile(("d", y[0][1])), ("red",)),
+        ]
+        for rx, ry, prod in forms:
+            if not feasible(g, tx, rx) or not feasible(g, ty, ry): continue
+            if prod[0] == "tile" and not feasible(g, tz, prod[1]): continue
+            c = conv_cost(bx, ("tile", ins_t[0]), rx) + conv_cost(by, ("tile", ins_t[1]), ry)
+            c += conv_cost(bz, prod, out_t)
+            consider(c, [rx, ry], prod)
+        return best
+    _, splittable, in_maps, out_map, allow_rep = sem
+    if allow_rep:
+        c = sum(conv_cost(bytes_of(g, t), ("tile", ins_t[i]), REP) for i, t in enumerate(ins))
+        c += conv_cost(bz, ("tile", REP), out_t)
+        consider(c, [REP]*len(ins), ("tile", REP))
+    for ax, ok in enumerate(splittable):
+        if not ok: continue
+        c = 0; reqs = []; bad = False
+        for i, m in enumerate(in_maps):
+            r = req_tile(m[ax])
+            if not feasible(g, ins[i], r): bad = True; break
+            c += conv_cost(bytes_of(g, ins[i]), ("tile", ins_t[i]), r)
+            reqs.append(r)
+        if bad: continue
+        if out_map[ax] == NONE:
+            prod = ("red",)
+        else:
+            t = S(out_map[ax][1])
+            if not feasible(g, outs[0], t): continue
+            prod = ("tile", t)
+        c += conv_cost(bz, prod, out_t)
+        consider(c, reqs, prod)
+    return best
+
+def scatter_axis(shape):
+    for i, d in enumerate(shape):
+        if d >= 2 and d % 2 == 0: return i
+    return None
+
+def share(P, n, r):
+    return P // n + (1 if r < P % n else 0)
+
+# ---------------- weighted / parametrized one-cut DP ----------------
+def one_cut_cost(g, cost_fn):
+    """dp.py's one_cut with a pluggable per-op cost function."""
+    alias = aliases(g)
+    levels, boundary, internal, level_of = bfs_levels(g)
+    nl = len(levels)
+    nt = len(g.tensors)
+    cands = [candidates(g, t) for t in range(nt)]
+    internal_level = [-1] * nt
+    for l, ts in enumerate(internal):
+        for t in ts: internal_level[t] = l
+    boundary_level = [-1] * nt
+    pos_in_boundary = [-1] * nt
+    for l, b in enumerate(boundary):
+        for i, t in enumerate(b):
+            boundary_level[t] = l; pos_in_boundary[t] = i
+
+    comps_per_level = []
+    for l, ops in enumerate(levels):
+        parent = list(range(len(ops)))
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]; x = parent[x]
+            return x
+        owner = {}
+        for oi, op in enumerate(ops):
+            _, _, ins, outs = g.ops[op]
+            for t in ins + outs:
+                t = alias[t]
+                if internal_level[t] == l:
+                    if t not in owner: owner[t] = oi
+                    else:
+                        a, b_ = find(owner[t]), find(oi)
+                        if a != b_: parent[a] = b_
+        groups = defaultdict(list)
+        for oi, op in enumerate(ops):
+            groups[find(oi)].append(op)
+        comps = []
+        for root in sorted(groups):
+            comp_ops = groups[root]
+            bids, iids = [], []
+            for op in comp_ops:
+                _, _, ins, outs = g.ops[op]
+                for t in ins + outs:
+                    t = alias[t]
+                    if internal_level[t] == l:
+                        if t not in iids: iids.append(t)
+                    elif t not in bids: bids.append(t)
+            bids.sort(); iids.sort()
+            comps.append((comp_ops, bids, iids))
+        comps_per_level.append(comps)
+
+    def dec(idx, rad):
+        out = []
+        for r in rad:
+            out.append(idx % r); idx //= r
+        return out
+
+    tabs_per_level = []
+    for l, comps in enumerate(comps_per_level):
+        tabs = []
+        for comp_ops, bids, iids in comps:
+            brad = [len(cands[t]) for t in bids]
+            irad = [len(cands[t]) for t in iids]
+            blen = 1
+            for r in brad: blen *= r
+            ilen = 1
+            for r in irad: ilen *= r
+            table = []
+            for bidx in range(blen):
+                bdig = dec(bidx, brad)
+                best = (INF, 0)
+                for iidx in range(ilen):
+                    idig = dec(iidx, irad)
+                    assign = {}
+                    for i, t in enumerate(bids): assign[t] = cands[t][bdig[i]]
+                    for i, t in enumerate(iids): assign[t] = cands[t][idig[i]]
+                    cost = 0
+                    for op in comp_ops:
+                        _, _, ins, outs = g.ops[op]
+                        c = cost_fn(g, g.ops[op],
+                                    [assign[alias[t]] for t in ins],
+                                    assign[alias[outs[0]]])
+                        cost += c
+                        if cost >= best[0]: break
+                    if cost < best[0]: best = (cost, iidx)
+                table.append(best)
+            tabs.append((table, brad, bids, iids, irad))
+        tabs_per_level.append(tabs)
+
+    bnd_rad = [[len(cands[t]) for t in b] for b in boundary]
+    bnd_len = []
+    for rad in bnd_rad:
+        p = 1
+        for r in rad: p *= r
+        bnd_len.append(p)
+
+    dp = []
+    for l in range(nl):
+        prev_len = bnd_len[l-1] if l > 0 else 1
+        cur_len = bnd_len[l] if l + 1 < nl else 1
+        comp_contrib = []
+        for (table, brad, bids, iids, irad) in tabs_per_level[l]:
+            mults = []
+            m = 1
+            for r in brad:
+                mults.append(m); m *= r
+            wprev, wcur = [], []
+            for i, t in enumerate(bids):
+                if l > 0 and boundary_level[t] == l - 1:
+                    wprev.append((pos_in_boundary[t], mults[i]))
+                else:
+                    wcur.append((pos_in_boundary[t], mults[i]))
+            def contrib(ln, rad, w):
+                out = [0] * ln
+                dig = [0] * len(rad)
+                for slot in range(ln):
+                    s = 0
+                    for (p_, m_) in w: s += dig[p_] * m_
+                    out[slot] = s
+                    for j in range(len(rad)):
+                        dig[j] += 1
+                        if dig[j] < rad[j]: break
+                        dig[j] = 0
+                return out
+            cp = contrib(prev_len, bnd_rad[l-1] if l > 0 else [], wprev)
+            cc = contrib(cur_len, bnd_rad[l] if l + 1 < nl else [], wcur)
+            comp_contrib.append((table, cp, cc))
+        cur_dp = [(INF, 0)] * cur_len
+        for q in range(cur_len):
+            best = (INF, 0)
+            for p in range(prev_len):
+                base = 0 if l == 0 else dp[l-1][p][0]
+                if base >= best[0]: continue
+                cost = base
+                for (table, cp, cc) in comp_contrib:
+                    cost += table[cp[p] + cc[q]][0]
+                    if cost >= best[0]: break
+                if cost < best[0]: best = (cost, p)
+            cur_dp[q] = best
+        dp.append(cur_dp)
+
+    final_cost, state = min((c, i) for i, (c, _) in enumerate(dp[nl-1]))
+    if final_cost >= INF: return None, None
+
+    bdig = [None] * len(boundary)
+    for l in range(nl - 1, -1, -1):
+        prev_state = dp[l][state][1]
+        if l >= 1: bdig[l-1] = dec(prev_state, bnd_rad[l-1])
+        if l + 1 < nl: bdig[l] = dec(state, bnd_rad[l])
+        state = prev_state
+    tiles = [REP] * nt
+    for l, b in enumerate(boundary):
+        for i, t in enumerate(b):
+            tiles[t] = cands[t][bdig[l][i]]
+    for l, tabs in enumerate(tabs_per_level):
+        for (table, brad, bids, iids, irad) in tabs:
+            mults = []
+            m = 1
+            for r in brad:
+                mults.append(m); m *= r
+            idx = 0
+            for i, t in enumerate(bids):
+                idx += bdig[boundary_level[t]][pos_in_boundary[t]] * mults[i]
+            iidx = table[idx][1]
+            idig = dec(iidx, irad)
+            for i, t in enumerate(iids):
+                tiles[t] = cands[t][idig[i]]
+    for t in range(nt):
+        tiles[t] = tiles[alias[t]]
+    return final_cost, tiles
+
+def byte_cost_fn(g, op, ins_t, out_t):
+    return op_cost(g, op, ins_t, out_t)
+
+def make_weighted_fn(W, C):
+    """bytes*W + C*[bytes>0], fixed-point; INF passthrough."""
+    def f(g, op, ins_t, out_t):
+        b = op_cost(g, op, ins_t, out_t)
+        if b >= INF: return INF
+        if b == 0: return 0
+        return b * W + C
+    return f
+
+# ---------------- MP per-cut tiles (mirror of model_parallel_tiles k=1) --
+def mp_assignment(g):
+    tiles = []
+    for t, (nm, shape, kind) in enumerate(g.tensors):
+        r = len(shape)
+        fits = lambda d: shape[d] % 2 == 0 and shape[d] >= 2
+        if kind in (WEIGHT, WGRAD, UPD) and r == 2 and fits(0): tiles.append(S(0))
+        elif kind in (WEIGHT, WGRAD, UPD) and r == 4 and fits(3): tiles.append(S(3))
+        elif kind in (WEIGHT, WGRAD, UPD) and r == 1 and fits(0): tiles.append(S(0))
+        elif kind == ACT and r == 2 and fits(1): tiles.append(S(1))
+        elif kind == ACT and r == 4 and fits(3): tiles.append(S(3))
+        elif kind == GRAD and r == 4 and fits(3): tiles.append(S(3))
+        else: tiles.append(REP)
+    return tiles
+
+# ---------------- topology ----------------
+class Tier:
+    def __init__(self, bw, lat, slots): self.bw, self.lat, self.slots = bw, lat, slots
+
+def tier_of(tiers, cut):
+    return tiers[min(cut, len(tiers) - 1)]
+
+def transfer_seconds(tiers, cut, pair_bytes):
+    l = tier_of(tiers, cut)
+    if pair_bytes == 0: return l.lat
+    pairs = float(1 << cut)
+    agg = l.bw * min(l.slots, pairs)
+    return pair_bytes * pairs / agg + l.lat
+
+def two_tier(inter_bw, inter_lat, intra_bw, intra_lat, intra_slots, k):
+    return [Tier(inter_bw, inter_lat, 1.0)] + [Tier(intra_bw, intra_lat, intra_slots)] * (k - 1)
+
+# ---------------- compute model (mirror of sim/compute.rs) ----------------
+PEAK = 2.9e12
+KNEE, FLOOR = 512.0, 0.05
+
+def gemm_eff(m, k, n):
+    mind = min(m, k, n)
+    return max(FLOOR, min(1.0, math.sqrt(mind / KNEE)))
+
+def vol(s):
+    p = 1
+    for d in s: p *= d
+    return float(p)
+
+VIEW_KINDS = {"SplitHeads", "MergeHeads", "SliceHeads", "ConcatHeads",
+              "SplitHeads3", "MergeHeads3"}
+
+def shard_seconds(g, op, local_ins, local_out):
+    name, kind, ins, outs = op
+    k0 = kind[0]
+    if k0 == "Ew" and kind[1] == "Ident": return 0.0
+    if k0 in VIEW_KINDS: return 0.0
+    if k0 == "MatMul":
+        _, ta, tb = kind
+        m, kk = (local_ins[0][1], local_ins[0][0]) if ta else (local_ins[0][0], local_ins[0][1])
+        n = local_out[1]
+        fl = 2.0 * m * kk * n
+        return fl / (PEAK * gemm_eff(m, kk, n))
+    if k0 == "BMM":
+        _, ta, tb = kind
+        m, kk = (local_ins[0][2], local_ins[0][1]) if ta else (local_ins[0][1], local_ins[0][2])
+        n = local_out[2]
+        fl = 2.0 * local_ins[0][0] * m * kk * n
+        return fl / (PEAK * gemm_eff(m, kk, n))
+    if k0 in ("LayerNorm", "LayerNormGrad", "Softmax", "SoftmaxGrad",
+              "SoftmaxXent", "SoftmaxXentGrad"):
+        fl = 8.0 * vol(local_ins[0])
+        return fl / (PEAK * 0.04)
+    fl = 2.0 * max(vol(local_out), vol(local_ins[0]))
+    return fl / (PEAK * 0.04)
+
+def build_shard_locals(g, tiles_per_cut, k):
+    """Mirror of try_build_shard_tasks: per op, stacked local in/out shapes."""
+    locals_per_op = []
+    for opid, op in enumerate(g.ops):
+        name, kind, ins, outs = op
+        lg = G()
+        lg.tensors = [[n, list(s), kd] for n, s, kd in g.tensors]
+        lg.ops = g.ops
+        ok = True
+        for j in range(k):
+            ins_t = [tiles_per_cut[j][t] for t in ins]
+            out_t = tiles_per_cut[j][outs[0]]
+            det = op_cost_detailed(lg, op, ins_t, out_t)
+            if det is None or det[0] >= INF:
+                ok = False; break
+            _, reqs, prod = det
+            for slot, r in enumerate(reqs):
+                if r != REP:
+                    lg.tensors[ins[slot]][1][r[1]] //= 2
+            if prod[0] == "tile" and prod[1] != REP:
+                lg.tensors[outs[0]][1][prod[1][1]] //= 2
+        if not ok:
+            return None
+        locals_per_op.append(([lg.tensors[t][1] for t in ins], lg.tensors[outs[0]][1]))
+    return locals_per_op
+
+# ---------------- lowering pass 1+2 (mirror of lowering.rs) ----------------
+def lower_program(g, tiles_per_cut, k):
+    """Returns (programs, meta, comp_per_device) or None if infeasible."""
+    devices = 1 << k
+    # pass 1: conversions per (cut, op)
+    per_cut = []
+    cur = g
+    for j in range(k):
+        tiles = tiles_per_cut[j]
+        convs = []
+        for op in cur.ops:
+            name, kind, ins, outs = op
+            ins_t = [tiles[t] for t in ins]
+            out_t = tiles[outs[0]]
+            det = op_cost_detailed(cur, op, ins_t, out_t)
+            if det is None or det[0] >= INF: return None
+            _, reqs, prod = det
+            in_convs = []
+            for i, t in enumerate(ins):
+                b = conv_cost(bytes_of(cur, t), ("tile", ins_t[i]), reqs[i])
+                if b > 0: in_convs.append((t, b))
+            tz = outs[0]
+            ob = conv_cost(bytes_of(cur, tz), prod, out_t)
+            out_conv = None
+            if ob > 0:
+                out_conv = (tz, prod, out_t, ob, scatter_axis(cur.tensors[tz][1]))
+            convs.append((in_convs, out_conv))
+        per_cut.append(convs)
+        cur = apply_cut(cur, tiles)
+
+    locals_per_op = build_shard_locals(g, tiles_per_cut, k)
+    if locals_per_op is None: return None
+
+    meta = []   # per gid: cut
+    progs = [[] for _ in range(devices)]
+
+    def start(cut, pair_bytes):
+        gid = len(meta)
+        meta.append(cut)
+        n = devices >> cut
+        for d in range(devices):
+            progs[d].append(('T', gid, share(pair_bytes, n, d & (n - 1))))
+        return gid
+
+    def wait(gid):
+        for d in range(devices):
+            progs[d].append(('W', gid))
+
+    pending = defaultdict(list)
+    comp = 0.0
+    for opid, op in enumerate(g.ops):
+        name, kind, ins, outs = op
+        for t in ins:
+            for gid in pending[t]: wait(gid)
+            pending[t] = []
+        own = []
+        for j in range(k):
+            for (t, b) in per_cut[j][opid][0]:
+                own.append(start(j, b))
+        for gid in own: wait(gid)
+        lin, lout = locals_per_op[opid]
+        s = shard_seconds(g, op, lin, lout)
+        comp += s
+        for d in range(devices):
+            progs[d].append(('C', s))
+        for j in range(k):
+            oc = per_cut[j][opid][1]
+            if oc is None: continue
+            tz, prod, out_t, ob, ax = oc
+            if prod[0] == "tile":
+                pending[tz].append(start(j, ob))
+            elif out_t != REP:           # Red -> Split
+                pending[tz].append(start(j, ob))
+            elif ax is not None:         # Red -> Rep allreduce decomposition
+                rs = start(j, ob // 2)
+                wait(rs)
+                pending[tz].append(start(j, ob - ob // 2))
+            else:                        # SendRecv exchange
+                pending[tz].append(start(j, ob))
+    for t in sorted(pending):
+        for gid in pending[t]: wait(gid)
+    return progs, meta, comp
+
+# ---------------- engine (mirror of sim/engine.rs run_program) ----------------
+def run_engine(k, progs, meta, tiers):
+    devices = 1 << k
+    instances = {}
+    for gid, cut in enumerate(meta):
+        for pair in range(1 << cut):
+            instances[(gid, pair)] = dict(bytes=0, issued=0, ready=0.0, comp=None, waiters=[])
+    pc = [0]*devices; end = [0.0]*devices; fin = [False]*devices
+    heap = []; seq = 0
+    for d in range(devices):
+        seq += 1; heapq.heappush(heap, (0.0, seq, ('dev', d)))
+    while heap:
+        time, _, ev = heapq.heappop(heap)
+        if ev[0] == 'done':
+            _, gid, pair = ev
+            inst = instances[(gid, pair)]
+            ws = inst['waiters']; inst['waiters'] = []
+            for w in ws:
+                seq += 1; heapq.heappush(heap, (time, seq, ('dev', w)))
+            continue
+        d = ev[1]; t = time; prog = progs[d]
+        while True:
+            if pc[d] == len(prog):
+                end[d] = t; fin[d] = True; break
+            ins = prog[pc[d]]
+            if ins[0] == 'C':
+                t += ins[1]; pc[d] += 1
+            elif ins[0] == 'W':
+                gid = ins[1]; cut = meta[gid]; pair = d >> (k - cut)
+                inst = instances[(gid, pair)]
+                if inst['comp'] is not None:
+                    if inst['comp'] > t: t = inst['comp']
+                    pc[d] += 1
+                else:
+                    inst['waiters'].append(d); break
+            else:
+                gid = ins[1]; cut = meta[gid]; pair = d >> (k - cut)
+                members = devices >> cut
+                inst = instances[(gid, pair)]
+                inst['bytes'] += ins[2]; inst['issued'] += 1
+                inst['ready'] = max(inst['ready'], t)
+                if inst['issued'] == members:
+                    dur = transfer_seconds(tiers, cut, inst['bytes'])
+                    cmp_ = inst['ready'] + dur; inst['comp'] = cmp_
+                    seq += 1; heapq.heappush(heap, (cmp_, seq, ('done', gid, pair)))
+                pc[d] += 1
+    assert all(fin), "deadlock"
+    return max(end)
+
+# ---------------- candidate generation + search ----------------
+def make_plan(g, k, choices, tiers):
+    """choices: string over B(yte), W(eighted), D(ata-par), M(odel-par)."""
+    alias = aliases(g)
+    cur = g
+    tiles_per_cut = []
+    costs = []
+    for j, ch in enumerate(choices):
+        if ch == 'B':
+            c, tiles = one_cut_cost(cur, byte_cost_fn)
+            if tiles is None: return None
+        elif ch == 'W':
+            l = tier_of(tiers, j)
+            pairs = float(1 << j)
+            agg = l.bw * min(l.slots, pairs)
+            ps_per_byte = 1e12 * pairs / agg
+            W = max(1, round(ps_per_byte * 256.0))
+            C = round(l.lat * 1e12 * 256.0)
+            _, tiles = one_cut_cost(cur, make_weighted_fn(W, C))
+            if tiles is None: return None
+        elif ch == 'D':
+            tiles = dp_assignment(cur)
+            for t in range(len(tiles)): tiles[t] = tiles[alias[t]]
+        elif ch == 'M':
+            tiles = mp_assignment(cur)
+            for t in range(len(tiles)): tiles[t] = tiles[alias[t]]
+        c = price(cur, tiles)
+        if c >= INF: return None
+        costs.append(c)
+        tiles_per_cut.append(tiles)
+        cur = apply_cut(cur, tiles)
+    return tiles_per_cut, costs
+
+def evaluate(g, k, tiers, choices_list):
+    results = {}
+    plans_seen = {}
+    for ch in choices_list:
+        mp = make_plan(g, k, ch, tiers)
+        if mp is None:
+            results[ch] = None; continue
+        tiles_per_cut, costs = mp
+        key = tuple(tuple(t) for cut in tiles_per_cut for t in cut)
+        if key in plans_seen:
+            results[ch] = plans_seen[key] + ('dup',)
+            continue
+        lp = lower_program(g, tiles_per_cut, k)
+        if lp is None:
+            results[ch] = None; continue
+        progs, meta, comp = lp
+        step = run_engine(k, progs, meta, tiers)
+        theorem1 = sum((1 << i) * c for i, c in enumerate(costs))
+        res = (step, comp, theorem1, costs)
+        plans_seen[key] = res
+        results[ch] = res
+    return results
+
+def evaluate_tree(g, k, tiers, alphabet):
+    """Expand choice vectors level by level, memoizing DP solves per prefix."""
+    import time
+    results = {}
+    def tiles_for(cur, ch, j):
+        alias = aliases(cur)
+        if ch == 'B':
+            _, tiles = one_cut_cost(cur, byte_cost_fn)
+            return tiles
+        if ch == 'W':
+            l = tier_of(tiers, j)
+            pairs = float(1 << j)
+            agg = l.bw * min(l.slots, pairs)
+            W = max(1, round(1e12 * pairs / agg * 256.0))
+            C = round(l.lat * 1e12 * 256.0)
+            _, tiles = one_cut_cost(cur, make_weighted_fn(W, C))
+            return tiles
+        if ch == 'D':
+            tiles = dp_assignment(cur)
+        else:
+            tiles = mp_assignment(cur)
+        for t in range(len(tiles)):
+            tiles[t] = tiles[alias[t]]
+        return tiles
+    def expand(cur, prefix, tiles_acc, costs_acc):
+        j = len(prefix)
+        if j == k:
+            results[prefix] = (list(tiles_acc), list(costs_acc))
+            return
+        for ch in alphabet:
+            t0 = time.time()
+            tiles = tiles_for(cur, ch, j)
+            if tiles is None:
+                continue
+            c = price(cur, tiles)
+            if c >= INF:
+                continue
+            if ch in 'BW':
+                print(f"  solve {prefix+ch}: {time.time()-t0:.1f}s d={c:,}", flush=True)
+            expand(apply_cut(cur, tiles), prefix + ch, tiles_acc + [tiles], costs_acc + [c])
+    expand(g, '', [], [])
+    return results
+
+def count_transfers(g, tiles_per_cut, k):
+    lp = lower_program(g, tiles_per_cut, k)
+    if lp is None: return None
+    progs, meta, comp = lp
+    per_tier = [0]*k
+    for cut in meta: per_tier[cut] += 1
+    return per_tier
+
+if __name__ == "__main__":
+    k = 3
+    import os
+    preset = os.environ.get('PRESET', 'ethnv')
+    if preset == 'ethnv':
+        tiers = two_tier(1.25e9, 50e-6, 50e9, 5e-6, 4.0, k)
+    elif preset == 'ethpcie':
+        tiers = two_tier(1.25e9, 50e-6, 12.5e9, 20e-6, 1.0, k)
+    elif preset == 'ethpcie2':
+        tiers = two_tier(1.25e9, 50e-6, 12e9, 20e-6, 2.0, k)
+    print('preset', preset)
+    g = transformer_v2(8, 128, 256, 4, 1024, 4, 256, fused=True)
+    plans = evaluate_tree(g, k, tiers, 'BWDM')
+    res = {}
+    seen = {}
+    for ch, (tiles_per_cut, costs) in plans.items():
+        key = tuple(tuple(t) for cut in tiles_per_cut for t in cut)
+        if key in seen:
+            res[ch] = seen[key]; continue
+        lp = lower_program(g, tiles_per_cut, k)
+        if lp is None:
+            continue
+        progs, meta, comp = lp
+        step = run_engine(k, progs, meta, tiers)
+        theorem1 = sum((1 << i) * c for i, c in enumerate(costs))
+        seen[key] = res[ch] = (step, comp, theorem1, costs)
+    flat = res['BBB']
+    desc = " | ".join(f"{t.bw/1e9:g}GB/s/{t.lat*1e6:g}us/slots{t.slots:g}" for t in tiers)
+    print(f"transformer micro-4L, two-tier 2x4 preset `{preset}` ({desc})")
+    print(f"flat BBB: step={flat[0]*1e3:.3f}ms compute={flat[1]*1e3:.3f}ms t1={flat[2]:,}")
+    rows = []
+    for ch, r in sorted(res.items()):
+        if r is None:
+            continue
+        step = r[0]
+        rows.append((step, ch, r))
+    rows.sort()
+    for step, ch, r in rows[:20]:
+        mark = " <-- FLAT" if ch == 'BBB' else ""
+        counts = count_transfers(g, plans[ch][0], k)
+        deltas = ','.join(f"{c/1e6:.2f}M" for c in r[3])
+        print(f"  {ch}: step={step*1e3:8.3f}ms  t1={r[2]:>13,} d=[{deltas}] nx={counts}{mark}")
+    best = rows[0]
+    print(f"\nbest {best[1]} step {best[0]*1e3:.3f}ms vs flat {flat[0]*1e3:.3f}ms "
+          f"-> improvement {(1 - best[0]/flat[0])*100:.1f}%")
