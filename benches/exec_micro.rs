@@ -1,0 +1,94 @@
+//! Threaded SPMD executor micro-benchmark (ISSUE-5 acceptance gates):
+//!
+//! - one **execute step** of the 8-device (`k = 3`) 4-layer transformer
+//!   encoder — plan → lower → run on real `f32` shard buffers across 8
+//!   worker threads — completes in **< 10 s** wall-clock;
+//! - the run is differentially checked on the spot: executor output ==
+//!   serial interpreter within 1e-5 relative tolerance, and the
+//!   executor's collective byte meter == the plan's Theorem-1 total bit
+//!   for bit (docs/execution.md).
+//!
+//! Results go to `BENCH_exec.json` (the `BENCH_planner.json` schema) for
+//! the CI perf-trajectory diff.
+//!
+//! Run with `cargo bench --bench exec_micro`.
+
+use std::time::Duration;
+
+use soybean::graph::{eval_serial, seed_values};
+use soybean::lower::lower;
+use soybean::models::{transformer, TransformerConfig};
+use soybean::planner::k_cut;
+use soybean::sim::SimConfig;
+use soybean::spmd::{execute, worst_divergence};
+use soybean::util::bench::{time_it, BenchLog};
+
+fn main() {
+    println!("== threaded SPMD executor micro-benchmarks ==");
+    let mut log = BenchLog::new("exec_micro");
+    let cfg = SimConfig::default();
+
+    // The bench workload: the 4-layer encoder topology at a width that
+    // gives the kernels measurable work while staying CI-friendly.
+    let bench_cfg = TransformerConfig {
+        batch: 8,
+        seq: 32,
+        d_model: 64,
+        heads: 4,
+        d_ff: 128,
+        layers: 4,
+        classes: 64,
+    };
+    let g = transformer(&bench_cfg);
+    let plan = k_cut(&g, 3);
+    let program = lower(&g, &plan, &cfg);
+    assert_eq!(program.total_bytes(), plan.total_cost(), "lowered bytes != plan cost");
+    let init = seed_values(&g, 42);
+
+    // Correctness before timing: the differential gate on this config.
+    let m_serial = time_it(0, Duration::from_millis(1), || {
+        std::hint::black_box(eval_serial(&g, &init).expect("serial evaluation"));
+    });
+    let serial = eval_serial(&g, &init).unwrap();
+    let report = execute(&g, &plan, &program, &init).expect("threaded execution");
+    assert_eq!(report.instr_bytes, plan.total_cost(), "executor meter != Theorem-1");
+    let (worst, tensor) = worst_divergence(&g, &report, &serial);
+    assert!(worst <= 1e-5, "differential gate: diverged on `{tensor}` by {worst:e}");
+
+    let m_exec = time_it(1, Duration::from_millis(200), || {
+        std::hint::black_box(execute(&g, &plan, &program, &init).expect("execution"));
+    });
+    log.row(
+        "exec/encoder-4L",
+        &[
+            ("ms", format!("{:.2}", m_exec.mean_ms())),
+            ("serial_ms", format!("{:.2}", m_serial.mean_ms())),
+            ("devices", report.devices.to_string()),
+            ("collective_MB", format!("{:.3}", report.instr_bytes as f64 / 1e6)),
+            ("payload_MB", format!("{:.3}", report.payload_bytes as f64 / 1e6)),
+            ("max_rel_err", format!("{worst:.3e}")),
+        ],
+    );
+
+    // The acceptance gate: one executed step of the 8-device 4-layer
+    // encoder stays under 10 s even on noisy shared runners.
+    assert!(
+        m_exec.mean.as_secs_f64() < 10.0,
+        "8-device 4-layer encoder execute step took {:.0} ms (target < 10 s)",
+        m_exec.mean_ms()
+    );
+
+    // The differential-harness config (rust/tests/differential.rs), as a
+    // tracked row so its cost trend stays visible.
+    let g_tiny = transformer(&TransformerConfig::tiny4());
+    let plan_tiny = k_cut(&g_tiny, 3);
+    let program_tiny = lower(&g_tiny, &plan_tiny, &cfg);
+    let init_tiny = seed_values(&g_tiny, 42);
+    let m_tiny = time_it(1, Duration::from_millis(200), || {
+        std::hint::black_box(execute(&g_tiny, &plan_tiny, &program_tiny, &init_tiny).expect("execution"));
+    });
+    log.row("exec/encoder-4L-tiny", &[("ms", format!("{:.2}", m_tiny.mean_ms()))]);
+
+    log.write_json("BENCH_exec.json").expect("writing BENCH_exec.json");
+    println!("wrote BENCH_exec.json");
+}

@@ -75,6 +75,10 @@ pub fn gather_sources(
                     (0..devices)
                         .filter(|&d| residents[d].contains(&cell))
                         .min_by_key(|&d| (d ^ me).count_ones())
+                        // Invariant: a validated TileSeq's shards cover the
+                        // tensor (Theorem 2), so every grid cell has an
+                        // owner — `planner::validate_plan` rejects the
+                        // odd-split plans that could break coverage.
                         .unwrap_or_else(|| {
                             panic!(
                                 "cell {cell:?} owned by nobody (shape {shape:?} seq {seq:?} \

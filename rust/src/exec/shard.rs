@@ -50,6 +50,7 @@ pub fn build_shard_tasks(g: &Graph, plan: &Plan) -> Vec<ShardTask> {
 /// some op at some cut, so embedding callers (services, sweeps over
 /// hand-written plans) can degrade gracefully instead of unwinding.
 pub fn try_build_shard_tasks(g: &Graph, plan: &Plan) -> Result<Vec<ShardTask>, PlanError> {
+    crate::planner::validate_plan(g, plan)?;
     let k = plan.k;
     g.ops
         .iter()

@@ -1,0 +1,260 @@
+//! Serial reference interpreter: evaluate the unpartitioned training graph
+//! on one thread with real `f32` tensors.
+//!
+//! This is the ground truth of the ISSUE-5 differential harness: the
+//! threaded SPMD executor ([`crate::spmd`]) must reproduce these values
+//! elementwise (within the documented tolerance) for every plan it runs.
+//! Both sides dispatch the same kernel library ([`super::apply_op`]), so a
+//! divergence isolates a *partitioning* bug — wrong shard regions, wrong
+//! conversion routing, a dropped reduction — rather than a kernel bug.
+
+use std::fmt;
+
+use super::kernels::{apply_op, View};
+use super::{Graph, TensorKind};
+use crate::util::rng::Rng;
+
+/// Structured failure of [`eval_serial`] — the graph inputs were not fully
+/// or correctly provided.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InterpError {
+    /// `init` has a different length than the graph's tensor list.
+    WrongArity {
+        /// Tensors the graph declares.
+        expected: usize,
+        /// Entries provided.
+        got: usize,
+    },
+    /// A producerless tensor (input, label, parameter) has no value.
+    MissingInput {
+        /// Name of the tensor without a value.
+        tensor: String,
+    },
+    /// A provided value's element count does not match the tensor shape.
+    WrongLength {
+        /// Name of the mis-sized tensor.
+        tensor: String,
+        /// Elements the shape requires.
+        expected: usize,
+        /// Elements provided.
+        got: usize,
+    },
+}
+
+impl fmt::Display for InterpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InterpError::WrongArity { expected, got } => {
+                write!(f, "init holds {got} entries for a graph of {expected} tensors")
+            }
+            InterpError::MissingInput { tensor } => {
+                write!(f, "graph input `{tensor}` has no initial value")
+            }
+            InterpError::WrongLength { tensor, expected, got } => {
+                write!(f, "tensor `{tensor}` needs {expected} elements, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InterpError {}
+
+/// Evaluate every op of `g` in topological order on whole tensors.
+///
+/// `init` is indexed by `TensorId`: `Some` values for every producerless
+/// tensor (inputs, labels, parameters — see [`seed_values`]), `None` for
+/// tensors an op produces. Returns the value of **every** tensor.
+///
+/// # Examples
+///
+/// ```
+/// use soybean::graph::{eval_serial, seed_values};
+/// use soybean::models::{mlp, MlpConfig};
+///
+/// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+/// let vals = eval_serial(&g, &seed_values(&g, 7)).unwrap();
+/// // The loss is a finite scalar.
+/// let loss = g.tensors.iter().find(|t| t.rank() == 0).unwrap();
+/// assert!(vals[loss.id][0].is_finite());
+/// ```
+pub fn eval_serial(g: &Graph, init: &[Option<Vec<f32>>]) -> Result<Vec<Vec<f32>>, InterpError> {
+    let produced = validate_init(g, init)?;
+    let mut vals: Vec<Vec<f32>> = vec![Vec::new(); g.tensors.len()];
+    for t in &g.tensors {
+        if !produced[t.id] {
+            // Invariant: validate_init checked presence and length.
+            vals[t.id] = init[t.id].as_ref().expect("validated init value").clone();
+        }
+    }
+    for &opid in &g.topo_order() {
+        let op = &g.ops[opid];
+        let views: Vec<View<'_>> = op
+            .inputs
+            .iter()
+            .map(|&t| View::full(&vals[t], &g.tensors[t].shape))
+            .collect();
+        let out = apply_op(g, op, &views, &g.tensors[op.outputs[0]].shape);
+        vals[op.outputs[0]] = out;
+    }
+    Ok(vals)
+}
+
+/// Deterministic initial values for every producerless tensor of `g`:
+/// scale-preserving uniform weights (LeCun-style `±√(3/fan_in)`), one-hot
+/// label rows, `1 + ε` layer-norm gains, and small-normal inputs. Produced
+/// tensors get `None`. Both harness sides slice from these same arrays.
+pub fn seed_values(g: &Graph, seed: u64) -> Vec<Option<Vec<f32>>> {
+    let produced = g.produced_mask();
+    g.tensors
+        .iter()
+        .map(|t| {
+            if produced[t.id] {
+                return None;
+            }
+            let mut rng = Rng::new(seed ^ (t.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let n: usize = t.shape.iter().product();
+            let v = match (t.kind, t.rank()) {
+                (TensorKind::Label, 2) => {
+                    let (m, c) = (t.shape[0], t.shape[1]);
+                    let mut v = vec![0.0f32; m * c];
+                    for i in 0..m {
+                        v[i * c + rng.below(c)] = 1.0;
+                    }
+                    v
+                }
+                (TensorKind::Weight, rank) => {
+                    let fan = match rank {
+                        2 => t.shape[0],
+                        4 => t.shape[0] * t.shape[1] * t.shape[2],
+                        _ => t.shape.first().copied().unwrap_or(1).max(1),
+                    };
+                    let a = (3.0 / fan as f64).sqrt();
+                    // Layer-norm gains center at 1 so σ-divisions stay sane.
+                    let bias = if rank == 1 && t.name.ends_with(".g") { 1.0 } else { 0.0 };
+                    (0..n)
+                        .map(|_| (bias + (2.0 * rng.uniform() - 1.0) * a) as f32)
+                        .collect()
+                }
+                _ => (0..n).map(|_| (0.5 * rng.normal()) as f32).collect(),
+            };
+            Some(v)
+        })
+        .collect()
+}
+
+/// Check an initial-value vector against a graph's input contract (one
+/// entry per tensor; a correctly-sized `Some` for every producerless
+/// tensor) — the shared front door of the serial interpreter and the
+/// SPMD executor. Returns the graph's [`Graph::produced_mask`] so
+/// callers can keep walking it.
+pub fn validate_init(g: &Graph, init: &[Option<Vec<f32>>]) -> Result<Vec<bool>, InterpError> {
+    if init.len() != g.tensors.len() {
+        return Err(InterpError::WrongArity { expected: g.tensors.len(), got: init.len() });
+    }
+    let produced = g.produced_mask();
+    for t in &g.tensors {
+        if produced[t.id] {
+            continue;
+        }
+        let want: usize = t.shape.iter().product();
+        match &init[t.id] {
+            Some(v) if v.len() == want => {}
+            Some(v) => {
+                return Err(InterpError::WrongLength {
+                    tensor: t.name.clone(),
+                    expected: want,
+                    got: v.len(),
+                })
+            }
+            None => return Err(InterpError::MissingInput { tensor: t.name.clone() }),
+        }
+    }
+    Ok(produced)
+}
+
+/// Largest elementwise deviation between `got` and the reference `want`,
+/// relative to the reference's largest magnitude — the differential
+/// harness's comparison metric (tolerance model: docs/execution.md).
+pub fn max_rel_err(got: &[f32], want: &[f32]) -> f64 {
+    assert_eq!(got.len(), want.len(), "comparing tensors of different sizes");
+    let scale = want.iter().fold(1e-6f64, |a, &b| a.max((b as f64).abs()));
+    got.iter()
+        .zip(want)
+        .fold(0.0f64, |acc, (&a, &b)| acc.max((a as f64 - b as f64).abs() / scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::models::{mlp, MlpConfig};
+
+    #[test]
+    fn evaluates_training_step_end_to_end() {
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![6, 10, 4], bias: true });
+        let vals = eval_serial(&g, &seed_values(&g, 3)).unwrap();
+        for t in &g.tensors {
+            let n: usize = t.shape.iter().product();
+            assert_eq!(vals[t.id].len(), n, "tensor {}", t.name);
+            assert!(vals[t.id].iter().all(|v| v.is_finite()), "tensor {}", t.name);
+        }
+        // SGD moved the weights.
+        let w = g.tensors.iter().find(|t| t.name == "w0").unwrap();
+        let upd = g.tensors.iter().find(|t| t.name == "w0.sgd.out").unwrap();
+        assert_ne!(vals[w.id], vals[upd.id]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
+        let a = eval_serial(&g, &seed_values(&g, 11)).unwrap();
+        let b = eval_serial(&g, &seed_values(&g, 11)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn structured_errors_on_bad_init() {
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
+        assert_eq!(
+            eval_serial(&g, &[]).unwrap_err(),
+            InterpError::WrongArity { expected: g.tensors.len(), got: 0 }
+        );
+        let mut init = seed_values(&g, 1);
+        init[0] = None; // drop the mini-batch input
+        assert!(matches!(
+            eval_serial(&g, &init).unwrap_err(),
+            InterpError::MissingInput { .. }
+        ));
+        let mut init = seed_values(&g, 1);
+        init[0].as_mut().unwrap().pop();
+        assert!(matches!(
+            eval_serial(&g, &init).unwrap_err(),
+            InterpError::WrongLength { .. }
+        ));
+    }
+
+    #[test]
+    fn one_hot_labels() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let y = b.label("y", &[4, 4]);
+        b.softmax_xent("loss", x, y);
+        let g = b.finish();
+        let init = seed_values(&g, 5);
+        let labels = init[y].as_ref().unwrap();
+        for i in 0..4 {
+            let row = &labels[i * 4..(i + 1) * 4];
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), 3);
+        }
+    }
+
+    #[test]
+    fn max_rel_err_metric() {
+        assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let e = max_rel_err(&[1.0, 2.2], &[1.0, 2.0]);
+        assert!((e - 0.1).abs() < 1e-6, "{e}");
+    }
+}

@@ -1,0 +1,733 @@
+//! Numeric kernels for the full operator vocabulary.
+//!
+//! One kernel library serves both interpreters: the serial reference
+//! ([`super::eval_serial`]) calls every kernel on whole tensors, the
+//! threaded SPMD executor ([`crate::spmd`]) on shard-local regions. A kernel sees
+//! its operands as [`View`]s — a dense row-major buffer plus the region's
+//! shape and absolute offset — and never needs to know which caller it is:
+//! the §4 aligned forms guarantee that every axis a kernel's semantics
+//! couple (softmax's normalization axis, layer norm's feature rows, conv's
+//! spatial window) arrives whole, so shard-local computation on local
+//! shapes *is* the correct sub-computation. The two kernels whose
+//! semantics depend on absolute position get it from the view:
+//! [`OpKind::LayerNormGammaGrad`] reads `dy`'s column offset to align the
+//! recomputed x̂, and the mean cross-entropy pair divides by the *global*
+//! batch row count (taken from the graph, not the local shard).
+//!
+//! ## Determinism and the tolerance model
+//!
+//! Storage is `f32`; every accumulation runs in `f64` and rounds once on
+//! store. Serial and sharded execution therefore differ only where a
+//! reduction is split across devices (partial sums rounded to `f32` before
+//! the cross-device add) — a few ULPs per tensor, which is what lets the
+//! differential harness assert a tight 1e-5 relative tolerance
+//! (docs/execution.md §Tolerance).
+
+use crate::graph::{EwKind, Graph, Op, OpKind};
+
+/// The fixed SGD learning rate of [`OpKind::SgdUpdate`] (a scalar op
+/// attribute in the paper's graph, not a tensor).
+pub const SGD_LR: f64 = 0.01;
+
+/// Layer-norm variance epsilon (shared by forward and backward kernels).
+pub const LN_EPS: f64 = 1e-5;
+
+/// A kernel operand: a dense row-major buffer over an axis-aligned region
+/// of the logical tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct View<'a> {
+    /// The region's elements, row-major.
+    pub data: &'a [f32],
+    /// Extent of the region per dimension (the *local* shape).
+    pub shape: &'a [usize],
+    /// Absolute offset of the region within the logical tensor.
+    pub offset: &'a [usize],
+}
+
+impl<'a> View<'a> {
+    /// A view covering a whole tensor (offsets all zero).
+    pub fn full(data: &'a [f32], shape: &'a [usize]) -> Self {
+        // A static backs the zero offsets so the slice outlives the call
+        // (tensor rank never exceeds 4 in this graph language).
+        static ZEROS: [usize; 8] = [0; 8];
+        View { data, shape, offset: &ZEROS[..shape.len()] }
+    }
+
+    fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn prod(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// The tanh-approximation GeLU (GPT-2's activation).
+fn gelu(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Row-wise mean/σ (population variance + [`LN_EPS`]) of an `[m, n]` view.
+fn ln_stats(x: &[f32], m: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut mu = vec![0.0f64; m];
+    let mut sd = vec![0.0f64; m];
+    for i in 0..m {
+        let row = &x[i * n..(i + 1) * n];
+        let s: f64 = row.iter().map(|&v| v as f64).sum();
+        let mean = s / n as f64;
+        let var: f64 = row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        mu[i] = mean;
+        sd[i] = (var + LN_EPS).sqrt();
+    }
+    (mu, sd)
+}
+
+/// Softmax over the last axis of a view folded to `[rows, cols]`.
+fn softmax_last(x: &[f32], rows: usize, cols: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; rows * cols];
+    for i in 0..rows {
+        let row = &x[i * cols..(i + 1) * cols];
+        let m = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+        let mut denom = 0.0;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v as f64 - m).exp();
+            out[i * cols + j] = e;
+            denom += e;
+        }
+        for j in 0..cols {
+            out[i * cols + j] /= denom;
+        }
+    }
+    out
+}
+
+/// Dense `op(a)·op(b)` with f64 accumulation; `a` is `[p, q]`, `b` is
+/// `[r, s]` (stored shapes), transposes select the logical orientation.
+fn matmul(a: &[f32], (p, q): (usize, usize), b: &[f32], (r, s): (usize, usize), ta: bool, tb: bool) -> Vec<f32> {
+    let (m, kk) = if ta { (q, p) } else { (p, q) };
+    let n = if tb { r } else { s };
+    debug_assert_eq!(kk, if tb { s } else { r }, "matmul contraction mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for l in 0..kk {
+                let av = if ta { a[l * q + i] } else { a[i * q + l] };
+                let bv = if tb { b[j * s + l] } else { b[l * s + j] };
+                acc += av as f64 * bv as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    out
+}
+
+/// Apply `op` to shard-local operand views, producing the dense row-major
+/// buffer of the output region of shape `out_shape`.
+///
+/// `g` supplies the *global* tensor shapes the mean-loss kernels scale by.
+/// Shape/arity mismatches are invariant violations (the shard schedule
+/// guarantees aligned local shapes) and panic.
+pub fn apply_op(g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
+    assert_eq!(ins.len(), op.inputs.len(), "kernel arity mismatch for {}", op.name);
+    match op.kind {
+        OpKind::MatMul { ta, tb } => {
+            let (a, b) = (&ins[0], &ins[1]);
+            matmul(a.data, (a.shape[0], a.shape[1]), b.data, (b.shape[0], b.shape[1]), ta, tb)
+        }
+        OpKind::BatchedMatMul { ta, tb } => {
+            let (a, b) = (&ins[0], &ins[1]);
+            let groups = a.shape[0];
+            let (ap, aq) = (a.shape[1], a.shape[2]);
+            let (bp, bq) = (b.shape[1], b.shape[2]);
+            let mut out = Vec::with_capacity(prod(out_shape));
+            for gi in 0..groups {
+                let asl = &a.data[gi * ap * aq..(gi + 1) * ap * aq];
+                let bsl = &b.data[gi * bp * bq..(gi + 1) * bp * bq];
+                out.extend(matmul(asl, (ap, aq), bsl, (bp, bq), ta, tb));
+            }
+            out
+        }
+        OpKind::Conv2d { stride, pad } => {
+            let (x, w) = (&ins[0], &ins[1]);
+            let (n, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (kh, kw, _, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            let (oh, ow) = (out_shape[1], out_shape[2]);
+            let mut out = vec![0.0f32; n * oh * ow * cout];
+            for ni in 0..n {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        for co in 0..cout {
+                            let mut acc = 0.0f64;
+                            for a in 0..kh {
+                                let ih = oi * stride + a;
+                                if ih < pad || ih - pad >= h {
+                                    continue;
+                                }
+                                for b in 0..kw {
+                                    let iw = oj * stride + b;
+                                    if iw < pad || iw - pad >= wd {
+                                        continue;
+                                    }
+                                    let xi = ((ni * h + (ih - pad)) * wd + (iw - pad)) * cin;
+                                    let wi = ((a * kw + b) * w.shape[2]) * cout + co;
+                                    for ci in 0..cin {
+                                        acc += x.data[xi + ci] as f64
+                                            * w.data[wi + ci * cout] as f64;
+                                    }
+                                }
+                            }
+                            out[((ni * oh + oi) * ow + oj) * cout + co] = acc as f32;
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::Conv2dBwdData { stride, pad } => {
+            let (dz, w) = (&ins[0], &ins[1]);
+            let (n, oh, ow, cout) = (dz.shape[0], dz.shape[1], dz.shape[2], dz.shape[3]);
+            let (kh, kw, cin) = (w.shape[0], w.shape[1], w.shape[2]);
+            let (h, wd) = (out_shape[1], out_shape[2]);
+            let mut out = vec![0.0f64; n * h * wd * cin];
+            for ni in 0..n {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        for a in 0..kh {
+                            let ih = oi * stride + a;
+                            if ih < pad || ih - pad >= h {
+                                continue;
+                            }
+                            for b in 0..kw {
+                                let iw = oj * stride + b;
+                                if iw < pad || iw - pad >= wd {
+                                    continue;
+                                }
+                                let zi = ((ni * oh + oi) * ow + oj) * cout;
+                                let xi = ((ni * h + (ih - pad)) * wd + (iw - pad)) * cin;
+                                for ci in 0..cin {
+                                    let wi = ((a * kw + b) * cin + ci) * w.shape[3];
+                                    let mut acc = 0.0f64;
+                                    for co in 0..cout {
+                                        acc += dz.data[zi + co] as f64 * w.data[wi + co] as f64;
+                                    }
+                                    out[xi + ci] += acc;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            out.into_iter().map(|v| v as f32).collect()
+        }
+        OpKind::Conv2dBwdFilter { stride, pad } => {
+            let (x, dz) = (&ins[0], &ins[1]);
+            let (n, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (oh, ow, cout) = (dz.shape[1], dz.shape[2], dz.shape[3]);
+            let (kh, kw) = (out_shape[0], out_shape[1]);
+            let mut out = vec![0.0f64; kh * kw * cin * cout];
+            for ni in 0..n {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let zi = ((ni * oh + oi) * ow + oj) * cout;
+                        for a in 0..kh {
+                            let ih = oi * stride + a;
+                            if ih < pad || ih - pad >= h {
+                                continue;
+                            }
+                            for b in 0..kw {
+                                let iw = oj * stride + b;
+                                if iw < pad || iw - pad >= wd {
+                                    continue;
+                                }
+                                let xi = ((ni * h + (ih - pad)) * wd + (iw - pad)) * cin;
+                                for ci in 0..cin {
+                                    let wi = ((a * kw + b) * cin + ci) * cout;
+                                    let xv = x.data[xi + ci] as f64;
+                                    for co in 0..cout {
+                                        out[wi + co] += xv * dz.data[zi + co] as f64;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            out.into_iter().map(|v| v as f32).collect()
+        }
+        OpKind::Pool2 => {
+            let x = &ins[0];
+            let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (oh, ow) = (out_shape[1], out_shape[2]);
+            let mut out = vec![0.0f32; n * oh * ow * c];
+            for ni in 0..n {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        for ci in 0..c {
+                            let mut m = f32::NEG_INFINITY;
+                            for a in 0..2 {
+                                for b in 0..2 {
+                                    let v = x.data
+                                        [((ni * h + 2 * oi + a) * w + 2 * oj + b) * c + ci];
+                                    m = m.max(v);
+                                }
+                            }
+                            out[((ni * oh + oi) * ow + oj) * c + ci] = m;
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::Pool2Bwd => {
+            // (dz, x, out_fwd): route dz to the first window element that
+            // matches the forward max (deterministic first-match in (a, b)
+            // scan order — identical on both interpreters by construction).
+            let (dz, x, fwd) = (&ins[0], &ins[1], &ins[2]);
+            let (n, h, w, c) = (out_shape[0], out_shape[1], out_shape[2], out_shape[3]);
+            let (oh, ow) = (dz.shape[1], dz.shape[2]);
+            let mut out = vec![0.0f32; n * h * w * c];
+            for ni in 0..n {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        for ci in 0..c {
+                            let oidx = ((ni * oh + oi) * ow + oj) * c + ci;
+                            let target = fwd.data[oidx];
+                            'window: for a in 0..2 {
+                                for b in 0..2 {
+                                    let xi = ((ni * h + 2 * oi + a) * w + 2 * oj + b) * c + ci;
+                                    if x.data[xi] == target {
+                                        out[xi] += dz.data[oidx];
+                                        break 'window;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::Flatten => {
+            // Channel-major: feature index = c·H·W + h·W + w, so a channel
+            // split of the NHWC input is a contiguous column block of the
+            // output (the aligned-form correspondence in tiling::aligned).
+            let x = &ins[0];
+            let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let mut out = vec![0.0f32; n * h * w * c];
+            for ni in 0..n {
+                for ih in 0..h {
+                    for iw in 0..w {
+                        for ci in 0..c {
+                            out[ni * (c * h * w) + (ci * h + ih) * w + iw] =
+                                x.data[((ni * h + ih) * w + iw) * c + ci];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::FlattenBwd => {
+            let dz = &ins[0];
+            let (n, h, w, c) = (out_shape[0], out_shape[1], out_shape[2], out_shape[3]);
+            let mut out = vec![0.0f32; n * h * w * c];
+            for ni in 0..n {
+                for ih in 0..h {
+                    for iw in 0..w {
+                        for ci in 0..c {
+                            out[((ni * h + ih) * w + iw) * c + ci] =
+                                dz.data[ni * (c * h * w) + (ci * h + ih) * w + iw];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::BiasAdd => {
+            let (x, b) = (&ins[0], &ins[1]);
+            let n = *x.shape.last().unwrap();
+            x.data
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v as f64 + b.data[i % n] as f64) as f32)
+                .collect()
+        }
+        OpKind::Ew(kind) => {
+            let a = &ins[0];
+            match kind {
+                EwKind::Relu => a.data.iter().map(|&v| v.max(0.0)).collect(),
+                EwKind::ReluGrad => {
+                    let y = &ins[1];
+                    a.data
+                        .iter()
+                        .zip(y.data)
+                        .map(|(&dy, &yv)| if yv > 0.0 { dy } else { 0.0 })
+                        .collect()
+                }
+                EwKind::Add => {
+                    let b = &ins[1];
+                    a.data
+                        .iter()
+                        .zip(b.data)
+                        .map(|(&x, &y)| (x as f64 + y as f64) as f32)
+                        .collect()
+                }
+                EwKind::Mul => {
+                    let b = &ins[1];
+                    a.data
+                        .iter()
+                        .zip(b.data)
+                        .map(|(&x, &y)| (x as f64 * y as f64) as f32)
+                        .collect()
+                }
+                EwKind::Gelu => a.data.iter().map(|&v| gelu(v as f64) as f32).collect(),
+                EwKind::GeluGrad => {
+                    let x = &ins[1];
+                    a.data
+                        .iter()
+                        .zip(x.data)
+                        .map(|(&dy, &xv)| (dy as f64 * gelu_grad(xv as f64)) as f32)
+                        .collect()
+                }
+                EwKind::Ident => a.data.to_vec(),
+            }
+        }
+        OpKind::ReduceSumRows => {
+            let x = &ins[0];
+            let (m, n) = (x.shape[0], x.shape[1]);
+            let mut out = vec![0.0f64; n];
+            for i in 0..m {
+                for j in 0..n {
+                    out[j] += x.data[i * n + j] as f64;
+                }
+            }
+            out.into_iter().map(|v| v as f32).collect()
+        }
+        OpKind::SoftmaxXent => {
+            // Mean cross-entropy: the divisor is the *global* batch row
+            // count, so batch-shard partials sum to the true mean loss.
+            let (logits, onehot) = (&ins[0], &ins[1]);
+            let (m, c) = (logits.shape[0], logits.shape[1]);
+            let global_rows = g.tensors[op.inputs[0]].shape[0] as f64;
+            let mut acc = 0.0f64;
+            for i in 0..m {
+                let row = &logits.data[i * c..(i + 1) * c];
+                let mx = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+                let lse: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum::<f64>().ln();
+                for j in 0..c {
+                    acc -= onehot.data[i * c + j] as f64 * (row[j] as f64 - mx - lse);
+                }
+            }
+            vec![(acc / global_rows) as f32]
+        }
+        OpKind::SoftmaxXentGrad => {
+            let (logits, onehot) = (&ins[0], &ins[1]);
+            let (m, c) = (logits.shape[0], logits.shape[1]);
+            let global_rows = g.tensors[op.inputs[0]].shape[0] as f64;
+            let sm = softmax_last(logits.data, m, c);
+            sm.iter()
+                .zip(onehot.data)
+                .map(|(&p, &o)| ((p - o as f64) / global_rows) as f32)
+                .collect()
+        }
+        OpKind::SgdUpdate => {
+            let (w, gr) = (&ins[0], &ins[1]);
+            w.data
+                .iter()
+                .zip(gr.data)
+                .map(|(&wv, &gv)| (wv as f64 - SGD_LR * gv as f64) as f32)
+                .collect()
+        }
+        OpKind::LayerNorm => {
+            let (x, gamma, beta) = (&ins[0], &ins[1], &ins[2]);
+            let (m, n) = (x.shape[0], x.shape[1]);
+            let (mu, sd) = ln_stats(x.data, m, n);
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let xh = (x.data[i * n + j] as f64 - mu[i]) / sd[i];
+                    out[i * n + j] = (xh * gamma.data[j] as f64 + beta.data[j] as f64) as f32;
+                }
+            }
+            out
+        }
+        OpKind::LayerNormGrad => {
+            let (dy, x, gamma) = (&ins[0], &ins[1], &ins[2]);
+            let (m, n) = (x.shape[0], x.shape[1]);
+            let (mu, sd) = ln_stats(x.data, m, n);
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                let mut mean_dyg = 0.0f64;
+                let mut mean_dyg_xh = 0.0f64;
+                for j in 0..n {
+                    let xh = (x.data[i * n + j] as f64 - mu[i]) / sd[i];
+                    let dyg = dy.data[i * n + j] as f64 * gamma.data[j] as f64;
+                    mean_dyg += dyg;
+                    mean_dyg_xh += dyg * xh;
+                }
+                mean_dyg /= n as f64;
+                mean_dyg_xh /= n as f64;
+                for j in 0..n {
+                    let xh = (x.data[i * n + j] as f64 - mu[i]) / sd[i];
+                    let dyg = dy.data[i * n + j] as f64 * gamma.data[j] as f64;
+                    out[i * n + j] = ((dyg - mean_dyg - xh * mean_dyg_xh) / sd[i]) as f32;
+                }
+            }
+            out
+        }
+        OpKind::LayerNormGammaGrad => {
+            // dy may arrive column-sliced; x is whole-row (the aligned-form
+            // contract). Align x̂ to dy's columns via dy's view offset.
+            let (dy, x) = (&ins[0], &ins[1]);
+            let (m, nd) = (dy.shape[0], dy.shape[1]);
+            let n = x.shape[1];
+            let c0 = dy.offset[1];
+            let (mu, sd) = ln_stats(x.data, m, n);
+            let mut out = vec![0.0f64; nd];
+            for i in 0..m {
+                for j in 0..nd {
+                    let xh = (x.data[i * n + c0 + j] as f64 - mu[i]) / sd[i];
+                    out[j] += dy.data[i * nd + j] as f64 * xh;
+                }
+            }
+            out.into_iter().map(|v| v as f32).collect()
+        }
+        OpKind::Softmax => {
+            let x = &ins[0];
+            let cols = *x.shape.last().unwrap();
+            let rows = x.len() / cols;
+            softmax_last(x.data, rows, cols).into_iter().map(|v| v as f32).collect()
+        }
+        OpKind::SoftmaxGrad => {
+            let (dy, y) = (&ins[0], &ins[1]);
+            let cols = *y.shape.last().unwrap();
+            let rows = y.len() / cols;
+            let mut out = vec![0.0f32; rows * cols];
+            for i in 0..rows {
+                let mut dot = 0.0f64;
+                for j in 0..cols {
+                    dot += dy.data[i * cols + j] as f64 * y.data[i * cols + j] as f64;
+                }
+                for j in 0..cols {
+                    out[i * cols + j] = (y.data[i * cols + j] as f64
+                        * (dy.data[i * cols + j] as f64 - dot))
+                        as f32;
+                }
+            }
+            out
+        }
+        OpKind::SplitHeads { heads } | OpKind::QkvSlice { .. } => {
+            let part = match op.kind {
+                OpKind::QkvSlice { part } => part,
+                _ => 0,
+            };
+            let heads = match op.kind {
+                OpKind::SplitHeads { heads } => heads,
+                _ => out_shape[0] / (ins[0].shape[0] / out_shape[1]),
+            };
+            let x = &ins[0];
+            let (s, dh) = (out_shape[1], out_shape[2]);
+            let batch = out_shape[0] / heads;
+            let d = heads * dh;
+            let width = x.shape[1];
+            let mut out = vec![0.0f32; out_shape[0] * s * dh];
+            for bb in 0..batch {
+                for hh in 0..heads {
+                    for ss in 0..s {
+                        for j in 0..dh {
+                            out[((bb * heads + hh) * s + ss) * dh + j] =
+                                x.data[(bb * s + ss) * width + part * d + hh * dh + j];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::MergeHeads { heads } => {
+            let x = &ins[0];
+            let (bh, s, dh) = (x.shape[0], x.shape[1], x.shape[2]);
+            let batch = bh / heads;
+            let mut out = vec![0.0f32; bh * s * dh];
+            for bb in 0..batch {
+                for ss in 0..s {
+                    for hh in 0..heads {
+                        for j in 0..dh {
+                            out[(bb * s + ss) * (heads * dh) + hh * dh + j] =
+                                x.data[((bb * heads + hh) * s + ss) * dh + j];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::QkvConcat => {
+            let (bh, s, dh) = (ins[0].shape[0], ins[0].shape[1], ins[0].shape[2]);
+            let heads = bh / (out_shape[0] / s);
+            let batch = bh / heads;
+            let d = heads * dh;
+            let mut out = vec![0.0f32; out_shape[0] * out_shape[1]];
+            for (part, v) in ins.iter().enumerate() {
+                for bb in 0..batch {
+                    for ss in 0..s {
+                        for hh in 0..heads {
+                            for j in 0..dh {
+                                out[(bb * s + ss) * (3 * d) + part * d + hh * dh + j] =
+                                    v.data[((bb * heads + hh) * s + ss) * dh + j];
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn view<'a>(data: &'a [f32], shape: &'a [usize]) -> View<'a> {
+        View::full(data, shape)
+    }
+
+    #[test]
+    fn matmul_transposes() {
+        // a = [[1,2],[3,4]], b = [[5,6],[7,8]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, (2, 2), &b, (2, 2), false, false), vec![19.0, 22.0, 43.0, 50.0]);
+        // aᵀ·b = [[26,30],[38,44]]
+        assert_eq!(matmul(&a, (2, 2), &b, (2, 2), true, false), vec![26.0, 30.0, 38.0, 44.0]);
+        // a·bᵀ = [[17,23],[39,53]]
+        assert_eq!(matmul(&a, (2, 2), &b, (2, 2), false, true), vec![17.0, 23.0, 39.0, 53.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let x = [0.0f32, 0.0, 1.0, 1.0];
+        let p = softmax_last(&x, 2, 2);
+        assert!((p[0] - 0.5).abs() < 1e-12 && (p[3] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flatten_is_channel_major() {
+        // x[0, h, w, c] over 1x2x2x2: channel-major feature order puts the
+        // whole c=0 plane before the c=1 plane.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 2, 2, 2]);
+        b.flatten("f", x);
+        let g = b.finish();
+        let data: Vec<f32> = (0..8).map(|v| v as f32).collect(); // NHWC order
+        let out = apply_op(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 2])], &[1, 8]);
+        assert_eq!(out, vec![0.0, 2.0, 4.0, 6.0, 1.0, 3.0, 5.0, 7.0]);
+        // And FlattenBwd inverts it.
+        let back = apply_op(
+            &g,
+            &crate::graph::Op {
+                id: 1,
+                kind: OpKind::FlattenBwd,
+                inputs: vec![g.ops[0].outputs[0]],
+                outputs: vec![x],
+                name: "fb".into(),
+            },
+            &[view(&out, &[1, 8])],
+            &[1, 2, 2, 2],
+        );
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn xent_scales_by_global_rows() {
+        // A batch shard of half the rows must produce exactly half the
+        // full loss when rows are identical (the partial-sum contract).
+        let mut b = GraphBuilder::new();
+        let l = b.input("l", &[4, 2]);
+        let y = b.label("y", &[4, 2]);
+        b.softmax_xent("loss", l, y);
+        let g = b.finish();
+        let logits = [1.0f32, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        let onehot = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let full = apply_op(&g, &g.ops[0], &[view(&logits, &[4, 2]), view(&onehot, &[4, 2])], &[]);
+        let half =
+            apply_op(&g, &g.ops[0], &[view(&logits[..4], &[2, 2]), view(&onehot[..4], &[2, 2])], &[]);
+        assert!((full[0] - 2.0 * half[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gamma_grad_uses_dy_column_offset() {
+        // x whole-row, dy sliced to the second column: the kernel must
+        // align x̂ by dy's offset — the ISSUE-5 fix's kernel half.
+        let mut b = GraphBuilder::new();
+        let dy = b.input("dy", &[2, 2]);
+        let x = b.input("x", &[2, 2]);
+        b.raw_op("dg", OpKind::LayerNormGammaGrad, vec![dy, x], &[2], crate::graph::TensorKind::WeightGrad);
+        let g = b.finish();
+        let xd = [1.0f32, 3.0, 2.0, 6.0];
+        let dyd = [1.0f32, 1.0, 1.0, 1.0];
+        let full = apply_op(&g, &g.ops[0], &[view(&dyd, &[2, 2]), view(&xd, &[2, 2])], &[2]);
+        // Column-1 slice of dy with offset (0, 1):
+        let dy_sl = [1.0f32, 1.0];
+        let sliced = apply_op(
+            &g,
+            &g.ops[0],
+            &[
+                View { data: &dy_sl, shape: &[2, 1], offset: &[0, 1] },
+                view(&xd, &[2, 2]),
+            ],
+            &[1],
+        );
+        assert!((sliced[0] - full[1]).abs() < 1e-6, "{} vs {}", sliced[0], full[1]);
+    }
+
+    #[test]
+    fn head_view_round_trip() {
+        // split_heads then merge_heads is the identity (B=2, S=2, D=4, H=2).
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let sh = b.split_heads("sh", x, 2, 2);
+        b.merge_heads("mh", sh, 2);
+        let g = b.finish();
+        let data: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let heads = apply_op(&g, &g.ops[0], &[view(&data, &[4, 4])], &[4, 2, 2]);
+        let back = apply_op(&g, &g.ops[1], &[view(&heads, &[4, 2, 2])], &[4, 4]);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn pool_routes_to_first_max() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 2, 2, 1]);
+        b.pool2("p", x);
+        let g = b.finish();
+        let data = [3.0f32, 1.0, 3.0, 2.0]; // tie between (0,0) and (1,0)
+        let pooled = apply_op(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 1])], &[1, 1, 1, 1]);
+        assert_eq!(pooled, vec![3.0]);
+        let dz = [5.0f32];
+        let bwd_op = crate::graph::Op {
+            id: 1,
+            kind: OpKind::Pool2Bwd,
+            inputs: vec![x, x, g.ops[0].outputs[0]],
+            outputs: vec![x],
+            name: "pb".into(),
+        };
+        let dx = apply_op(
+            &g,
+            &bwd_op,
+            &[view(&dz, &[1, 1, 1, 1]), view(&data, &[1, 2, 2, 1]), view(&pooled, &[1, 1, 1, 1])],
+            &[1, 2, 2, 1],
+        );
+        // First match in (a, b) scan order gets the whole gradient.
+        assert_eq!(dx, vec![5.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -6,15 +6,25 @@
 //! backward operators by reverse-mode differentiation, and appends the SGD
 //! parameter updates. The result is a mostly-serial graph of tensor
 //! operators over which the tiling planner optimizes.
+//!
+//! The graph is also *executable*: [`kernels`](apply_op) implements the
+//! numeric semantics of every operator (shared with the threaded SPMD
+//! executor in [`crate::spmd`]), and [`eval_serial`] runs the whole
+//! training step on one thread — the ground truth of the differential
+//! harness (docs/execution.md).
 
 mod autodiff;
 mod builder;
+mod interp;
+mod kernels;
 mod levels;
 mod op;
 mod tensor;
 
 pub use autodiff::append_backward;
 pub use builder::GraphBuilder;
+pub use interp::{eval_serial, max_rel_err, seed_values, validate_init, InterpError};
+pub use kernels::{apply_op, View, LN_EPS, SGD_LR};
 pub use levels::{bfs_levels, Levels};
 pub use op::{EwKind, Op, OpId, OpKind};
 pub use tensor::{TensorId, TensorInfo, TensorKind};
@@ -74,6 +84,20 @@ impl Graph {
             .filter(|t| t.kind == TensorKind::Activation)
             .map(|t| t.bytes())
             .sum()
+    }
+
+    /// Which tensors some op produces (indexed by [`TensorId`]); the
+    /// complement — inputs, labels, parameters — is what an interpreter
+    /// must be given initial values for ([`seed_values`], [`eval_serial`],
+    /// the SPMD executor).
+    pub fn produced_mask(&self) -> Vec<bool> {
+        let mut produced = vec![false; self.tensors.len()];
+        for op in &self.ops {
+            for &t in &op.outputs {
+                produced[t] = true;
+            }
+        }
+        produced
     }
 
     /// Steady-state alias map: `alias[t]` is the tensor whose tiling `t`

@@ -101,7 +101,9 @@ pub enum OpKind {
     /// `dx = ln_grad(dy, x, gamma)` — same row-wise restriction.
     LayerNormGrad,
     /// `dgamma = Σ_rows dy ⊙ x̂` — a two-input column reduction shaped
-    /// like [`OpKind::ReduceSumRows`] (`dbeta` reuses `ReduceSumRows`).
+    /// like [`OpKind::ReduceSumRows`] (`dbeta` reuses `ReduceSumRows`),
+    /// except that `x` must stay whole-row under a feature split: x̂'s
+    /// per-row statistics are recomputed from `x` inside the kernel.
     LayerNormGammaGrad,
 
     /// Row softmax over the *last* axis of a rank-2/3 tensor (attention

@@ -34,6 +34,12 @@
 //!   paper figures, plus a discrete-event engine ([`sim::engine`]) that
 //!   schedules lowered programs over configurable hierarchical topologies
 //!   and emits Chrome-trace timelines.
+//! - [`spmd`] — the std-only threaded executor: one worker thread per
+//!   device runs a lowered program on real `f32` shard buffers, with the
+//!   collective exchanges realized over `mpsc` channels. Differentially
+//!   tested against the serial interpreter ([`graph::eval_serial`]), it
+//!   is the proof that the parallel graph computes the same function as
+//!   the serial one — not just the same byte count.
 //! - [`runtime`] — the PJRT side: HLO-text artifact registry, dynamic
 //!   `XlaBuilder` kernels, and the multi-worker execution engine (real
 //!   buffers, real transfers; Python never runs here). Everything except
@@ -60,6 +66,7 @@ pub mod models;
 pub mod planner;
 pub mod runtime;
 pub mod sim;
+pub mod spmd;
 pub mod tiling;
 
 pub mod util;
@@ -92,4 +99,9 @@ pub mod book {
     /// portfolio.
     #[doc = include_str!("../../docs/topology.md")]
     pub mod topology {}
+
+    /// Real execution: the threaded SPMD executor, the serial reference
+    /// interpreter, and the differential harness between them.
+    #[doc = include_str!("../../docs/execution.md")]
+    pub mod execution {}
 }

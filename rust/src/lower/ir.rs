@@ -54,6 +54,11 @@ pub struct TransferMeta {
     pub kind: CollectiveKind,
     /// The tensor being converted (id in the original, un-halved graph).
     pub tensor: TensorId,
+    /// The op whose Eq. (2) form priced this conversion: the consumer for
+    /// input gathers, the producer for output conversions. Lets traces and
+    /// the executor's per-op payload meter tie collectives back to
+    /// operators without re-deriving the form selection.
+    pub op: OpId,
     /// The cut (= interconnect tier, outermost first) this transfer
     /// crosses. `2^cut` group pairs run the collective simultaneously.
     pub cut: usize,
@@ -205,6 +210,64 @@ impl LoweredProgram {
         counts
     }
 
+    /// Structural validation of the SPMD stream discipline, for programs
+    /// that did not come out of [`crate::lower::lower`]: every device
+    /// stream must start each collective exactly once, `Wait` only after
+    /// its start, and leave no transfer unwaited (the split-phase contract
+    /// both [`crate::sim::run_program`] and the [`crate::spmd`] executor
+    /// schedule by). Returns the first violation as
+    /// [`PlanError::MalformedProgram`].
+    ///
+    /// [`PlanError::MalformedProgram`]: crate::planner::PlanError::MalformedProgram
+    pub fn validate(&self) -> Result<(), crate::planner::PlanError> {
+        use crate::planner::PlanError;
+        let bad = |device: usize, pc: usize, reason: String| {
+            Err(PlanError::MalformedProgram { device, pc, reason })
+        };
+        if self.k >= usize::BITS as usize || self.devices != 1usize << self.k {
+            return bad(0, 0, format!("{} devices for k={}", self.devices, self.k));
+        }
+        if self.programs.len() != self.devices {
+            return bad(0, 0, format!("{} streams for {} devices", self.programs.len(), self.devices));
+        }
+        for (d, prog) in self.programs.iter().enumerate() {
+            let mut started = vec![false; self.transfers.len()];
+            let mut waited = vec![false; self.transfers.len()];
+            for (pc, instr) in prog.instrs.iter().enumerate() {
+                if let Some(gid) = instr.started_gid() {
+                    if gid >= self.transfers.len() {
+                        return bad(d, pc, format!("start of unknown transfer g{gid}"));
+                    }
+                    if started[gid] {
+                        return bad(d, pc, format!("transfer g{gid} started twice"));
+                    }
+                    started[gid] = true;
+                }
+                if let Instr::Wait { gid } = instr {
+                    if *gid >= self.transfers.len() {
+                        return bad(d, pc, format!("wait on unknown transfer g{gid}"));
+                    }
+                    if !started[*gid] {
+                        return bad(d, pc, format!("wait before start of g{gid}"));
+                    }
+                    if waited[*gid] {
+                        return bad(d, pc, format!("transfer g{gid} waited twice"));
+                    }
+                    waited[*gid] = true;
+                }
+            }
+            for gid in 0..self.transfers.len() {
+                if !started[gid] {
+                    return bad(d, prog.instrs.len(), format!("transfer g{gid} never started"));
+                }
+                if !waited[gid] {
+                    return bad(d, prog.instrs.len(), format!("transfer g{gid} never waited"));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Human-readable dump of one device's stream (first `limit`
     /// instructions; `usize::MAX` for all).
     pub fn describe_device(&self, device: usize, limit: usize) -> String {
@@ -265,6 +328,61 @@ mod tests {
     }
 
     #[test]
+    fn validate_enforces_stream_discipline() {
+        use crate::planner::PlanError;
+        let meta = TransferMeta {
+            gid: 0,
+            kind: CollectiveKind::AllGather,
+            tensor: 0,
+            op: 0,
+            cut: 0,
+            from: Produced::Tile(Tile::Split(0)),
+            to: Tile::Rep,
+            pair_bytes: 8,
+        };
+        let mk = |instrs: Vec<Vec<Instr>>| LoweredProgram {
+            k: 1,
+            devices: 2,
+            programs: instrs
+                .into_iter()
+                .enumerate()
+                .map(|(device, i)| DeviceProgram { device, instrs: i })
+                .collect(),
+            transfers: vec![meta.clone()],
+            op_names: vec!["op".into()],
+            tensor_names: vec!["t".into()],
+        };
+        let start = Instr::AllGather { gid: 0, bytes: 4 };
+        let wait = Instr::Wait { gid: 0 };
+        // Well-formed: start then wait on both devices.
+        let good = mk(vec![vec![start.clone(), wait.clone()]; 2]);
+        assert!(good.validate().is_ok());
+        // Wait before start.
+        let bad = mk(vec![vec![wait.clone(), start.clone()]; 2]);
+        assert!(matches!(
+            bad.validate().unwrap_err(),
+            PlanError::MalformedProgram { pc: 0, .. }
+        ));
+        // Started twice.
+        let bad = mk(vec![vec![start.clone(), start.clone(), wait.clone()]; 2]);
+        assert!(bad.validate().is_err());
+        // Never waited.
+        let bad = mk(vec![vec![start.clone()]; 2]);
+        assert!(bad.validate().is_err());
+        // Unknown gid.
+        let bad = mk(vec![vec![Instr::Wait { gid: 9 }]; 2]);
+        assert!(bad.validate().is_err());
+        // An absurd k must fail structurally, not overflow the shift.
+        let mut bad = mk(vec![vec![start, wait]; 2]);
+        bad.k = 64;
+        bad.devices = 1;
+        assert!(matches!(
+            bad.validate().unwrap_err(),
+            PlanError::MalformedProgram { .. }
+        ));
+    }
+
+    #[test]
     fn tier_bytes_apply_theorem1_weights() {
         let p = LoweredProgram {
             k: 2,
@@ -275,6 +393,7 @@ mod tests {
                     gid: 0,
                     kind: CollectiveKind::AllGather,
                     tensor: 0,
+                    op: 0,
                     cut: 0,
                     from: Produced::Tile(Tile::Split(0)),
                     to: Tile::Rep,
@@ -284,6 +403,7 @@ mod tests {
                     gid: 1,
                     kind: CollectiveKind::ReduceScatter,
                     tensor: 0,
+                    op: 0,
                     cut: 1,
                     from: Produced::Red,
                     to: Tile::Split(0),

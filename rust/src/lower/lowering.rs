@@ -28,7 +28,7 @@
 //! this for random graphs and plans).
 
 use crate::exec::{gather_sources, remote_bytes, resident_region, try_build_shard_tasks};
-use crate::graph::{Graph, Op};
+use crate::graph::{Graph, Op, OpId};
 use crate::planner::{apply_cut, Plan, PlanError};
 use crate::sim::compute::shard_seconds;
 use crate::sim::SimConfig;
@@ -172,11 +172,13 @@ pub fn try_lower_forced(
         devices,
         programs: (0..devices).map(|d| DeviceProgram { device: d, instrs: Vec::new() }).collect(),
         transfers: Vec::new(),
+        op: 0,
     };
     // Output conversions whose Wait is deferred to the first consumer (or
     // program end) so they overlap with independent compute.
     let mut pending: Vec<Vec<usize>> = vec![Vec::new(); g.tensors.len()];
     for op in &g.ops {
+        lw.op = op.id;
         // The input gathers read tensors in plan tiling, which exists only
         // once the producers' output conversions have landed.
         for &t in &op.inputs {
@@ -208,11 +210,13 @@ pub fn try_lower_forced(
             match (c.from, c.to) {
                 (Produced::Tile(a), b) => {
                     if let Some(kind) = collective_for(a, b) {
-                        pending[c.tensor].push(lw.start(kind, j, c.tensor, c.from, c.to, c.bytes));
+                        let gid = lw.start(kind, j, c.tensor, c.from, c.to, c.bytes);
+                        pending[c.tensor].push(gid);
                     }
                 }
                 (Produced::Red, to @ Tile::Split(_)) => {
-                    let gid = lw.start(CollectiveKind::ReduceScatter, j, c.tensor, c.from, to, c.bytes);
+                    let gid =
+                        lw.start(CollectiveKind::ReduceScatter, j, c.tensor, c.from, to, c.bytes);
                     pending[c.tensor].push(gid);
                 }
                 (Produced::Red, Tile::Rep) => match c.scatter_axis {
@@ -280,6 +284,9 @@ struct Emitter {
     devices: usize,
     programs: Vec<DeviceProgram>,
     transfers: Vec<TransferMeta>,
+    /// The op whose conversions are being emitted (recorded on each
+    /// collective's `TransferMeta`).
+    op: OpId,
 }
 
 impl Emitter {
@@ -296,7 +303,8 @@ impl Emitter {
         pair_bytes: u64,
     ) -> usize {
         let gid = self.transfers.len();
-        self.transfers.push(TransferMeta { gid, kind, tensor, cut, from, to, pair_bytes });
+        let op = self.op;
+        self.transfers.push(TransferMeta { gid, kind, tensor, op, cut, from, to, pair_bytes });
         let n = (self.devices >> cut) as u64; // devices per group pair
         let mirror = 1usize << (self.k - 1 - cut);
         for d in 0..self.devices {

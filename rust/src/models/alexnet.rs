@@ -4,26 +4,52 @@
 //! ~60M parameters), with the LRN layers omitted (they are
 //! tiling-transparent elementwise ops with negligible traffic) and the
 //! stride-4 11×11 stem expressed exactly.
+//!
+//! [`alexnet_scaled`] keeps the exact layer *topology* (same conv
+//! stack, same pools, same op sequence) while parameterizing the image
+//! size and FC width — the differential execution harness runs the
+//! `image = 67, fc = 256` instance, which is numerically tractable on
+//! real `f32` buffers while exercising every shape case of the full
+//! model (stride-4 stem, odd pooled extents, the conv→FC flatten).
 
 use crate::graph::{append_backward, Graph, GraphBuilder};
 
-/// Build AlexNet's training step for the given batch size.
+/// Build AlexNet's training step for the given batch size (the
+/// full-size Figure 10(a) model: 227×227 images, 4096-wide FC head).
 pub fn alexnet(batch: usize) -> Graph {
+    alexnet_scaled(batch, 227, 4096)
+}
+
+/// AlexNet's training step with parametric input image size and FC
+/// width. `alexnet_scaled(b, 227, 4096)` is exactly [`alexnet`];
+/// smaller instances keep the layer topology but shrink the spatial
+/// pipeline and head so the numeric harness can execute them.
+pub fn alexnet_scaled(batch: usize, image: usize, fc: usize) -> Graph {
+    assert!(image >= 11, "stride-4 11x11 stem needs image >= 11, got {image}");
+    // The spatial pipeline must survive every stage: stem -> pool1 ->
+    // conv2 -> pool2 -> conv3..5 -> pool5 needs pool2's extent >= 2 so
+    // pool5 stays >= 1 (image 67 gives 15 -> 7 -> 3 -> 1; image 15
+    // would collapse to zero and underflow conv shape inference).
+    let stem = (image - 11) / 4 + 1;
+    assert!(
+        stem / 2 / 2 >= 2,
+        "alexnet_scaled: image {image} collapses the spatial pipeline (pool5 would be empty)"
+    );
     let mut b = GraphBuilder::new();
-    let mut h = b.input("x", &[batch, 227, 227, 3]);
+    let mut h = b.input("x", &[batch, image, image, 3]);
     let y = b.label("y", &[batch, 1000]);
 
-    // conv1: 11x11/4, 96 filters -> 55x55x96, pool -> 27x27x96
+    // conv1: 11x11/4 stem, pool (227 -> 55 -> 27; 67 -> 15 -> 7).
     let w1 = b.weight("conv1.w", &[11, 11, 3, 96]);
     h = b.conv2d("conv1", h, w1, 4, 0);
     h = b.relu("conv1.relu", h);
-    h = b.pool2("pool1", h); // 55 -> 27 (floor)
-    // conv2: 5x5 pad 2, 256 filters -> 27x27x256, pool -> 13
+    h = b.pool2("pool1", h);
+    // conv2: 5x5 pad 2, pool.
     let w2 = b.weight("conv2.w", &[5, 5, 96, 256]);
     h = b.conv2d("conv2", h, w2, 1, 2);
     h = b.relu("conv2.relu", h);
     h = b.pool2("pool2", h);
-    // conv3..5: 3x3 pad 1
+    // conv3..5: 3x3 pad 1.
     let w3 = b.weight("conv3.w", &[3, 3, 256, 384]);
     h = b.conv2d("conv3", h, w3, 1, 1);
     h = b.relu("conv3.relu", h);
@@ -33,16 +59,17 @@ pub fn alexnet(batch: usize) -> Graph {
     let w5 = b.weight("conv5.w", &[3, 3, 384, 256]);
     h = b.conv2d("conv5", h, w5, 1, 1);
     h = b.relu("conv5.relu", h);
-    h = b.pool2("pool5", h); // 13 -> 6
+    h = b.pool2("pool5", h);
 
-    let flat = b.flatten("flatten", h); // 6*6*256 = 9216
-    let wf1 = b.weight("fc6.w", &[9216, 4096]);
+    let flat = b.flatten("flatten", h);
+    let feat = b.graph.tensors[flat].shape[1]; // 9216 at full size
+    let wf1 = b.weight("fc6.w", &[feat, fc]);
     let mut f = b.matmul("fc6", flat, wf1, false, false);
     f = b.relu("fc6.relu", f);
-    let wf2 = b.weight("fc7.w", &[4096, 4096]);
+    let wf2 = b.weight("fc7.w", &[fc, fc]);
     f = b.matmul("fc7", f, wf2, false, false);
     f = b.relu("fc7.relu", f);
-    let wf3 = b.weight("fc8.w", &[4096, 1000]);
+    let wf3 = b.weight("fc8.w", &[fc, 1000]);
     let logits = b.matmul("fc8", f, wf3, false, false);
 
     let loss = b.softmax_xent("loss", logits, y);
@@ -79,5 +106,25 @@ mod tests {
         let g = alexnet(64);
         let pool5 = g.tensors.iter().find(|t| t.name == "pool5.out").unwrap();
         assert_eq!(pool5.shape, vec![64, 6, 6, 256]);
+    }
+
+    #[test]
+    #[should_panic(expected = "collapses the spatial pipeline")]
+    fn scaled_instance_rejects_collapsing_images() {
+        // image 15: stem 2 -> pool 1 -> pool 0; conv3 would underflow.
+        alexnet_scaled(8, 15, 256);
+    }
+
+    #[test]
+    fn scaled_instance_keeps_topology() {
+        // The 67px harness instance: same op sequence, 1x1 pooled tail.
+        let g = alexnet_scaled(8, 67, 256);
+        let pool5 = g.tensors.iter().find(|t| t.name == "pool5.out").unwrap();
+        assert_eq!(pool5.shape, vec![8, 1, 1, 256]);
+        let fc6 = g.tensors.iter().find(|t| t.name == "fc6.w").unwrap();
+        assert_eq!(fc6.shape, vec![256, 256]);
+        let full = alexnet(8);
+        let kinds = |g: &Graph| g.ops.iter().map(|o| o.kind).collect::<Vec<_>>();
+        assert_eq!(kinds(&g), kinds(&full));
     }
 }

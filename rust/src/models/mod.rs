@@ -18,8 +18,8 @@ mod mlp;
 mod transformer;
 mod vgg;
 
-pub use alexnet::alexnet;
+pub use alexnet::{alexnet, alexnet_scaled};
 pub use cnn::cnn5;
 pub use mlp::{mlp, mlp_with_loss, MlpConfig};
 pub use transformer::{attention_probe, transformer, TransformerConfig};
-pub use vgg::vgg16;
+pub use vgg::{vgg16, vgg16_scaled};

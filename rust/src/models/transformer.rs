@@ -78,6 +78,21 @@ impl TransformerConfig {
             classes: 8,
         }
     }
+
+    /// The differential-harness encoder: the [`Self::micro`] 4-layer
+    /// topology at [`Self::tiny`]-scale dimensions, batch 8 so every
+    /// batch-axis tensor splits cleanly across up to 8 devices.
+    pub fn tiny4() -> Self {
+        TransformerConfig {
+            batch: 8,
+            seq: 4,
+            d_model: 8,
+            heads: 2,
+            d_ff: 16,
+            layers: 4,
+            classes: 8,
+        }
+    }
 }
 
 /// Chain of free identity relays (see module docs).

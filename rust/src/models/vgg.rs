@@ -3,6 +3,11 @@
 //! 13 3×3 conv layers in five blocks with 2×2 pools, then the 3-layer FC
 //! head (~138M parameters). "VGG has similar structure to AlexNet but with
 //! more layers" (§6.4) — deeper conv stack, even heavier FC head.
+//!
+//! [`vgg16_scaled`] keeps the 13-conv/5-pool topology while
+//! parameterizing image size and FC width; the differential execution
+//! harness runs the 32×32, 256-wide instance (each pool halves cleanly:
+//! 32 → 16 → 8 → 4 → 2 → 1).
 
 use crate::graph::{append_backward, Graph, GraphBuilder, TensorId};
 
@@ -17,10 +22,19 @@ fn block(b: &mut GraphBuilder, mut h: TensorId, name: &str, convs: usize, cin: u
     b.pool2(&format!("{name}.pool"), h)
 }
 
-/// Build VGG-16's training step for the given batch size.
+/// Build VGG-16's training step for the given batch size (the full-size
+/// Figure 10(b) model: 224×224 images, 4096-wide FC head).
 pub fn vgg16(batch: usize) -> Graph {
+    vgg16_scaled(batch, 224, 4096)
+}
+
+/// VGG-16's training step with parametric image size and FC width.
+/// `vgg16_scaled(b, 224, 4096)` is exactly [`vgg16`]; the harness runs
+/// reduced instances whose five pools still halve evenly.
+pub fn vgg16_scaled(batch: usize, image: usize, fc: usize) -> Graph {
+    assert!(image % 32 == 0 && image >= 32, "five 2x2 pools need image % 32 == 0, got {image}");
     let mut b = GraphBuilder::new();
-    let mut h = b.input("x", &[batch, 224, 224, 3]);
+    let mut h = b.input("x", &[batch, image, image, 3]);
     let y = b.label("y", &[batch, 1000]);
 
     h = block(&mut b, h, "b1", 2, 3, 64); // 224 -> 112
@@ -29,14 +43,15 @@ pub fn vgg16(batch: usize) -> Graph {
     h = block(&mut b, h, "b4", 3, 256, 512); // 28 -> 14
     h = block(&mut b, h, "b5", 3, 512, 512); // 14 -> 7
 
-    let flat = b.flatten("flatten", h); // 7*7*512 = 25088
-    let wf1 = b.weight("fc1.w", &[25088, 4096]);
+    let flat = b.flatten("flatten", h); // 7*7*512 = 25088 at full size
+    let feat = b.graph.tensors[flat].shape[1];
+    let wf1 = b.weight("fc1.w", &[feat, fc]);
     let mut f = b.matmul("fc1", flat, wf1, false, false);
     f = b.relu("fc1.relu", f);
-    let wf2 = b.weight("fc2.w", &[4096, 4096]);
+    let wf2 = b.weight("fc2.w", &[fc, fc]);
     f = b.matmul("fc2", f, wf2, false, false);
     f = b.relu("fc2.relu", f);
-    let wf3 = b.weight("fc3.w", &[4096, 1000]);
+    let wf3 = b.weight("fc3.w", &[fc, 1000]);
     let logits = b.matmul("fc3", f, wf3, false, false);
 
     let loss = b.softmax_xent("loss", logits, y);
@@ -68,5 +83,17 @@ mod tests {
         let g = vgg16(16);
         let p5 = g.tensors.iter().find(|t| t.name == "b5.pool.out").unwrap();
         assert_eq!(p5.shape, vec![16, 7, 7, 512]);
+    }
+
+    #[test]
+    fn scaled_instance_keeps_topology() {
+        let g = vgg16_scaled(8, 32, 256);
+        let p5 = g.tensors.iter().find(|t| t.name == "b5.pool.out").unwrap();
+        assert_eq!(p5.shape, vec![8, 1, 1, 512]);
+        let fc1 = g.tensors.iter().find(|t| t.name == "fc1.w").unwrap();
+        assert_eq!(fc1.shape, vec![512, 256]);
+        let full = vgg16(8);
+        let kinds = |g: &Graph| g.ops.iter().map(|o| o.kind).collect::<Vec<_>>();
+        assert_eq!(kinds(&g), kinds(&full));
     }
 }

@@ -109,12 +109,49 @@ impl Plan {
     }
 }
 
+/// Structural validation of a (possibly hand-written) plan against its
+/// graph: one `TileSeq` of exactly `k` tiles per tensor, and every
+/// assigned split must hit an existing, even dimension at that cut's
+/// halved granularity (otherwise recursive bisection cannot realize it on
+/// shards). Every plan consumer — the shard-schedule builder (and through
+/// it the lowering, both simulators and the SPMD executor) — calls this
+/// before walking the plan, so malformed plans surface as structured
+/// [`PlanError`]s instead of index/assert panics deep in the pipeline.
+pub fn validate_plan(g: &Graph, plan: &Plan) -> Result<(), PlanError> {
+    if plan.tiles.len() != g.tensors.len() {
+        return Err(PlanError::MalformedPlan {
+            reason: format!("plan covers {} tensors, graph has {}", plan.tiles.len(), g.tensors.len()),
+        });
+    }
+    for (t, seq) in g.tensors.iter().zip(&plan.tiles) {
+        if seq.len() != plan.k {
+            return Err(PlanError::MalformedPlan {
+                reason: format!("tensor {} has {} tiles for a k={} plan", t.name, seq.len(), plan.k),
+            });
+        }
+        let mut shape = t.shape.clone();
+        for (cut, tile) in seq.iter().enumerate() {
+            if let Tile::Split(d) = tile {
+                let ok = *d < shape.len() && shape[*d] >= 2 && shape[*d] % 2 == 0;
+                if !ok {
+                    return Err(PlanError::UnsplittableTensor { tensor: t.name.clone(), cut });
+                }
+                shape[*d] /= 2;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Halve every tensor's shape along its chosen split dimension, producing
 /// the within-group subproblem for the next cut.
 pub fn apply_cut(g: &Graph, tiles: &[Tile]) -> Graph {
     let mut sub = g.clone();
     for t in &mut sub.tensors {
         if let Tile::Split(d) = tiles[t.id] {
+            // Invariant: planner-chosen tiles only split even dims
+            // (candidate_tiles); hand-written plans hit validate_plan
+            // before any consumer walks them down to here.
             assert!(t.shape[d] % 2 == 0);
             t.shape[d] /= 2;
         }
@@ -309,6 +346,43 @@ mod tests {
             assert_eq!(p.devices(), 1 << k);
             assert_eq!(p.cut_costs.len(), k);
         }
+    }
+
+    #[test]
+    fn validate_plan_rejects_structural_breakage() {
+        let g = mlp_train(8, &[4, 4]);
+        let good = k_cut(&g, 2);
+        assert!(validate_plan(&g, &good).is_ok());
+        // Wrong tensor count.
+        let bad = Plan { k: 2, tiles: vec![], cut_costs: vec![0, 0] };
+        assert!(matches!(
+            validate_plan(&g, &bad).unwrap_err(),
+            PlanError::MalformedPlan { .. }
+        ));
+        // Ragged sequence: one tensor has a 1-tile seq in a k=2 plan.
+        let mut tiles = good.tiles.clone();
+        tiles[0] = vec![Tile::Rep];
+        let bad = Plan { k: 2, tiles, cut_costs: vec![0, 0] };
+        assert!(matches!(
+            validate_plan(&g, &bad).unwrap_err(),
+            PlanError::MalformedPlan { .. }
+        ));
+        // Splitting the batch (8) three times dies at the third cut.
+        let mut tiles = vec![vec![Tile::Rep; 4]; g.tensors.len()];
+        tiles[0] = vec![Tile::Split(0); 4];
+        let bad = Plan { k: 4, tiles, cut_costs: vec![0; 4] };
+        match validate_plan(&g, &bad).unwrap_err() {
+            PlanError::UnsplittableTensor { cut, .. } => assert_eq!(cut, 3),
+            other => panic!("expected UnsplittableTensor, got {other:?}"),
+        }
+        // A split of a dimension the tensor does not have.
+        let mut tiles = vec![vec![Tile::Rep]; g.tensors.len()];
+        tiles[0] = vec![Tile::Split(5)];
+        let bad = Plan { k: 1, tiles, cut_costs: vec![0] };
+        assert!(matches!(
+            validate_plan(&g, &bad).unwrap_err(),
+            PlanError::UnsplittableTensor { cut: 0, .. }
+        ));
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod topology;
 
 pub use kcut::{
     apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, try_k_cut,
-    try_k_cut_weighted, Plan,
+    try_k_cut_weighted, validate_plan, Plan,
 };
 pub use onecut::{one_cut, price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
 pub use topology::{

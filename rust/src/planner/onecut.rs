@@ -71,7 +71,45 @@ pub enum PlanError {
     /// A (typically hand-written) plan admits no feasible aligned form for
     /// an operator at some cut — reported by the execution-graph builder
     /// ([`crate::exec::try_build_shard_tasks`]) instead of panicking.
-    NoFeasibleForm { op: String, cut: usize },
+    NoFeasibleForm {
+        /// Name of the op with no realizable aligned form.
+        op: String,
+        /// Cut index (outermost first) at which selection failed.
+        cut: usize,
+    },
+    /// A hand-written [`Plan`](super::Plan) is structurally invalid: wrong
+    /// tensor count, ragged tile sequences, or a split of a missing
+    /// dimension. Reported by [`super::validate_plan`] before any consumer
+    /// (shard schedule, lowering, simulators, the SPMD executor) walks it.
+    MalformedPlan {
+        /// What is wrong with the plan.
+        reason: String,
+    },
+    /// A plan assigns `Split(d)` to a tensor whose dimension `d` is odd
+    /// (or too small) at that cut's halved granularity — the recursive
+    /// bisection cannot realize it on real shards.
+    UnsplittableTensor {
+        /// Name of the tensor with the unrealizable split.
+        tensor: String,
+        /// Cut index (outermost first) where the split fails.
+        cut: usize,
+    },
+    /// A hand-written [`LoweredProgram`](crate::lower::LoweredProgram)
+    /// breaks the SPMD stream discipline: a transfer id out of range, a
+    /// `Wait` before its start, or a collective started twice. Reported by
+    /// [`crate::sim::try_run_program`] and the SPMD executor instead of
+    /// panicking mid-schedule.
+    MalformedProgram {
+        /// Device whose stream is malformed.
+        device: usize,
+        /// Instruction index within that stream.
+        pc: usize,
+        /// What the discipline violation is.
+        reason: String,
+    },
+    /// A [`Topology`](crate::sim::Topology) with no tiers — there is no
+    /// link to price any transfer against.
+    EmptyTopology,
 }
 
 impl fmt::Display for PlanError {
@@ -88,6 +126,14 @@ impl fmt::Display for PlanError {
             PlanError::NoFeasibleForm { op, cut } => {
                 write!(f, "no feasible aligned form for op {op} at cut {cut}")
             }
+            PlanError::MalformedPlan { reason } => write!(f, "malformed plan: {reason}"),
+            PlanError::UnsplittableTensor { tensor, cut } => {
+                write!(f, "tensor {tensor} cannot be split at cut {cut} (odd or missing dim)")
+            }
+            PlanError::MalformedProgram { device, pc, reason } => {
+                write!(f, "malformed SPMD program on device {device} at [{pc}]: {reason}")
+            }
+            PlanError::EmptyTopology => write!(f, "topology has no tiers"),
         }
     }
 }

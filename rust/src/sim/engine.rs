@@ -299,7 +299,25 @@ struct Instance {
     waiters: Vec<usize>,
 }
 
+/// [`run_program`] with structured validation: rejects an empty topology
+/// and any stream-discipline violation ([`LoweredProgram::validate`])
+/// before scheduling, so hand-written programs fail with a
+/// [`PlanError`](crate::planner::PlanError) instead of deadlocking the
+/// event loop or panicking on a transfer index.
+pub fn try_run_program(
+    program: &LoweredProgram,
+    topo: &Topology,
+) -> Result<EngineReport, crate::planner::PlanError> {
+    if topo.tiers.is_empty() {
+        return Err(crate::planner::PlanError::EmptyTopology);
+    }
+    program.validate()?;
+    Ok(run_program(program, topo))
+}
+
 /// Run `program` over `topo` to completion and report the timeline.
+/// Expects a well-formed program (anything [`crate::lower::lower`]
+/// emits); see [`try_run_program`] for the validating front door.
 pub fn run_program(program: &LoweredProgram, topo: &Topology) -> EngineReport {
     let devices = program.devices;
     let k = program.k;
@@ -537,6 +555,32 @@ mod tests {
 
     fn cfg() -> SimConfig {
         SimConfig::default()
+    }
+
+    #[test]
+    fn try_run_program_validates_inputs() {
+        use crate::planner::PlanError;
+        let g = mlp(&MlpConfig::fig8(64, 32));
+        let plan = Planner::plan(&g, 1, Strategy::Soybean);
+        let p = lower(&g, &plan, &cfg());
+        // Well-formed program on a well-formed topology: same report.
+        let topo = Topology::from_sim(&cfg(), 1);
+        let ok = try_run_program(&p, &topo).unwrap();
+        assert_eq!(ok.total_bytes, run_program(&p, &topo).total_bytes);
+        // Empty topology is rejected structurally.
+        assert_eq!(
+            try_run_program(&p, &Topology { tiers: vec![] }).unwrap_err(),
+            PlanError::EmptyTopology
+        );
+        // A hand-mangled stream (wait with no start) is rejected too.
+        let mut bad = p.clone();
+        bad.programs[0].instrs.insert(0, Instr::Wait { gid: 0 });
+        match try_run_program(&bad, &topo).unwrap_err() {
+            PlanError::MalformedProgram { device, pc, .. } => {
+                assert_eq!((device, pc), (0, 0));
+            }
+            other => panic!("expected MalformedProgram, got {other:?}"),
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod engine;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
-pub use engine::{chrome_trace_json, run_program, EngineReport, TierLink, Topology};
+pub use engine::{chrome_trace_json, run_program, try_run_program, EngineReport, TierLink, Topology};
 pub use simulate::{
     simulate, simulate_classic_dp, simulate_forced, try_simulate, try_simulate_forced, SimConfig,
     SimReport,

@@ -1,0 +1,156 @@
+//! Shard buffers: dense row-major storage over axis-aligned tensor
+//! regions, with region-relative copying.
+//!
+//! Every piece of data the executor moves is a [`crate::exec::Region`]
+//! (absolute tensor coordinates) paired with its dense contents. The one
+//! primitive everything builds on is [`for_each_row`]: visit a cell's
+//! contiguous last-dimension runs as `(dst_base, src_base, len)` index
+//! triples relative to two enclosing regions — copies, extractions and
+//! f64 accumulations are all row loops over it.
+
+use crate::exec::Region;
+
+/// Row-major strides of a shape (last dimension contiguous).
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Visit `cell` (absolute coordinates, contained in both `dst` and `src`)
+/// as contiguous rows: `f(dst_base, src_base, len)` for each run, where
+/// the bases index dense row-major arrays stored over `dst` / `src`.
+/// Rank-0 regions visit one element.
+pub fn for_each_row(dst: &Region, src: &Region, cell: &Region, mut f: impl FnMut(usize, usize, usize)) {
+    let rank = cell.shape.len();
+    if rank == 0 {
+        f(0, 0, 1);
+        return;
+    }
+    if cell.is_empty() {
+        return;
+    }
+    let len = cell.shape[rank - 1];
+    let ds = strides(&dst.shape);
+    let ss = strides(&src.shape);
+    let mut idx = vec![0usize; rank - 1];
+    loop {
+        let mut db = cell.offset[rank - 1] - dst.offset[rank - 1];
+        let mut sb = cell.offset[rank - 1] - src.offset[rank - 1];
+        for d in 0..rank - 1 {
+            let abs = cell.offset[d] + idx[d];
+            db += (abs - dst.offset[d]) * ds[d];
+            sb += (abs - src.offset[d]) * ss[d];
+        }
+        f(db, sb, len);
+        // Odometer over the outer dimensions, innermost-first.
+        let mut d = rank - 1;
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < cell.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// A shard: the region of the logical tensor this buffer covers, plus its
+/// elements in dense row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardBuf {
+    /// Which axis-aligned box of the tensor this buffer holds.
+    pub region: Region,
+    /// The box's elements, row-major.
+    pub data: Vec<f32>,
+}
+
+impl ShardBuf {
+    /// A zero-filled buffer over `region`.
+    pub fn zeros(region: Region) -> Self {
+        let n = region.elements() as usize;
+        ShardBuf { region, data: vec![0.0; n] }
+    }
+
+    /// Slice `region` out of a whole tensor of `shape` (how every device
+    /// materializes its home shard of a graph input).
+    pub fn from_full(full: &[f32], shape: &[usize], region: Region) -> Self {
+        let whole = Region::full(shape);
+        let mut data = vec![0.0f32; region.elements() as usize];
+        for_each_row(&region, &whole, &region, |db, sb, len| {
+            data[db..db + len].copy_from_slice(&full[sb..sb + len]);
+        });
+        ShardBuf { region, data }
+    }
+
+    /// Extract `cell` (absolute coordinates, must be inside this region)
+    /// as its own dense array.
+    pub fn extract(&self, cell: &Region) -> Vec<f32> {
+        let mut out = vec![0.0f32; cell.elements() as usize];
+        for_each_row(cell, &self.region, cell, |db, sb, len| {
+            out[db..db + len].copy_from_slice(&self.data[sb..sb + len]);
+        });
+        out
+    }
+
+    /// Copy a dense `cell` payload (stored over `cell` itself) into this
+    /// buffer at its absolute position.
+    pub fn paste(&mut self, cell: &Region, payload: &[f32]) {
+        let region = self.region.clone();
+        for_each_row(&region, cell, cell, |db, sb, len| {
+            self.data[db..db + len].copy_from_slice(&payload[sb..sb + len]);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(offset: &[usize], shape: &[usize]) -> Region {
+        Region { offset: offset.to_vec(), shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn from_full_slices_rows_and_cols() {
+        // 4x4 tensor 0..16; take the bottom-right 2x2 block.
+        let full: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let b = ShardBuf::from_full(&full, &[4, 4], region(&[2, 2], &[2, 2]));
+        assert_eq!(b.data, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn extract_and_paste_round_trip() {
+        let full: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let b = ShardBuf::from_full(&full, &[4, 4], region(&[0, 0], &[4, 4]));
+        let cell = region(&[1, 1], &[2, 3]);
+        let piece = b.extract(&cell);
+        assert_eq!(piece, vec![5.0, 6.0, 7.0, 9.0, 10.0, 11.0]);
+        let mut dst = ShardBuf::zeros(region(&[0, 0], &[4, 4]));
+        dst.paste(&cell, &piece);
+        assert_eq!(dst.data[5], 5.0);
+        assert_eq!(dst.data[11], 11.0);
+        assert_eq!(dst.data[0], 0.0);
+    }
+
+    #[test]
+    fn rank0_single_element() {
+        let b = ShardBuf::from_full(&[42.0], &[], region(&[], &[]));
+        assert_eq!(b.data, vec![42.0]);
+        assert_eq!(b.extract(&region(&[], &[])), vec![42.0]);
+    }
+
+    #[test]
+    fn rank3_offsets() {
+        // 2x2x2 tensor; slice the second plane.
+        let full: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let b = ShardBuf::from_full(&full, &[2, 2, 2], region(&[1, 0, 0], &[1, 2, 2]));
+        assert_eq!(b.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -1,0 +1,631 @@
+//! The threaded SPMD executor: run a lowered program on real tensors.
+//!
+//! One OS thread per device walks that device's [`Instr`] stream. The
+//! collective instructions are the byte meter — each start adds its priced
+//! wire volume to `instr_bytes`, which therefore sums to the plan's
+//! Theorem-1 cost bit for bit (the lowering identity, re-asserted here at
+//! entry). The *data* a collective realizes moves through
+//! [`std::sync::mpsc`] channels at op granularity, in the three phases of
+//! §5.2 that the shard schedule ([`ShardTask`]) prescribes:
+//!
+//! 1. **Ghost gather** — each input is fetched into the op's required
+//!    layout: the receiver decomposes its required region over the
+//!    tensor's home (plan) layout via [`gather_sources`]; senders run the
+//!    *same* deterministic decomposition for every peer, so each side
+//!    knows exactly which pieces to ship (the `AllGather` / `AllToAll`
+//!    patterns) without negotiation.
+//! 2. **Local compute** — the shared kernel library
+//!    ([`crate::graph::apply_op`]) runs on the shard-local views; at
+//!    reduce cuts the result is a full-extent partial sum.
+//! 3. **Scatter-reduce** — the output moves to its home layout: each
+//!    receiver's home region decomposes over the *produced* layout, and
+//!    every piece is summed (in `f64`) over its reduce-bit contributor
+//!    set — the devices that differ from the piece's owner only at the
+//!    cuts where the op produced partials (the `ReduceScatter` /
+//!    `SendRecv`-partial-exchange patterns, generalized to k cuts).
+//!
+//! Sends never block (unbounded channels) and receives only consume
+//! messages a peer's earlier-or-equal op produced, so the aligned SPMD
+//! streams make the exchange deadlock-free by the same induction the
+//! event engine relies on; a worker that fails broadcasts a poison
+//! message so its peers error out instead of blocking. Because every
+//! phase is deterministic — deterministic piece assignment, deterministic
+//! contributor order, `f64` accumulation rounded once — replicated shards
+//! are **bit-identical** across devices, which [`execute`] verifies while
+//! reassembling full tensors (any divergence is a routing bug, reported
+//! as [`ExecError::ReplicaDivergence`]).
+//!
+//! The channel payload volume is reported separately (`payload_bytes`,
+//! and per op in `op_payload_bytes`): it is the §5.2 ghost-gather
+//! *realization* of the conversions, which coincides with the collective
+//! meter for single-cut plans (pinned by the property tests) but may
+//! shortcut through nearer replicas — or pay the naive partial exchange —
+//! on stacked cuts (docs/execution.md §Two meters).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::exec::{gather_sources, resident_region, try_build_shard_tasks, Region, ShardTask};
+use crate::graph::{apply_op, Graph, InterpError, OpId, View};
+use crate::lower::{Instr, LoweredProgram};
+use crate::planner::{Plan, PlanError};
+
+use super::buf::{for_each_row, ShardBuf};
+
+/// Slot tag for output scatter-reduce messages (inputs use their index).
+const OUT_SLOT: u8 = u8::MAX;
+/// Slot tag a failing worker broadcasts so peers error instead of block.
+const POISON_SLOT: u8 = u8::MAX - 1;
+/// Reason string of a cascade abort (a worker that stopped because a
+/// peer poisoned it) — `execute` prefers reporting the root cause.
+const POISON_REASON: &str = "peer worker aborted";
+
+/// The pieces of one exchange: absolute region + dense `f32` payload.
+type Pieces = Vec<(Region, Vec<f32>)>;
+
+/// One inter-device message: every piece one sender contributes to one
+/// exchange of one op.
+struct Msg {
+    from: usize,
+    op: OpId,
+    slot: u8,
+    pieces: Pieces,
+}
+
+/// Structured executor failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecError {
+    /// The plan or program is malformed (validation, shard schedule).
+    Plan(PlanError),
+    /// The initial values are missing or mis-sized (same checks as the
+    /// serial interpreter's).
+    Input(InterpError),
+    /// The program's instruction bytes do not sum to the plan's Theorem-1
+    /// cost — the one-theory contract the executor refuses to run without.
+    MeterMismatch {
+        /// Bytes the program's collective instructions sum to.
+        metered: u64,
+        /// The plan's Theorem-1 total.
+        plan: u64,
+    },
+    /// Two devices hold bitwise-different values for the same element of
+    /// a replicated shard — a conversion-routing bug, never tolerated.
+    ReplicaDivergence {
+        /// Name of the diverging tensor.
+        tensor: String,
+    },
+    /// A worker thread failed (kernel panic, peer abort, closed channel).
+    Worker {
+        /// Device whose worker failed first.
+        device: usize,
+        /// What happened.
+        reason: String,
+    },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Plan(e) => write!(f, "{e}"),
+            ExecError::Input(e) => write!(f, "{e}"),
+            ExecError::MeterMismatch { metered, plan } => {
+                write!(f, "program meters {metered} B but the plan's Theorem-1 cost is {plan} B")
+            }
+            ExecError::ReplicaDivergence { tensor } => {
+                write!(f, "replicated shards of `{tensor}` diverged between devices")
+            }
+            ExecError::Worker { device, reason } => {
+                write!(f, "worker {device} failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<PlanError> for ExecError {
+    fn from(e: PlanError) -> Self {
+        ExecError::Plan(e)
+    }
+}
+
+impl From<InterpError> for ExecError {
+    fn from(e: InterpError) -> Self {
+        ExecError::Input(e)
+    }
+}
+
+/// Result of one threaded execution.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Worker-thread count (`2^k`).
+    pub devices: usize,
+    /// Every tensor of the graph, reassembled from the devices' home
+    /// shards (indexed by `TensorId`) — compare against
+    /// [`crate::graph::eval_serial`].
+    pub tensors: Vec<Vec<f32>>,
+    /// Bytes metered from the executed collective instructions; equals
+    /// the plan's Theorem-1 total bit for bit (checked at entry).
+    pub instr_bytes: u64,
+    /// `f32` payload bytes actually shipped between worker threads (the
+    /// §5.2 ghost-gather realization volume).
+    pub payload_bytes: u64,
+    /// Payload bytes attributed to each op's exchanges (indexed by
+    /// `OpId`); sums to `payload_bytes`.
+    pub op_payload_bytes: Vec<u64>,
+}
+
+/// What one worker thread hands back.
+struct DeviceOutcome {
+    home: Vec<Option<ShardBuf>>,
+    instr_bytes: u64,
+    payload_bytes: u64,
+    op_payload: Vec<u64>,
+}
+
+struct Worker<'a> {
+    d: usize,
+    k: usize,
+    devices: usize,
+    g: &'a Graph,
+    plan: &'a Plan,
+    tasks: &'a [ShardTask],
+    program: &'a LoweredProgram,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    inbox: BTreeMap<(OpId, u8, usize), Pieces>,
+    home: Vec<Option<ShardBuf>>,
+    instr_bytes: u64,
+    payload_bytes: u64,
+    op_payload: Vec<u64>,
+}
+
+impl<'a> Worker<'a> {
+    fn run(mut self) -> Result<DeviceOutcome, ExecError> {
+        let program = self.program;
+        let d = self.d;
+        for instr in &program.programs[d].instrs {
+            match instr {
+                Instr::Compute { op, .. } => self.compute(*op)?,
+                Instr::Wait { .. } => {}
+                // Collective starts: the Theorem-1 byte meter. The data
+                // the collective realizes moves in the op-granular
+                // exchanges of `compute` (module docs).
+                other => self.instr_bytes += other.bytes(),
+            }
+        }
+        Ok(DeviceOutcome {
+            home: self.home,
+            instr_bytes: self.instr_bytes,
+            payload_bytes: self.payload_bytes,
+            op_payload: self.op_payload,
+        })
+    }
+
+    /// Block until the `(op, slot)` message from `from` is available.
+    fn recv_from(
+        &mut self,
+        op: OpId,
+        slot: u8,
+        from: usize,
+    ) -> Result<Pieces, ExecError> {
+        loop {
+            if let Some(pieces) = self.inbox.remove(&(op, slot, from)) {
+                return Ok(pieces);
+            }
+            match self.rx.recv() {
+                Ok(m) if m.slot == POISON_SLOT => {
+                    return Err(ExecError::Worker { device: m.from, reason: POISON_REASON.into() })
+                }
+                Ok(m) => {
+                    self.inbox.insert((m.op, m.slot, m.from), m.pieces);
+                }
+                Err(_) => {
+                    return Err(ExecError::Worker {
+                        device: self.d,
+                        reason: format!(
+                            "channel closed while waiting for op {op} slot {slot} from {from}"
+                        ),
+                    })
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, to: usize, op: OpId, slot: u8, pieces: Pieces) {
+        let bytes: u64 = pieces.iter().map(|(r, _)| r.elements() * 4).sum();
+        self.payload_bytes += bytes;
+        self.op_payload[op] += bytes;
+        // A send only fails if the receiver died; the poison/abort path
+        // reports that failure, so the result here is ignorable.
+        let _ = self.senders[to].send(Msg { from: self.d, op, slot, pieces });
+    }
+
+    /// §5.2 phase 1: assemble one input in the op's required layout.
+    fn gather_input(&mut self, op: OpId, slot: usize, t: usize) -> Result<ShardBuf, ExecError> {
+        let (g, plan, tasks) = (self.g, self.plan, self.tasks);
+        let (devices, d) = (self.devices, self.d);
+        let shape = &g.tensors[t].shape;
+        let req = &tasks[op].required_ins[slot];
+        let home_seq = &plan.tiles[t];
+        if req == home_seq {
+            // The op's aligned form wants the tensor exactly as it lives:
+            // nothing moves anywhere (every device's required region is
+            // its resident region), so skip the decompositions entirely.
+            // Invariant: home shards exist before any consumer.
+            return Ok(self.home[t].as_ref().expect("home shard materialized").clone());
+        }
+        // Send every peer the pieces it will fetch from this device —
+        // the peer runs the identical decomposition, so the piece lists
+        // agree without negotiation.
+        for e in 0..devices {
+            if e == d {
+                continue;
+            }
+            let want_e = resident_region(shape, req, e);
+            let mut pieces = Vec::new();
+            for p in gather_sources(shape, home_seq, devices, e, &want_e) {
+                if p.src == d {
+                    // Invariant: home shards exist before any consumer
+                    // (streams are topologically ordered).
+                    let buf = self.home[t].as_ref().expect("home shard materialized");
+                    let data = buf.extract(&p.region);
+                    pieces.push((p.region, data));
+                }
+            }
+            if !pieces.is_empty() {
+                self.send(e, op, slot as u8, pieces);
+            }
+        }
+        // Fetch this device's own pieces: local copies are free, remote
+        // ones arrive tagged (op, slot, src).
+        let want = resident_region(shape, req, d);
+        let pieces = gather_sources(shape, home_seq, devices, d, &want);
+        let mut buf = ShardBuf::zeros(want);
+        let mut expected: BTreeSet<usize> = BTreeSet::new();
+        for p in &pieces {
+            if p.src == d {
+                let homebuf = self.home[t].as_ref().expect("home shard materialized");
+                let data = homebuf.extract(&p.region);
+                buf.paste(&p.region, &data);
+            } else {
+                expected.insert(p.src);
+            }
+        }
+        for src in expected {
+            for (cell, data) in self.recv_from(op, slot as u8, src)? {
+                buf.paste(&cell, &data);
+            }
+        }
+        Ok(buf)
+    }
+
+    /// The devices holding *distinct* partials of the piece owned by
+    /// `src`: `src` with every combination of bits at the reduce cuts.
+    fn contributors(src: usize, rbits: &[usize]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(1 << rbits.len());
+        for combo in 0..(1usize << rbits.len()) {
+            let mut c = src;
+            for (bi, &bit) in rbits.iter().enumerate() {
+                c = (c & !(1usize << bit)) | (((combo >> bi) & 1) << bit);
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// §5.2 phase 3: move the produced shard (partials at reduce cuts)
+    /// into the tensor's home layout, summing contributor pieces in f64.
+    fn scatter_output(&mut self, op: OpId, out_buf: ShardBuf) -> Result<(), ExecError> {
+        let (g, plan, tasks) = (self.g, self.plan, self.tasks);
+        let (devices, d, k) = (self.devices, self.d, self.k);
+        let z = g.ops[op].outputs[0];
+        let zshape = &g.tensors[z].shape;
+        let produced = &tasks[op].produced;
+        let rbits: Vec<usize> = tasks[op].reduce_cuts.iter().map(|&j| k - 1 - j).collect();
+        let home_seq = &plan.tiles[z];
+
+        // Send phase: ship every piece of every peer's home region this
+        // device contributes a partial (or the value) to.
+        for e in 0..devices {
+            if e == d {
+                continue;
+            }
+            let want_e = resident_region(zshape, home_seq, e);
+            let mut pieces = Vec::new();
+            for p in gather_sources(zshape, produced, devices, e, &want_e) {
+                if Self::contributors(p.src, &rbits).contains(&d) {
+                    pieces.push((p.region.clone(), out_buf.extract(&p.region)));
+                }
+            }
+            if !pieces.is_empty() {
+                self.send(e, op, OUT_SLOT, pieces);
+            }
+        }
+
+        // Receive phase: accumulate each piece over its contributor set,
+        // in deterministic (piece, combo) order so replicas stay
+        // bit-identical across devices.
+        let want = resident_region(zshape, home_seq, d);
+        let mut acc = vec![0.0f64; want.elements() as usize];
+        let pieces = gather_sources(zshape, produced, devices, d, &want);
+        let mut expected: BTreeSet<usize> = BTreeSet::new();
+        for p in &pieces {
+            for c in Self::contributors(p.src, &rbits) {
+                if c != d {
+                    expected.insert(c);
+                }
+            }
+        }
+        let mut incoming: BTreeMap<usize, (Pieces, usize)> = BTreeMap::new();
+        for src in expected {
+            incoming.insert(src, (self.recv_from(op, OUT_SLOT, src)?, 0));
+        }
+        for p in &pieces {
+            for c in Self::contributors(p.src, &rbits) {
+                if c == d {
+                    for_each_row(&want, &out_buf.region, &p.region, |db, sb, len| {
+                        for i in 0..len {
+                            acc[db + i] += out_buf.data[sb + i] as f64;
+                        }
+                    });
+                } else {
+                    let entry = incoming
+                        .get_mut(&c)
+                        .expect("contributor enumerated in the expected set");
+                    // Invariant: sender and receiver enumerate the same
+                    // gather decomposition in the same order.
+                    let (cell, data) = &entry.0[entry.1];
+                    assert_eq!(cell, &p.region, "piece stream misaligned with sender");
+                    for_each_row(&want, cell, cell, |db, sb, len| {
+                        for i in 0..len {
+                            acc[db + i] += data[sb + i] as f64;
+                        }
+                    });
+                    entry.1 += 1;
+                }
+            }
+        }
+        for (src, (list, cursor)) in &incoming {
+            // Invariant: the sender shipped exactly the pieces we summed.
+            assert_eq!(*cursor, list.len(), "unconsumed pieces from device {src}");
+        }
+        let data: Vec<f32> = acc.into_iter().map(|v| v as f32).collect();
+        self.home[z] = Some(ShardBuf { region: want, data });
+        Ok(())
+    }
+
+    fn compute(&mut self, op: OpId) -> Result<(), ExecError> {
+        let g = self.g;
+        let n_ins = g.ops[op].inputs.len();
+        let mut local_ins = Vec::with_capacity(n_ins);
+        for slot in 0..n_ins {
+            let t = g.ops[op].inputs[slot];
+            local_ins.push(self.gather_input(op, slot, t)?);
+        }
+        let zshape = &g.tensors[g.ops[op].outputs[0]].shape;
+        let out_region = resident_region(zshape, &self.tasks[op].produced, self.d);
+        let views: Vec<View<'_>> = local_ins
+            .iter()
+            .map(|b| View { data: &b.data, shape: &b.region.shape, offset: &b.region.offset })
+            .collect();
+        let data = catch_unwind(AssertUnwindSafe(|| {
+            apply_op(g, &g.ops[op], &views, &out_region.shape)
+        }))
+        .map_err(|_| ExecError::Worker {
+            device: self.d,
+            reason: format!("kernel for op `{}` panicked", g.ops[op].name),
+        })?;
+        self.scatter_output(op, ShardBuf { region: out_region, data })
+    }
+}
+
+/// Execute `program` (the lowering of `(g, plan)`) on `2^k` worker
+/// threads with real `f32` shard buffers.
+///
+/// `init` is the same producerless-tensor value vector the serial
+/// interpreter takes ([`crate::graph::seed_values`] shapes it); every
+/// device slices its home shards from these arrays. On success the report
+/// carries every tensor reassembled (with the replica bit-equality check)
+/// plus the two byte meters.
+///
+/// # Examples
+///
+/// ```
+/// use soybean::graph::{eval_serial, max_rel_err, seed_values};
+/// use soybean::lower::lower;
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::planner::k_cut;
+/// use soybean::sim::SimConfig;
+/// use soybean::spmd::execute;
+///
+/// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+/// let plan = k_cut(&g, 1);
+/// let program = lower(&g, &plan, &SimConfig::default());
+/// let init = seed_values(&g, 7);
+/// let report = execute(&g, &plan, &program, &init).unwrap();
+/// // Observed collective traffic is exactly the plan's Theorem-1 total.
+/// assert_eq!(report.instr_bytes, plan.total_cost());
+/// // And the numbers match the serial interpreter.
+/// let serial = eval_serial(&g, &init).unwrap();
+/// for t in &g.tensors {
+///     assert!(max_rel_err(&report.tensors[t.id], &serial[t.id]) <= 1e-5);
+/// }
+/// ```
+pub fn execute(
+    g: &Graph,
+    plan: &Plan,
+    program: &LoweredProgram,
+    init: &[Option<Vec<f32>>],
+) -> Result<ExecReport, ExecError> {
+    let tasks = try_build_shard_tasks(g, plan)?;
+    program.validate()?;
+    let devices = plan.devices();
+    if program.devices != devices {
+        return Err(ExecError::Plan(PlanError::MalformedProgram {
+            device: 0,
+            pc: 0,
+            reason: format!("program spans {} devices, plan {}", program.devices, devices),
+        }));
+    }
+    for (d, prog) in program.programs.iter().enumerate() {
+        for (pc, instr) in prog.instrs.iter().enumerate() {
+            if let Instr::Compute { op, .. } = instr {
+                if *op >= g.ops.len() {
+                    return Err(ExecError::Plan(PlanError::MalformedProgram {
+                        device: d,
+                        pc,
+                        reason: format!("compute of unknown op {op}"),
+                    }));
+                }
+            }
+        }
+    }
+    if program.total_bytes() != plan.total_cost() {
+        return Err(ExecError::MeterMismatch {
+            metered: program.total_bytes(),
+            plan: plan.total_cost(),
+        });
+    }
+    // Slice every device's home shard of every producerless tensor
+    // (validate_init: the same input contract as the serial interpreter).
+    let produced = crate::graph::validate_init(g, init)?;
+    let mut homes: Vec<Vec<Option<ShardBuf>>> = vec![vec![None; g.tensors.len()]; devices];
+    for t in &g.tensors {
+        if produced[t.id] {
+            continue;
+        }
+        // Invariant: validate_init checked presence and length.
+        let v = init[t.id].as_ref().expect("validated init value");
+        for (d, home) in homes.iter_mut().enumerate() {
+            let region = resident_region(&t.shape, &plan.tiles[t.id], d);
+            home[t.id] = Some(ShardBuf::from_full(v, &t.shape, region));
+        }
+    }
+
+    // One channel per device; every worker holds a sender to every peer.
+    // The main thread keeps no sender alive, so a fully-drained exchange
+    // can observe disconnection instead of blocking forever.
+    let (txs, rxs): (Vec<Sender<Msg>>, Vec<Receiver<Msg>>) = (0..devices).map(|_| channel()).unzip();
+    let sender_sets: Vec<Vec<Sender<Msg>>> = (0..devices).map(|_| txs.clone()).collect();
+    drop(txs);
+    let results: Vec<Result<DeviceOutcome, ExecError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = rxs
+            .into_iter()
+            .zip(sender_sets)
+            .enumerate()
+            .map(|(d, (rx, senders))| {
+                let worker = Worker {
+                    d,
+                    k: plan.k,
+                    devices,
+                    g,
+                    plan,
+                    tasks: &tasks,
+                    program,
+                    senders: senders.clone(),
+                    rx,
+                    inbox: BTreeMap::new(),
+                    home: std::mem::take(&mut homes[d]),
+                    instr_bytes: 0,
+                    payload_bytes: 0,
+                    op_payload: vec![0; g.ops.len()],
+                };
+                s.spawn(move || {
+                    let out = match catch_unwind(AssertUnwindSafe(|| worker.run())) {
+                        Ok(r) => r,
+                        Err(_) => Err(ExecError::Worker {
+                            device: d,
+                            reason: "worker thread panicked".into(),
+                        }),
+                    };
+                    if out.is_err() {
+                        // Poison every peer so nobody blocks on a message
+                        // this worker will never send.
+                        for tx in &senders {
+                            let _ = tx.send(Msg {
+                                from: d,
+                                op: 0,
+                                slot: POISON_SLOT,
+                                pieces: Vec::new(),
+                            });
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(d, h)| {
+                h.join().unwrap_or_else(|_| {
+                    Err(ExecError::Worker { device: d, reason: "worker thread panicked".into() })
+                })
+            })
+            .collect()
+    });
+    // Report the root cause, preferring a real failure over the poison
+    // aborts it cascaded into.
+    let mut outcomes = Vec::with_capacity(devices);
+    let mut root: Option<ExecError> = None;
+    let mut cascade: Option<ExecError> = None;
+    for r in results {
+        match r {
+            Ok(o) => outcomes.push(o),
+            Err(e) => {
+                let is_cascade =
+                    matches!(&e, ExecError::Worker { reason, .. } if reason == POISON_REASON);
+                let slot = if is_cascade { &mut cascade } else { &mut root };
+                slot.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = root.or(cascade) {
+        return Err(e);
+    }
+
+    // Reassemble every tensor, checking replica shards agree bitwise.
+    let mut tensors = Vec::with_capacity(g.tensors.len());
+    for t in &g.tensors {
+        let n: usize = t.shape.iter().product();
+        let mut full = vec![0.0f32; n];
+        let mut seen = vec![false; n];
+        let whole = Region::full(&t.shape);
+        let mut diverged = false;
+        for (d, o) in outcomes.iter().enumerate() {
+            let buf = o.home[t.id].as_ref().ok_or_else(|| ExecError::Worker {
+                device: d,
+                reason: format!("tensor {} never materialized", t.name),
+            })?;
+            for_each_row(&whole, &buf.region, &buf.region, |db, sb, len| {
+                for i in 0..len {
+                    let v = buf.data[sb + i];
+                    if seen[db + i] && full[db + i].to_bits() != v.to_bits() {
+                        diverged = true;
+                    }
+                    full[db + i] = v;
+                    seen[db + i] = true;
+                }
+            });
+        }
+        if diverged {
+            return Err(ExecError::ReplicaDivergence { tensor: t.name.clone() });
+        }
+        // Invariant: split shards tile the tensor exactly (Theorem 2).
+        debug_assert!(seen.iter().all(|&s| s), "uncovered elements of {}", t.name);
+        tensors.push(full);
+    }
+
+    Ok(ExecReport {
+        devices,
+        tensors,
+        instr_bytes: outcomes.iter().map(|o| o.instr_bytes).sum(),
+        payload_bytes: outcomes.iter().map(|o| o.payload_bytes).sum(),
+        op_payload_bytes: (0..g.ops.len())
+            .map(|i| outcomes.iter().map(|o| o.op_payload[i]).sum())
+            .collect(),
+    })
+}

@@ -1,0 +1,195 @@
+//! Threaded SPMD execution of lowered programs on real tensors — the
+//! correctness half of the one-theory contract.
+//!
+//! Everything upstream of this module reasons about the parallel plan in
+//! *bytes*: Eq. (2) prices it, the lowering compiles it, the simulators
+//! schedule it, and all three agree bit for bit. What none of them proved
+//! is the paper's actual claim — that the rewritten parallel dataflow
+//! graph **computes the same function** as the serial one. This module
+//! closes that loop:
+//!
+//! - [`execute`] interprets a [`crate::lower::LoweredProgram`] on one
+//!   worker thread per device, with real `f32` shard buffers, numeric
+//!   kernels for the full op vocabulary ([`crate::graph::apply_op`]), and
+//!   the collective exchanges realized over [`std::sync::mpsc`] channels
+//!   (the exchange design is documented on [`execute`]'s module);
+//! - the serial reference lives in [`crate::graph::eval_serial`]; the
+//!   differential harness (`rust/tests/differential.rs`,
+//!   `plan_inspector --execute`) runs both and compares every tensor
+//!   elementwise via [`worst_divergence`].
+//!
+//! The narrative chapter is [`crate::book::execution`]
+//! (docs/execution.md), including the tolerance model and the two byte
+//! meters.
+
+mod buf;
+mod exec;
+
+pub use buf::{for_each_row, ShardBuf};
+pub use exec::{execute, ExecError, ExecReport};
+
+use crate::graph::{max_rel_err, Graph};
+
+/// Compare every tensor of an execution against the serial reference:
+/// returns the worst relative deviation and the name of the tensor it
+/// occurred on (`(0.0, "")` for an empty graph).
+pub fn worst_divergence(g: &Graph, report: &ExecReport, serial: &[Vec<f32>]) -> (f64, String) {
+    let mut worst = (0.0f64, String::new());
+    for t in &g.tensors {
+        let err = max_rel_err(&report.tensors[t.id], &serial[t.id]);
+        if err > worst.0 {
+            worst = (err, t.name.clone());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{eval_serial, seed_values, GraphBuilder};
+    use crate::lower::{lower, try_lower};
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::{baselines, eval_plan, k_cut, Plan, PlanError, Planner, Strategy};
+    use crate::sim::SimConfig;
+    use crate::tiling::Tile;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn serial_plan_executes_byte_free() {
+        // k = 0: one device, no collectives, exact agreement (the
+        // executor degenerates into the interpreter).
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 6], bias: true });
+        let plan = Planner::plan(&g, 0, Strategy::Soybean);
+        let program = lower(&g, &plan, &cfg());
+        let init = seed_values(&g, 1);
+        let r = execute(&g, &plan, &program, &init).unwrap();
+        assert_eq!(r.instr_bytes, 0);
+        assert_eq!(r.payload_bytes, 0);
+        let serial = eval_serial(&g, &init).unwrap();
+        let (worst, t) = worst_divergence(&g, &r, &serial);
+        assert_eq!(worst, 0.0, "serial-plan execution diverged on {t}");
+    }
+
+    #[test]
+    fn data_parallel_mlp_matches_serial() {
+        // DP baselines are priced with the forced classic gradient
+        // aggregation, so the matching forced lowering keeps the meter
+        // identity; the executor's data path is form-agnostic.
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![6, 10, 4], bias: true });
+        let plan = baselines::data_parallel(&g, 2);
+        let program =
+            crate::lower::try_lower_forced(&g, &plan, &cfg(), &crate::planner::classic_dp_form).unwrap();
+        let init = seed_values(&g, 2);
+        let r = execute(&g, &plan, &program, &init).unwrap();
+        assert_eq!(r.instr_bytes, plan.total_cost());
+        let serial = eval_serial(&g, &init).unwrap();
+        let (worst, t) = worst_divergence(&g, &r, &serial);
+        assert!(worst <= 1e-5, "DP mlp diverged on {t}: {worst:e}");
+    }
+
+    #[test]
+    fn soybean_plan_matches_serial_at_4_devices() {
+        let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 12, 8], bias: false });
+        let plan = k_cut(&g, 2);
+        let program = lower(&g, &plan, &cfg());
+        let init = seed_values(&g, 3);
+        let r = execute(&g, &plan, &program, &init).unwrap();
+        assert_eq!(r.instr_bytes, plan.total_cost());
+        let serial = eval_serial(&g, &init).unwrap();
+        let (worst, t) = worst_divergence(&g, &r, &serial);
+        assert!(worst <= 1e-5, "soybean mlp diverged on {t}: {worst:e}");
+    }
+
+    #[test]
+    fn malformed_plan_reports_structured_error() {
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
+        let plan = k_cut(&g, 1);
+        let program = lower(&g, &plan, &cfg());
+        let init = seed_values(&g, 1);
+        // Wrong tensor count.
+        let bad = Plan { k: 1, tiles: vec![vec![Tile::Rep]], cut_costs: vec![0] };
+        match execute(&g, &bad, &program, &init) {
+            Err(ExecError::Plan(PlanError::MalformedPlan { .. })) => {}
+            other => panic!("expected MalformedPlan, got {other:?}"),
+        }
+        // A split of an odd dimension.
+        let mut tiles = plan.tiles.clone();
+        let odd = g.tensors.iter().position(|t| t.rank() == 0).unwrap();
+        tiles[odd] = vec![Tile::Split(0)];
+        let bad = Plan { k: 1, tiles, cut_costs: plan.cut_costs.clone() };
+        match execute(&g, &bad, &program, &init) {
+            Err(ExecError::Plan(PlanError::UnsplittableTensor { cut, .. })) => assert_eq!(cut, 0),
+            other => panic!("expected UnsplittableTensor, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn meter_mismatch_rejected() {
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        let plan = k_cut(&g, 1);
+        let program = lower(&g, &plan, &cfg());
+        let init = seed_values(&g, 1);
+        // Execute against a plan whose Theorem-1 total disagrees with the
+        // program: the executor refuses rather than mis-metering.
+        let mut wrong = plan.clone();
+        wrong.cut_costs[0] += 4;
+        match execute(&g, &wrong, &program, &init) {
+            Err(ExecError::MeterMismatch { metered, plan: p }) => {
+                assert_eq!(metered + 4, p);
+            }
+            other => panic!("expected MeterMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_input_reported() {
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
+        let plan = k_cut(&g, 1);
+        let program = lower(&g, &plan, &cfg());
+        let mut init = seed_values(&g, 1);
+        init[0] = None;
+        assert!(matches!(
+            execute(&g, &plan, &program, &init),
+            Err(ExecError::Input(crate::graph::InterpError::MissingInput { .. }))
+        ));
+    }
+
+    /// Pinned regression: the `AllToAll` `Split(a) -> Split(b)` data path.
+    /// A hand-written plan homes an activation row-split while its
+    /// consumer's aligned form needs it column-split, forcing the
+    /// quarter-swap exchange; the numbers must survive the round trip.
+    #[test]
+    fn all_to_all_retiling_is_numerically_exact() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 4]);
+        let h = b.relu("r", x);
+        b.relu("r2", h);
+        let g = b.finish();
+        // x homes row-split but h homes column-split: the elementwise op
+        // computes in its axis-0 form and re-tiles its output
+        // Split(0) -> Split(1) — the quarter-swap AllToAll — and the
+        // second relu re-tiles back on its input side.
+        let mut tiles = vec![vec![Tile::Rep]; g.tensors.len()];
+        tiles[x] = vec![Tile::Split(0)];
+        tiles[h] = vec![Tile::Split(1)];
+        let plan = eval_plan(&g, &tiles);
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
+        assert!(
+            program
+                .transfers
+                .iter()
+                .any(|m| m.kind == crate::lower::CollectiveKind::AllToAll),
+            "plan did not exercise the AllToAll path: {:?}",
+            program.transfers
+        );
+        let init = seed_values(&g, 9);
+        let r = execute(&g, &plan, &program, &init).unwrap();
+        let serial = eval_serial(&g, &init).unwrap();
+        let (worst, t) = worst_divergence(&g, &r, &serial);
+        assert!(worst <= 1e-5, "AllToAll path diverged on {t}: {worst:e}");
+    }
+}

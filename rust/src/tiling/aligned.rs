@@ -221,11 +221,16 @@ fn semantics(g: &Graph, op: &Op) -> Sem {
             allow_replicated: false,
         },
         // dgamma: a column reduction over (dy, x) — batch splits produce
-        // partial sums (`red`), feature splits are free, like
-        // `ReduceSumRows` with two operands.
+        // partial sums (`red`), feature splits slice dy and the output.
+        // `x` must stay whole-row under the feature split (`None` ⇒ Rep):
+        // the kernel recomputes x̂'s per-row mean/σ from x, which a column
+        // slice cannot provide. The original table required `x` split like
+        // `dy`; the differential harness (ISSUE-5) caught the executor
+        // silently computing statistics over half-rows under
+        // model-parallel plans — see `spmd`'s pinned regression test.
         OpKind::LayerNormGammaGrad => Sem::Grid {
             splittable: vec![true, true],
-            in_maps: vec![ident(2), ident(2)],
+            in_maps: vec![ident(2), vec![Some(0), None]],
             out_map: vec![None, Some(0)],
             allow_replicated: false,
         },
@@ -756,8 +761,11 @@ mod tests {
         // Batch-split operands -> partial sums -> replicated vector: 2·|g|.
         let bv: u64 = 32 * 4;
         assert_eq!(op_cost(&g, &op, &[R, R], REP), 2 * bv);
-        // Feature-split operands -> split output: free.
-        assert_eq!(op_cost(&g, &op, &[C, C], Tile::Split(0)), 0);
+        // Feature-split operands -> split output: dy stays sliced for
+        // free, but x must be gathered whole-row (the kernel recomputes
+        // per-row statistics), costing S_x — the ISSUE-5 semantic fix.
+        let bx: u64 = 64 * 32 * 4;
+        assert_eq!(op_cost(&g, &op, &[C, C], Tile::Split(0)), bx);
     }
 
     #[test]

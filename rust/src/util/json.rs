@@ -190,12 +190,34 @@ impl Parser {
                     Some('r') => out.push('\r'),
                     Some('t') => out.push('\t'),
                     Some('u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or("eof in \\u escape")?;
-                            code = code * 16 + c.to_digit(16).ok_or("bad hex in \\u")?;
-                        }
-                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        // RFC 8259 §7: code points outside the BMP are
+                        // encoded as a UTF-16 surrogate pair of two \u
+                        // escapes; a surrogate half on its own is not a
+                        // character and must be rejected, not replaced.
+                        let hi = self.hex4()?;
+                        let code = match hi {
+                            0xD800..=0xDBFF => {
+                                if self.bump() != Some('\\') || self.bump() != Some('u') {
+                                    return Err(format!(
+                                        "lone high surrogate \\u{hi:04X} (expected a \\uDC00-\\uDFFF continuation)"
+                                    ));
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err(format!(
+                                        "invalid low surrogate \\u{lo:04X} after \\u{hi:04X}"
+                                    ));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            }
+                            0xDC00..=0xDFFF => {
+                                return Err(format!("lone low surrogate \\u{hi:04X}"))
+                            }
+                            c => c,
+                        };
+                        // Invariant: surrogate ranges were handled above, so
+                        // the code point is always a valid char.
+                        out.push(char::from_u32(code).expect("non-surrogate code point"));
                     }
                     other => return Err(format!("bad escape {other:?}")),
                 },
@@ -203,6 +225,16 @@ impl Parser {
                 None => return Err("eof in string".into()),
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or("eof in \\u escape")?;
+            code = code * 16 + c.to_digit(16).ok_or("bad hex in \\u")?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -270,5 +302,33 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // 😀 is U+1F600 = \uD83D\uDE00 — astral-plane manifest strings
+        // (model names, emoji labels) must round-trip, not mis-parse.
+        assert_eq!(parse("\"\\uD83D\\uDE00\"").unwrap(), Json::Str("😀".into()));
+        // Mixed with BMP text on both sides.
+        assert_eq!(
+            parse("\"a\\uD83D\\uDE00z\"").unwrap(),
+            Json::Str("a😀z".into())
+        );
+        // 𝄞 (U+1D11E) exercises a different pair.
+        assert_eq!(parse("\"\\uD834\\uDD1E\"").unwrap(), Json::Str("𝄞".into()));
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        // A high surrogate with no continuation.
+        assert!(parse("\"\\uD83D\"").unwrap_err().contains("lone high surrogate"));
+        // A high surrogate followed by a non-escape character.
+        assert!(parse("\"\\uD83Dx\"").is_err());
+        // A high surrogate followed by a non-surrogate escape.
+        assert!(parse("\"\\uD83D\\u0041\"")
+            .unwrap_err()
+            .contains("invalid low surrogate"));
+        // A low surrogate on its own.
+        assert!(parse("\"\\uDE00\"").unwrap_err().contains("lone low surrogate"));
     }
 }

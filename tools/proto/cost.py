@@ -91,7 +91,9 @@ def semantics(g, op):
         maps = [ident_map(2), ident_map(2)] + ([[NONE, ("d",0)]] if len(ins) == 3 else [])
         return ("grid", [True, False], maps, ident_map(2), False)
     if k0 == "LayerNormGammaGrad":
-        return ("grid", [True, True], [ident_map(2), ident_map(2)], [NONE, ("d",0)], False)
+        # ISSUE-5 fix: x must stay whole-row under the feature split (the
+        # kernel recomputes per-row statistics) — mirrors tiling/aligned.rs.
+        return ("grid", [True, True], [ident_map(2), [("d",0), NONE]], [NONE, ("d",0)], False)
     if k0 == "Softmax":
         rank = len(g.shape(ins[0]))
         return ("grid", [True]*(rank-1) + [False], [ident_map(rank)], ident_map(rank), False)
