@@ -11,6 +11,13 @@
 //! Results go to `BENCH_exec.json` (the `BENCH_planner.json` schema) for
 //! the CI perf-trajectory diff.
 //!
+//! Since ISSUE-6 this bench is also the **"fault hooks are free"** gate:
+//! `execute` runs with fault injection disabled (`ExecOptions::default()`
+//! — no fault plan, checksums always on), so CI's diff of this JSON
+//! against the pre-fault-injection `ci/baselines/BENCH_exec.json` pins
+//! that the injection hooks and watchdog plumbing cost the fault-free
+//! path nothing beyond the committed noise threshold.
+//!
 //! Run with `cargo bench --bench exec_micro`.
 
 use std::time::Duration;

@@ -18,6 +18,12 @@
 //! topology and writes `plan_trace_<model>.json` — load it in
 //! `chrome://tracing` or Perfetto to see the timeline.
 //!
+//! With `--inject <spec>` (`kind[@device[:op]]`, kind one of
+//! `kill|panic|drop|delay|corrupt`), a named fault scenario is injected
+//! into a 4-device MLP execution and the structured error chain plus the
+//! recovery outcome are printed — `kill` demonstrates the elastic re-plan
+//! onto the surviving devices (docs/execution.md §Fault tolerance).
+//!
 //! With `--topology <flat|two-tier|fat-tree>`, vgg16 and the transformer
 //! encoder are planned **both ways** for 8 devices on the named preset —
 //! the byte-objective flat plan and the topology-aware plan
@@ -39,8 +45,74 @@ use soybean::models::{
 };
 use soybean::planner::{classify, try_plan_topology_aware, Planner, Strategy};
 use soybean::sim::{chrome_trace_json, run_program, simulate, SimConfig, Topology};
-use soybean::spmd::{execute, worst_divergence};
+use soybean::spmd::{
+    execute, execute_with_recovery, worst_divergence, FaultPlan, RecoverOptions, RecoveryOutcome,
+};
 use soybean::tiling::describe_seq;
+
+/// `--inject <spec>`: reproduce a named fault scenario on the 4-device
+/// MLP plan and print the structured error chain plus the recovery
+/// outcome (docs/execution.md §Fault tolerance).
+///
+/// Spec grammar: `kind[@device[:op]]` with kind one of
+/// `kill | panic | drop | delay | corrupt`; device defaults to 1, op to 0.
+/// E.g. `--inject kill@1:0` (permanent device loss at op 0),
+/// `--inject drop@2:1` (swallow device 2's first exchange of op 1).
+fn inject_scenario(spec: &str) {
+    let (kind, site) = spec.split_once('@').map_or((spec, None), |(k, s)| (k, Some(s)));
+    let (device, op) = match site {
+        None => (1usize, 0usize),
+        Some(s) => match s.split_once(':') {
+            Some((d, o)) => (
+                d.parse().expect("--inject device must be a number"),
+                o.parse().expect("--inject op must be a number"),
+            ),
+            None => (s.parse().expect("--inject device must be a number"), 0),
+        },
+    };
+    let faults = match kind {
+        "kill" => FaultPlan::kill(device, op),
+        "panic" => FaultPlan::panic_at(device, op),
+        "drop" => FaultPlan::drop_message(device, op),
+        "delay" => FaultPlan::delay_message(device, op, 5),
+        "corrupt" => FaultPlan::corrupt_payload(device, op),
+        other => panic!("unknown fault kind `{other}` (kill|panic|drop|delay|corrupt)"),
+    };
+
+    let g = mlp(&MlpConfig::fig8(16, 16));
+    let plan = Planner::plan(&g, 2, Strategy::Soybean);
+    let program = lower(&g, &plan, &SimConfig::default());
+    let init = seed_values(&g, 42);
+    let mut opts = RecoverOptions::default();
+    opts.exec.deadline = std::time::Duration::from_secs(2);
+    opts.exec.faults = Some(faults);
+    opts.backoff = std::time::Duration::from_millis(5);
+
+    println!("\n=== fault scenario: {} (mlp, 4 devices) ===", opts.exec.faults.as_ref().unwrap().describe());
+    match execute_with_recovery(&g, &plan, &program, &init, &opts) {
+        Ok(r) => {
+            for (i, e) in r.failures.iter().enumerate() {
+                println!("  attempt {i}: {e}");
+            }
+            match &r.outcome {
+                RecoveryOutcome::Clean => println!("  outcome: clean (fault tolerated in-flight)"),
+                RecoveryOutcome::Retried { retries } => {
+                    println!("  outcome: recovered after {retries} retr{}", if *retries == 1 { "y" } else { "ies" })
+                }
+                RecoveryOutcome::Replanned { lost_device, devices } => println!(
+                    "  outcome: device {lost_device} lost permanently; \
+                     re-planned onto {devices} survivors and resumed from checkpoint"
+                ),
+            }
+            let serial = eval_serial(&g, &init).expect("serial evaluation");
+            let (worst, tensor) = worst_divergence(&g, &r.report, &serial);
+            let status = if worst <= 1e-5 { "OK" } else { "DIVERGED" };
+            println!("  differential: max rel err {worst:.2e} on `{tensor}` [{status}]");
+            assert!(worst <= 1e-5, "recovered run diverged from serial");
+        }
+        Err(e) => println!("  unrecovered: {e}"),
+    }
+}
 
 /// `--execute`: run the 8-device SOYBEAN plan on the threaded executor
 /// and print the differential report against the serial interpreter.
@@ -123,6 +195,15 @@ fn main() {
         .iter()
         .position(|a| a == "--topology")
         .map(|i| args.get(i + 1).expect("--topology needs a preset name").as_str());
+    let inject_spec = args
+        .iter()
+        .position(|a| a == "--inject")
+        .map(|i| args.get(i + 1).expect("--inject needs a fault spec (e.g. kill@1:0)").as_str());
+    // `--inject` is a focused reproduction tool: run just the scenario.
+    if let Some(spec) = inject_spec {
+        inject_scenario(spec);
+        return;
+    }
     let placement = Placement::p2_8xlarge();
 
     // 1. The §2.2 MLP: hybrid wins.

@@ -4,6 +4,7 @@
 //! small MLP's loss visibly falls within a few hundred SGD steps, hard
 //! enough that it cannot be solved by the bias alone.
 
+use crate::planner::PlanError;
 use crate::runtime::HostTensor;
 use crate::util::Rng;
 
@@ -20,10 +21,32 @@ pub struct SyntheticData {
 
 impl SyntheticData {
     /// New stream with `classes` cluster means drawn from `seed`.
+    /// Panics on a degenerate configuration; [`Self::try_new`] reports it
+    /// as a structured error instead.
     pub fn new(seed: u64, din: usize, classes: usize) -> Self {
+        Self::try_new(seed, din, classes)
+            .unwrap_or_else(|e| panic!("synthetic data config rejected: {e}"))
+    }
+
+    /// [`Self::new`] with structured errors: a stream with zero classes
+    /// cannot draw labels (it used to panic inside the RNG on the first
+    /// batch) and zero input features make every cluster mean identical —
+    /// both are [`PlanError::MalformedConfig`], caught at construction
+    /// rather than mid-training.
+    pub fn try_new(seed: u64, din: usize, classes: usize) -> Result<Self, PlanError> {
+        if classes == 0 {
+            return Err(PlanError::MalformedConfig {
+                reason: "synthetic data needs at least one class".into(),
+            });
+        }
+        if din == 0 {
+            return Err(PlanError::MalformedConfig {
+                reason: "synthetic data needs at least one input feature".into(),
+            });
+        }
         let mut rng = Rng::new(seed);
         let means = (0..classes).map(|_| rng.normal_vec(din, 1.2)).collect();
-        SyntheticData { din, classes, means, rng }
+        Ok(SyntheticData { din, classes, means, rng })
     }
 
     /// Next batch: `x [batch, din]`, one-hot `y [batch, classes]`.
@@ -56,6 +79,19 @@ mod tests {
         let (xb, yb) = b.batch(16);
         assert_eq!(xa, xb);
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn degenerate_configs_are_structured_errors() {
+        match SyntheticData::try_new(1, 8, 0) {
+            Err(PlanError::MalformedConfig { reason }) => assert!(reason.contains("class")),
+            other => panic!("expected MalformedConfig, got {:?}", other.map(|_| ())),
+        }
+        match SyntheticData::try_new(1, 0, 4) {
+            Err(PlanError::MalformedConfig { reason }) => assert!(reason.contains("feature")),
+            other => panic!("expected MalformedConfig, got {:?}", other.map(|_| ())),
+        }
+        assert!(SyntheticData::try_new(1, 8, 4).is_ok());
     }
 
     #[test]

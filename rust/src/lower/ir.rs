@@ -268,6 +268,30 @@ impl LoweredProgram {
         Ok(())
     }
 
+    /// [`Self::validate`] plus the binding to a concrete [`Plan`]: the
+    /// program must span exactly the plan's `2^k` devices at the plan's
+    /// cut depth. The SPMD executor runs this at entry, and the elastic
+    /// re-planning path ([`crate::spmd::execute_with_recovery`]) re-runs
+    /// it after shrinking to the surviving device set, so a stale program
+    /// can never execute against a re-planned world.
+    pub fn validate_for(&self, plan: &crate::planner::Plan) -> Result<(), crate::planner::PlanError> {
+        self.validate()?;
+        if self.devices != plan.devices() || self.k != plan.k {
+            return Err(crate::planner::PlanError::MalformedProgram {
+                device: 0,
+                pc: 0,
+                reason: format!(
+                    "program spans {} devices (k={}), plan {} (k={})",
+                    self.devices,
+                    self.k,
+                    plan.devices(),
+                    plan.k
+                ),
+            });
+        }
+        Ok(())
+    }
+
     /// Human-readable dump of one device's stream (first `limit`
     /// instructions; `usize::MAX` for all).
     pub fn describe_device(&self, device: usize, limit: usize) -> String {

@@ -221,6 +221,37 @@ pub fn try_k_cut_weighted(
     Ok(Plan { k, tiles, cut_costs })
 }
 
+/// Elastic re-plan after permanent device loss: a fresh plan for the
+/// surviving `2^(k-1)` devices.
+///
+/// The paper's planner is parameterized by device count, so shrinking the
+/// world is just planning again at `k-1` (the FlexFlow observation: the
+/// strategy space is re-searchable when the device set changes). The
+/// fresh search can pick a *different* tiling than the old plan's inner
+/// cuts — at half the devices the cost trade-offs shift. If the fresh
+/// search fails (it should not when the original plan exists, but the
+/// solver's state limits are graph-dependent), fall back to truncating
+/// the old plan's outermost cut: the inner `k-1` cuts of a valid k-cut
+/// plan are always realizable at full tensor extents, because a dimension
+/// that splits evenly at the *halved* granularity splits evenly at the
+/// full one. Re-priced via [`eval_plan`] so the result carries honest
+/// Theorem-1 costs, and re-validated either way.
+///
+/// Errors with [`PlanError::Infeasible`] when `old.k == 0` — a one-device
+/// world has no survivors to re-plan onto.
+pub fn replan_after_loss(g: &Graph, old: &Plan) -> Result<Plan, PlanError> {
+    if old.k == 0 {
+        return Err(PlanError::Infeasible);
+    }
+    if let Ok(plan) = try_k_cut(g, old.k - 1) {
+        return Ok(plan);
+    }
+    let tiles: Vec<TileSeq> = old.tiles.iter().map(|seq| seq[1..].to_vec()).collect();
+    let plan = eval_plan(g, &tiles);
+    validate_plan(g, &plan)?;
+    Ok(plan)
+}
+
 /// Re-price an arbitrary per-tensor `TileSeq` assignment cut by cut (used
 /// for the fixed baselines so all strategies share one cost model).
 pub fn eval_plan(g: &Graph, tiles: &[TileSeq]) -> Plan {

@@ -26,8 +26,8 @@ pub mod reference;
 pub mod topology;
 
 pub use kcut::{
-    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced, try_k_cut,
-    try_k_cut_weighted, validate_plan, Plan,
+    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced,
+    replan_after_loss, try_k_cut, try_k_cut_weighted, validate_plan, Plan,
 };
 pub use onecut::{one_cut, price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
 pub use topology::{

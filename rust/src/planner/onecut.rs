@@ -110,6 +110,13 @@ pub enum PlanError {
     /// A [`Topology`](crate::sim::Topology) with no tiers — there is no
     /// link to price any transfer against.
     EmptyTopology,
+    /// A runtime/coordinator configuration that cannot be acted on (zero
+    /// classes, zero dimensions, …) — reported by the constructors that
+    /// used to panic deep inside the RNG or shape arithmetic.
+    MalformedConfig {
+        /// What is wrong with the configuration.
+        reason: String,
+    },
 }
 
 impl fmt::Display for PlanError {
@@ -134,6 +141,9 @@ impl fmt::Display for PlanError {
                 write!(f, "malformed SPMD program on device {device} at [{pc}]: {reason}")
             }
             PlanError::EmptyTopology => write!(f, "topology has no tiers"),
+            PlanError::MalformedConfig { reason } => {
+                write!(f, "malformed configuration: {reason}")
+            }
         }
     }
 }

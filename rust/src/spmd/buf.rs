@@ -10,6 +10,8 @@
 
 use crate::exec::Region;
 
+use super::exec::ExecError;
+
 /// Row-major strides of a shape (last dimension contiguous).
 fn strides(shape: &[usize]) -> Vec<usize> {
     let mut s = vec![1usize; shape.len()];
@@ -107,6 +109,58 @@ impl ShardBuf {
             self.data[db..db + len].copy_from_slice(&payload[sb..sb + len]);
         });
     }
+
+    /// Check `cell` + `payload` against this buffer before touching it:
+    /// the rank must match, the cell must lie inside the buffer's region,
+    /// and the payload must hold exactly the cell's elements. Everything
+    /// that crosses a trust boundary (a piece received from a peer) goes
+    /// through here so malformed input is an [`ExecError::Shard`], not an
+    /// index panic.
+    fn check(&self, verb: &str, cell: &Region, payload_len: Option<usize>) -> Result<(), ExecError> {
+        if cell.shape.len() != self.region.shape.len() {
+            return Err(ExecError::Shard {
+                reason: format!(
+                    "{verb} of rank-{} cell into rank-{} buffer",
+                    cell.shape.len(),
+                    self.region.shape.len()
+                ),
+            });
+        }
+        if !self.region.contains(cell) {
+            return Err(ExecError::Shard {
+                reason: format!(
+                    "{verb} cell {:?}+{:?} outside buffer region {:?}+{:?}",
+                    cell.offset, cell.shape, self.region.offset, self.region.shape
+                ),
+            });
+        }
+        if let Some(len) = payload_len {
+            if len as u64 != cell.elements() {
+                return Err(ExecError::Shard {
+                    reason: format!(
+                        "{verb} payload of {len} elements for a cell of {}",
+                        cell.elements()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Checked [`Self::extract`]: malformed `cell` becomes
+    /// [`ExecError::Shard`] instead of a panic.
+    pub fn try_extract(&self, cell: &Region) -> Result<Vec<f32>, ExecError> {
+        self.check("extract", cell, None)?;
+        Ok(self.extract(cell))
+    }
+
+    /// Checked [`Self::paste`]: malformed `cell` or mis-sized `payload`
+    /// becomes [`ExecError::Shard`] instead of a panic.
+    pub fn try_paste(&mut self, cell: &Region, payload: &[f32]) -> Result<(), ExecError> {
+        self.check("paste", cell, Some(payload.len()))?;
+        self.paste(cell, payload);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +198,32 @@ mod tests {
         let b = ShardBuf::from_full(&[42.0], &[], region(&[], &[]));
         assert_eq!(b.data, vec![42.0]);
         assert_eq!(b.extract(&region(&[], &[])), vec![42.0]);
+    }
+
+    #[test]
+    fn try_paste_rejects_malformed_pieces() {
+        let mut b = ShardBuf::zeros(region(&[0, 0], &[4, 4]));
+        // Wrong rank.
+        let e = b.try_paste(&region(&[0], &[2]), &[0.0; 2]).unwrap_err();
+        assert!(matches!(e, ExecError::Shard { ref reason } if reason.contains("rank")));
+        // Out of bounds.
+        let e = b.try_paste(&region(&[3, 3], &[2, 2]), &[0.0; 4]).unwrap_err();
+        assert!(matches!(e, ExecError::Shard { ref reason } if reason.contains("outside")));
+        // Payload length mismatch.
+        let e = b.try_paste(&region(&[0, 0], &[2, 2]), &[0.0; 3]).unwrap_err();
+        assert!(matches!(e, ExecError::Shard { ref reason } if reason.contains("3 elements")));
+        // Well-formed paste still lands.
+        b.try_paste(&region(&[1, 1], &[1, 1]), &[9.0]).unwrap();
+        assert_eq!(b.data[5], 9.0);
+    }
+
+    #[test]
+    fn try_extract_rejects_out_of_bounds() {
+        let full: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let b = ShardBuf::from_full(&full, &[4, 4], region(&[0, 0], &[2, 4]));
+        let e = b.try_extract(&region(&[2, 0], &[1, 4])).unwrap_err();
+        assert!(matches!(e, ExecError::Shard { ref reason } if reason.contains("outside")));
+        assert_eq!(b.try_extract(&region(&[1, 0], &[1, 2])).unwrap(), vec![4.0, 5.0]);
     }
 
     #[test]

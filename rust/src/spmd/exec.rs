@@ -28,7 +28,10 @@
 //! messages a peer's earlier-or-equal op produced, so the aligned SPMD
 //! streams make the exchange deadlock-free by the same induction the
 //! event engine relies on; a worker that fails broadcasts a poison
-//! message so its peers error out instead of blocking. Because every
+//! message so its peers error out instead of blocking (except silent
+//! kills and timeouts — those are discovered by the per-wait-site
+//! watchdogs, see [`ExecOptions::deadline`] and `root_cause`'s
+//! attribution argument). Because every
 //! phase is deterministic — deterministic piece assignment, deterministic
 //! contributor order, `f64` accumulation rounded once — replicated shards
 //! are **bit-identical** across devices, which [`execute`] verifies while
@@ -45,14 +48,17 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use crate::exec::{gather_sources, resident_region, try_build_shard_tasks, Region, ShardTask};
 use crate::graph::{apply_op, Graph, InterpError, OpId, View};
 use crate::lower::{Instr, LoweredProgram};
 use crate::planner::{Plan, PlanError};
+use crate::util::checksum::Fnv64;
 
 use super::buf::{for_each_row, ShardBuf};
+use super::fault::{FaultKind, FaultPlan, InjectedPanic, KILLED_REASON};
 
 /// Slot tag for output scatter-reduce messages (inputs use their index).
 const OUT_SLOT: u8 = u8::MAX;
@@ -66,12 +72,52 @@ const POISON_REASON: &str = "peer worker aborted";
 type Pieces = Vec<(Region, Vec<f32>)>;
 
 /// One inter-device message: every piece one sender contributes to one
-/// exchange of one op.
+/// exchange of one op, with an FNV-1a digest of the payload so wire
+/// corruption surfaces as [`ExecError::Corrupt`] instead of silently
+/// wrong numbers.
 struct Msg {
     from: usize,
     op: OpId,
     slot: u8,
     pieces: Pieces,
+    sum: u64,
+}
+
+/// Payload digest of one message: piece count, per-piece length, and the
+/// element bit patterns (regions are derived deterministically on both
+/// sides, so only the data crosses the trust boundary).
+fn checksum_pieces(pieces: &Pieces) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(pieces.len() as u64);
+    for (_, data) in pieces {
+        h.write_u64(data.len() as u64);
+        for &x in data {
+            h.write_f32(x);
+        }
+    }
+    h.finish()
+}
+
+/// Knobs for one threaded execution ([`execute_with`]).
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Watchdog deadline per wait site: the longest a worker blocks for
+    /// any single expected exchange message before reporting
+    /// [`ExecError::Timeout`]. Every wait is supervised, so an execution
+    /// with a stalled or dead peer terminates within a small multiple of
+    /// this instead of deadlocking.
+    pub deadline: Duration,
+    /// Fault-injection plan; `None` (the default) makes every hook a
+    /// single branch — the [`execute`] fast path.
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        // Generous enough that no healthy exchange on a loaded CI runner
+        // ever trips it; chaos suites shrink it to keep trials fast.
+        ExecOptions { deadline: Duration::from_secs(60), faults: None }
+    }
 }
 
 /// Structured executor failure.
@@ -96,11 +142,51 @@ pub enum ExecError {
         /// Name of the diverging tensor.
         tensor: String,
     },
-    /// A worker thread failed (kernel panic, peer abort, closed channel).
+    /// A worker thread failed (kernel panic, peer abort, closed channel,
+    /// injected kill).
     Worker {
         /// Device whose worker failed first.
         device: usize,
         /// What happened.
+        reason: String,
+    },
+    /// A watchdog deadline expired: `device` gave up waiting for an
+    /// exchange message — the structured replacement for an eternal
+    /// `recv()` block, naming the stalled peer and instruction.
+    Timeout {
+        /// Device that gave up waiting.
+        device: usize,
+        /// Op whose exchange stalled (the instruction site).
+        op: OpId,
+        /// Input slot of the exchange (`u8::MAX` = the output scatter).
+        slot: u8,
+        /// Peer the message was expected from (the stalled device).
+        peer: usize,
+        /// How long the watchdog waited, in milliseconds.
+        waited_ms: u64,
+    },
+    /// A received payload failed its FNV-1a integrity check — bits
+    /// changed between the sender's digest and the receiver's.
+    Corrupt {
+        /// Device that detected the corruption (the receiver).
+        device: usize,
+        /// Op the corrupted exchange belonged to.
+        op: OpId,
+        /// Device the message came from.
+        from: usize,
+    },
+    /// A recovery checkpoint failed its checksum at restore time
+    /// ([`super::Checkpoint::verify`]).
+    CheckpointCorrupt {
+        /// Step the checkpoint claimed to capture.
+        step: u64,
+    },
+    /// A shard-buffer operation was handed a malformed region or payload
+    /// (wrong rank, out of the buffer's bounds, or a length mismatch) —
+    /// reported by [`super::ShardBuf::try_paste`] /
+    /// [`super::ShardBuf::try_extract`] instead of an index panic.
+    Shard {
+        /// What was malformed.
         reason: String,
     },
 }
@@ -119,6 +205,25 @@ impl fmt::Display for ExecError {
             ExecError::Worker { device, reason } => {
                 write!(f, "worker {device} failed: {reason}")
             }
+            ExecError::Timeout { device, op, slot, peer, waited_ms } => {
+                let phase = if *slot == OUT_SLOT {
+                    "output scatter".to_string()
+                } else {
+                    format!("input slot {slot}")
+                };
+                write!(
+                    f,
+                    "device {device} timed out after {waited_ms} ms waiting on device {peer} \
+                     for op {op} ({phase})"
+                )
+            }
+            ExecError::Corrupt { device, op, from } => {
+                write!(f, "device {device} received a corrupt payload from device {from} for op {op}")
+            }
+            ExecError::CheckpointCorrupt { step } => {
+                write!(f, "checkpoint of step {step} failed its checksum at restore")
+            }
+            ExecError::Shard { reason } => write!(f, "malformed shard operation: {reason}"),
         }
     }
 }
@@ -180,6 +285,10 @@ struct Worker<'a> {
     instr_bytes: u64,
     payload_bytes: u64,
     op_payload: Vec<u64>,
+    /// Watchdog deadline per wait site ([`ExecOptions::deadline`]).
+    deadline: Duration,
+    /// Armed fault-injection sites; `None` on the production path.
+    faults: Option<&'a FaultPlan>,
 }
 
 impl<'a> Worker<'a> {
@@ -204,25 +313,49 @@ impl<'a> Worker<'a> {
         })
     }
 
-    /// Block until the `(op, slot)` message from `from` is available.
+    /// Block until the `(op, slot)` message from `from` is available —
+    /// under the watchdog: every wait site gets [`Self::deadline`] of
+    /// patience in total, after which the worker reports the stalled
+    /// peer+instruction as [`ExecError::Timeout`] instead of deadlocking.
     fn recv_from(
         &mut self,
         op: OpId,
         slot: u8,
         from: usize,
     ) -> Result<Pieces, ExecError> {
+        let expiry = Instant::now() + self.deadline;
+        let timeout = |d: usize, deadline: Duration| ExecError::Timeout {
+            device: d,
+            op,
+            slot,
+            peer: from,
+            waited_ms: deadline.as_millis() as u64,
+        };
         loop {
             if let Some(pieces) = self.inbox.remove(&(op, slot, from)) {
                 return Ok(pieces);
             }
-            match self.rx.recv() {
+            let remaining = expiry.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(timeout(self.d, self.deadline));
+            }
+            match self.rx.recv_timeout(remaining) {
                 Ok(m) if m.slot == POISON_SLOT => {
                     return Err(ExecError::Worker { device: m.from, reason: POISON_REASON.into() })
                 }
                 Ok(m) => {
+                    // Integrity gate on every received payload: a digest
+                    // mismatch is structured corruption, not a mystery
+                    // divergence three ops later.
+                    if checksum_pieces(&m.pieces) != m.sum {
+                        return Err(ExecError::Corrupt { device: self.d, op: m.op, from: m.from });
+                    }
                     self.inbox.insert((m.op, m.slot, m.from), m.pieces);
                 }
-                Err(_) => {
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(timeout(self.d, self.deadline));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
                     return Err(ExecError::Worker {
                         device: self.d,
                         reason: format!(
@@ -234,13 +367,30 @@ impl<'a> Worker<'a> {
         }
     }
 
-    fn send(&mut self, to: usize, op: OpId, slot: u8, pieces: Pieces) {
+    fn send(&mut self, to: usize, op: OpId, slot: u8, mut pieces: Pieces) {
         let bytes: u64 = pieces.iter().map(|(r, _)| r.elements() * 4).sum();
         self.payload_bytes += bytes;
         self.op_payload[op] += bytes;
+        // Digest before injection: a corrupted payload carries the clean
+        // sum, exactly like wire corruption under a real transport.
+        let sum = checksum_pieces(&pieces);
+        if let Some(fp) = self.faults {
+            match fp.fire_send(self.d, op) {
+                Some(FaultKind::DropMessage) => return,
+                Some(FaultKind::DelayMessage { ms }) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(FaultKind::CorruptPayload) => {
+                    if let Some((_, data)) = pieces.iter_mut().find(|(_, d)| !d.is_empty()) {
+                        data[0] = f32::from_bits(data[0].to_bits() ^ 0x0040_0000);
+                    }
+                }
+                _ => {}
+            }
+        }
         // A send only fails if the receiver died; the poison/abort path
         // reports that failure, so the result here is ignorable.
-        let _ = self.senders[to].send(Msg { from: self.d, op, slot, pieces });
+        let _ = self.senders[to].send(Msg { from: self.d, op, slot, pieces, sum });
     }
 
     /// §5.2 phase 1: assemble one input in the op's required layout.
@@ -296,7 +446,10 @@ impl<'a> Worker<'a> {
         }
         for src in expected {
             for (cell, data) in self.recv_from(op, slot as u8, src)? {
-                buf.paste(&cell, &data);
+                // A remote piece crossed a trust boundary: the checked
+                // paste turns a malformed region into a structured
+                // [`ExecError::Shard`] instead of an index panic.
+                buf.try_paste(&cell, &data)?;
             }
         }
         Ok(buf)
@@ -398,6 +551,18 @@ impl<'a> Worker<'a> {
     }
 
     fn compute(&mut self, op: OpId) -> Result<(), ExecError> {
+        // Compute-site injection: `Panic` exercises the real unwind +
+        // poison machinery; `Kill` models device loss — the worker stops
+        // silently, and only the peers' watchdogs can discover it.
+        if let Some(fp) = self.faults {
+            match fp.fire_compute(self.d, op) {
+                Some(FaultKind::Panic) => std::panic::panic_any(InjectedPanic),
+                Some(FaultKind::Kill) => {
+                    return Err(ExecError::Worker { device: self.d, reason: KILLED_REASON.into() })
+                }
+                _ => {}
+            }
+        }
         let g = self.g;
         let n_ins = g.ops[op].inputs.len();
         let mut local_ins = Vec::with_capacity(n_ins);
@@ -460,15 +625,65 @@ pub fn execute(
     program: &LoweredProgram,
     init: &[Option<Vec<f32>>],
 ) -> Result<ExecReport, ExecError> {
+    execute_with(g, plan, program, init, &ExecOptions::default())
+}
+
+/// Pick the root cause among the errors a run produced.
+///
+/// When a fault fires, several workers usually fail: the faulted one, the
+/// peers its poison reached, and — for silent faults like a dropped
+/// message or a killed worker — the peers whose watchdogs expired. Which
+/// worker's error reaches the main thread first is a scheduling race, so
+/// the report is chosen by *rank*, not arrival:
+///
+/// 1. **rank 0** — real failures (kernel panics, injected kills,
+///    corruption, shard errors): the fault site itself.
+/// 2. **rank 1** — watchdog timeouts: evidence of a stall, but possibly
+///    several hops downstream of it.
+/// 3. **rank 2** — poison cascades: pure echo, never the cause.
+///
+/// Within a rank, ties break on `(op, slot, device)`. For timeouts this
+/// is not arbitrary: each phase sends before it receives, so a stall
+/// propagates to strictly later `(op, slot)` wait sites — the minimal
+/// timeout names the earliest stalled exchange, i.e. the true site.
+/// This only holds because timeouts do not poison (the spawn closure):
+/// all stalled workers get to report their own wait site, and the
+/// minimum is taken over the full set rather than whichever deadline
+/// happened to expire first.
+fn root_cause(errors: Vec<ExecError>) -> Option<ExecError> {
+    fn key(e: &ExecError) -> (u8, usize, u8, usize) {
+        match e {
+            ExecError::Worker { device, reason } if reason == POISON_REASON => {
+                (2, 0, 0, *device)
+            }
+            ExecError::Timeout { device, op, slot, .. } => (1, *op, *slot, *device),
+            ExecError::Corrupt { device, op, .. } => (0, *op, 0, *device),
+            ExecError::Worker { device, .. } => (0, 0, 0, *device),
+            _ => (0, 0, 0, 0),
+        }
+    }
+    errors.into_iter().min_by_key(key)
+}
+
+/// [`execute`] with explicit [`ExecOptions`]: a watchdog deadline and an
+/// optional fault-injection plan. The default path (`faults: None`)
+/// reduces every hook to one branch on a `None`, so `execute` stays as
+/// fast as before the fault-tolerance layer existed — pinned by the
+/// `exec_micro` bench against the BENCH_exec baseline.
+pub fn execute_with(
+    g: &Graph,
+    plan: &Plan,
+    program: &LoweredProgram,
+    init: &[Option<Vec<f32>>],
+    opts: &ExecOptions,
+) -> Result<ExecReport, ExecError> {
     let tasks = try_build_shard_tasks(g, plan)?;
-    program.validate()?;
+    program.validate_for(plan)?;
     let devices = plan.devices();
-    if program.devices != devices {
-        return Err(ExecError::Plan(PlanError::MalformedProgram {
-            device: 0,
-            pc: 0,
-            reason: format!("program spans {} devices, plan {}", program.devices, devices),
-        }));
+    if opts.faults.is_some() {
+        // Injected panics unwind through catch_unwind like real kernel
+        // panics, but should not spam stderr across a 200-trial suite.
+        super::fault::install_quiet_panic_hook();
     }
     for (d, prog) in program.programs.iter().enumerate() {
         for (pc, instr) in prog.instrs.iter().enumerate() {
@@ -532,6 +747,8 @@ pub fn execute(
                     instr_bytes: 0,
                     payload_bytes: 0,
                     op_payload: vec![0; g.ops.len()],
+                    deadline: opts.deadline,
+                    faults: opts.faults.as_ref(),
                 };
                 s.spawn(move || {
                     let out = match catch_unwind(AssertUnwindSafe(|| worker.run())) {
@@ -541,7 +758,26 @@ pub fn execute(
                             reason: "worker thread panicked".into(),
                         }),
                     };
-                    if out.is_err() {
+                    // Two failure classes must NOT poison their peers:
+                    //
+                    // - An injected kill is *silent* device loss — a
+                    //   machine that lost power sends nothing, so the
+                    //   peers' watchdogs, not a courtesy broadcast, must
+                    //   discover it.
+                    // - A timeout: the stall has already spread, so the
+                    //   peers' deadlines expire near-simultaneously with
+                    //   ours — poisoning here races those expiries and
+                    //   can convert the *true* stall site's timeout into
+                    //   a cascade, corrupting root-cause attribution
+                    //   (caught by tools/proto/fault_mirror.py). Every
+                    //   wait is supervised, so nobody needs the poison
+                    //   to terminate.
+                    let silent = matches!(&out, Err(ExecError::Timeout { .. }))
+                        || matches!(
+                            &out,
+                            Err(ExecError::Worker { reason, .. }) if reason == KILLED_REASON
+                        );
+                    if out.is_err() && !silent {
                         // Poison every peer so nobody blocks on a message
                         // this worker will never send.
                         for tx in &senders {
@@ -550,6 +786,7 @@ pub fn execute(
                                 op: 0,
                                 slot: POISON_SLOT,
                                 pieces: Vec::new(),
+                                sum: 0,
                             });
                         }
                     }
@@ -567,23 +804,16 @@ pub fn execute(
             })
             .collect()
     });
-    // Report the root cause, preferring a real failure over the poison
-    // aborts it cascaded into.
+    // Report the root cause (real failure > timeout > poison cascade).
     let mut outcomes = Vec::with_capacity(devices);
-    let mut root: Option<ExecError> = None;
-    let mut cascade: Option<ExecError> = None;
+    let mut errors = Vec::new();
     for r in results {
         match r {
             Ok(o) => outcomes.push(o),
-            Err(e) => {
-                let is_cascade =
-                    matches!(&e, ExecError::Worker { reason, .. } if reason == POISON_REASON);
-                let slot = if is_cascade { &mut cascade } else { &mut root };
-                slot.get_or_insert(e);
-            }
+            Err(e) => errors.push(e),
         }
     }
-    if let Some(e) = root.or(cascade) {
+    if let Some(e) = root_cause(errors) {
         return Err(e);
     }
 
@@ -628,4 +858,131 @@ pub fn execute(
             .map(|i| outcomes.iter().map(|o| o.op_payload[i]).sum())
             .collect(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poison(device: usize) -> ExecError {
+        ExecError::Worker { device, reason: POISON_REASON.into() }
+    }
+
+    fn timeout(device: usize, op: OpId, slot: u8) -> ExecError {
+        ExecError::Timeout { device, op, slot, peer: 0, waited_ms: 100 }
+    }
+
+    /// The PR-5 contract, now explicit: a real failure beats the poison
+    /// cascades it caused, regardless of arrival order.
+    #[test]
+    fn root_cause_prefers_real_failure_over_poison() {
+        let real = ExecError::Worker { device: 2, reason: "kernel for op `mm` panicked".into() };
+        let picked = root_cause(vec![poison(0), poison(1), real.clone(), poison(3)]);
+        assert_eq!(picked, Some(real));
+    }
+
+    /// Full rank ordering: real failure > timeout > poison cascade.
+    #[test]
+    fn root_cause_ranks_real_over_timeout_over_poison() {
+        let real = ExecError::Corrupt { device: 1, op: 3, from: 0 };
+        let picked =
+            root_cause(vec![poison(0), timeout(2, 1, 0), real.clone(), timeout(3, 2, OUT_SLOT)]);
+        assert_eq!(picked, Some(real));
+        // Without a real failure, a timeout beats the cascades.
+        let picked = root_cause(vec![poison(0), timeout(2, 1, 0), poison(3)]);
+        assert_eq!(picked, Some(timeout(2, 1, 0)));
+        // All cascades: report one rather than nothing.
+        assert_eq!(root_cause(vec![poison(3), poison(1)]), Some(poison(1)));
+        assert_eq!(root_cause(Vec::new()), None);
+    }
+
+    /// Stalls propagate to strictly later `(op, slot)` wait sites, so the
+    /// minimal timeout names the true stalled exchange — pin the tiebreak.
+    #[test]
+    fn root_cause_timeout_tiebreak_is_op_slot_device() {
+        let earliest = timeout(3, 1, 0);
+        let picked = root_cause(vec![
+            timeout(0, 2, 0),         // later op
+            timeout(1, 1, OUT_SLOT),  // same op, later phase
+            earliest.clone(),
+            timeout(5, 1, 0),         // same site, higher device
+        ]);
+        assert_eq!(picked, Some(earliest));
+    }
+
+    /// Every variant formats: `Display` names the parties and the site,
+    /// `Debug` round-trips the variant name.
+    #[test]
+    fn exec_error_display_and_debug_cover_every_variant() {
+        let cases: Vec<(ExecError, &str, &str)> = vec![
+            (ExecError::Plan(PlanError::Infeasible), "no feasible", "Plan"),
+            (
+                ExecError::Input(InterpError::MissingInput { tensor: "x".into() }),
+                "x",
+                "Input",
+            ),
+            (
+                ExecError::MeterMismatch { metered: 8, plan: 16 },
+                "meters 8 B but the plan's Theorem-1 cost is 16 B",
+                "MeterMismatch",
+            ),
+            (
+                ExecError::ReplicaDivergence { tensor: "w1".into() },
+                "replicated shards of `w1` diverged",
+                "ReplicaDivergence",
+            ),
+            (
+                ExecError::Worker { device: 3, reason: "boom".into() },
+                "worker 3 failed: boom",
+                "Worker",
+            ),
+            (
+                timeout(1, 4, 2),
+                "device 1 timed out after 100 ms waiting on device 0 for op 4 (input slot 2)",
+                "Timeout",
+            ),
+            (
+                timeout(1, 4, OUT_SLOT),
+                "output scatter",
+                "Timeout",
+            ),
+            (
+                ExecError::Corrupt { device: 2, op: 5, from: 6 },
+                "device 2 received a corrupt payload from device 6 for op 5",
+                "Corrupt",
+            ),
+            (
+                ExecError::CheckpointCorrupt { step: 7 },
+                "checkpoint of step 7 failed its checksum",
+                "CheckpointCorrupt",
+            ),
+            (
+                ExecError::Shard { reason: "rank mismatch".into() },
+                "malformed shard operation: rank mismatch",
+                "Shard",
+            ),
+        ];
+        for (e, display_frag, debug_frag) in cases {
+            let shown = e.to_string();
+            assert!(shown.contains(display_frag), "{shown:?} missing {display_frag:?}");
+            let dbg = format!("{e:?}");
+            assert!(dbg.contains(debug_frag), "{dbg:?} missing {debug_frag:?}");
+        }
+    }
+
+    /// The wire digest is sensitive to payload bits, lengths, and piece
+    /// structure — the properties the corruption detector relies on.
+    #[test]
+    fn piece_checksum_detects_flips_and_truncation() {
+        let region = Region { offset: vec![0], shape: vec![2] };
+        let clean: Pieces = vec![(region.clone(), vec![1.0, 2.0])];
+        let sum = checksum_pieces(&clean);
+        let mut flipped = clean.clone();
+        flipped[0].1[0] = f32::from_bits(flipped[0].1[0].to_bits() ^ 0x0040_0000);
+        assert_ne!(checksum_pieces(&flipped), sum);
+        let truncated: Pieces = vec![(region, vec![1.0])];
+        assert_ne!(checksum_pieces(&truncated), sum);
+        assert_ne!(checksum_pieces(&Vec::new()), sum);
+        assert_eq!(checksum_pieces(&clean), sum);
+    }
 }

@@ -1,0 +1,350 @@
+//! Deterministic, seeded fault injection for the threaded SPMD executor.
+//!
+//! A production step loop cannot treat a stalled link or a dead worker as
+//! an eternal `recv()` block, and it cannot *test* its failure handling
+//! without a way to make failures happen on demand. This module is that
+//! way: a [`FaultPlan`] names concrete `(device, op)` sites in a lowered
+//! program and attaches a [`FaultKind`] to each — panic the worker there,
+//! kill it silently (device loss), drop or delay one of its exchange
+//! messages, or corrupt a payload in flight. The executor consults the
+//! plan at exactly two kinds of site:
+//!
+//! - **compute sites** — entering [`Instr::Compute`] for op `o` on device
+//!   `d` ([`FaultKind::Panic`], [`FaultKind::Kill`]);
+//! - **send sites** — each outgoing exchange message device `d` ships for
+//!   op `o` ([`FaultKind::DropMessage`], [`FaultKind::DelayMessage`],
+//!   [`FaultKind::CorruptPayload`]).
+//!
+//! The hooks are free when unused: the default
+//! [`ExecOptions`](super::ExecOptions) carries no plan, so each site is a
+//! single branch on `None` (the CI `chaos` job pins `exec_micro` with
+//! injection disabled against the committed baseline). Every fault is
+//! **deterministic** — same plan, same program, same failure — and
+//! *transient* faults disarm themselves after firing once, so a retry of
+//! the same step succeeds, which is what lets
+//! [`execute_with_recovery`](super::execute_with_recovery) distinguish a
+//! lost packet from a lost device. Faults marked `persistent` re-fire on
+//! every attempt, modeling permanent device loss.
+//!
+//! [`Instr::Compute`]: crate::lower::Instr::Compute
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+use crate::graph::OpId;
+use crate::util::Rng;
+
+/// Reason string of a silent injected kill — the one worker failure that
+/// must **not** poison its peers (a crashed host sends nothing), so the
+/// watchdog timeouts, not the poison path, are what detect it.
+pub(crate) const KILLED_REASON: &str = "killed by fault injection (device loss)";
+
+/// What happens when a fault fires at its site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the worker thread at the compute site — exercises the
+    /// `catch_unwind` + poison-broadcast path end to end.
+    Panic,
+    /// Terminate the worker silently at the compute site: no poison, no
+    /// further sends. Peers must discover the loss via their watchdogs.
+    Kill,
+    /// Swallow the matching outgoing exchange message; the receiver's
+    /// watchdog reports the stalled site.
+    DropMessage,
+    /// Sleep `ms` milliseconds before the matching send. Below the
+    /// deadline this is a tolerated hiccup; above it, a timeout.
+    DelayMessage {
+        /// Injected latency in milliseconds.
+        ms: u64,
+    },
+    /// Flip bits of the payload after its checksum is computed — the
+    /// receiver's integrity check reports
+    /// [`ExecError::Corrupt`](super::ExecError::Corrupt).
+    CorruptPayload,
+}
+
+impl FaultKind {
+    /// Whether this kind fires at compute sites (vs send sites).
+    fn is_compute_site(&self) -> bool {
+        matches!(self, FaultKind::Panic | FaultKind::Kill)
+    }
+
+    /// Short name for scenario specs and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Kill => "kill",
+            FaultKind::DropMessage => "drop",
+            FaultKind::DelayMessage { .. } => "delay",
+            FaultKind::CorruptPayload => "corrupt",
+        }
+    }
+}
+
+/// One injected fault: a kind armed at a `(device, op)` site.
+#[derive(Debug)]
+pub struct Fault {
+    /// Device whose worker the fault targets.
+    pub device: usize,
+    /// Op (instruction site) at which it fires.
+    pub op: OpId,
+    /// What happens there.
+    pub kind: FaultKind,
+    /// `true` re-fires on every execution attempt (permanent device
+    /// loss); `false` fires once and disarms (transient fault).
+    pub persistent: bool,
+    /// Still armed? Transient faults disarm on firing.
+    armed: AtomicBool,
+}
+
+impl Fault {
+    /// A transient (fire-once) fault at `(device, op)`.
+    pub fn transient(device: usize, op: OpId, kind: FaultKind) -> Self {
+        Fault { device, op, kind, persistent: false, armed: AtomicBool::new(true) }
+    }
+
+    /// A persistent fault at `(device, op)` — re-fires on every attempt.
+    pub fn persistent(device: usize, op: OpId, kind: FaultKind) -> Self {
+        Fault { device, op, kind, persistent: true, armed: AtomicBool::new(true) }
+    }
+
+    /// Consume one firing: `true` if the fault triggers now. Persistent
+    /// faults always trigger; transient ones only while armed.
+    fn fire(&self) -> bool {
+        if self.persistent {
+            return true;
+        }
+        self.armed.swap(false, Ordering::AcqRel)
+    }
+}
+
+impl Clone for Fault {
+    fn clone(&self) -> Self {
+        Fault {
+            device: self.device,
+            op: self.op,
+            kind: self.kind,
+            persistent: self.persistent,
+            armed: AtomicBool::new(self.armed.load(Ordering::Acquire)),
+        }
+    }
+}
+
+/// A set of armed faults, shared (by reference) across worker threads.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// The faults, in arming order.
+    pub faults: Vec<Fault>,
+    /// The seed this plan was generated from, if any — reported in chaos
+    /// failures so a failing scenario reproduces from one number.
+    pub seed: Option<u64>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// A single-fault plan.
+    pub fn single(fault: Fault) -> Self {
+        FaultPlan { faults: vec![fault], seed: None }
+    }
+
+    /// Permanent device loss: kill `device`'s worker silently when it
+    /// reaches op `op`, on every attempt.
+    pub fn kill(device: usize, op: OpId) -> Self {
+        Self::single(Fault::persistent(device, op, FaultKind::Kill))
+    }
+
+    /// Panic `device`'s worker at op `op` (transient: a retry succeeds).
+    pub fn panic_at(device: usize, op: OpId) -> Self {
+        Self::single(Fault::transient(device, op, FaultKind::Panic))
+    }
+
+    /// Drop the first exchange message `device` sends for op `op`.
+    pub fn drop_message(device: usize, op: OpId) -> Self {
+        Self::single(Fault::transient(device, op, FaultKind::DropMessage))
+    }
+
+    /// Delay the first exchange message `device` sends for op `op`.
+    pub fn delay_message(device: usize, op: OpId, ms: u64) -> Self {
+        Self::single(Fault::transient(device, op, FaultKind::DelayMessage { ms }))
+    }
+
+    /// Corrupt the first payload `device` sends for op `op`.
+    pub fn corrupt_payload(device: usize, op: OpId) -> Self {
+        Self::single(Fault::transient(device, op, FaultKind::CorruptPayload))
+    }
+
+    /// A deterministic random fault plan: one fault at a seeded
+    /// `(device, op)` site over a program with `devices` devices and
+    /// `ops` operators. Kills are persistent (device loss); every other
+    /// kind is transient. Injected delays stay small (≤ 8 ms) so they are
+    /// tolerated hiccups under any reasonable deadline — the chaos suite
+    /// exercises above-deadline stalls with [`FaultPlan::drop_message`],
+    /// whose timeout does not depend on scheduler noise.
+    pub fn seeded(seed: u64, devices: usize, ops: usize) -> Self {
+        assert!(devices > 0 && ops > 0, "seeded fault plan needs a non-empty program");
+        let mut rng = Rng::new(seed);
+        let device = rng.below(devices);
+        let op = rng.below(ops);
+        let fault = match rng.below(5) {
+            0 => Fault::transient(device, op, FaultKind::Panic),
+            1 => Fault::persistent(device, op, FaultKind::Kill),
+            2 => Fault::transient(device, op, FaultKind::DropMessage),
+            3 => Fault::transient(
+                device,
+                op,
+                FaultKind::DelayMessage { ms: 1 + rng.below(8) as u64 },
+            ),
+            _ => Fault::transient(device, op, FaultKind::CorruptPayload),
+        };
+        FaultPlan { faults: vec![fault], seed: Some(seed) }
+    }
+
+    /// Re-arm every transient fault (for replaying one plan across
+    /// independent experiments; recovery retries deliberately do *not*
+    /// re-arm, so a transient fault stays fired).
+    pub fn rearm(&self) {
+        for f in &self.faults {
+            f.armed.store(true, Ordering::Release);
+        }
+    }
+
+    /// Fire the compute-site fault at `(device, op)`, if one is armed.
+    pub(crate) fn fire_compute(&self, device: usize, op: OpId) -> Option<FaultKind> {
+        self.site(device, op, true)
+    }
+
+    /// Fire the send-site fault at `(device, op)`, if one is armed.
+    pub(crate) fn fire_send(&self, device: usize, op: OpId) -> Option<FaultKind> {
+        self.site(device, op, false)
+    }
+
+    fn site(&self, device: usize, op: OpId, compute: bool) -> Option<FaultKind> {
+        for f in &self.faults {
+            if f.device == device && f.op == op && f.kind.is_compute_site() == compute && f.fire() {
+                return Some(f.kind);
+            }
+        }
+        None
+    }
+
+    /// One-line description for scenario logs and chaos reports.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| {
+                format!(
+                    "{}@d{}:op{}{}",
+                    f.kind.name(),
+                    f.device,
+                    f.op,
+                    if f.persistent { " (persistent)" } else { "" }
+                )
+            })
+            .collect();
+        if let Some(seed) = self.seed {
+            parts.push(format!("seed={seed:#x}"));
+        }
+        if parts.is_empty() {
+            "no faults".into()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+/// Panic payload of [`FaultKind::Panic`] — public so the quiet hook (and
+/// any external harness) can recognize injected panics by type.
+#[derive(Debug)]
+pub struct InjectedPanic;
+
+/// Install a process-wide panic hook that silences *injected* panics
+/// (payload type [`InjectedPanic`]) and forwards everything else to the
+/// previously installed hook. Chaos suites call this once so hundreds of
+/// injected worker panics do not bury real failures in backtraces;
+/// idempotent.
+pub fn install_quiet_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedPanic>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_fault_fires_once() {
+        let p = FaultPlan::drop_message(1, 4);
+        assert_eq!(p.fire_send(1, 4), Some(FaultKind::DropMessage));
+        assert_eq!(p.fire_send(1, 4), None, "transient fault must disarm");
+        p.rearm();
+        assert_eq!(p.fire_send(1, 4), Some(FaultKind::DropMessage));
+    }
+
+    #[test]
+    fn persistent_kill_refires() {
+        let p = FaultPlan::kill(0, 2);
+        for _ in 0..3 {
+            assert_eq!(p.fire_compute(0, 2), Some(FaultKind::Kill));
+        }
+    }
+
+    #[test]
+    fn sites_are_kind_specific() {
+        // A send-site fault never fires at a compute site and vice versa.
+        let p = FaultPlan::corrupt_payload(0, 1);
+        assert_eq!(p.fire_compute(0, 1), None);
+        assert_eq!(p.fire_send(0, 1), Some(FaultKind::CorruptPayload));
+        let p = FaultPlan::panic_at(0, 1);
+        assert_eq!(p.fire_send(0, 1), None);
+        assert_eq!(p.fire_compute(0, 1), Some(FaultKind::Panic));
+    }
+
+    #[test]
+    fn wrong_site_does_not_fire() {
+        let p = FaultPlan::kill(2, 5);
+        assert_eq!(p.fire_compute(1, 5), None);
+        assert_eq!(p.fire_compute(2, 4), None);
+        // Still armed for the real site.
+        assert_eq!(p.fire_compute(2, 5), Some(FaultKind::Kill));
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_in_range() {
+        for seed in 0..64 {
+            let a = FaultPlan::seeded(seed, 4, 10);
+            let b = FaultPlan::seeded(seed, 4, 10);
+            assert_eq!(a.faults.len(), 1);
+            let (fa, fb) = (&a.faults[0], &b.faults[0]);
+            assert_eq!((fa.device, fa.op, fa.kind), (fb.device, fb.op, fb.kind));
+            assert!(fa.device < 4 && fa.op < 10);
+            assert_eq!(fa.persistent, fa.kind == FaultKind::Kill);
+            if let FaultKind::DelayMessage { ms } = fa.kind {
+                assert!((1..=8).contains(&ms));
+            }
+            assert_eq!(a.seed, Some(seed));
+        }
+    }
+
+    #[test]
+    fn describe_names_site_and_seed() {
+        let p = FaultPlan::seeded(7, 2, 3);
+        let s = p.describe();
+        assert!(s.contains("@d"), "{s}");
+        assert!(s.contains("seed=0x7"), "{s}");
+        assert_eq!(FaultPlan::new().describe(), "no faults");
+        let k = FaultPlan::kill(1, 2).describe();
+        assert!(k.contains("kill@d1:op2 (persistent)"), "{k}");
+    }
+}

@@ -21,12 +21,24 @@
 //! The narrative chapter is [`crate::book::execution`]
 //! (docs/execution.md), including the tolerance model and the two byte
 //! meters.
+//!
+//! The fault-tolerance layer sits on top ([`fault`],
+//! [`execute_with`], [`execute_with_recovery`]): deterministic fault
+//! injection, watchdog deadlines on every wait site, checksummed
+//! checkpoints, and elastic re-planning on permanent device loss — the
+//! narrative is docs/execution.md §Fault tolerance.
 
 mod buf;
 mod exec;
+pub mod fault;
+mod recover;
 
 pub use buf::{for_each_row, ShardBuf};
-pub use exec::{execute, ExecError, ExecReport};
+pub use exec::{execute, execute_with, ExecError, ExecOptions, ExecReport};
+pub use fault::{Fault, FaultKind, FaultPlan};
+pub use recover::{
+    execute_with_recovery, Checkpoint, RecoverOptions, RecoveryOutcome, RecoveryReport,
+};
 
 use crate::graph::{max_rel_err, Graph};
 

@@ -1,0 +1,343 @@
+//! Recovery-aware execution: checkpoints, bounded retry, and elastic
+//! re-planning on permanent device loss.
+//!
+//! [`execute_with_recovery`] wraps one step of [`execute_with`] in the
+//! recovery state machine of docs/execution.md §Fault tolerance:
+//!
+//! 1. **Checkpoint** — capture the step's input state (the producerless
+//!    tensors: parameters, inputs, labels) with an FNV-1a checksum
+//!    ([`Checkpoint`]); every restore verifies the digest first, so a
+//!    rotted checkpoint is a structured
+//!    [`ExecError::CheckpointCorrupt`], never silent garbage training.
+//! 2. **Retry** — a *retryable* failure (worker panic/loss, watchdog
+//!    timeout, payload corruption) restores the checkpoint and re-runs
+//!    the step after an exponential backoff, up to
+//!    [`RecoverOptions::max_retries`] times. Transient faults have
+//!    disarmed themselves by then ([`super::fault`]), so the retry
+//!    succeeds — this is how a lost packet is distinguished from a lost
+//!    machine.
+//! 3. **Re-plan** — when retries are exhausted and the error implicates a
+//!    concrete device (a persistent kill re-fires on every attempt), the
+//!    device set shrinks: [`crate::planner::replan_after_loss`] plans the
+//!    same graph for the surviving `2^(k-1)` devices, the plan is
+//!    re-lowered and re-validated ([`LoweredProgram::validate_for`]), and
+//!    the step resumes *from the checkpoint* on the survivors. The paper's
+//!    planner is parameterized by device count, so elasticity is a
+//!    re-search, not a special mode.
+//!
+//! Non-retryable failures (malformed plan or program, bad input, meter
+//! mismatch, replica divergence) propagate immediately: retrying a
+//! structural bug just burns the budget. The differential gate holds
+//! through recovery — a recovered run must still match
+//! [`crate::graph::eval_serial`] within 1e-5 (`rust/tests/fault.rs`).
+
+use std::time::Duration;
+
+use crate::graph::Graph;
+use crate::lower::{try_lower, LoweredProgram};
+use crate::planner::{replan_after_loss, Plan};
+use crate::sim::SimConfig;
+use crate::util::checksum::checksum_values;
+
+use super::exec::{execute_with, ExecError, ExecOptions, ExecReport};
+
+/// A checksummed snapshot of one step's input state: the producerless
+/// tensors (parameters, inputs, labels) in `init` layout, plus an FNV-1a
+/// digest over presence + values.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Step this state feeds (step `n`'s checkpoint is the state *before*
+    /// step `n` runs).
+    pub step: u64,
+    /// The `init` vector of the step — what every attempt restores.
+    pub values: Vec<Option<Vec<f32>>>,
+    /// FNV-1a digest of `values` at capture time.
+    pub checksum: u64,
+}
+
+impl Checkpoint {
+    /// Capture `values` as the checkpoint of `step`, digesting them now.
+    pub fn capture(step: u64, values: Vec<Option<Vec<f32>>>) -> Self {
+        let checksum = checksum_values(&values);
+        Checkpoint { step, values, checksum }
+    }
+
+    /// Checkpoint for the step *after* a successful execution: carry the
+    /// reassembled values of every producerless tensor (the updated
+    /// parameter state) forward, keyed `step + 1`. This is the step-loop
+    /// handoff — in a training loop the post-step state of step `n` is
+    /// the restore point of step `n + 1`.
+    pub fn after(g: &Graph, step: u64, report: &ExecReport) -> Self {
+        let mut produced = vec![false; g.tensors.len()];
+        for op in &g.ops {
+            for &o in &op.outputs {
+                produced[o] = true;
+            }
+        }
+        let values = g
+            .tensors
+            .iter()
+            .map(|t| if produced[t.id] { None } else { Some(report.tensors[t.id].clone()) })
+            .collect();
+        Checkpoint::capture(step + 1, values)
+    }
+
+    /// Verify the digest still matches the values — run before every
+    /// restore, so bit rot surfaces as [`ExecError::CheckpointCorrupt`].
+    pub fn verify(&self) -> Result<(), ExecError> {
+        if checksum_values(&self.values) != self.checksum {
+            return Err(ExecError::CheckpointCorrupt { step: self.step });
+        }
+        Ok(())
+    }
+}
+
+/// Knobs for [`execute_with_recovery`].
+#[derive(Debug, Clone)]
+pub struct RecoverOptions {
+    /// Per-attempt execution options (watchdog deadline, fault plan).
+    /// Fault arming state persists across retries — transient faults stay
+    /// fired, persistent ones re-fire — which is exactly the distinction
+    /// the retry loop exploits.
+    pub exec: ExecOptions,
+    /// Retries after the first failed attempt, before the failure is
+    /// treated as permanent.
+    pub max_retries: u32,
+    /// Backoff before retry `i` (0-based): `backoff << i` — exponential,
+    /// starting small so tests stay fast.
+    pub backoff: Duration,
+    /// Cost/latency config for re-lowering the re-planned program after
+    /// device loss.
+    pub sim: SimConfig,
+}
+
+impl Default for RecoverOptions {
+    fn default() -> Self {
+        RecoverOptions {
+            exec: ExecOptions::default(),
+            max_retries: 2,
+            backoff: Duration::from_millis(10),
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// How a recovered step eventually succeeded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecoveryOutcome {
+    /// First attempt succeeded; nothing fired.
+    Clean,
+    /// Succeeded on the full device set after `retries` restore+retry
+    /// rounds (transient fault).
+    Retried {
+        /// Failed attempts before the success.
+        retries: u32,
+    },
+    /// Permanent loss of `lost_device`: re-planned onto `devices`
+    /// survivors and resumed from the checkpoint.
+    Replanned {
+        /// Device the root-cause error implicated.
+        lost_device: usize,
+        /// Device count of the recovery plan (`2^(k-1)`).
+        devices: usize,
+    },
+}
+
+/// Result of a recovered execution.
+#[derive(Debug)]
+pub struct RecoveryReport {
+    /// The successful run's report (meters, reassembled tensors).
+    pub report: ExecReport,
+    /// How success was reached.
+    pub outcome: RecoveryOutcome,
+    /// The plan the successful run used — the original, or the elastic
+    /// re-plan after device loss.
+    pub plan: Plan,
+    /// Root-cause errors of every failed attempt, in order.
+    pub failures: Vec<ExecError>,
+}
+
+/// Whether retrying can plausibly help: transport and worker failures
+/// yes; structural errors (plan, program, input, meters) no.
+fn retryable(e: &ExecError) -> bool {
+    matches!(
+        e,
+        ExecError::Worker { .. } | ExecError::Timeout { .. } | ExecError::Corrupt { .. }
+    )
+}
+
+/// The device a root-cause error points at — the one excluded when the
+/// failure is promoted to permanent loss.
+fn implicated_device(e: &ExecError) -> Option<usize> {
+    match e {
+        ExecError::Worker { device, .. } => Some(*device),
+        ExecError::Timeout { peer, .. } => Some(*peer),
+        ExecError::Corrupt { from, .. } => Some(*from),
+        _ => None,
+    }
+}
+
+/// Execute one step with checkpointing, bounded retry, and elastic
+/// re-planning (module docs for the state machine).
+///
+/// # Examples
+///
+/// A persistent mid-step device kill: every retry re-fires it, so the
+/// step is re-planned onto half the devices and resumed from the
+/// checkpoint — and the numbers still match the serial interpreter.
+///
+/// ```
+/// use soybean::graph::{eval_serial, max_rel_err, seed_values};
+/// use soybean::lower::lower;
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::planner::k_cut;
+/// use soybean::sim::SimConfig;
+/// use soybean::spmd::{execute_with_recovery, FaultPlan, RecoverOptions, RecoveryOutcome};
+/// use std::time::Duration;
+///
+/// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+/// let plan = k_cut(&g, 2);
+/// let program = lower(&g, &plan, &SimConfig::default());
+/// let init = seed_values(&g, 7);
+///
+/// let mut opts = RecoverOptions::default();
+/// opts.exec.deadline = Duration::from_millis(500);
+/// opts.exec.faults = Some(FaultPlan::kill(1, 0)); // device 1 dies at op 0, every attempt
+/// opts.backoff = Duration::from_millis(1);
+///
+/// let r = execute_with_recovery(&g, &plan, &program, &init, &opts).unwrap();
+/// assert_eq!(
+///     r.outcome,
+///     RecoveryOutcome::Replanned { lost_device: 1, devices: 2 }
+/// );
+/// let serial = eval_serial(&g, &init).unwrap();
+/// for t in &g.tensors {
+///     assert!(max_rel_err(&r.report.tensors[t.id], &serial[t.id]) <= 1e-5);
+/// }
+/// ```
+pub fn execute_with_recovery(
+    g: &Graph,
+    plan: &Plan,
+    program: &LoweredProgram,
+    init: &[Option<Vec<f32>>],
+    opts: &RecoverOptions,
+) -> Result<RecoveryReport, ExecError> {
+    let ckpt = Checkpoint::capture(0, init.to_vec());
+    let mut failures = Vec::new();
+
+    // Attempt 0 plus `max_retries` retries on the full device set. The
+    // fault plan is shared across attempts, so transient faults stay
+    // disarmed after firing and persistent ones keep firing.
+    for attempt in 0..=opts.max_retries {
+        if attempt > 0 {
+            ckpt.verify()?;
+            std::thread::sleep(opts.backoff * (1u32 << (attempt - 1).min(16)));
+        }
+        match execute_with(g, plan, program, &ckpt.values, &opts.exec) {
+            Ok(report) => {
+                let outcome = if attempt == 0 {
+                    RecoveryOutcome::Clean
+                } else {
+                    RecoveryOutcome::Retried { retries: attempt }
+                };
+                return Ok(RecoveryReport { report, outcome, plan: plan.clone(), failures });
+            }
+            Err(e) if retryable(&e) => failures.push(e),
+            Err(e) => return Err(e),
+        }
+    }
+
+    // Retries exhausted: the failure is permanent. If it names a device,
+    // shrink the world and resume from the checkpoint on the survivors.
+    // Invariant: the loop above pushed at least one failure.
+    let last = failures.last().expect("exhausted retries imply a recorded failure").clone();
+    let Some(lost) = implicated_device(&last) else {
+        return Err(last);
+    };
+    ckpt.verify()?;
+    let new_plan = replan_after_loss(g, plan)?;
+    let new_program = try_lower(g, &new_plan, &opts.sim)?;
+    new_program.validate_for(&new_plan)?;
+    // The dead device is out of the recovery world: its injected faults
+    // died with it, so the survivors run clean (a fresh fault plan for
+    // the new device numbering would be a different experiment).
+    let clean = ExecOptions { deadline: opts.exec.deadline, faults: None };
+    let report = execute_with(g, &new_plan, &new_program, &ckpt.values, &clean)?;
+    let devices = new_plan.devices();
+    Ok(RecoveryReport {
+        report,
+        outcome: RecoveryOutcome::Replanned { lost_device: lost, devices },
+        plan: new_plan,
+        failures,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::seed_values;
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::k_cut;
+    use crate::spmd::execute;
+
+    #[test]
+    fn checkpoint_verify_catches_bit_rot() {
+        let mut c = Checkpoint::capture(3, vec![Some(vec![1.0, 2.0]), None]);
+        c.verify().unwrap();
+        c.values[0].as_mut().unwrap()[1] = 2.5;
+        match c.verify() {
+            Err(ExecError::CheckpointCorrupt { step }) => assert_eq!(step, 3),
+            other => panic!("expected CheckpointCorrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_after_carries_producerless_state() {
+        let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
+        let plan = k_cut(&g, 1);
+        let program = crate::lower::lower(&g, &plan, &SimConfig::default());
+        let init = seed_values(&g, 5);
+        let report = execute(&g, &plan, &program, &init).unwrap();
+        let next = Checkpoint::after(&g, 0, &report);
+        assert_eq!(next.step, 1);
+        next.verify().unwrap();
+        // Producerless tensors present, produced ones absent — so the
+        // checkpoint is a valid `init` for the next step.
+        for (t, v) in g.tensors.iter().zip(&next.values) {
+            let produced = g.ops.iter().any(|op| op.outputs.contains(&t.id));
+            assert_eq!(v.is_none(), produced, "tensor {}", t.name);
+        }
+        let again = execute(&g, &plan, &program, &next.values).unwrap();
+        assert_eq!(again.instr_bytes, plan.total_cost());
+    }
+
+    #[test]
+    fn structural_errors_are_not_retried() {
+        assert!(!retryable(&ExecError::MeterMismatch { metered: 1, plan: 2 }));
+        assert!(!retryable(&ExecError::ReplicaDivergence { tensor: "x".into() }));
+        assert!(!retryable(&ExecError::CheckpointCorrupt { step: 0 }));
+        assert!(retryable(&ExecError::Worker { device: 0, reason: "boom".into() }));
+        assert!(retryable(&ExecError::Timeout {
+            device: 0,
+            op: 0,
+            slot: 0,
+            peer: 1,
+            waited_ms: 1
+        }));
+        assert!(retryable(&ExecError::Corrupt { device: 0, op: 0, from: 1 }));
+    }
+
+    #[test]
+    fn implicated_device_names_the_stalled_party() {
+        assert_eq!(
+            implicated_device(&ExecError::Timeout { device: 2, op: 0, slot: 0, peer: 3, waited_ms: 1 }),
+            Some(3),
+            "a timeout implicates the peer that went quiet, not the waiter"
+        );
+        assert_eq!(
+            implicated_device(&ExecError::Corrupt { device: 2, op: 0, from: 1 }),
+            Some(1)
+        );
+        assert_eq!(implicated_device(&ExecError::MeterMismatch { metered: 1, plan: 2 }), None);
+    }
+}

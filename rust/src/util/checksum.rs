@@ -1,0 +1,132 @@
+//! FNV-1a checksums for wire payloads and checkpoints.
+//!
+//! The fault-tolerance layer ([`crate::spmd`]) needs a cheap integrity
+//! check in two places: every inter-worker message carries a checksum of
+//! its `f32` payload so a corrupted payload surfaces as a structured
+//! [`ExecError::Corrupt`](crate::spmd::ExecError::Corrupt) instead of a
+//! silent numeric divergence, and step-level checkpoints carry one over
+//! the whole parameter state so a rotted checkpoint is refused at restore
+//! time. FNV-1a is not cryptographic — it guards against bit flips and
+//! truncation, the failure modes the injection harness models — but it is
+//! a handful of instructions per word, which keeps the always-on payload
+//! check invisible next to the copies it verifies.
+
+/// FNV-1a offset basis (64-bit).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a hasher over arbitrary words.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    /// A fresh hasher at the offset basis.
+    pub fn new() -> Self {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Absorb one `u64` (little-endian).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Absorb one `f32` by bit pattern — `NaN`s and signed zeros hash by
+    /// representation, so a checksum match implies bitwise payload
+    /// equality.
+    pub fn write_f32(&mut self, v: f32) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// FNV-1a of a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Checksum of an `f32` slice by bit pattern.
+pub fn checksum_f32s(xs: &[f32]) -> u64 {
+    let mut h = Fnv64::new();
+    for &x in xs {
+        h.write_f32(x);
+    }
+    h.finish()
+}
+
+/// Checksum of a producerless-tensor value vector (the executor's `init`
+/// shape): position-sensitive, with presence folded in so a dropped
+/// entry changes the digest even when the remaining values coincide.
+pub fn checksum_values(values: &[Option<Vec<f32>>]) -> u64 {
+    let mut h = Fnv64::new();
+    for v in values {
+        match v {
+            None => h.write_u64(0),
+            Some(xs) => {
+                h.write_u64(1 + xs.len() as u64);
+                for &x in xs {
+                    h.write_f32(x);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn f32_checksum_is_bit_sensitive() {
+        let a = checksum_f32s(&[1.0, 2.0, 3.0]);
+        let mut flipped = [1.0f32, 2.0, 3.0];
+        flipped[1] = f32::from_bits(flipped[1].to_bits() ^ 1);
+        assert_ne!(a, checksum_f32s(&flipped));
+        // 0.0 and -0.0 are distinct bit patterns, so distinct digests.
+        assert_ne!(checksum_f32s(&[0.0]), checksum_f32s(&[-0.0]));
+    }
+
+    #[test]
+    fn value_checksum_covers_presence_and_position() {
+        let a = vec![Some(vec![1.0f32]), None];
+        let b = vec![None, Some(vec![1.0f32])];
+        assert_ne!(checksum_values(&a), checksum_values(&b));
+        // An empty present entry differs from an absent one.
+        let c = vec![Some(Vec::new()), None];
+        assert_ne!(checksum_values(&a), checksum_values(&c));
+        assert_ne!(checksum_values(&c), checksum_values(&[None, None]));
+        // Deterministic.
+        assert_eq!(checksum_values(&a), checksum_values(&a.clone()));
+    }
+}

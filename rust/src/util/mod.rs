@@ -7,6 +7,7 @@
 //! `cargo bench` targets ([`bench`]).
 
 pub mod bench;
+pub mod checksum;
 pub mod json;
 pub mod par;
 pub mod radix;
