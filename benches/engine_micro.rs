@@ -18,10 +18,10 @@
 
 use std::time::Duration;
 
-use soybean::lower::lower;
+use soybean::lower::try_lower;
 use soybean::models::{alexnet, transformer, TransformerConfig};
-use soybean::planner::k_cut;
-use soybean::sim::{chrome_trace_json, run_program, try_simulate, SimConfig, Topology};
+use soybean::planner::try_k_cut;
+use soybean::sim::{chrome_trace_json, try_run_program, try_simulate, SimConfig, Topology};
 use soybean::util::bench::{time_it, BenchLog};
 
 fn main() {
@@ -37,8 +37,8 @@ fn main() {
 
     let mut gate = None;
     for (name, g) in &workloads {
-        let plan = k_cut(g, 3);
-        let p = lower(g, &plan, &cfg);
+        let plan = try_k_cut(g, 3).unwrap();
+        let p = try_lower(g, &plan, &cfg).unwrap();
         let sim = try_simulate(g, &plan, &cfg).expect("plan simulates");
 
         // One-theory contract before any timing: lowered bytes == plan's
@@ -46,7 +46,7 @@ fn main() {
         assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != plan cost");
         assert_eq!(p.tier_bytes(), sim.tier_bytes, "{name}: tier meter != sim");
 
-        let r = run_program(&p, &topo);
+        let r = try_run_program(&p, &topo).unwrap();
         assert_eq!(r.compute_s, sim.compute_s, "{name}: compute model diverged");
         let slack = cfg.latency * r.transfers_per_device as f64 + 1e-9;
         assert!(
@@ -56,10 +56,10 @@ fn main() {
         );
 
         let m_lower = time_it(1, Duration::from_millis(300), || {
-            std::hint::black_box(lower(g, &plan, &cfg));
+            std::hint::black_box(try_lower(g, &plan, &cfg).unwrap());
         });
         let m_engine = time_it(1, Duration::from_millis(300), || {
-            std::hint::black_box(run_program(&p, &topo));
+            std::hint::black_box(try_run_program(&p, &topo).unwrap());
         });
         log.row(
             &format!("lower/{name}"),

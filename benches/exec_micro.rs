@@ -23,9 +23,9 @@
 use std::time::Duration;
 
 use soybean::graph::{eval_serial, seed_values};
-use soybean::lower::lower;
+use soybean::lower::try_lower;
 use soybean::models::{transformer, TransformerConfig};
-use soybean::planner::k_cut;
+use soybean::planner::try_k_cut;
 use soybean::sim::SimConfig;
 use soybean::spmd::{execute, worst_divergence};
 use soybean::util::bench::{time_it, BenchLog};
@@ -47,8 +47,8 @@ fn main() {
         classes: 64,
     };
     let g = transformer(&bench_cfg);
-    let plan = k_cut(&g, 3);
-    let program = lower(&g, &plan, &cfg);
+    let plan = try_k_cut(&g, 3).unwrap();
+    let program = try_lower(&g, &plan, &cfg).unwrap();
     assert_eq!(program.total_bytes(), plan.total_cost(), "lowered bytes != plan cost");
     let init = seed_values(&g, 42);
 
@@ -88,8 +88,8 @@ fn main() {
     // The differential-harness config (rust/tests/differential.rs), as a
     // tracked row so its cost trend stays visible.
     let g_tiny = transformer(&TransformerConfig::tiny4());
-    let plan_tiny = k_cut(&g_tiny, 3);
-    let program_tiny = lower(&g_tiny, &plan_tiny, &cfg);
+    let plan_tiny = try_k_cut(&g_tiny, 3).unwrap();
+    let program_tiny = try_lower(&g_tiny, &plan_tiny, &cfg).unwrap();
     let init_tiny = seed_values(&g_tiny, 42);
     let m_tiny = time_it(1, Duration::from_millis(200), || {
         std::hint::black_box(execute(&g_tiny, &plan_tiny, &program_tiny, &init_tiny).expect("execution"));

@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use soybean::graph::bfs_levels;
 use soybean::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
-use soybean::planner::{k_cut, one_cut, reference::one_cut_reference};
+use soybean::planner::{try_k_cut, try_one_cut, reference::one_cut_reference};
 use soybean::util::bench::{time_it, BenchLog};
 
 fn main() {
@@ -35,11 +35,11 @@ fn main() {
         // Bit-identical equivalence is part of the bench contract: a fast
         // wrong planner is not a speedup. Solve once for the check; the
         // timed loops below only measure.
-        let fast = one_cut(g);
+        let fast = try_one_cut(g).unwrap();
         let slow = one_cut_reference(g);
         assert_eq!(fast.cost, slow.cost, "{name}: cost diverged");
         let m = time_it(1, Duration::from_millis(300), || {
-            std::hint::black_box(one_cut(g));
+            std::hint::black_box(try_one_cut(g).unwrap());
         });
         let m_ref = time_it(1, Duration::from_millis(300), || {
             std::hint::black_box(one_cut_reference(g));
@@ -73,7 +73,7 @@ fn main() {
 
     for (name, g) in &workloads {
         let m = time_it(1, Duration::from_millis(500), || {
-            std::hint::black_box(k_cut(g, 3));
+            std::hint::black_box(try_k_cut(g, 3).unwrap());
         });
         log.row(&format!("k_cut3/{name}"), &[("ms", format!("{:.2}", m.mean_ms()))]);
         if *name == "vgg16" {

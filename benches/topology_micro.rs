@@ -24,8 +24,8 @@ use std::time::Duration;
 
 use soybean::lower::try_lower;
 use soybean::models::{transformer, vgg16, TransformerConfig};
-use soybean::planner::{k_cut, try_plan_topology_aware};
-use soybean::sim::{run_program, Topology};
+use soybean::planner::{try_k_cut, try_plan_topology_aware};
+use soybean::sim::{try_run_program, Topology};
 use soybean::util::bench::{time_it, BenchLog};
 
 fn main() {
@@ -48,7 +48,7 @@ fn main() {
         total_plan_s += m_plan.min.as_secs_f64();
 
         let aware = try_plan_topology_aware(g, 8, &topo).unwrap();
-        let flat = k_cut(g, 3);
+        let flat = try_k_cut(g, 3).unwrap();
 
         // One-theory contract on both plans: lowered bytes == Theorem-1.
         let p_flat = try_lower(g, &flat, &cfg).unwrap();
@@ -59,8 +59,8 @@ fn main() {
         // Engine-simulated steps on the two-tier topology — the bench
         // re-runs the exact pipeline the planner scored candidates with,
         // so the report's numbers must reproduce.
-        let flat_step = run_program(&p_flat, &topo).step_s;
-        let aware_step = run_program(&p_aware, &topo).step_s;
+        let flat_step = try_run_program(&p_flat, &topo).unwrap().step_s;
+        let aware_step = try_run_program(&p_aware, &topo).unwrap().step_s;
         assert_eq!(flat_step, aware.flat_step_s, "{name}: flat step not reproducible");
         assert_eq!(aware_step, aware.step_s, "{name}: aware step not reproducible");
         assert!(

@@ -22,8 +22,8 @@ use std::time::Duration;
 use soybean::graph::bfs_levels;
 use soybean::models::{attention_probe, transformer, TransformerConfig};
 use soybean::planner::bruteforce::brute_force;
-use soybean::planner::{classify, k_cut, one_cut, reference::one_cut_reference, Planner, Strategy};
-use soybean::sim::{simulate, simulate_classic_dp, SimConfig};
+use soybean::planner::{classify, try_k_cut, try_one_cut, reference::one_cut_reference, Planner, Strategy};
+use soybean::sim::{try_simulate, try_simulate_classic_dp, SimConfig};
 use soybean::util::bench::{time_it, BenchLog};
 
 fn main() {
@@ -40,10 +40,10 @@ fn main() {
     // 1-layer attention core, reference equivalence on both stacks.
     let probe = attention_probe();
     let bf = brute_force(&probe, 100_000);
-    let dp = one_cut(&probe);
+    let dp = try_one_cut(&probe).unwrap();
     assert_eq!(dp.cost, bf.cost, "one-cut diverged from brute force on the attention core");
     for (name, g) in &workloads {
-        let fast = one_cut(g);
+        let fast = try_one_cut(g).unwrap();
         let slow = one_cut_reference(g);
         assert_eq!(fast.cost, slow.cost, "{name}: cost diverged from reference");
         assert_eq!(fast.tiles, slow.tiles, "{name}: tiles diverged from reference");
@@ -52,7 +52,7 @@ fn main() {
     for (name, g) in &workloads {
         let lv = bfs_levels(g);
         let m = time_it(1, Duration::from_millis(300), || {
-            std::hint::black_box(one_cut(g));
+            std::hint::black_box(try_one_cut(g).unwrap());
         });
         let mut cols = vec![
             ("ms", format!("{:.2}", m.mean_ms())),
@@ -78,9 +78,9 @@ fn main() {
     // (solved once up front for the cost/classification row; the timing
     // loop then measures fresh solves).
     let g4 = &workloads[1].1;
-    let plan = k_cut(g4, 3);
+    let plan = try_k_cut(g4, 3).unwrap();
     let m = time_it(1, Duration::from_millis(500), || {
-        std::hint::black_box(k_cut(g4, 3));
+        std::hint::black_box(try_k_cut(g4, 3).unwrap());
     });
     log.row(
         "k_cut3/encoder-4L",
@@ -99,16 +99,16 @@ fn main() {
     // Byte-level sanity against stock data parallelism + the simulator's
     // one-theory contract (metered bytes == Theorem-1 cost).
     let cfg = SimConfig::default();
-    let dp_plan = Planner::plan(g4, 3, Strategy::DataParallel);
+    let dp_plan = Planner::try_plan(g4, 3, Strategy::DataParallel).unwrap();
     assert!(
         plan.total_cost() <= dp_plan.total_cost(),
         "SOYBEAN plan moves more bytes than DP ({} > {})",
         plan.total_cost(),
         dp_plan.total_cost()
     );
-    let soy_sim = simulate(g4, &plan, &cfg);
+    let soy_sim = try_simulate(g4, &plan, &cfg).unwrap();
     assert_eq!(soy_sim.total_bytes, plan.total_cost(), "sim bytes != plan cost");
-    let dp_sim = simulate_classic_dp(g4, &dp_plan, &cfg);
+    let dp_sim = try_simulate_classic_dp(g4, &dp_plan, &cfg).unwrap();
     log.row(
         "simulate/encoder-4L",
         &[

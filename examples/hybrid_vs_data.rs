@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for strat in [Strategy::DataParallel, Strategy::Soybean] {
         let params = init_mlp_params(3, &dims);
-        let plan = Planner::plan(&g, 2, strat);
+        let plan = Planner::try_plan(&g, 2, strat).unwrap();
         let mut t = ParallelTrainer::new(client.clone(), g.clone(), plan, &params, 0.05)?;
         let mut loss = 0.0;
         for _ in 0..3 {

@@ -27,7 +27,7 @@
 //! With `--topology <flat|two-tier|fat-tree>`, vgg16 and the transformer
 //! encoder are planned **both ways** for 8 devices on the named preset —
 //! the byte-objective flat plan and the topology-aware plan
-//! (`plan_topology_aware`, docs/topology.md) — and the full candidate
+//! (`try_plan_topology_aware`, docs/topology.md) — and the full candidate
 //! scoreboard plus both engine-simulated step times are printed.
 //!
 //! With `--execute`, each 8-device plan additionally **runs** on the
@@ -39,16 +39,25 @@
 
 use soybean::exec::Placement;
 use soybean::graph::{eval_serial, seed_values};
-use soybean::lower::lower;
 use soybean::models::{
     alexnet, alexnet_scaled, mlp, transformer, vgg16, MlpConfig, TransformerConfig,
 };
-use soybean::planner::{classify, try_plan_topology_aware, Planner, Strategy};
-use soybean::sim::{chrome_trace_json, run_program, simulate, SimConfig, Topology};
+use soybean::planner::{classify, try_plan_topology_aware};
+use soybean::sim::{chrome_trace_json, try_run_program, Topology};
 use soybean::spmd::{
-    execute, execute_with_recovery, worst_divergence, FaultPlan, RecoverOptions, RecoveryOutcome,
+    execute_with_recovery, worst_divergence, ExecOptions, FaultPlan, RecoverOptions,
+    RecoveryOutcome,
 };
 use soybean::tiling::describe_seq;
+use soybean::Session;
+
+/// The byte-objective planning surface: a flat topology makes the
+/// topology-aware portfolio fall back to the byte-LUT k-cut plan bit for
+/// bit, so these sections print the same tilings the paper's optimizer
+/// chooses.
+fn flat_topo(k: usize) -> Topology {
+    Topology::flat(k, 10.0e9, 20e-6, 4.0)
+}
 
 /// `--inject <spec>`: reproduce a named fault scenario on the 4-device
 /// MLP plan and print the structured error chain plus the recovery
@@ -79,17 +88,19 @@ fn inject_scenario(spec: &str) {
         other => panic!("unknown fault kind `{other}` (kill|panic|drop|delay|corrupt)"),
     };
 
-    let g = mlp(&MlpConfig::fig8(16, 16));
-    let plan = Planner::plan(&g, 2, Strategy::Soybean);
-    let program = lower(&g, &plan, &SimConfig::default());
-    let init = seed_values(&g, 42);
-    let mut opts = RecoverOptions::default();
-    opts.exec.deadline = std::time::Duration::from_secs(2);
-    opts.exec.faults = Some(faults);
-    opts.backoff = std::time::Duration::from_millis(5);
+    let session =
+        Session::build(mlp(&MlpConfig::fig8(16, 16)), 4, &flat_topo(2)).expect("session build");
+    let init = seed_values(session.graph(), 42);
+    let desc = faults.describe();
+    let opts = RecoverOptions::default()
+        .exec(
+            ExecOptions::default().deadline(std::time::Duration::from_secs(2)).fault_plan(faults),
+        )
+        .backoff(std::time::Duration::from_millis(5));
 
-    println!("\n=== fault scenario: {} (mlp, 4 devices) ===", opts.exec.faults.as_ref().unwrap().describe());
-    match execute_with_recovery(&g, &plan, &program, &init, &opts) {
+    println!("\n=== fault scenario: {desc} (mlp, 4 devices) ===");
+    let (g, plan, program) = (session.graph(), session.plan(), session.program());
+    match execute_with_recovery(g, plan, program, &init, &opts) {
         Ok(r) => {
             for (i, e) in r.failures.iter().enumerate() {
                 println!("  attempt {i}: {e}");
@@ -104,8 +115,8 @@ fn inject_scenario(spec: &str) {
                      re-planned onto {devices} survivors and resumed from checkpoint"
                 ),
             }
-            let serial = eval_serial(&g, &init).expect("serial evaluation");
-            let (worst, tensor) = worst_divergence(&g, &r.report, &serial);
+            let serial = eval_serial(g, &init).expect("serial evaluation");
+            let (worst, tensor) = worst_divergence(g, &r.report, &serial);
             let status = if worst <= 1e-5 { "OK" } else { "DIVERGED" };
             println!("  differential: max rel err {worst:.2e} on `{tensor}` [{status}]");
             assert!(worst <= 1e-5, "recovered run diverged from serial");
@@ -116,15 +127,13 @@ fn inject_scenario(spec: &str) {
 
 /// `--execute`: run the 8-device SOYBEAN plan on the threaded executor
 /// and print the differential report against the serial interpreter.
-fn execute_and_compare(name: &str, g: &soybean::Graph) {
-    let cfg = SimConfig::default();
-    let plan = Planner::plan(g, 3, Strategy::Soybean);
-    let program = lower(g, &plan, &cfg);
-    let init = seed_values(g, 42);
-    let report = execute(g, &plan, &program, &init).expect("threaded execution");
-    assert_eq!(report.instr_bytes, plan.total_cost(), "{name}: meter != Theorem-1");
-    let serial = eval_serial(g, &init).expect("serial evaluation");
-    let (worst, tensor) = worst_divergence(g, &report, &serial);
+fn execute_and_compare(name: &str, g: soybean::Graph) {
+    let session = Session::build(g, 8, &flat_topo(3)).expect("session build");
+    let init = seed_values(session.graph(), 42);
+    let report = session.execute(&init).expect("threaded execution");
+    assert_eq!(report.instr_bytes, session.plan().total_cost(), "{name}: meter != Theorem-1");
+    let serial = eval_serial(session.graph(), &init).expect("serial evaluation");
+    let (worst, tensor) = worst_divergence(session.graph(), &report, &serial);
     let status = if worst <= 1e-5 { "OK" } else { "DIVERGED" };
     println!(
         "  {name:<16} 8 devices: max rel err {worst:.2e} on `{tensor}` [{status}]  \
@@ -136,11 +145,10 @@ fn execute_and_compare(name: &str, g: &soybean::Graph) {
 }
 
 /// Compile the plan to SPMD programs and (optionally) schedule it.
-fn lower_and_trace(name: &str, g: &soybean::Graph, trace: bool) {
-    let cfg = SimConfig::default();
+fn lower_and_trace(name: &str, g: soybean::Graph, trace: bool) {
     let topo = Topology::p2_8xlarge();
-    let plan = Planner::plan(g, 3, Strategy::Soybean);
-    let p = lower(g, &plan, &cfg);
+    let session = Session::build(g, 8, &topo).expect("session build");
+    let (plan, p) = (session.plan(), session.program());
     assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != Theorem-1 cost");
     println!("\n--- {name}: lowered SPMD program (8 devices) ---");
     let mix: Vec<String> = p.histogram().iter().map(|(k, c)| format!("{c} {k}")).collect();
@@ -151,8 +159,8 @@ fn lower_and_trace(name: &str, g: &soybean::Graph, trace: bool) {
     println!("device 0 stream (head):");
     print!("{}", p.describe_device(0, 14));
     if trace {
-        let r = run_program(&p, &topo);
-        let sim = simulate(g, &plan, &cfg);
+        let r = try_run_program(p, &topo).unwrap();
+        let sim = session.simulate().expect("analytic simulation");
         println!(
             "event-engine step {:.3} ms (analytic model {:.3} ms, compute floor {:.3} ms)",
             r.step_s * 1e3,
@@ -207,10 +215,15 @@ fn main() {
     let placement = Placement::p2_8xlarge();
 
     // 1. The §2.2 MLP: hybrid wins.
-    let g = mlp(&MlpConfig { batch: 400, dims: vec![300; 6], bias: false });
-    let plan = Planner::plan(&g, 3, Strategy::Soybean);
+    let session = Session::build(
+        mlp(&MlpConfig { batch: 400, dims: vec![300; 6], bias: false }),
+        8,
+        &flat_topo(3),
+    )
+    .expect("session build");
+    let (g, plan) = (session.graph(), session.plan());
     println!("=== 5-layer MLP(300) batch 400, 8 devices ===");
-    println!("classification: {}", classify(&g, &plan.tiles));
+    println!("{}", session.plan_summary());
     for (i, (d, tier)) in plan.cut_costs.iter().zip(&placement.tiers).enumerate() {
         println!("  cut {i} ({tier:>12}): {:.3} MB", *d as f64 / 1e6);
     }
@@ -219,13 +232,13 @@ fn main() {
     }
 
     // 2. AlexNet: the per-layer story of Figure 10(a).
-    let g = alexnet(256);
-    let plan = Planner::plan(&g, 3, Strategy::Soybean);
+    let session = Session::build(alexnet(256), 8, &flat_topo(3)).expect("session build");
+    let (g, plan) = (session.graph(), session.plan());
     println!("\n=== AlexNet batch 256, 8 devices ===");
-    println!("classification: {}", classify(&g, &plan.tiles));
+    println!("classification: {}", classify(g, &plan.tiles));
     println!("total comm: {:.1} MB (DP baseline: {:.1} MB)",
         plan.total_cost() as f64 / 1e6,
-        soybean::planner::baselines::data_parallel(&g, 3).total_cost() as f64 / 1e6);
+        soybean::planner::baselines::data_parallel(g, 3).total_cost() as f64 / 1e6);
     println!("{:<12} {:<20} tiling", "layer", "shape");
     for t in &g.tensors {
         if t.kind == soybean::graph::TensorKind::Weight {
@@ -237,14 +250,16 @@ fn main() {
               Krizhevsky's 'one weird trick', discovered automatically.");
 
     // 3. The post-paper workload: a GPT-2-style encoder stack.
-    let g = transformer(&TransformerConfig::micro());
-    let plan = Planner::plan(&g, 3, Strategy::Soybean);
+    let session =
+        Session::build(transformer(&TransformerConfig::micro()), 8, &flat_topo(3))
+            .expect("session build");
+    let (g, plan) = (session.graph(), session.plan());
     println!("\n=== transformer encoder (4 layers, 4 heads, d_model 256), 8 devices ===");
-    println!("classification: {}", classify(&g, &plan.tiles));
+    println!("classification: {}", classify(g, &plan.tiles));
     println!(
         "total comm: {:.1} MB (DP baseline: {:.1} MB)",
         plan.total_cost() as f64 / 1e6,
-        soybean::planner::baselines::data_parallel(&g, 3).total_cost() as f64 / 1e6
+        soybean::planner::baselines::data_parallel(g, 3).total_cost() as f64 / 1e6
     );
     for name in ["l0.wqkv", "l0.wo", "l0.ff1.w", "l0.slice_q.out", "l0.scores.out"] {
         let t = g.tensors.iter().find(|t| t.name == name).unwrap();
@@ -255,9 +270,9 @@ fn main() {
     // plan into explicit per-device collective programs and (with
     // `--trace`) schedule them on the event engine.
     if do_lower || do_trace {
-        lower_and_trace("vgg16", &vgg16(32), do_trace);
-        lower_and_trace("alexnet", &alexnet(128), do_trace);
-        lower_and_trace("transformer", &transformer(&TransformerConfig::micro()), do_trace);
+        lower_and_trace("vgg16", vgg16(32), do_trace);
+        lower_and_trace("alexnet", alexnet(128), do_trace);
+        lower_and_trace("transformer", transformer(&TransformerConfig::micro()), do_trace);
     }
 
     // 5. `--execute`: the correctness loop — run each 8-device plan on
@@ -266,9 +281,9 @@ fn main() {
     // instances of the same topologies.
     if do_execute {
         println!("\n=== threaded SPMD execution vs serial interpreter (8 devices) ===");
-        execute_and_compare("mlp", &mlp(&MlpConfig::fig8(16, 16)));
-        execute_and_compare("transformer-4L", &transformer(&TransformerConfig::tiny4()));
-        execute_and_compare("alexnet-67px", &alexnet_scaled(8, 67, 256));
+        execute_and_compare("mlp", mlp(&MlpConfig::fig8(16, 16)));
+        execute_and_compare("transformer-4L", transformer(&TransformerConfig::tiny4()));
+        execute_and_compare("alexnet-67px", alexnet_scaled(8, 67, 256));
     }
 
     // 6. `--topology <preset>`: close the planner/topology loop — plan

@@ -15,7 +15,7 @@ use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, Synt
 use soybean::models::{mlp, MlpConfig};
 use soybean::planner::{classify, Planner, Strategy};
 use soybean::runtime::{ArtifactRegistry, Client};
-use soybean::sim::{simulate, simulate_classic_dp, SimConfig};
+use soybean::sim::{try_simulate, try_simulate_classic_dp, SimConfig};
 
 fn main() -> anyhow::Result<()> {
     // 1. The serial dataflow graph of one training step.
@@ -27,11 +27,11 @@ fn main() -> anyhow::Result<()> {
     // 2. Plan for 4 devices; compare the three strategies.
     let sim_cfg = SimConfig::default();
     for strat in Strategy::all() {
-        let plan = Planner::plan(&g, 2, strat);
+        let plan = Planner::try_plan(&g, 2, strat).unwrap();
         let r = if strat == Strategy::DataParallel {
-            simulate_classic_dp(&g, &plan, &sim_cfg)
+            try_simulate_classic_dp(&g, &plan, &sim_cfg).unwrap()
         } else {
-            simulate(&g, &plan, &sim_cfg)
+            try_simulate(&g, &plan, &sim_cfg).unwrap()
         };
         println!(
             "{:<8}  comm {:>8.3} MB   simulated step {:>7.3} ms   ({})",
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let params = init_mlp_params(42, &dims);
     let mut serial =
         SerialTrainer::from_artifact(&client, &reg, "mlp_step_small_pallas", params.clone(), 0.1)?;
-    let plan = Planner::plan(&g, 2, Strategy::Soybean);
+    let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
     let mut parallel = ParallelTrainer::new(client.clone(), g, plan, &params, 0.1)?;
 
     let mut data = SyntheticData::new(7, dims[0], *dims.last().unwrap());

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let mut serial = SerialTrainer::from_artifact(&client, &reg, "mlp_step", params.clone(), lr)?;
 
     // Parallel: SOYBEAN's optimal 4-device plan through the engine.
-    let plan = Planner::plan(&g, 2, Strategy::Soybean);
+    let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
     println!(
         "plan: {} over {} devices, {:.2} MB per step (vs DP {:.2} MB)",
         classify(&g, &plan.tiles),

@@ -205,7 +205,7 @@ mod tests {
                 SerialTrainer::from_artifact(&c, &reg, "mlp_step_small", params.clone(), 0.05)
                     .unwrap();
             let g = mlp(&cfg);
-            let plan = Planner::plan(&g, k, strategy);
+            let plan = Planner::try_plan(&g, k, strategy).unwrap();
             let mut par = ParallelTrainer::new(c.clone(), g, plan, &params, 0.05).unwrap();
 
             for s in 0..3 {
@@ -232,7 +232,7 @@ mod tests {
         let c = client();
         let cfg = MlpConfig { batch: 32, dims: SMALL_DIMS.to_vec(), bias: true };
         let g = mlp(&cfg);
-        let plan = Planner::plan(&g, 2, Strategy::DataParallel);
+        let plan = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
         let params = init_mlp_params(17, &SMALL_DIMS);
         let mut par = ParallelTrainer::new(c, g, plan, &params, 0.05).unwrap();
         let mut data = SyntheticData::new(21, 64, 10);

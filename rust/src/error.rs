@@ -1,0 +1,109 @@
+//! The crate-level error type: one enum over every layer's failures.
+//!
+//! The low-level modules keep their own precise errors —
+//! [`PlanError`] for planning/lowering/validation, [`ExecError`] for the
+//! threaded executor, [`ServeError`] for the serving runtime — but the
+//! high-level entry points ([`crate::serve::Session`],
+//! [`crate::serve::ServeEngine`]) cross all three layers, and forcing
+//! callers to juggle three error types at one call site defeats the
+//! point of a facade. [`Error`] wraps them with `From` impls, so `?`
+//! composes across layers and a `match` can still recover the precise
+//! cause.
+
+use std::fmt;
+
+use crate::graph::InterpError;
+use crate::planner::PlanError;
+use crate::serve::ServeError;
+use crate::spmd::ExecError;
+
+/// Any failure the crate's high-level APIs can return.
+///
+/// Each variant wraps one layer's structured error; the [`From`] impls
+/// let `?` lift layer errors into this type anywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// Planning, lowering, simulation, or validation failed.
+    Plan(PlanError),
+    /// Threaded SPMD execution failed (includes bad input values, which
+    /// arrive as [`ExecError::Input`]).
+    Exec(ExecError),
+    /// The serving runtime failed (engine shut down, malformed request).
+    Serve(ServeError),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Plan(e) => write!(f, "{e}"),
+            Error::Exec(e) => write!(f, "{e}"),
+            Error::Serve(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Plan(e) => Some(e),
+            Error::Exec(e) => Some(e),
+            Error::Serve(e) => Some(e),
+        }
+    }
+}
+
+impl From<PlanError> for Error {
+    fn from(e: PlanError) -> Self {
+        Error::Plan(e)
+    }
+}
+
+impl From<ExecError> for Error {
+    fn from(e: ExecError) -> Self {
+        // An executor failure that is really a plan/validation failure
+        // surfaces as `Plan`, so matching on `Error::Plan` works no
+        // matter which layer detected it.
+        match e {
+            ExecError::Plan(p) => Error::Plan(p),
+            other => Error::Exec(other),
+        }
+    }
+}
+
+impl From<InterpError> for Error {
+    fn from(e: InterpError) -> Self {
+        Error::Exec(ExecError::Input(e))
+    }
+}
+
+impl From<ServeError> for Error {
+    fn from(e: ServeError) -> Self {
+        Error::Serve(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_impls_normalize_layers() {
+        let e: Error = PlanError::Infeasible.into();
+        assert!(matches!(e, Error::Plan(PlanError::Infeasible)));
+        // Exec-wrapped plan errors unwrap to the Plan variant.
+        let e: Error = ExecError::Plan(PlanError::Infeasible).into();
+        assert!(matches!(e, Error::Plan(PlanError::Infeasible)));
+        let e: Error = ExecError::MeterMismatch { metered: 1, plan: 2 }.into();
+        assert!(matches!(e, Error::Exec(ExecError::MeterMismatch { .. })));
+        let e: Error = InterpError::MissingInput { tensor: "x".into() }.into();
+        assert!(matches!(e, Error::Exec(ExecError::Input(_))));
+    }
+
+    #[test]
+    fn display_passes_through_and_source_is_set() {
+        let e = Error::from(ExecError::MeterMismatch { metered: 8, plan: 16 });
+        assert!(e.to_string().contains("meters 8 B"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+}

@@ -156,7 +156,7 @@ mod tests {
             mlp(&MlpConfig::e2e()),
             crate::models::cnn5(16, 6, 4, 32, 10),
         ] {
-            let plan = Planner::plan(&g, 2, Strategy::Soybean);
+            let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             assert_eq!(tasks.len(), g.ops.len());
             assert_realizable(&g, &tasks);
@@ -174,7 +174,7 @@ mod tests {
             (Strategy::Soybean, 2),
             (Strategy::Soybean, 3),
         ] {
-            let plan = Planner::plan(&g, k, strat);
+            let plan = Planner::try_plan(&g, k, strat).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             assert_realizable(&g, &tasks);
         }
@@ -210,7 +210,7 @@ mod tests {
         // The §5 execution-graph construction covers the new op set.
         let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
         for k in 0..=2 {
-            let plan = Planner::plan(&g, k, Strategy::Soybean);
+            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             assert_eq!(tasks.len(), g.ops.len());
             assert_realizable(&g, &tasks);
@@ -220,7 +220,7 @@ mod tests {
     #[test]
     fn required_layouts_have_k_entries() {
         let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
-        let plan = Planner::plan(&g, 3, Strategy::Soybean);
+        let plan = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
         for task in build_shard_tasks(&g, &plan) {
             assert_eq!(task.produced.len(), 3);
             for r in &task.required_ins {

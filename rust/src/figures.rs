@@ -9,7 +9,7 @@
 
 use crate::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
 use crate::planner::{Planner, Strategy};
-use crate::sim::{simulate, simulate_classic_dp, SimConfig, SimReport};
+use crate::sim::{try_simulate, try_simulate_classic_dp, SimConfig, SimReport};
 use crate::tiling::paper_example;
 
 /// One measured point: strategy × device count.
@@ -33,11 +33,11 @@ fn sweep(g: &crate::graph::Graph, ks: &[usize], cfg: &SimConfig) -> Vec<Point> {
     let mut out = Vec::new();
     for &k in ks {
         for strat in Strategy::all() {
-            let plan = Planner::plan(g, k, strat);
+            let plan = Planner::try_plan(g, k, strat).unwrap();
             let r: SimReport = if strat == Strategy::DataParallel {
-                simulate_classic_dp(g, &plan, cfg)
+                try_simulate_classic_dp(g, &plan, cfg).unwrap()
             } else {
-                simulate(g, &plan, cfg)
+                try_simulate(g, &plan, cfg).unwrap()
             };
             out.push(Point {
                 strategy: strat.name(),
@@ -111,9 +111,12 @@ pub fn fig10(model: &str, batches: &[usize], cfg: &SimConfig) -> (String, Vec<(u
             "vgg" => vgg16(b),
             other => panic!("unknown model {other}"),
         };
-        let single = simulate(&g, &Planner::plan(&g, 0, Strategy::Soybean), cfg);
-        let dp = simulate_classic_dp(&g, &Planner::plan(&g, 3, Strategy::DataParallel), cfg);
-        let soy = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), cfg);
+        let p1 = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let pdp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let psoy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let single = try_simulate(&g, &p1, cfg).unwrap();
+        let dp = try_simulate_classic_dp(&g, &pdp, cfg).unwrap();
+        let soy = try_simulate(&g, &psoy, cfg).unwrap();
         let sp_dp = single.step_s / dp.step_s;
         let sp_soy = single.step_s / soy.step_s;
         let _ = writeln!(s, "{b:>8} {sp_dp:>12.2} {sp_soy:>12.2}");
@@ -138,9 +141,9 @@ pub fn example22() -> String {
 
     // The §4 conversion model on the full training graph, 16 devices.
     let gt = mlp(&MlpConfig { batch: 400, dims: vec![300; 6], bias: false });
-    let dp = Planner::plan(&gt, 4, Strategy::DataParallel);
-    let mp = Planner::plan(&gt, 4, Strategy::ModelParallel);
-    let soy = Planner::plan(&gt, 4, Strategy::Soybean);
+    let dp = Planner::try_plan(&gt, 4, Strategy::DataParallel).unwrap();
+    let mp = Planner::try_plan(&gt, 4, Strategy::ModelParallel).unwrap();
+    let soy = Planner::try_plan(&gt, 4, Strategy::Soybean).unwrap();
     let _ = writeln!(s, "§4 conversion-cost model (full training step, k=4):");
     let _ = writeln!(s, "  data parallelism : {:>6.1} MB", dp.total_cost() as f64 / 1e6);
     let _ = writeln!(s, "  model parallelism: {:>6.1} MB", mp.total_cost() as f64 / 1e6);

@@ -46,6 +46,10 @@
 //!   the host-tensor type is gated behind the `pjrt` cargo feature, which
 //!   needs the vendored `xla`/`anyhow` crates — the default build is
 //!   dependency-free.
+//! - [`serve`] — the long-lived serving runtime: [`serve::Session`]
+//!   (plan once, execute forever — the unified facade over planner +
+//!   lowering + executor) and [`serve::ServeEngine`] (persistent warm
+//!   worker pool, dynamic batching, plan cache, latency stats).
 //! - [`coordinator`] — the training loop: BSP batches, SGD, metrics.
 //! - [`models`] — the model zoo: MLP, parametric CNN, AlexNet, VGG-16 as
 //!   semantic graphs (the paper's evaluation workloads).
@@ -58,6 +62,7 @@
 #![warn(missing_docs)]
 
 pub mod coordinator;
+mod error;
 pub mod exec;
 pub mod figures;
 pub mod graph;
@@ -65,13 +70,16 @@ pub mod lower;
 pub mod models;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spmd;
 pub mod tiling;
 
 pub mod util;
 
+pub use error::Error;
 pub use graph::{Graph, GraphBuilder, Op, OpId, OpKind, TensorId, TensorInfo};
+pub use serve::{ServeEngine, ServeOptions, ServeStats, Session};
 pub use tiling::{Tile, TileSeq};
 
 /// The narrative documentation book (sources under `docs/`), compiled
@@ -104,4 +112,9 @@ pub mod book {
     /// interpreter, and the differential harness between them.
     #[doc = include_str!("../../docs/execution.md")]
     pub mod execution {}
+
+    /// Serving: the `Session` facade, the persistent worker pool, dynamic
+    /// batching, plan caching, and the stats surface.
+    #[doc = include_str!("../../docs/serving.md")]
+    pub mod serving {}
 }

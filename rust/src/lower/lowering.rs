@@ -77,35 +77,37 @@ fn scatter_axis(shape: &[usize]) -> Option<usize> {
 }
 
 /// Lower `(g, plan)` into per-device SPMD programs. Panics on plans with
-/// no feasible form (see [`try_lower`]).
+/// no feasible form.
+#[deprecated(note = "use `try_lower` and handle the `PlanError`")]
+pub fn lower(g: &Graph, plan: &Plan, cfg: &SimConfig) -> LoweredProgram {
+    try_lower(g, plan, cfg).expect("lowering failed")
+}
+
+/// Lower `(g, plan)` into per-device SPMD programs, with structured
+/// errors for plans with no feasible form at some cut.
 ///
 /// # Examples
 ///
 /// ```
-/// use soybean::lower::lower;
+/// use soybean::lower::try_lower;
 /// use soybean::models::{mlp, MlpConfig};
-/// use soybean::planner::k_cut;
+/// use soybean::planner::try_k_cut;
 /// use soybean::sim::SimConfig;
 ///
 /// let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 32], bias: false });
-/// let plan = k_cut(&g, 2);
-/// let program = lower(&g, &plan, &SimConfig::default());
+/// let plan = try_k_cut(&g, 2).unwrap();
+/// let program = try_lower(&g, &plan, &SimConfig::default()).unwrap();
 /// assert_eq!(program.devices, 4);
 /// // The one-theory contract: per-instruction bytes sum to Theorem 1.
 /// assert_eq!(program.total_bytes(), plan.total_cost());
 /// ```
-pub fn lower(g: &Graph, plan: &Plan, cfg: &SimConfig) -> LoweredProgram {
-    try_lower(g, plan, cfg).unwrap_or_else(|e| panic!("lowering failed: {e}"))
-}
-
-/// [`lower`] with structured errors.
 pub fn try_lower(g: &Graph, plan: &Plan, cfg: &SimConfig) -> Result<LoweredProgram, PlanError> {
     try_lower_forced(g, plan, cfg, &|_, _| None)
 }
 
 /// [`try_lower`] with per-op forced aligned forms (the classic-DP
 /// baseline lowers with [`crate::planner::classic_dp_form`], mirroring
-/// [`crate::sim::simulate_classic_dp`]).
+/// [`crate::sim::try_simulate_classic_dp`]).
 pub fn try_lower_forced(
     g: &Graph,
     plan: &Plan,
@@ -355,7 +357,7 @@ mod tests {
     use crate::graph::{append_backward, GraphBuilder, TensorKind};
     use crate::models::{cnn5, mlp, transformer, MlpConfig, TransformerConfig};
     use crate::planner::{classic_dp_form, eval_plan, Planner, Strategy};
-    use crate::sim::{simulate, simulate_classic_dp, try_simulate};
+    use crate::sim::{try_simulate, try_simulate_classic_dp};
     use crate::tiling::candidate_tiles;
     use crate::util::rng::Rng;
 
@@ -366,8 +368,8 @@ mod tests {
     #[test]
     fn serial_plan_lowers_to_pure_compute() {
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::plan(&g, 0, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
         assert_eq!(p.devices, 1);
         assert_eq!(p.total_bytes(), 0);
         assert!(p.transfers.is_empty());
@@ -395,14 +397,14 @@ mod tests {
         for (name, g, strategies) in &workloads {
             for &strat in strategies {
                 for k in 1..=2 {
-                    let plan = Planner::plan(g, k, strat);
+                    let plan = Planner::try_plan(g, k, strat).unwrap();
                     let (p, r) = if strat == Strategy::DataParallel {
                         (
                             try_lower_forced(g, &plan, &cfg(), &classic_dp_form).unwrap(),
-                            simulate_classic_dp(g, &plan, &cfg()),
+                            try_simulate_classic_dp(g, &plan, &cfg()).unwrap(),
                         )
                     } else {
-                        (lower(g, &plan, &cfg()), simulate(g, &plan, &cfg()))
+                        (try_lower(g, &plan, &cfg()).unwrap(), try_simulate(g, &plan, &cfg()).unwrap())
                     };
                     let label = format!("{name}/{}/k{k}", strat.name());
                     assert_eq!(p.total_bytes(), plan.total_cost(), "{label}: bytes != plan");
@@ -428,7 +430,7 @@ mod tests {
         // Stock data parallelism's allreduce decomposes into the classic
         // reduce-scatter + all-gather pair on every weight gradient.
         let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 32], bias: false });
-        let plan = Planner::plan(&g, 1, Strategy::DataParallel);
+        let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
         let grad_ids: Vec<usize> = g
             .tensors
@@ -460,7 +462,7 @@ mod tests {
         // lowers to the point-to-point SendRecv path at full 2S volume.
         let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 16], bias: false });
         let loss = g.tensors.iter().find(|t| t.rank() == 0).expect("scalar loss");
-        let plan = Planner::plan(&g, 1, Strategy::DataParallel);
+        let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
         let m = p
             .transfers
@@ -484,8 +486,8 @@ mod tests {
     #[test]
     fn every_wait_follows_its_start() {
         let g = transformer(&TransformerConfig::tiny());
-        let plan = Planner::plan(&g, 2, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
         for prog in &p.programs {
             let mut started = vec![false; p.transfers.len()];
             let mut starts = 0usize;

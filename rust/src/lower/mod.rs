@@ -29,4 +29,7 @@ mod ir;
 mod lowering;
 
 pub use ir::{CollectiveKind, DeviceProgram, Instr, LoweredProgram, TransferMeta};
-pub use lowering::{gather_realized_bytes, lower, try_lower, try_lower_forced};
+pub use lowering::{gather_realized_bytes, try_lower, try_lower_forced};
+// The panicking variant stays re-exported (deprecated) for one release.
+#[allow(deprecated)]
+pub use lowering::lower;

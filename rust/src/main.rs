@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use soybean::figures;
 use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 use soybean::planner::{classify, Planner, Strategy};
-use soybean::sim::{simulate, SimConfig};
+use soybean::sim::{try_simulate, SimConfig};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut flags = HashMap::new();
@@ -84,7 +84,7 @@ fn train(flags: &HashMap<String, String>) {
     let k = get(flags, "k", 2usize);
     let dims = vec![64usize, 128, 128, 10];
     let g = mlp(&MlpConfig { batch, dims: dims.clone(), bias: true });
-    let plan = Planner::plan(&g, k, strategy_of(flags));
+    let plan = Planner::try_plan(&g, k, strategy_of(flags)).unwrap();
     println!("plan: {} over {} devices", classify(&g, &plan.tiles), plan.devices());
     let client = std::sync::Arc::new(Client::cpu().expect("PJRT client"));
     let params = init_mlp_params(7, &dims);
@@ -123,7 +123,7 @@ fn main() {
         "plan" => {
             let g = model_graph(&flags);
             let k = get(&flags, "k", 3usize);
-            let plan = Planner::plan(&g, k, strategy_of(&flags));
+            let plan = Planner::try_plan(&g, k, strategy_of(&flags)).unwrap();
             println!("{}", plan.describe(&g));
             println!("classification: {}", classify(&g, &plan.tiles));
         }
@@ -131,8 +131,8 @@ fn main() {
             let g = model_graph(&flags);
             let k = get(&flags, "k", 3usize);
             for strat in Strategy::all() {
-                let plan = Planner::plan(&g, k, strat);
-                let r = simulate(&g, &plan, &cfg);
+                let plan = Planner::try_plan(&g, k, strat).unwrap();
+                let r = try_simulate(&g, &plan, &cfg).unwrap();
                 println!(
                     "{:<8} devices={} runtime={:.2}ms compute={:.2}ms overhead={:.2}ms comm={:.2}MB",
                     strat.name(),

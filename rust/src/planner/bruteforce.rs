@@ -48,7 +48,7 @@ pub fn brute_force(g: &Graph, limit: usize) -> OneCutPlan {
 mod tests {
     use super::*;
     use crate::graph::{append_backward, GraphBuilder};
-    use crate::planner::one_cut;
+    use crate::planner::try_one_cut;
     use crate::util::Rng;
 
     /// Random tiny training graph: 1–2 FC layers, optional bias/relu,
@@ -95,7 +95,7 @@ mod tests {
             let loss = b.softmax_xent("loss", h, y);
             append_backward(&mut b, loss);
             let g = b.finish();
-            let dp = one_cut(&g);
+            let dp = try_one_cut(&g).unwrap();
             let bf = brute_force(&g, 2_000_000);
             assert_eq!(dp.cost, bf.cost, "case {batch}x{din}x{dout}");
         }
@@ -121,7 +121,7 @@ mod tests {
             if states > 400_000 {
                 continue; // keep the test fast; plenty of small cases occur
             }
-            let dp = one_cut(&g);
+            let dp = try_one_cut(&g).unwrap();
             let bf = brute_force(&g, 400_000);
             assert_eq!(
                 dp.cost, bf.cost,
@@ -165,7 +165,7 @@ mod tests {
         // the pre-LUT reference, and brute force (which prices via direct
         // Eq. (2) evaluation, never the LUTs) must all agree bit for bit.
         let g = crate::models::attention_probe();
-        let dp = one_cut(&g);
+        let dp = try_one_cut(&g).unwrap();
         let bf = brute_force(&g, 100_000);
         assert_eq!(dp.cost, bf.cost, "DP vs brute force on attention probe:\n{}", g.dump());
         let reference = crate::planner::reference::one_cut_reference(&g);
@@ -198,7 +198,7 @@ mod tests {
             let logits = b.matmul("head", cm, w, false, false);
             b.softmax_xent("loss", logits, y);
             let g = b.finish();
-            let dp = one_cut(&g);
+            let dp = try_one_cut(&g).unwrap();
             let bf = brute_force(&g, 400_000);
             assert_eq!(dp.cost, bf.cost, "case b{batch} s{seq} d{d} h{heads}:\n{}", g.dump());
         }
@@ -221,7 +221,7 @@ mod tests {
         append_backward(&mut b, loss);
         let g = b.finish();
 
-        let dp = one_cut(&g);
+        let dp = try_one_cut(&g).unwrap();
         let cands: Vec<Vec<Tile>> = g.tensors.iter().map(candidate_tiles).collect();
         let mut rng = Rng::new(42);
         for _ in 0..200 {

@@ -159,10 +159,10 @@ pub fn apply_cut(g: &Graph, tiles: &[Tile]) -> Graph {
     sub
 }
 
-/// Algorithm 1: recursively one-cut, `k` times. Panics on planner failure
-/// (see [`try_k_cut`]).
+/// Algorithm 1: recursively one-cut, `k` times. Panics on planner failure.
+#[deprecated(note = "use `try_k_cut` and handle the `PlanError`")]
 pub fn k_cut(g: &Graph, k: usize) -> Plan {
-    try_k_cut(g, k).unwrap_or_else(|e| panic!("k-cut planning failed: {e}"))
+    try_k_cut(g, k).expect("k-cut planning failed")
 }
 
 /// Algorithm 1 with structured errors.
@@ -312,7 +312,7 @@ mod tests {
         // The §2.2 16-device setting: SOYBEAN must beat both pure schemes.
         let g = mlp_train(400, &[300; 6]);
         let k = 4;
-        let soy = k_cut(&g, k);
+        let soy = try_k_cut(&g, k).unwrap();
         let dp = super::super::baselines::data_parallel(&g, k);
         let mp = super::super::baselines::model_parallel(&g, k);
         assert!(soy.total_cost() <= dp.total_cost(), "soy {} dp {}", soy.total_cost(), dp.total_cost());
@@ -322,7 +322,7 @@ mod tests {
     #[test]
     fn kcut_costs_consistent_with_eval() {
         let g = mlp_train(64, &[32, 32, 32]);
-        let p = k_cut(&g, 2);
+        let p = try_k_cut(&g, 2).unwrap();
         let re = eval_plan(&g, &p.tiles);
         assert_eq!(p.cut_costs, re.cut_costs);
     }
@@ -335,7 +335,7 @@ mod tests {
         // at most doubled.
         for (batch, dims) in [(400usize, vec![300usize; 6]), (512, vec![256; 4]), (64, vec![512, 512, 512])] {
             let g = mlp_train(batch, &dims);
-            let p = k_cut(&g, 3);
+            let p = try_k_cut(&g, 3).unwrap();
             for j in 0..p.cut_costs.len() - 1 {
                 assert!(
                     p.cut_costs[j] <= 2 * p.cut_costs[j + 1].max(1),
@@ -357,7 +357,7 @@ mod tests {
         use crate::sim::Topology;
         let g = mlp_train(400, &[300; 6]);
         let k = 3;
-        let byte = k_cut(&g, k);
+        let byte = try_k_cut(&g, k).unwrap();
         for topo in [
             Topology::flat(k, 5.0e9, 0.0, 2.0),
             Topology::flat(1, 1.0e9, 0.0, 1.0),
@@ -373,7 +373,7 @@ mod tests {
     fn deeper_cuts_monotone_devices() {
         let g = mlp_train(128, &[64, 64]);
         for k in 0..4 {
-            let p = k_cut(&g, k);
+            let p = try_k_cut(&g, k).unwrap();
             assert_eq!(p.devices(), 1 << k);
             assert_eq!(p.cut_costs.len(), k);
         }
@@ -382,7 +382,7 @@ mod tests {
     #[test]
     fn validate_plan_rejects_structural_breakage() {
         let g = mlp_train(8, &[4, 4]);
-        let good = k_cut(&g, 2);
+        let good = try_k_cut(&g, 2).unwrap();
         assert!(validate_plan(&g, &good).is_ok());
         // Wrong tensor count.
         let bad = Plan { k: 2, tiles: vec![], cut_costs: vec![0, 0] };

@@ -26,14 +26,20 @@ pub mod reference;
 pub mod topology;
 
 pub use kcut::{
-    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, k_cut, price_forced,
-    replan_after_loss, try_k_cut, try_k_cut_weighted, validate_plan, Plan,
+    apply_cut, classic_dp_form, eval_plan, eval_plan_forced, price_forced, replan_after_loss,
+    try_k_cut, try_k_cut_weighted, validate_plan, Plan,
 };
-pub use onecut::{one_cut, price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
+pub use onecut::{price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
 pub use topology::{
-    modeled_step_s, plan_topology_aware, try_plan_topology_aware, CandidateScore, TopologyModel,
-    TopologyPlan,
+    modeled_step_s, try_plan_topology_aware, CandidateScore, TopologyModel, TopologyPlan,
 };
+// The panicking variants stay re-exported (deprecated) for one release.
+#[allow(deprecated)]
+pub use kcut::k_cut;
+#[allow(deprecated)]
+pub use onecut::one_cut;
+#[allow(deprecated)]
+pub use topology::plan_topology_aware;
 
 use crate::graph::Graph;
 use crate::tiling::TileSeq;
@@ -70,6 +76,14 @@ pub struct Planner;
 
 impl Planner {
     /// Produce a k-cut plan for `2^k` devices under the given strategy.
+    /// Panics on planner failure.
+    #[deprecated(note = "use `Planner::try_plan` and handle the `PlanError`")]
+    pub fn plan(g: &Graph, k: usize, strategy: Strategy) -> Plan {
+        Planner::try_plan(g, k, strategy).expect("planning failed")
+    }
+
+    /// Produce a k-cut plan for `2^k` devices under the given strategy,
+    /// with structured errors — the canonical entry point.
     ///
     /// # Examples
     ///
@@ -78,18 +92,18 @@ impl Planner {
     /// use soybean::planner::{Planner, Strategy};
     ///
     /// let g = mlp(&MlpConfig { batch: 128, dims: vec![64, 64], bias: false });
-    /// let soy = Planner::plan(&g, 2, Strategy::Soybean);
-    /// let dp = Planner::plan(&g, 2, Strategy::DataParallel);
+    /// let soy = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+    /// let dp = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
     /// assert_eq!(soy.devices(), 4);
     /// // The optimum never moves more bytes than a fixed baseline.
     /// assert!(soy.total_cost() <= dp.total_cost());
     /// ```
-    pub fn plan(g: &Graph, k: usize, strategy: Strategy) -> Plan {
-        match strategy {
-            Strategy::Soybean => k_cut(g, k),
+    pub fn try_plan(g: &Graph, k: usize, strategy: Strategy) -> Result<Plan, PlanError> {
+        Ok(match strategy {
+            Strategy::Soybean => try_k_cut(g, k)?,
             Strategy::DataParallel => baselines::data_parallel(g, k),
             Strategy::ModelParallel => baselines::model_parallel(g, k),
-        }
+        })
     }
 }
 

@@ -678,10 +678,10 @@ fn space_contrib(len: usize, radix: &[usize], w: &[(usize, usize)]) -> Vec<u32> 
     out
 }
 
-/// One-shot one-cut: build a solver and solve. Panics on planner failure
-/// (see [`try_one_cut`] for the error-returning variant).
+/// One-shot one-cut: build a solver and solve. Panics on planner failure.
+#[deprecated(note = "use `try_one_cut` and handle the `PlanError`")]
 pub fn one_cut(g: &Graph) -> OneCutPlan {
-    try_one_cut(g).unwrap_or_else(|e| panic!("one-cut planning failed: {e}"))
+    try_one_cut(g).expect("one-cut planning failed")
 }
 
 /// One-shot one-cut returning structured errors.
@@ -732,7 +732,7 @@ mod tests {
         // Wide batch, small weights: DP (all-R activations, rep weights)
         // should be optimal and cost exactly the gradient aggregation.
         let g = mlp_train(4096, &[64, 64, 64]);
-        let plan = one_cut(&g);
+        let plan = try_one_cut(&g).unwrap();
         // Weight matrices replicated.
         for t in &g.tensors {
             if t.kind == crate::graph::TensorKind::Weight && t.rank() == 2 {
@@ -750,7 +750,7 @@ mod tests {
         // Tiny batch, huge weights: replicating weights (DP) would pay
         // 2|W| per layer; splitting them must win.
         let g = mlp_train(8, &[1024, 1024, 1024]);
-        let plan = one_cut(&g);
+        let plan = try_one_cut(&g).unwrap();
         let n_split_weights = g
             .tensors
             .iter()
@@ -766,7 +766,7 @@ mod tests {
     #[test]
     fn price_matches_dp_cost() {
         let g = mlp_train(64, &[32, 48, 16]);
-        let plan = one_cut(&g);
+        let plan = try_one_cut(&g).unwrap();
         assert_eq!(price(&g, &plan.tiles), plan.cost);
     }
 
@@ -778,7 +778,7 @@ mod tests {
             (128, vec![64, 256, 64]),
         ] {
             let g = mlp_train(batch, &dims);
-            let plan = one_cut(&g);
+            let plan = try_one_cut(&g).unwrap();
             let dp = super::super::baselines::data_parallel_tiles(&g, 1);
             let mp = super::super::baselines::model_parallel_tiles(&g, 1);
             let dp_tiles: Vec<Tile> = dp.iter().map(|s| s[0]).collect();
@@ -795,7 +795,7 @@ mod tests {
         let w = b.weight("w", &[8, 8]);
         b.matmul("mm", x, w, false, false);
         let g = b.finish();
-        let plan = one_cut(&g);
+        let plan = try_one_cut(&g).unwrap();
         // One matmul alone always admits a zero-cost aligned tiling.
         assert_eq!(plan.cost, 0);
     }
@@ -803,7 +803,7 @@ mod tests {
     #[test]
     fn empty_graph() {
         let g = Graph::default();
-        let plan = one_cut(&g);
+        let plan = try_one_cut(&g).unwrap();
         assert_eq!(plan.cost, 0);
     }
 
@@ -829,10 +829,10 @@ mod tests {
         let g = mlp_train(128, &[64, 32, 16]);
         let solver = OneCutSolver::new(&g);
         let first = solver.solve(&g).unwrap();
-        assert_eq!(first.cost, one_cut(&g).cost);
+        assert_eq!(first.cost, try_one_cut(&g).unwrap().cost);
         let halved = apply_cut(&g, &first.tiles);
         let reused = solver.solve(&halved).unwrap();
-        let fresh = one_cut(&halved);
+        let fresh = try_one_cut(&halved).unwrap();
         assert_eq!(reused.cost, fresh.cost);
         assert_eq!(reused.tiles, fresh.tiles);
     }

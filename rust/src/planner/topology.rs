@@ -18,11 +18,11 @@
 //!    weighted plan drops marginal conversions whose startup cost exceeds
 //!    their byte savings, exactly the transfers that serialize on a
 //!    shared-bus tier (§6.2).
-//! 2. **Simulator-scored portfolio** ([`plan_topology_aware`]): the
+//! 2. **Simulator-scored portfolio** ([`try_plan_topology_aware`]): the
 //!    weighted plan competes with the byte plan and the two pure
 //!    baselines; every candidate is lowered to SPMD programs
 //!    ([`crate::lower`]) and scheduled by the discrete-event engine
-//!    ([`crate::sim::run_program`]) on the *actual* topology, and the
+//!    ([`crate::sim::try_run_program`]) on the *actual* topology, and the
 //!    fastest modeled step wins — FlexFlow's argument that a simulated
 //!    task graph, not an analytic total, is what makes strategy search
 //!    trustworthy. The byte plan is always in the pool and wins ties, so
@@ -31,7 +31,7 @@
 //!
 //! On a *flat* topology (all tiers identical) the byte objective already
 //! orders plans exactly like modeled time, up to the latency term the flat
-//! preset cannot use to discriminate tiers — so [`plan_topology_aware`]
+//! preset cannot use to discriminate tiers — so [`try_plan_topology_aware`]
 //! short-circuits to the byte-LUT path and returns **bit-identical** plans
 //! (asserted against [`super::reference`] in the property tests).
 //!
@@ -49,7 +49,7 @@
 
 use crate::graph::Graph;
 use crate::lower::try_lower;
-use crate::sim::{run_program, Topology};
+use crate::sim::{try_run_program, Topology};
 use crate::tiling::CutCostModel;
 
 use super::baselines;
@@ -98,13 +98,13 @@ impl TopologyModel {
     }
 
     /// Whether the source topology was flat (every tier identical) — the
-    /// case where [`plan_topology_aware`] stays on the byte-LUT path.
+    /// case where [`try_plan_topology_aware`] stays on the byte-LUT path.
     pub fn is_flat(&self) -> bool {
         self.flat
     }
 }
 
-/// One scored candidate from [`plan_topology_aware`]'s portfolio.
+/// One scored candidate from [`try_plan_topology_aware`]'s portfolio.
 #[derive(Debug, Clone)]
 pub struct CandidateScore {
     /// Candidate generator: `"flat-bytes"`, `"weighted-dp"`,
@@ -136,13 +136,13 @@ pub struct TopologyPlan {
 
 /// Model one plan's step time on `topo`: lower to SPMD programs and
 /// schedule them with the discrete-event engine. This is the scoring
-/// function [`plan_topology_aware`] ranks candidates with — and the same
+/// function [`try_plan_topology_aware`] ranks candidates with — and the same
 /// pipeline `benches/topology_micro.rs` asserts against, so the bench's
 /// `topology-aware <= flat` inequality is structural, not statistical.
 pub fn modeled_step_s(g: &Graph, plan: &Plan, topo: &Topology) -> Result<f64, PlanError> {
     let cfg = topo.to_sim_config();
     let program = try_lower(g, plan, &cfg)?;
-    Ok(run_program(&program, topo).step_s)
+    Ok(try_run_program(&program, topo)?.step_s)
 }
 
 /// Topology-aware planning with the full scoreboard and structured errors.
@@ -207,23 +207,11 @@ pub fn try_plan_topology_aware(
 /// time on `topo` is fastest among the candidate portfolio (never slower
 /// than the byte plan; bit-identical to it on flat topologies).
 ///
-/// Panics on planner failure — see [`try_plan_topology_aware`] for the
-/// error-returning variant and the full scoreboard.
-///
-/// # Examples
-///
-/// ```
-/// use soybean::models::{mlp, MlpConfig};
-/// use soybean::planner::plan_topology_aware;
-/// use soybean::sim::Topology;
-///
-/// let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 32], bias: false });
-/// let plan = plan_topology_aware(&g, 4, &Topology::two_tier(2));
-/// assert_eq!(plan.devices(), 4);
-/// ```
+/// Panics on planner failure.
+#[deprecated(note = "use `try_plan_topology_aware` (or `Session::build`) and handle the `PlanError`")]
 pub fn plan_topology_aware(g: &Graph, devices: usize, topo: &Topology) -> Plan {
     try_plan_topology_aware(g, devices, topo)
-        .unwrap_or_else(|e| panic!("topology-aware planning failed: {e}"))
+        .expect("topology-aware planning failed")
         .plan
 }
 

@@ -1,0 +1,218 @@
+//! The plan cache: FNV-1a fingerprints over `(graph, devices, topology)`
+//! and a map from that key to a validated, dispatch-ready step.
+//!
+//! Dynamic batching makes the served graph's batch extent vary between
+//! steps, and every distinct extent is a distinct planning problem. The
+//! cache bounds that cost: the first request at a given padded shape pays
+//! the full plan → lower → validate pipeline, every later one is a map
+//! lookup returning the shared [`StepCtx`]. Keys are structural — the
+//! graph's full topology and shapes, the device count, and the
+//! interconnect description — so two graphs that plan identically hit the
+//! same entry and two that differ anywhere cannot collide (modulo the
+//! 64-bit digest).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::graph::Graph;
+use crate::sim::Topology;
+use crate::spmd::StepCtx;
+use crate::util::checksum::Fnv64;
+
+/// FNV-1a digest of a graph's full structure: every tensor's name, kind,
+/// dtype width and shape, and every op's name, kind (including its
+/// parameters, via the derived debug form), and wiring.
+pub fn graph_fingerprint(g: &Graph) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(g.tensors.len() as u64);
+    for t in &g.tensors {
+        h.write(t.name.as_bytes());
+        h.write(&[0]);
+        h.write(format!("{:?}", t.kind).as_bytes());
+        h.write_u64(t.dtype_bytes as u64);
+        h.write_u64(t.shape.len() as u64);
+        for &d in &t.shape {
+            h.write_u64(d as u64);
+        }
+    }
+    h.write_u64(g.ops.len() as u64);
+    for op in &g.ops {
+        h.write(op.name.as_bytes());
+        h.write(&[0]);
+        h.write(format!("{:?}", op.kind).as_bytes());
+        h.write_u64(op.inputs.len() as u64);
+        for &i in &op.inputs {
+            h.write_u64(i as u64);
+        }
+        h.write_u64(op.outputs.len() as u64);
+        for &o in &op.outputs {
+            h.write_u64(o as u64);
+        }
+    }
+    h.finish()
+}
+
+/// FNV-1a digest of an interconnect description: every tier's name,
+/// bandwidth, latency and slot count (floats by bit pattern, so the
+/// digest is exact, not tolerance-based).
+pub fn topology_fingerprint(topo: &Topology) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(topo.tiers.len() as u64);
+    for tier in &topo.tiers {
+        h.write(tier.name.as_bytes());
+        h.write(&[0]);
+        h.write_u64(tier.bandwidth.to_bits());
+        h.write_u64(tier.latency.to_bits());
+        h.write_u64(tier.slots.to_bits());
+    }
+    h.finish()
+}
+
+/// Cache key: the tentpole triple `(graph fingerprint, device count,
+/// topology fingerprint)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanKey {
+    /// [`graph_fingerprint`] of the (padded) graph to serve.
+    pub graph: u64,
+    /// Device count the plan targets.
+    pub devices: usize,
+    /// [`topology_fingerprint`] of the interconnect planned for.
+    pub topo: u64,
+}
+
+impl PlanKey {
+    /// Build the key for `(g, devices, topo)`.
+    pub fn of(g: &Graph, devices: usize, topo: &Topology) -> Self {
+        PlanKey {
+            graph: graph_fingerprint(g),
+            devices,
+            topo: topology_fingerprint(topo),
+        }
+    }
+}
+
+/// Map from [`PlanKey`] to a validated [`StepCtx`], with hit/miss
+/// counters for the [`super::ServeStats`] hit-rate gate.
+#[derive(Default)]
+pub struct PlanCache {
+    map: BTreeMap<PlanKey, Arc<StepCtx>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        PlanCache::default()
+    }
+
+    /// Look `key` up, counting a hit or a miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<StepCtx>> {
+        match self.map.get(key) {
+            Some(ctx) => {
+                self.hits += 1;
+                Some(Arc::clone(ctx))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or seed) an entry without touching the counters.
+    pub fn insert(&mut self, key: PlanKey, ctx: Arc<StepCtx>) {
+        self.map.insert(key, ctx);
+    }
+
+    /// Cached entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lookup hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookup misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hits over total lookups (1.0 for a cache that was never missed;
+    /// 0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Zero the hit/miss counters (entries stay), so a post-warmup
+    /// measurement window can assert its own rate.
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mlp, MlpConfig};
+
+    #[test]
+    fn graph_fingerprint_is_shape_and_structure_sensitive() {
+        let g1 = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        let g2 = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        assert_eq!(graph_fingerprint(&g1), graph_fingerprint(&g2), "same build, same digest");
+        let bigger = mlp(&MlpConfig { batch: 16, dims: vec![4, 4], bias: false });
+        assert_ne!(graph_fingerprint(&g1), graph_fingerprint(&bigger), "batch changes digest");
+        let biased = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: true });
+        assert_ne!(graph_fingerprint(&g1), graph_fingerprint(&biased), "structure changes digest");
+    }
+
+    #[test]
+    fn topology_fingerprint_sees_every_field() {
+        use crate::sim::Topology;
+        let a = Topology::two_tier(3);
+        let b = Topology::two_tier(3);
+        assert_eq!(topology_fingerprint(&a), topology_fingerprint(&b));
+        let mut c = Topology::two_tier(3);
+        c.tiers[0].bandwidth *= 2.0;
+        assert_ne!(topology_fingerprint(&a), topology_fingerprint(&c));
+        assert_ne!(topology_fingerprint(&a), topology_fingerprint(&Topology::fat_tree(3)));
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        use crate::sim::Topology;
+        use crate::spmd::{ExecOptions, StepCtx};
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        let topo = Topology::from_sim(&crate::sim::SimConfig::default(), 1);
+        let plan = crate::planner::try_k_cut(&g, 1).unwrap();
+        let program = crate::lower::try_lower(&g, &plan, &topo.to_sim_config()).unwrap();
+        let ctx = Arc::new(
+            StepCtx::try_new(g.clone(), plan, program, ExecOptions::default()).unwrap(),
+        );
+        let key = PlanKey::of(&g, 2, &topo);
+        let mut cache = PlanCache::new();
+        assert!(cache.get(&key).is_none());
+        cache.insert(key, ctx);
+        assert!(cache.get(&key).is_some());
+        assert!(cache.get(&key).is_some());
+        assert_eq!((cache.hits(), cache.misses()), (2, 1));
+        assert!((cache.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        cache.reset_counters();
+        assert_eq!(cache.hit_rate(), 0.0);
+        assert_eq!(cache.len(), 1);
+    }
+}

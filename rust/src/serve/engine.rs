@@ -1,0 +1,660 @@
+//! The long-lived serving engine: warm workers, dynamic batching, plan
+//! caching, and the request queue.
+//!
+//! One scheduler thread owns a persistent [`WorkerPool`] (one warm SPMD
+//! thread per device, surviving across steps) and a [`PlanCache`].
+//! Clients submit requests over an mpsc queue; the scheduler coalesces
+//! whatever is queued into one graph-level batch — requests stack along
+//! the batch axis the tiling already splits — bounded by
+//! [`ServeOptions::max_batch`] units and a [`ServeOptions::max_linger`]
+//! wait for stragglers. The coalesced unit count is padded up to a
+//! multiple of [`ServeOptions::batch_align`] (default: the device
+//! count) by *repeating the last real unit's rows* — repetition, not
+//! zeros, so normalization and softmax stay on well-conditioned inputs
+//! — which bounds the set of distinct padded shapes and makes the plan
+//! cache converge to a 100% hit rate after one request per shape.
+//!
+//! Batching is transparent to correctness: every op the zoo lowers is
+//! row-independent along the folded batch axis (matmul rows, layer-norm
+//! rows, per-row softmax, attention mixing only within a unit), so a
+//! request's slice of the batched output equals its solo run — the
+//! property `rust/tests/session.rs` and `benches/serve_micro.rs` pin
+//! against [`crate::graph::eval_serial`].
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::graph::Graph;
+use crate::planner::{PlanError, Strategy};
+use crate::sim::Topology;
+use crate::spmd::{ExecOptions, WorkerPool};
+
+use super::cache::{PlanCache, PlanKey};
+use super::session::{build_ctx, Session};
+use super::stats::{ServeStats, StatsInner};
+use super::ServeError;
+
+/// Knobs for a [`ServeEngine`], with builder-style setters.
+///
+/// ```
+/// use std::time::Duration;
+/// use soybean::ServeOptions;
+///
+/// let opts = ServeOptions::default()
+///     .max_batch(16)
+///     .max_linger(Duration::from_millis(1))
+///     .output("head.out");
+/// assert_eq!(opts.max_batch, 16);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Most request units one coalesced batch may hold.
+    pub max_batch: usize,
+    /// Longest the scheduler lingers for stragglers after the first
+    /// request of a batch arrives.
+    pub max_linger: Duration,
+    /// Pad the coalesced unit count up to a multiple of this; `0` (the
+    /// default) means the engine's device count, so every shard keeps an
+    /// equal, nonzero slice of the batch axis.
+    pub batch_align: usize,
+    /// Names of the tensors returned per request (must scale with the
+    /// batch axis). Empty (the default): the last batch-scaled tensor
+    /// the graph produces.
+    pub outputs: Vec<String>,
+    /// Execution options every served step runs under.
+    pub exec: ExecOptions,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_batch: 64,
+            max_linger: Duration::from_millis(2),
+            batch_align: 0,
+            outputs: Vec::new(),
+            exec: ExecOptions::default(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Set the batch-unit cap (builder style).
+    #[must_use]
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Set the straggler linger (builder style).
+    #[must_use]
+    pub fn max_linger(mut self, max_linger: Duration) -> Self {
+        self.max_linger = max_linger;
+        self
+    }
+
+    /// Set the padding alignment (builder style); `0` = device count.
+    #[must_use]
+    pub fn batch_align(mut self, batch_align: usize) -> Self {
+        self.batch_align = batch_align;
+        self
+    }
+
+    /// Add one output tensor name (builder style).
+    #[must_use]
+    pub fn output(mut self, name: impl Into<String>) -> Self {
+        self.outputs.push(name.into());
+        self
+    }
+
+    /// Set the per-step execution options (builder style).
+    #[must_use]
+    pub fn exec(mut self, exec: ExecOptions) -> Self {
+        self.exec = exec;
+        self
+    }
+}
+
+/// One inference request: `units` batch units plus, for every feed
+/// tensor ([`ServeEngine::feed_names`]), that many units of row data.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Batch units this request occupies (for the zoo's models, one
+    /// unit = one batch element, e.g. one sequence).
+    pub units: usize,
+    /// Feed tensor name → `units * per_unit_elements` values, units
+    /// contiguous and in order.
+    pub feeds: BTreeMap<String, Vec<f32>>,
+}
+
+impl ServeRequest {
+    /// A request of `units` units with no feeds yet.
+    pub fn new(units: usize) -> Self {
+        ServeRequest { units, feeds: BTreeMap::new() }
+    }
+
+    /// Attach one feed tensor's data (builder style).
+    #[must_use]
+    pub fn feed(mut self, name: impl Into<String>, data: Vec<f32>) -> Self {
+        self.feeds.insert(name.into(), data);
+        self
+    }
+}
+
+/// What one served request gets back.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    /// Output tensor name → this request's `units * per_unit_elements`
+    /// slice of the batched result.
+    pub outputs: BTreeMap<String, Vec<f32>>,
+    /// Units the request occupied.
+    pub units: usize,
+    /// Real units of the coalesced batch the request rode in.
+    pub batch_units: usize,
+    /// Padded units actually executed (`batch_units` rounded up to the
+    /// alignment).
+    pub padded_units: usize,
+    /// Submit → reply latency.
+    pub latency: Duration,
+}
+
+/// A submitted request plus its reply channel and submit timestamp.
+struct Envelope {
+    req: ServeRequest,
+    submitted: Instant,
+    reply: Sender<Result<ServeResponse, Error>>,
+}
+
+enum ToEngine {
+    Request(Envelope),
+    Stop,
+}
+
+/// An in-flight request handle: redeem with [`PendingResponse::wait`].
+pub struct PendingResponse {
+    rx: Receiver<Result<ServeResponse, Error>>,
+}
+
+impl PendingResponse {
+    /// Block until the engine replies (or has shut down).
+    pub fn wait(self) -> Result<ServeResponse, Error> {
+        self.rx.recv().unwrap_or(Err(Error::Serve(ServeError::Closed)))
+    }
+}
+
+/// A clonable, thread-safe handle for submitting requests to a
+/// [`ServeEngine`]. Clone one per client thread.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: Sender<ToEngine>,
+}
+
+impl ServeClient {
+    /// Enqueue a request; returns immediately with a handle.
+    pub fn submit(&self, req: ServeRequest) -> PendingResponse {
+        let (reply, rx) = channel();
+        let env = Envelope { req, submitted: Instant::now(), reply };
+        // A failed send drops the envelope (and its reply sender), which
+        // `wait` observes as `Closed` — no separate error path needed.
+        let _ = self.tx.send(ToEngine::Request(env));
+        PendingResponse { rx }
+    }
+
+    /// Submit and block for the reply.
+    pub fn infer(&self, req: ServeRequest) -> Result<ServeResponse, Error> {
+        self.submit(req).wait()
+    }
+}
+
+/// How the engine's batch model classifies and sizes tensors, probed at
+/// launch by comparing `rebatch(1)` against `rebatch(2)`.
+struct BatchModel {
+    /// Feed tensor name → elements per unit (batch-scaled, producerless).
+    feed: BTreeMap<String, usize>,
+    /// Fixed producerless tensor name → its served value (weights).
+    fixed: BTreeMap<String, Vec<f32>>,
+    /// Output tensor name → elements per unit (batch-scaled).
+    outputs: Vec<(String, usize)>,
+}
+
+fn elems(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+fn config_err(reason: String) -> Error {
+    Error::Plan(PlanError::MalformedConfig { reason })
+}
+
+/// Probe the rebatch closure and bind the fixed tensors' values.
+fn probe_batch_model(
+    rebatch: &dyn Fn(usize) -> Graph,
+    session: &Session,
+    base_init: &[Option<Vec<f32>>],
+    opts: &ServeOptions,
+) -> Result<BatchModel, Error> {
+    let g1 = rebatch(1);
+    let g2 = rebatch(2);
+    if g1.tensors.len() != g2.tensors.len() || g1.ops.len() != g2.ops.len() {
+        return Err(config_err(
+            "rebatch(1) and rebatch(2) disagree on graph structure".into(),
+        ));
+    }
+    let produced = g1.produced_mask();
+    let mut feed = BTreeMap::new();
+    let mut fixed_names = Vec::new();
+    let mut scaled = BTreeMap::new();
+    for (t1, t2) in g1.tensors.iter().zip(&g2.tensors) {
+        if t1.name != t2.name {
+            return Err(config_err(format!(
+                "rebatch changes tensor naming: `{}` vs `{}`",
+                t1.name, t2.name
+            )));
+        }
+        let (e1, e2) = (elems(&t1.shape), elems(&t2.shape));
+        if e1 != e2 {
+            if e2 != 2 * e1 {
+                return Err(config_err(format!(
+                    "tensor `{}` does not scale linearly with units ({e1} -> {e2})",
+                    t1.name
+                )));
+            }
+            scaled.insert(t1.name.clone(), e1);
+            if !produced[t1.id] {
+                feed.insert(t1.name.clone(), e1);
+            }
+        } else if !produced[t1.id] {
+            fixed_names.push(t1.name.clone());
+        }
+    }
+    if feed.is_empty() {
+        return Err(config_err("no batch-scaled feed tensor found".into()));
+    }
+
+    // Bind the fixed tensors (weights, gains) to the base session's init
+    // values — shapes are batch-independent, so they serve every size.
+    let sg = session.graph();
+    if base_init.len() != sg.tensors.len() {
+        return Err(config_err(format!(
+            "base init has {} entries but the session graph has {} tensors",
+            base_init.len(),
+            sg.tensors.len()
+        )));
+    }
+    let mut fixed = BTreeMap::new();
+    for name in fixed_names {
+        let t = sg
+            .tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| {
+                config_err(format!("fixed tensor `{name}` missing from session graph"))
+            })?;
+        let v = base_init[t.id]
+            .as_ref()
+            .ok_or_else(|| {
+                config_err(format!("base init missing value for fixed tensor `{name}`"))
+            })?;
+        if v.len() != elems(&t.shape) {
+            return Err(config_err(format!(
+                "base init value for `{name}` has {} elements, tensor wants {}",
+                v.len(),
+                elems(&t.shape)
+            )));
+        }
+        fixed.insert(name, v.clone());
+    }
+
+    // Resolve the served outputs: explicit names, or the last
+    // batch-scaled tensor the graph produces.
+    let outputs: Vec<(String, usize)> = if opts.outputs.is_empty() {
+        let last = g1
+            .tensors
+            .iter()
+            .rev()
+            .find(|t| produced[t.id] && scaled.contains_key(&t.name))
+            .ok_or_else(|| config_err("graph produces no batch-scaled tensor to serve".into()))?;
+        vec![(last.name.clone(), scaled[&last.name])]
+    } else {
+        opts.outputs
+            .iter()
+            .map(|name| {
+                scaled
+                    .get(name)
+                    .map(|&e| (name.clone(), e))
+                    .ok_or_else(|| {
+                        config_err(format!(
+                            "output `{name}` is not a batch-scaled tensor of the graph"
+                        ))
+                    })
+            })
+            .collect::<Result<_, _>>()?
+    };
+    Ok(BatchModel { feed, fixed, outputs })
+}
+
+/// The scheduler: owns the warm pool, the plan cache, and the coalescing
+/// loop. Runs on its own thread until `Stop` or until every sender
+/// (engine + all clients) is gone.
+struct Scheduler<F> {
+    rebatch: F,
+    devices: usize,
+    topo: Topology,
+    strategy: Strategy,
+    exec: ExecOptions,
+    max_batch: usize,
+    max_linger: Duration,
+    align: usize,
+    model: BatchModel,
+    pool: WorkerPool,
+    cache: PlanCache,
+    stats: Arc<Mutex<StatsInner>>,
+    /// A request that would have overflowed the current batch — first in
+    /// line for the next one.
+    carry: Option<Envelope>,
+}
+
+impl<F: Fn(usize) -> Graph> Scheduler<F> {
+    fn run(mut self, rx: Receiver<ToEngine>) {
+        let mut stopping = false;
+        while !stopping {
+            // First member: the carried-over overflow, or block for one.
+            let first = match self.carry.take() {
+                Some(e) => e,
+                None => match rx.recv() {
+                    Ok(ToEngine::Request(e)) => e,
+                    Ok(ToEngine::Stop) | Err(_) => break,
+                },
+            };
+            let Some(first) = self.admit(first) else { continue };
+            let mut units = first.req.units;
+            let mut batch = vec![first];
+            // Linger for stragglers up to max_linger or a full batch.
+            let deadline = Instant::now() + self.max_linger;
+            while units < self.max_batch {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(remaining) {
+                    Ok(ToEngine::Request(e)) => {
+                        let Some(e) = self.admit(e) else { continue };
+                        if units + e.req.units > self.max_batch {
+                            self.carry = Some(e);
+                            break;
+                        }
+                        units += e.req.units;
+                        batch.push(e);
+                    }
+                    Ok(ToEngine::Stop) | Err(RecvTimeoutError::Disconnected) => {
+                        stopping = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                }
+            }
+            self.serve_batch(batch, units);
+        }
+        // Shutting down: everything still queued will never be served.
+        if let Some(e) = self.carry.take() {
+            let _ = e.reply.send(Err(Error::Serve(ServeError::Closed)));
+        }
+        while let Ok(m) = rx.try_recv() {
+            if let ToEngine::Request(e) = m {
+                let _ = e.reply.send(Err(Error::Serve(ServeError::Closed)));
+            }
+        }
+    }
+
+    /// Validate one request; on failure reply `BadRequest` and drop it.
+    fn admit(&self, env: Envelope) -> Option<Envelope> {
+        let reject = |env: Envelope, reason: String| {
+            let _ =
+                env.reply.send(Err(Error::Serve(ServeError::BadRequest { reason })));
+            None
+        };
+        let u = env.req.units;
+        if u == 0 {
+            return reject(env, "request has zero units".into());
+        }
+        if u > self.max_batch {
+            return reject(env, format!("request has {u} units, max_batch is {}", self.max_batch));
+        }
+        for name in env.req.feeds.keys() {
+            if !self.model.feed.contains_key(name) {
+                return reject(env, format!("unknown feed tensor `{name}`"));
+            }
+        }
+        for (name, &per) in &self.model.feed {
+            match env.req.feeds.get(name) {
+                None => return reject(env, format!("missing feed tensor `{name}`")),
+                Some(v) if v.len() != u * per => {
+                    let got = v.len();
+                    return reject(
+                        env,
+                        format!("feed `{name}` has {got} elements, {u} units want {}", u * per),
+                    );
+                }
+                Some(_) => {}
+            }
+        }
+        Some(env)
+    }
+
+    /// Execute one coalesced batch and reply to every member.
+    fn serve_batch(&mut self, batch: Vec<Envelope>, units: usize) {
+        let broadcast = |batch: Vec<Envelope>, e: Error| {
+            for env in batch {
+                let _ = env.reply.send(Err(e.clone()));
+            }
+        };
+        let padded = units.div_ceil(self.align) * self.align;
+        let g = (self.rebatch)(padded);
+        let key = PlanKey::of(&g, self.devices, &self.topo);
+        let (ctx, hit) = match self.cache.get(&key) {
+            Some(c) => (c, true),
+            None => {
+                match build_ctx(
+                    g.clone(),
+                    self.devices,
+                    &self.topo,
+                    self.strategy,
+                    self.exec.clone(),
+                ) {
+                    Ok((c, _)) => {
+                        self.cache.insert(key, Arc::clone(&c));
+                        (c, false)
+                    }
+                    Err(e) => return broadcast(batch, e),
+                }
+            }
+        };
+        self.stats.lock().expect("stats lock").record_cache(hit);
+
+        // Assemble the batched init: fixed tensors verbatim, feeds
+        // concatenated in arrival order, padding by repeating the last
+        // real unit's block.
+        let produced = g.produced_mask();
+        let mut init: Vec<Option<Vec<f32>>> = vec![None; g.tensors.len()];
+        for t in &g.tensors {
+            if produced[t.id] {
+                continue;
+            }
+            if let Some(v) = self.model.fixed.get(&t.name) {
+                init[t.id] = Some(v.clone());
+            } else if let Some(&per) = self.model.feed.get(&t.name) {
+                let mut buf = Vec::with_capacity(padded * per);
+                for env in &batch {
+                    buf.extend_from_slice(&env.req.feeds[&t.name]);
+                }
+                let last = buf[(units - 1) * per..units * per].to_vec();
+                for _ in units..padded {
+                    buf.extend_from_slice(&last);
+                }
+                init[t.id] = Some(buf);
+            } else {
+                // The probe classified every producerless tensor; a third
+                // class means the rebatch closure changed shape midway.
+                return broadcast(
+                    batch,
+                    config_err(format!("tensor `{}` is neither fixed nor feed", t.name)),
+                );
+            }
+        }
+
+        let report = match self.pool.run_step(&ctx, &init) {
+            Ok(r) => r,
+            Err(e) => return broadcast(batch, Error::from(e)),
+        };
+        self.stats.lock().expect("stats lock").record_batch(units);
+
+        // Slice each member's rows back out and reply.
+        let mut off = 0;
+        for env in batch {
+            let u = env.req.units;
+            let mut outputs = BTreeMap::new();
+            for (name, per) in &self.model.outputs {
+                let t = g
+                    .tensors
+                    .iter()
+                    .find(|t| &t.name == name)
+                    .expect("output name validated at launch");
+                let rows = report.tensors[t.id][off * per..(off + u) * per].to_vec();
+                outputs.insert(name.clone(), rows);
+            }
+            let latency = env.submitted.elapsed();
+            self.stats.lock().expect("stats lock").record_request(latency);
+            let resp = ServeResponse {
+                outputs,
+                units: u,
+                batch_units: units,
+                padded_units: padded,
+                latency,
+            };
+            let _ = env.reply.send(Ok(resp));
+            off += u;
+        }
+    }
+}
+
+/// The long-lived serving runtime (module docs for the architecture).
+///
+/// Construct with [`ServeEngine::launch`] from a built [`Session`] and a
+/// `rebatch` closure mapping a unit count to the graph serving that many
+/// units. Submit through [`ServeClient`] handles; observe through
+/// [`ServeEngine::stats`]. Dropping the engine (or calling
+/// [`ServeEngine::shutdown`]) stops the scheduler and joins its thread;
+/// in-flight requests receive [`ServeError::Closed`].
+pub struct ServeEngine {
+    tx: Sender<ToEngine>,
+    stats: Arc<Mutex<StatsInner>>,
+    feed_names: Vec<String>,
+    output_names: Vec<String>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Launch the engine from a base `session`.
+    ///
+    /// `rebatch(u)` must build the session's model at a batch extent of
+    /// `u` units with identical structure and naming (the zoo's model
+    /// builders all qualify); the engine probes it at launch to learn
+    /// which tensors scale with the batch (the feeds and outputs) and
+    /// which are fixed (the weights, bound to `base_init`'s values —
+    /// index-aligned with `session.graph()`, e.g. from
+    /// [`crate::graph::seed_values`]).
+    pub fn launch<F>(
+        session: &Session,
+        rebatch: F,
+        base_init: &[Option<Vec<f32>>],
+        opts: ServeOptions,
+    ) -> Result<ServeEngine, Error>
+    where
+        F: Fn(usize) -> Graph + Send + 'static,
+    {
+        if opts.max_batch == 0 {
+            return Err(config_err("max_batch must be at least 1".into()));
+        }
+        let model = probe_batch_model(&rebatch, session, base_init, &opts)?;
+        let devices = session.devices();
+        let topo = session.topology().clone();
+        let stats = Arc::new(Mutex::new(StatsInner::new()));
+
+        // Seed the cache with the base session's already-validated step,
+        // so a batch that pads to the base extent never re-plans.
+        let mut cache = PlanCache::new();
+        cache.insert(
+            PlanKey::of(session.graph(), devices, &topo),
+            Arc::clone(session.step_ctx()),
+        );
+
+        let feed_names: Vec<String> = model.feed.keys().cloned().collect();
+        let output_names: Vec<String> =
+            model.outputs.iter().map(|(n, _)| n.clone()).collect();
+        let scheduler = Scheduler {
+            rebatch,
+            devices,
+            topo,
+            strategy: session.strategy(),
+            exec: opts.exec.clone(),
+            max_batch: opts.max_batch,
+            max_linger: opts.max_linger,
+            align: if opts.batch_align == 0 { devices } else { opts.batch_align },
+            model,
+            pool: WorkerPool::spawn(devices),
+            cache,
+            stats: Arc::clone(&stats),
+            carry: None,
+        };
+        let (tx, rx) = channel();
+        let handle = std::thread::spawn(move || scheduler.run(rx));
+        Ok(ServeEngine { tx, stats, feed_names, output_names, handle: Some(handle) })
+    }
+
+    /// A new client handle (clone freely across threads).
+    pub fn client(&self) -> ServeClient {
+        ServeClient { tx: self.tx.clone() }
+    }
+
+    /// Names of the tensors every request must feed.
+    pub fn feed_names(&self) -> &[String] {
+        &self.feed_names
+    }
+
+    /// Names of the tensors every response carries.
+    pub fn output_names(&self) -> &[String] {
+        &self.output_names
+    }
+
+    /// Snapshot the serving statistics.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().expect("stats lock").snapshot()
+    }
+
+    /// Zero the statistics window (requests, latencies, histogram, cache
+    /// counters) — call after warmup so gates measure steady state.
+    pub fn reset_stats(&self) {
+        self.stats.lock().expect("stats lock").reset();
+    }
+
+    /// Stop the scheduler and join its thread. Requests still queued
+    /// reply [`ServeError::Closed`].
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            let _ = self.tx.send(ToEngine::Stop);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}

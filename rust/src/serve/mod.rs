@@ -1,0 +1,69 @@
+//! The serving runtime: plan once, execute forever.
+//!
+//! Everything upstream of this module is one-shot — every call re-plans,
+//! re-lowers, and (before the [`crate::spmd::WorkerPool`] refactor)
+//! re-spawned worker threads. But the planner's whole value proposition
+//! is *amortization*: the optimal tiling is found once and reused across
+//! every subsequent step. This module is that reuse, in two layers:
+//!
+//! - [`Session`] — the unified facade. `Session::build(graph, devices,
+//!   &topology)` runs the full pipeline (topology-aware planning →
+//!   lowering → validation) once and owns the result; `execute`,
+//!   `simulate`, and `plan_summary` then work off the owned artifacts.
+//!   Every method returns the single crate-level [`crate::Error`].
+//! - [`ServeEngine`] — the long-lived runtime behind a request queue.
+//!   One warm SPMD worker thread per device survives across steps
+//!   ([`crate::spmd::WorkerPool`]); concurrent requests coalesce into
+//!   the batch axis the tiling already splits (dynamic batching, bounded
+//!   by [`ServeOptions::max_batch`] and [`ServeOptions::max_linger`]);
+//!   lowered plans are cached by `(graph fingerprint, device count,
+//!   topology fingerprint)` FNV-1a keys ([`PlanCache`]); and every
+//!   request's latency feeds the [`ServeStats`] snapshot (throughput,
+//!   p50/p95/p99, batch-size histogram, cache hit rate).
+//!
+//! The narrative chapter is [`crate::book::serving`] (docs/serving.md).
+//! The sustained-load gate is `benches/serve_micro.rs`: batched
+//! throughput must strictly beat batch-1 submission on the 4-layer
+//! encoder, and every served output must match
+//! [`crate::graph::eval_serial`] within 1e-5.
+
+mod cache;
+mod engine;
+mod session;
+mod stats;
+
+pub use cache::{graph_fingerprint, topology_fingerprint, PlanCache, PlanKey};
+pub use engine::{
+    PendingResponse, ServeClient, ServeEngine, ServeOptions, ServeRequest, ServeResponse,
+};
+pub use session::{PlanSummary, Session};
+pub use stats::ServeStats;
+
+use std::fmt;
+
+/// Structured serving-runtime failure (queueing and request admission;
+/// planning and execution failures surface as the other
+/// [`crate::Error`] variants).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The engine has shut down (or its scheduler died): the request was
+    /// not and will never be served.
+    Closed,
+    /// The request is malformed — unknown feed tensor, mis-sized feed,
+    /// zero units, or more units than the engine's `max_batch`.
+    BadRequest {
+        /// What was malformed.
+        reason: String,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Closed => write!(f, "serve engine is shut down"),
+            ServeError::BadRequest { reason } => write!(f, "bad request: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

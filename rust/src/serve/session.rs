@@ -1,0 +1,326 @@
+//! The [`Session`] facade: one call plans, lowers, and validates; the
+//! resulting artifacts are owned and reused.
+//!
+//! Before this existed, running a model in parallel meant hand-wiring
+//! four modules (`planner` → `lower` → `spmd`, with `sim` on the side)
+//! and juggling their panicking/`try_*` duals. A `Session` is that whole
+//! pipeline executed once, with the single crate-level [`Error`] on
+//! every edge, and the artifacts held for repeated use — `execute` as
+//! many steps as you like, `simulate` the modeled step time, print the
+//! [`PlanSummary`]. The serving engine ([`super::ServeEngine`]) builds
+//! on the same context to keep worker threads warm between steps.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::graph::Graph;
+use crate::lower::{try_lower, try_lower_forced, LoweredProgram};
+use crate::planner::{
+    baselines, classic_dp_form, classify, try_plan_topology_aware, Plan, PlanError, Strategy,
+};
+use crate::sim::{try_simulate, try_simulate_forced, SimReport, Topology};
+use crate::spmd::{ExecOptions, ExecReport, StepCtx, WorkerPool};
+
+/// Run the full planning pipeline for `(g, devices, topo)` under a
+/// strategy and validate the result into a dispatchable [`StepCtx`].
+/// Shared by [`Session::build`] and the serving engine's plan-cache
+/// misses, so both produce bit-identical contexts.
+pub(crate) fn build_ctx(
+    g: Graph,
+    devices: usize,
+    topo: &Topology,
+    strategy: Strategy,
+    exec: ExecOptions,
+) -> Result<(Arc<StepCtx>, &'static str), Error> {
+    if devices == 0 || !devices.is_power_of_two() {
+        return Err(Error::Plan(PlanError::MalformedConfig {
+            reason: format!("device count must be a nonzero power of two, got {devices}"),
+        }));
+    }
+    let k = devices.trailing_zeros() as usize;
+    let cfg = topo.to_sim_config();
+    let (plan, program, chosen): (Plan, LoweredProgram, &'static str) = match strategy {
+        Strategy::Soybean => {
+            let tp = try_plan_topology_aware(&g, devices, topo)?;
+            let program = try_lower(&g, &tp.plan, &cfg)?;
+            (tp.plan, program, tp.chosen)
+        }
+        // The DP baseline prices gradient aggregation in its classic
+        // all-reduce form, so the matching forced lowering keeps the
+        // meter identity the executor insists on.
+        Strategy::DataParallel => {
+            let plan = baselines::data_parallel(&g, k);
+            let program = try_lower_forced(&g, &plan, &cfg, &classic_dp_form)?;
+            (plan, program, "data-parallel")
+        }
+        Strategy::ModelParallel => {
+            let plan = baselines::model_parallel(&g, k);
+            let program = try_lower(&g, &plan, &cfg)?;
+            (plan, program, "model-parallel")
+        }
+    };
+    let ctx = Arc::new(StepCtx::try_new(g, plan, program, exec)?);
+    Ok((ctx, chosen))
+}
+
+/// A planned, lowered, validated model execution — the unified entry
+/// point over planner, lowering, simulator and executor.
+///
+/// # Examples
+///
+/// Plan once, execute, and check against the serial interpreter:
+///
+/// ```
+/// use soybean::graph::{eval_serial, max_rel_err, seed_values};
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::sim::Topology;
+/// use soybean::Session;
+///
+/// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+/// let session = Session::build(g.clone(), 4, &Topology::p2_8xlarge()).unwrap();
+/// assert_eq!(session.devices(), 4);
+///
+/// let init = seed_values(&g, 7);
+/// let report = session.execute(&init).unwrap();
+/// // One-theory contract: observed collective traffic == Theorem-1 cost.
+/// assert_eq!(report.instr_bytes, session.plan().total_cost());
+/// // And the numbers match the serial interpreter.
+/// let serial = eval_serial(&g, &init).unwrap();
+/// for t in &g.tensors {
+///     assert!(max_rel_err(&report.tensors[t.id], &serial[t.id]) <= 1e-5);
+/// }
+/// println!("{}", session.plan_summary());
+/// ```
+pub struct Session {
+    ctx: Arc<StepCtx>,
+    topo: Topology,
+    strategy: Strategy,
+    chosen: &'static str,
+}
+
+impl Session {
+    /// Plan `g` for `devices` on `topo` (topology-aware SOYBEAN
+    /// portfolio), lower it, and validate the result. `devices` must be
+    /// a nonzero power of two.
+    pub fn build(g: Graph, devices: usize, topo: &Topology) -> Result<Session, Error> {
+        Session::with_strategy(g, devices, topo, Strategy::Soybean)
+    }
+
+    /// [`Session::build`] under an explicit strategy — the baselines the
+    /// figures compare against ([`Strategy::DataParallel`] keeps the
+    /// classic gradient-aggregation form so its byte meter stays honest).
+    pub fn with_strategy(
+        g: Graph,
+        devices: usize,
+        topo: &Topology,
+        strategy: Strategy,
+    ) -> Result<Session, Error> {
+        let (ctx, chosen) = build_ctx(g, devices, topo, strategy, ExecOptions::default())?;
+        Ok(Session { ctx, topo: topo.clone(), strategy, chosen })
+    }
+
+    /// Replace the execution options (watchdog deadline, fault plan) the
+    /// session executes under.
+    #[must_use]
+    pub fn with_exec_options(mut self, exec: ExecOptions) -> Session {
+        // The context is immutable and possibly shared; re-validate is
+        // unnecessary (options don't affect admission), so rebuild the
+        // Arc with the same artifacts.
+        let old = &*self.ctx;
+        let ctx = StepCtx {
+            g: old.g.clone(),
+            plan: old.plan.clone(),
+            program: old.program.clone(),
+            tasks: old.tasks.clone(),
+            opts: exec,
+        };
+        self.ctx = Arc::new(ctx);
+        self
+    }
+
+    /// Execute one step on real tensors: `init` is the producerless-
+    /// tensor value vector ([`crate::graph::seed_values`] shapes it).
+    ///
+    /// Spawns a transient worker pool per call — convenient for tests
+    /// and one-shot runs. For sustained traffic, hand the session to a
+    /// [`super::ServeEngine`], which keeps the workers warm.
+    pub fn execute(&self, init: &[Option<Vec<f32>>]) -> Result<ExecReport, Error> {
+        let mut pool = WorkerPool::spawn(self.devices());
+        pool.run_step(&self.ctx, init).map_err(Error::from)
+    }
+
+    /// Execute one step on an existing warm [`WorkerPool`] (its device
+    /// count must match the session's).
+    pub fn execute_on(
+        &self,
+        pool: &mut WorkerPool,
+        init: &[Option<Vec<f32>>],
+    ) -> Result<ExecReport, Error> {
+        pool.run_step(&self.ctx, init).map_err(Error::from)
+    }
+
+    /// Model the step under the closed-form simulator on the session's
+    /// topology-derived cost config.
+    pub fn simulate(&self) -> Result<SimReport, Error> {
+        let cfg = self.topo.to_sim_config();
+        let report = match self.strategy {
+            Strategy::DataParallel => {
+                try_simulate_forced(self.graph(), self.plan(), &cfg, &classic_dp_form)?
+            }
+            _ => try_simulate(self.graph(), self.plan(), &cfg)?,
+        };
+        Ok(report)
+    }
+
+    /// A compact, printable description of what was planned.
+    pub fn plan_summary(&self) -> PlanSummary {
+        let plan = self.plan();
+        PlanSummary {
+            devices: plan.devices(),
+            k: plan.k,
+            chosen: self.chosen,
+            kind: classify(self.graph(), &plan.tiles),
+            total_bytes: plan.total_cost(),
+            cut_costs: plan.cut_costs.clone(),
+            ops: self.graph().ops.len(),
+            tensors: self.graph().tensors.len(),
+        }
+    }
+
+    /// The graph the session plans and executes.
+    pub fn graph(&self) -> &Graph {
+        self.ctx.graph()
+    }
+
+    /// The chosen tiling plan.
+    pub fn plan(&self) -> &Plan {
+        self.ctx.plan()
+    }
+
+    /// The lowered per-device program.
+    pub fn program(&self) -> &LoweredProgram {
+        self.ctx.program()
+    }
+
+    /// Device count (`2^k`).
+    pub fn devices(&self) -> usize {
+        self.ctx.devices()
+    }
+
+    /// The interconnect the session planned for.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The validated, dispatch-ready step context — share it with a
+    /// [`WorkerPool`] to run the session's program on warm workers.
+    pub fn step_ctx(&self) -> &Arc<StepCtx> {
+        &self.ctx
+    }
+
+    /// Which planning candidate won (`"flat-bytes"`, `"weighted-dp"`,
+    /// or a baseline name).
+    pub fn chosen_candidate(&self) -> &'static str {
+        self.chosen
+    }
+
+    /// The strategy the session was built under.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+}
+
+/// What [`Session::plan_summary`] reports — every load-bearing fact
+/// about the chosen plan, with a one-screen [`fmt::Display`].
+#[derive(Debug, Clone)]
+pub struct PlanSummary {
+    /// Device count (`2^k`).
+    pub devices: usize,
+    /// Cut count.
+    pub k: usize,
+    /// Winning planner candidate ([`Session::chosen_candidate`]).
+    pub chosen: &'static str,
+    /// Plan classification: `"data-parallel"`, `"model-parallel"`, or
+    /// `"hybrid"` ([`crate::planner::classify`]).
+    pub kind: &'static str,
+    /// Theorem-1 total conversion bytes.
+    pub total_bytes: u64,
+    /// Per-cut δ costs (Theorem 1 weights them `2^(k-i)`).
+    pub cut_costs: Vec<u64>,
+    /// Op count of the planned graph.
+    pub ops: usize,
+    /// Tensor count of the planned graph.
+    pub tensors: usize,
+}
+
+impl fmt::Display for PlanSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "plan: {} devices (k={}), candidate {} ({}), graph {} ops / {} tensors",
+            self.devices, self.k, self.chosen, self.kind, self.ops, self.tensors
+        )?;
+        write!(f, "cost: {} B total, per-cut δ {:?}", self.total_bytes, self.cut_costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mlp, MlpConfig};
+
+    fn small() -> Graph {
+        mlp(&MlpConfig { batch: 8, dims: vec![6, 10, 4], bias: true })
+    }
+
+    #[test]
+    fn build_rejects_non_power_of_two_devices() {
+        let topo = Topology::p2_8xlarge();
+        for devices in [0, 3, 6] {
+            match Session::build(small(), devices, &topo) {
+                Err(Error::Plan(PlanError::MalformedConfig { reason })) => {
+                    assert!(reason.contains("power of two"), "{reason}");
+                }
+                other => panic!("expected MalformedConfig, got {:?}", other.map(|_| ())),
+            }
+        }
+    }
+
+    #[test]
+    fn summary_names_the_plan() {
+        let s = Session::build(small(), 4, &Topology::p2_8xlarge()).unwrap();
+        let sum = s.plan_summary();
+        assert_eq!(sum.devices, 4);
+        assert_eq!(sum.k, 2);
+        assert_eq!(sum.total_bytes, s.plan().total_cost());
+        let shown = sum.to_string();
+        assert!(shown.contains("4 devices"), "{shown}");
+        assert!(shown.contains("B total"), "{shown}");
+    }
+
+    #[test]
+    fn strategies_yield_distinct_plans_and_honest_meters() {
+        use crate::graph::seed_values;
+        let topo = Topology::p2_8xlarge();
+        for strategy in Strategy::all() {
+            let s = Session::with_strategy(small(), 2, &topo, strategy).unwrap();
+            let init = seed_values(s.graph(), 3);
+            let r = s.execute(&init).unwrap();
+            assert_eq!(
+                r.instr_bytes,
+                s.plan().total_cost(),
+                "meter identity broke under {}",
+                strategy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn simulate_reports_the_modeled_step() {
+        let s = Session::build(small(), 4, &Topology::p2_8xlarge()).unwrap();
+        let sim = s.simulate().unwrap();
+        assert_eq!(sim.devices, 4);
+        assert!(sim.step_s > 0.0);
+    }
+}

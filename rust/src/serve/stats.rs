@@ -1,0 +1,169 @@
+//! The serving stats surface: latency percentiles, throughput, batch
+//! shapes, and the plan-cache hit rate.
+//!
+//! The engine's scheduler records one latency sample per served request
+//! (submit → reply) and one histogram bump per executed batch; the
+//! [`ServeStats`] snapshot derives the aggregates. Counters reset as a
+//! unit ([`super::ServeEngine::reset_stats`]) so a measurement window can
+//! exclude warmup — the bench and the hit-rate gate both rely on that.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A point-in-time snapshot of the engine's serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests served (replied to successfully) in the window.
+    pub requests: u64,
+    /// Coalesced batches executed in the window.
+    pub batches: u64,
+    /// Window length so far.
+    pub elapsed: Duration,
+    /// Served requests per second over the window.
+    pub throughput_rps: f64,
+    /// Median request latency (submit → reply).
+    pub p50_latency: Duration,
+    /// 95th-percentile request latency.
+    pub p95_latency: Duration,
+    /// 99th-percentile request latency.
+    pub p99_latency: Duration,
+    /// Executed batch sizes (in request units) → how often each occurred.
+    pub batch_histogram: BTreeMap<usize, u64>,
+    /// Plan-cache hits in the window.
+    pub cache_hits: u64,
+    /// Plan-cache misses in the window.
+    pub cache_misses: u64,
+    /// Hits over total lookups (0.0 before any lookup).
+    pub cache_hit_rate: f64,
+}
+
+/// The mutable accumulator behind [`ServeStats`] — owned by the engine,
+/// written by its scheduler, snapshotted on demand.
+#[derive(Debug)]
+pub(crate) struct StatsInner {
+    started: Instant,
+    requests: u64,
+    batches: u64,
+    latencies: Vec<Duration>,
+    batch_histogram: BTreeMap<usize, u64>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl StatsInner {
+    pub(crate) fn new() -> Self {
+        StatsInner {
+            started: Instant::now(),
+            requests: 0,
+            batches: 0,
+            latencies: Vec::new(),
+            batch_histogram: BTreeMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// Record one executed batch of `units` request units.
+    pub(crate) fn record_batch(&mut self, units: usize) {
+        self.batches += 1;
+        *self.batch_histogram.entry(units).or_insert(0) += 1;
+    }
+
+    /// Record one served request's submit → reply latency.
+    pub(crate) fn record_request(&mut self, latency: Duration) {
+        self.requests += 1;
+        self.latencies.push(latency);
+    }
+
+    /// Record one plan-cache lookup.
+    pub(crate) fn record_cache(&mut self, hit: bool) {
+        if hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+    }
+
+    /// Zero everything and restart the window clock.
+    pub(crate) fn reset(&mut self) {
+        *self = StatsInner::new();
+    }
+
+    /// Derive the public snapshot.
+    pub(crate) fn snapshot(&self) -> ServeStats {
+        let elapsed = self.started.elapsed();
+        let secs = elapsed.as_secs_f64();
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        let lookups = self.cache_hits + self.cache_misses;
+        ServeStats {
+            requests: self.requests,
+            batches: self.batches,
+            elapsed,
+            throughput_rps: if secs > 0.0 { self.requests as f64 / secs } else { 0.0 },
+            p50_latency: percentile(&sorted, 0.50),
+            p95_latency: percentile(&sorted, 0.95),
+            p99_latency: percentile(&sorted, 0.99),
+            batch_histogram: self.batch_histogram.clone(),
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            cache_hit_rate: if lookups == 0 {
+                0.0
+            } else {
+                self.cache_hits as f64 / lookups as f64
+            },
+        }
+    }
+}
+
+/// The `q`-quantile of an ascending-sorted sample set, by the
+/// nearest-rank method (`ceil(q·n)`-th smallest); zero for an empty set.
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let ms: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 0.50), Duration::from_millis(50));
+        assert_eq!(percentile(&ms, 0.95), Duration::from_millis(95));
+        assert_eq!(percentile(&ms, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&ms, 1.0), Duration::from_millis(100));
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+        assert_eq!(percentile(&[Duration::from_millis(7)], 0.5), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn snapshot_aggregates_and_reset_clears() {
+        let mut s = StatsInner::new();
+        s.record_batch(4);
+        s.record_batch(4);
+        s.record_batch(1);
+        for i in 1..=9 {
+            s.record_request(Duration::from_millis(i));
+        }
+        s.record_cache(false);
+        s.record_cache(true);
+        s.record_cache(true);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 9);
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.batch_histogram[&4], 2);
+        assert_eq!(snap.batch_histogram[&1], 1);
+        assert_eq!(snap.p50_latency, Duration::from_millis(5));
+        assert_eq!(snap.p99_latency, Duration::from_millis(9));
+        assert!((snap.cache_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        s.reset();
+        let snap = s.snapshot();
+        assert_eq!((snap.requests, snap.batches), (0, 0));
+        assert_eq!(snap.cache_hit_rate, 0.0);
+    }
+}

@@ -127,7 +127,7 @@ mod tests {
     use super::*;
     use crate::exec::build_shard_tasks;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{baselines, k_cut};
+    use crate::planner::{baselines, try_k_cut};
 
     #[test]
     fn eff_monotone_in_min_dim() {
@@ -143,7 +143,7 @@ mod tests {
         // runtime; the compute model must agree or transformer step times
         // would include phantom work.
         let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
-        let plan = k_cut(&g, 1);
+        let plan = try_k_cut(&g, 1).unwrap();
         let tasks = build_shard_tasks(&g, &plan);
         for op in &g.ops {
             let f = shard_flops(&g, op, &tasks[op.id]);
@@ -180,11 +180,11 @@ mod tests {
         // (even tiling, no redundant compute on matmuls).
         let g = mlp(&MlpConfig::fig8(512, 128));
         let serial: f64 = {
-            let plan = k_cut(&g, 0);
+            let plan = try_k_cut(&g, 0).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             g.ops.iter().map(|o| shard_flops(&g, o, &tasks[o.id])).sum()
         };
-        let plan = k_cut(&g, 2);
+        let plan = try_k_cut(&g, 2).unwrap();
         let tasks = build_shard_tasks(&g, &plan);
         let sharded: f64 = g
             .ops
@@ -193,7 +193,7 @@ mod tests {
             .map(|o| shard_flops(&g, o, &tasks[o.id]))
             .sum();
         let serial_mm: f64 = {
-            let plan0 = k_cut(&g, 0);
+            let plan0 = try_k_cut(&g, 0).unwrap();
             let t0 = build_shard_tasks(&g, &plan0);
             g.ops
                 .iter()

@@ -299,11 +299,11 @@ struct Instance {
     waiters: Vec<usize>,
 }
 
-/// [`run_program`] with structured validation: rejects an empty topology
-/// and any stream-discipline violation ([`LoweredProgram::validate`])
-/// before scheduling, so hand-written programs fail with a
-/// [`PlanError`](crate::planner::PlanError) instead of deadlocking the
-/// event loop or panicking on a transfer index.
+/// Run `program` over `topo` with structured validation: rejects an
+/// empty topology and any stream-discipline violation
+/// ([`LoweredProgram::validate`]) before scheduling, so hand-written
+/// programs fail with a [`PlanError`](crate::planner::PlanError) instead
+/// of deadlocking the event loop or panicking on a transfer index.
 pub fn try_run_program(
     program: &LoweredProgram,
     topo: &Topology,
@@ -312,13 +312,19 @@ pub fn try_run_program(
         return Err(crate::planner::PlanError::EmptyTopology);
     }
     program.validate()?;
-    Ok(run_program(program, topo))
+    Ok(run_program_unchecked(program, topo))
 }
 
 /// Run `program` over `topo` to completion and report the timeline.
-/// Expects a well-formed program (anything [`crate::lower::lower`]
-/// emits); see [`try_run_program`] for the validating front door.
+/// Panics on malformed programs.
+#[deprecated(note = "use `try_run_program` and handle the `PlanError`")]
 pub fn run_program(program: &LoweredProgram, topo: &Topology) -> EngineReport {
+    try_run_program(program, topo).expect("program failed validation")
+}
+
+/// The scheduling core: expects a validated, well-formed program
+/// (anything [`crate::lower::try_lower`] emits).
+fn run_program_unchecked(program: &LoweredProgram, topo: &Topology) -> EngineReport {
     let devices = program.devices;
     let k = program.k;
     let mut instances: Vec<Vec<Instance>> = program
@@ -548,7 +554,7 @@ pub fn chrome_trace_json(report: &EngineReport, topo: &Topology) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lower::{lower, try_lower_forced};
+    use crate::lower::{try_lower, try_lower_forced};
     use crate::models::{mlp, transformer, MlpConfig, TransformerConfig};
     use crate::planner::{classic_dp_form, Planner, Strategy};
     use crate::sim::{try_simulate, SimConfig};
@@ -561,12 +567,12 @@ mod tests {
     fn try_run_program_validates_inputs() {
         use crate::planner::PlanError;
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::plan(&g, 1, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
         // Well-formed program on a well-formed topology: same report.
         let topo = Topology::from_sim(&cfg(), 1);
         let ok = try_run_program(&p, &topo).unwrap();
-        assert_eq!(ok.total_bytes, run_program(&p, &topo).total_bytes);
+        assert_eq!(ok.total_bytes, try_run_program(&p, &topo).unwrap().total_bytes);
         // Empty topology is rejected structurally.
         assert_eq!(
             try_run_program(&p, &Topology { tiers: vec![] }).unwrap_err(),
@@ -586,9 +592,9 @@ mod tests {
     #[test]
     fn serial_program_is_pure_compute_time() {
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::plan(&g, 0, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
-        let r = run_program(&p, &Topology::from_sim(&cfg(), 0));
+        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
+        let r = try_run_program(&p, &Topology::from_sim(&cfg(), 0)).unwrap();
         assert_eq!(r.step_s, r.compute_s);
         assert_eq!(r.total_bytes, 0);
         assert_eq!(r.transfers_per_device, 0);
@@ -600,9 +606,9 @@ mod tests {
     fn engine_meter_matches_analytic_sim_bit_for_bit() {
         let g = mlp(&MlpConfig::fig8(64, 64));
         for k in 1..=3 {
-            let plan = Planner::plan(&g, k, Strategy::Soybean);
-            let p = lower(&g, &plan, &cfg());
-            let r = run_program(&p, &Topology::from_sim(&cfg(), k));
+            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
+            let p = try_lower(&g, &plan, &cfg()).unwrap();
+            let r = try_run_program(&p, &Topology::from_sim(&cfg(), k)).unwrap();
             let sim = try_simulate(&g, &plan, &cfg()).unwrap();
             assert_eq!(r.tier_bytes, sim.tier_bytes, "k={k}");
             assert_eq!(r.total_bytes, plan.total_cost(), "k={k}");
@@ -624,13 +630,13 @@ mod tests {
         ];
         for (name, g, strategies) in &workloads {
             for &strat in strategies {
-                let plan = Planner::plan(g, 2, strat);
+                let plan = Planner::try_plan(g, 2, strat).unwrap();
                 let p = if strat == Strategy::DataParallel {
                     try_lower_forced(g, &plan, &cfg(), &classic_dp_form).unwrap()
                 } else {
-                    lower(g, &plan, &cfg())
+                    try_lower(g, &plan, &cfg()).unwrap()
                 };
-                let r = run_program(&p, &Topology::from_sim(&cfg(), 2));
+                let r = try_run_program(&p, &Topology::from_sim(&cfg(), 2)).unwrap();
                 assert!(r.step_s >= r.compute_s, "{name}/{}", strat.name());
                 assert!(
                     r.step_s <= r.compute_s + r.xfer_chain_s + 1e-9,
@@ -649,9 +655,9 @@ mod tests {
         // Gradient aggregation overlaps with the rest of the backward
         // pass: the engine must land strictly under compute + chain.
         let g = mlp(&MlpConfig::fig8(512, 4096));
-        let plan = Planner::plan(&g, 3, Strategy::DataParallel);
+        let plan = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
-        let r = run_program(&p, &Topology::from_sim(&cfg(), 3));
+        let r = try_run_program(&p, &Topology::from_sim(&cfg(), 3)).unwrap();
         assert!(r.xfer_chain_s > 0.0);
         assert!(
             r.step_s < r.compute_s + r.xfer_chain_s,
@@ -665,9 +671,9 @@ mod tests {
     #[test]
     fn infinite_bandwidth_zero_latency_collapses_to_compute() {
         let g = mlp(&MlpConfig::fig8(128, 256));
-        let plan = Planner::plan(&g, 2, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
-        let r = run_program(&p, &Topology::flat(2, f64::INFINITY, 0.0, 4.0));
+        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
+        let r = try_run_program(&p, &Topology::flat(2, f64::INFINITY, 0.0, 4.0)).unwrap();
         assert_eq!(r.step_s, r.compute_s);
         assert!(r.total_bytes > 0, "bytes still metered, just free");
     }
@@ -675,9 +681,9 @@ mod tests {
     #[test]
     fn trace_spans_fit_inside_the_step() {
         let g = transformer(&TransformerConfig::tiny());
-        let plan = Planner::plan(&g, 2, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
-        let r = run_program(&p, &Topology::p2_8xlarge());
+        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
+        let r = try_run_program(&p, &Topology::p2_8xlarge()).unwrap();
         assert!(!r.trace.is_empty());
         for e in &r.trace {
             assert!(e.start_s >= 0.0 && e.dur_s >= 0.0, "{}", e.name);
@@ -691,10 +697,10 @@ mod tests {
     #[test]
     fn chrome_trace_is_valid_json() {
         let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
-        let plan = Planner::plan(&g, 1, Strategy::Soybean);
-        let p = lower(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &cfg()).unwrap();
         let topo = Topology::p2_8xlarge();
-        let r = run_program(&p, &topo);
+        let r = try_run_program(&p, &topo).unwrap();
         let json = chrome_trace_json(&r, &topo);
         let doc = crate::util::json::parse(&json).expect("valid JSON");
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap();

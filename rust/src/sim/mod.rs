@@ -13,7 +13,7 @@
 
 //! Two accountings share the metering theory:
 //!
-//! - the closed-form step model in [`simulate()`] (per-tier byte sums,
+//! - the closed-form step model in [`try_simulate()`] (per-tier byte sums,
 //!   scalar overlap credit) drives the paper-figure sweeps;
 //! - the discrete-event engine in [`engine`] schedules the explicit
 //!   per-device programs of [`crate::lower`] over a hierarchical
@@ -37,11 +37,15 @@ pub mod engine;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
-pub use engine::{chrome_trace_json, run_program, try_run_program, EngineReport, TierLink, Topology};
+pub use engine::{chrome_trace_json, try_run_program, EngineReport, TierLink, Topology};
 pub use simulate::{
-    simulate, simulate_classic_dp, simulate_forced, try_simulate, try_simulate_forced, SimConfig,
-    SimReport,
+    try_simulate, try_simulate_classic_dp, try_simulate_forced, SimConfig, SimReport,
 };
+// The panicking variants stay re-exported (deprecated) for one release.
+#[allow(deprecated)]
+pub use engine::run_program;
+#[allow(deprecated)]
+pub use simulate::{simulate, simulate_classic_dp, simulate_forced};
 
 /// THE extension rule for per-tier parameter lists: indexing past the end
 /// repeats the last entry. Every consumer (`tier_bandwidth`,

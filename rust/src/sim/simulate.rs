@@ -107,50 +107,64 @@ impl SimReport {
 }
 
 /// Simulate one training step of `g` under `plan`. Panics on plans with
-/// no realizable shard schedule (see [`try_simulate`]).
+/// no realizable shard schedule.
+#[deprecated(note = "use `try_simulate` and handle the `PlanError`")]
+pub fn simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
+    try_simulate(g, plan, cfg).expect("simulation failed")
+}
+
+/// Simulate one training step of `g` under `plan`, with structured
+/// errors for plans that admit no feasible form at some cut.
 ///
 /// # Examples
 ///
 /// ```
 /// use soybean::models::{mlp, MlpConfig};
-/// use soybean::planner::k_cut;
-/// use soybean::sim::{simulate, SimConfig};
+/// use soybean::planner::try_k_cut;
+/// use soybean::sim::{try_simulate, SimConfig};
 ///
 /// let g = mlp(&MlpConfig { batch: 128, dims: vec![64, 64], bias: false });
-/// let plan = k_cut(&g, 3);
-/// let report = simulate(&g, &plan, &SimConfig::default());
+/// let plan = try_k_cut(&g, 3).unwrap();
+/// let report = try_simulate(&g, &plan, &SimConfig::default()).unwrap();
 /// assert_eq!(report.devices, 8);
 /// // The simulator meters the same theory the optimizer priced.
 /// assert_eq!(report.total_bytes, plan.total_cost());
 /// ```
-pub fn simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
-    simulate_forced(g, plan, cfg, &|_, _| None)
-}
-
-/// [`simulate`] returning the structured [`PlanError`] path instead of
-/// panicking when the plan admits no feasible form at some cut.
 pub fn try_simulate(g: &Graph, plan: &Plan, cfg: &SimConfig) -> Result<SimReport, PlanError> {
     try_simulate_forced(g, plan, cfg, &|_, _| None)
 }
 
 /// Simulate the stock data-parallel execution: gradient aggregation via
 /// the classic allreduce forms (what the paper's MXNet baseline does).
+/// Panics on planner failure.
+#[deprecated(note = "use `try_simulate_classic_dp` and handle the `PlanError`")]
 pub fn simulate_classic_dp(g: &Graph, plan: &Plan, cfg: &SimConfig) -> SimReport {
-    simulate_forced(g, plan, cfg, &classic_dp_form)
+    try_simulate_classic_dp(g, plan, cfg).expect("simulation failed")
 }
 
-/// [`simulate`] with per-op forced aligned forms.
+/// [`try_simulate`] under the classic data-parallel gradient aggregation
+/// forms, with structured errors.
+pub fn try_simulate_classic_dp(
+    g: &Graph,
+    plan: &Plan,
+    cfg: &SimConfig,
+) -> Result<SimReport, PlanError> {
+    try_simulate_forced(g, plan, cfg, &classic_dp_form)
+}
+
+/// [`try_simulate`] with per-op forced aligned forms. Panics on planner
+/// failure.
+#[deprecated(note = "use `try_simulate_forced` and handle the `PlanError`")]
 pub fn simulate_forced(
     g: &Graph,
     plan: &Plan,
     cfg: &SimConfig,
     forced: &dyn Fn(&Graph, &Op) -> Option<Form>,
 ) -> SimReport {
-    try_simulate_forced(g, plan, cfg, forced)
-        .unwrap_or_else(|e| panic!("simulation failed: {e}"))
+    try_simulate_forced(g, plan, cfg, forced).expect("simulation failed")
 }
 
-/// [`simulate_forced`] with structured errors.
+/// [`try_simulate`] with per-op forced aligned forms and structured errors.
 pub fn try_simulate_forced(
     g: &Graph,
     plan: &Plan,
@@ -232,8 +246,8 @@ mod tests {
     #[test]
     fn serial_plan_has_no_comm() {
         let g = mlp(&MlpConfig::fig8(512, 256));
-        let plan = Planner::plan(&g, 0, Strategy::Soybean);
-        let r = simulate(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let r = try_simulate(&g, &plan, &cfg()).unwrap();
         assert_eq!(r.total_bytes, 0);
         assert_eq!(r.comm_s, 0.0);
         assert!(r.compute_s > 0.0);
@@ -246,13 +260,13 @@ mod tests {
         // metered bytes == Theorem-1 total, exactly.
         let g = mlp(&MlpConfig::fig8(512, 512));
         for strat in [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean] {
-            let plan = Planner::plan(&g, 3, strat);
+            let plan = Planner::try_plan(&g, 3, strat).unwrap();
             // The DP baseline is priced (and must be simulated) with the
             // classic gradient-aggregation forms.
             let r = if strat == Strategy::DataParallel {
-                simulate_classic_dp(&g, &plan, &cfg())
+                try_simulate_classic_dp(&g, &plan, &cfg()).unwrap()
             } else {
-                simulate(&g, &plan, &cfg())
+                try_simulate(&g, &plan, &cfg()).unwrap()
             };
             assert_eq!(r.total_bytes, plan.total_cost(), "{}", strat.name());
         }
@@ -287,8 +301,8 @@ mod tests {
         // equal the plan's Theorem-1 cost bit for bit.
         let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
         for k in 1..=2 {
-            let plan = Planner::plan(&g, k, Strategy::Soybean);
-            let r = simulate(&g, &plan, &cfg());
+            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
+            let r = try_simulate(&g, &plan, &cfg()).unwrap();
             assert_eq!(r.total_bytes, plan.total_cost(), "k={k}");
         }
     }
@@ -296,8 +310,8 @@ mod tests {
     #[test]
     fn compute_only_config_zeroes_overhead() {
         let g = mlp(&MlpConfig::fig8(512, 1024));
-        let plan = Planner::plan(&g, 3, Strategy::DataParallel);
-        let r = simulate(&g, &plan, &cfg().compute_only());
+        let plan = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let r = try_simulate(&g, &plan, &cfg().compute_only()).unwrap();
         assert_eq!(r.overhead_s, 0.0);
         assert!(r.total_bytes > 0, "bytes still counted, just free");
     }
@@ -307,7 +321,8 @@ mod tests {
         // Figure 8(a)'s qualitative claim: 8 GPUs, hidden 8192, batch 512:
         // DP's communication overhead far exceeds compute.
         let g = mlp(&MlpConfig::fig8(512, 8192));
-        let dp = simulate(&g, &Planner::plan(&g, 3, Strategy::DataParallel), &cfg());
+        let pdp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let dp = try_simulate(&g, &pdp, &cfg()).unwrap();
         assert!(
             dp.overhead_s > 2.0 * dp.compute_s,
             "overhead {} compute {}",
@@ -315,7 +330,8 @@ mod tests {
             dp.compute_s
         );
         // And SOYBEAN's plan must beat DP end to end.
-        let soy = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
+        let psoy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let soy = try_simulate(&g, &psoy, &cfg()).unwrap();
         assert!(soy.step_s < dp.step_s);
     }
 
@@ -326,9 +342,12 @@ mod tests {
             (mlp(&MlpConfig::fig8(2048, 2048)), "mlp-big-batch"),
             (cnn5(256, 6, 4, 128, 10), "cnn-small-image"),
         ] {
-            let soy = simulate(&g, &Planner::plan(&g, 2, Strategy::Soybean), &cfg());
-            let dp = simulate(&g, &Planner::plan(&g, 2, Strategy::DataParallel), &cfg());
-            let mp = simulate(&g, &Planner::plan(&g, 2, Strategy::ModelParallel), &cfg());
+            let psoy = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+            let pdp = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
+            let pmp = Planner::try_plan(&g, 2, Strategy::ModelParallel).unwrap();
+            let soy = try_simulate(&g, &psoy, &cfg()).unwrap();
+            let dp = try_simulate(&g, &pdp, &cfg()).unwrap();
+            let mp = try_simulate(&g, &pmp, &cfg()).unwrap();
             assert!(soy.total_bytes <= dp.total_bytes, "{label}: soy bytes > dp");
             assert!(soy.total_bytes <= mp.total_bytes, "{label}: soy bytes > mp");
             assert!(soy.step_s <= dp.step_s * 1.02, "{label}");
@@ -339,8 +358,10 @@ mod tests {
     #[test]
     fn more_devices_less_compute_per_step() {
         let g = mlp(&MlpConfig::fig8(2048, 1024));
-        let r1 = simulate(&g, &Planner::plan(&g, 1, Strategy::Soybean), &cfg());
-        let r3 = simulate(&g, &Planner::plan(&g, 3, Strategy::Soybean), &cfg());
+        let p1 = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
+        let p3 = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let r1 = try_simulate(&g, &p1, &cfg()).unwrap();
+        let r3 = try_simulate(&g, &p3, &cfg()).unwrap();
         assert!(r3.compute_s < r1.compute_s);
     }
 
@@ -349,8 +370,10 @@ mod tests {
         // §6.2: as the batch grows, DP's overhead ratio shrinks.
         let small = mlp(&MlpConfig::fig8(512, 4096));
         let large = mlp(&MlpConfig::fig8(4096, 4096));
-        let r_small = simulate(&small, &Planner::plan(&small, 3, Strategy::DataParallel), &cfg());
-        let r_large = simulate(&large, &Planner::plan(&large, 3, Strategy::DataParallel), &cfg());
+        let p_small = Planner::try_plan(&small, 3, Strategy::DataParallel).unwrap();
+        let p_large = Planner::try_plan(&large, 3, Strategy::DataParallel).unwrap();
+        let r_small = try_simulate(&small, &p_small, &cfg()).unwrap();
+        let r_large = try_simulate(&large, &p_large, &cfg()).unwrap();
         let ratio_small = r_small.overhead_s / r_small.compute_s;
         let ratio_large = r_large.overhead_s / r_large.compute_s;
         assert!(ratio_large < ratio_small, "{ratio_large} !< {ratio_small}");

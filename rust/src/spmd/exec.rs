@@ -48,10 +48,11 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::exec::{gather_sources, resident_region, try_build_shard_tasks, Region, ShardTask};
+use crate::exec::{gather_sources, resident_region, Region, ShardTask};
 use crate::graph::{apply_op, Graph, InterpError, OpId, View};
 use crate::lower::{Instr, LoweredProgram};
 use crate::planner::{Plan, PlanError};
@@ -59,14 +60,15 @@ use crate::util::checksum::Fnv64;
 
 use super::buf::{for_each_row, ShardBuf};
 use super::fault::{FaultKind, FaultPlan, InjectedPanic, KILLED_REASON};
+use super::pool::{StepCtx, WorkerPool};
 
 /// Slot tag for output scatter-reduce messages (inputs use their index).
-const OUT_SLOT: u8 = u8::MAX;
+pub(crate) const OUT_SLOT: u8 = u8::MAX;
 /// Slot tag a failing worker broadcasts so peers error instead of block.
-const POISON_SLOT: u8 = u8::MAX - 1;
+pub(crate) const POISON_SLOT: u8 = u8::MAX - 1;
 /// Reason string of a cascade abort (a worker that stopped because a
 /// peer poisoned it) — `execute` prefers reporting the root cause.
-const POISON_REASON: &str = "peer worker aborted";
+pub(crate) const POISON_REASON: &str = "peer worker aborted";
 
 /// The pieces of one exchange: absolute region + dense `f32` payload.
 type Pieces = Vec<(Region, Vec<f32>)>;
@@ -74,13 +76,25 @@ type Pieces = Vec<(Region, Vec<f32>)>;
 /// One inter-device message: every piece one sender contributes to one
 /// exchange of one op, with an FNV-1a digest of the payload so wire
 /// corruption surfaces as [`ExecError::Corrupt`] instead of silently
-/// wrong numbers.
-struct Msg {
-    from: usize,
-    op: OpId,
-    slot: u8,
-    pieces: Pieces,
-    sum: u64,
+/// wrong numbers. The `seq` tag names the step the message belongs to:
+/// worker threads are persistent ([`WorkerPool`]), so a failed step can
+/// strand pieces in a channel, and the next step must be able to discard
+/// them instead of pasting stale data.
+pub(crate) struct Msg {
+    pub(crate) from: usize,
+    pub(crate) seq: u64,
+    pub(crate) op: OpId,
+    pub(crate) slot: u8,
+    pub(crate) pieces: Pieces,
+    pub(crate) sum: u64,
+}
+
+impl Msg {
+    /// The poison broadcast of a failed worker: peers waiting on any
+    /// message of step `seq` error out instead of blocking.
+    pub(crate) fn poison(from: usize, seq: u64) -> Self {
+        Msg { from, seq, op: 0, slot: POISON_SLOT, pieces: Vec::new(), sum: 0 }
+    }
 }
 
 /// Payload digest of one message: piece count, per-piece length, and the
@@ -99,6 +113,18 @@ fn checksum_pieces(pieces: &Pieces) -> u64 {
 }
 
 /// Knobs for one threaded execution ([`execute_with`]).
+///
+/// Construct with the builder-style setters:
+///
+/// ```
+/// use std::time::Duration;
+/// use soybean::spmd::{ExecOptions, FaultPlan};
+///
+/// let opts = ExecOptions::default()
+///     .deadline(Duration::from_millis(500))
+///     .fault_plan(FaultPlan::kill(1, 0));
+/// assert_eq!(opts.deadline, Duration::from_millis(500));
+/// ```
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
     /// Watchdog deadline per wait site: the longest a worker blocks for
@@ -108,8 +134,12 @@ pub struct ExecOptions {
     /// this instead of deadlocking.
     pub deadline: Duration,
     /// Fault-injection plan; `None` (the default) makes every hook a
-    /// single branch — the [`execute`] fast path.
-    pub faults: Option<FaultPlan>,
+    /// single branch — the [`execute`] fast path. `Arc`-shared so that
+    /// clones of the options (retries under
+    /// [`super::execute_with_recovery`], per-step contexts in a
+    /// [`WorkerPool`]) see one arming state: a transient fault that fired
+    /// once stays fired.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ExecOptions {
@@ -117,6 +147,23 @@ impl Default for ExecOptions {
         // Generous enough that no healthy exchange on a loaded CI runner
         // ever trips it; chaos suites shrink it to keep trials fast.
         ExecOptions { deadline: Duration::from_secs(60), faults: None }
+    }
+}
+
+impl ExecOptions {
+    /// Set the per-wait-site watchdog deadline (builder style).
+    #[must_use]
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Arm a fault-injection plan (builder style). The plan is wrapped in
+    /// an [`Arc`] so every clone of these options shares its arming state.
+    #[must_use]
+    pub fn fault_plan(mut self, faults: FaultPlan) -> Self {
+        self.faults = Some(Arc::new(faults));
+        self
     }
 }
 
@@ -263,14 +310,18 @@ pub struct ExecReport {
 }
 
 /// What one worker thread hands back.
-struct DeviceOutcome {
+pub(crate) struct DeviceOutcome {
     home: Vec<Option<ShardBuf>>,
     instr_bytes: u64,
     payload_bytes: u64,
     op_payload: Vec<u64>,
 }
 
-struct Worker<'a> {
+/// The per-step execution state of one device. A persistent pool thread
+/// constructs one of these per dispatched step (borrowing the step's
+/// [`StepCtx`] and the thread's own channels) and consumes it in
+/// [`Worker::run`].
+pub(crate) struct Worker<'a> {
     d: usize,
     k: usize,
     devices: usize,
@@ -278,8 +329,11 @@ struct Worker<'a> {
     plan: &'a Plan,
     tasks: &'a [ShardTask],
     program: &'a LoweredProgram,
-    senders: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
+    senders: &'a [Sender<Msg>],
+    rx: &'a Receiver<Msg>,
+    /// Step tag: stamped on every sent [`Msg`]; receives discard other
+    /// steps' strays (see [`Msg`]).
+    seq: u64,
     inbox: BTreeMap<(OpId, u8, usize), Pieces>,
     home: Vec<Option<ShardBuf>>,
     instr_bytes: u64,
@@ -292,7 +346,37 @@ struct Worker<'a> {
 }
 
 impl<'a> Worker<'a> {
-    fn run(mut self) -> Result<DeviceOutcome, ExecError> {
+    /// Wire up device `d`'s execution state for one step of `ctx`.
+    pub(crate) fn for_step(
+        d: usize,
+        ctx: &'a StepCtx,
+        senders: &'a [Sender<Msg>],
+        rx: &'a Receiver<Msg>,
+        seq: u64,
+        home: Vec<Option<ShardBuf>>,
+    ) -> Self {
+        Worker {
+            d,
+            k: ctx.plan.k,
+            devices: ctx.plan.devices(),
+            g: &ctx.g,
+            plan: &ctx.plan,
+            tasks: &ctx.tasks,
+            program: &ctx.program,
+            senders,
+            rx,
+            seq,
+            inbox: BTreeMap::new(),
+            home,
+            instr_bytes: 0,
+            payload_bytes: 0,
+            op_payload: vec![0; ctx.g.ops.len()],
+            deadline: ctx.opts.deadline,
+            faults: ctx.opts.faults.as_deref(),
+        }
+    }
+
+    pub(crate) fn run(mut self) -> Result<DeviceOutcome, ExecError> {
         let program = self.program;
         let d = self.d;
         for instr in &program.programs[d].instrs {
@@ -340,6 +424,15 @@ impl<'a> Worker<'a> {
                 return Err(timeout(self.d, self.deadline));
             }
             match self.rx.recv_timeout(remaining) {
+                Ok(m) if m.seq != self.seq => {
+                    // A stray from an earlier step, stranded when that
+                    // step failed mid-exchange on this persistent worker.
+                    // Steps are barriers (the pool collects every device's
+                    // result before dispatching the next step), so a
+                    // mismatched seq is always stale — discard it. This
+                    // check runs before the poison check: a dead step's
+                    // poison must not kill a healthy one.
+                }
                 Ok(m) if m.slot == POISON_SLOT => {
                     return Err(ExecError::Worker { device: m.from, reason: POISON_REASON.into() })
                 }
@@ -390,7 +483,7 @@ impl<'a> Worker<'a> {
         }
         // A send only fails if the receiver died; the poison/abort path
         // reports that failure, so the result here is ignorable.
-        let _ = self.senders[to].send(Msg { from: self.d, op, slot, pieces, sum });
+        let _ = self.senders[to].send(Msg { from: self.d, seq: self.seq, op, slot, pieces, sum });
     }
 
     /// §5.2 phase 1: assemble one input in the op's required layout.
@@ -600,15 +693,15 @@ impl<'a> Worker<'a> {
 ///
 /// ```
 /// use soybean::graph::{eval_serial, max_rel_err, seed_values};
-/// use soybean::lower::lower;
+/// use soybean::lower::try_lower;
 /// use soybean::models::{mlp, MlpConfig};
-/// use soybean::planner::k_cut;
+/// use soybean::planner::try_k_cut;
 /// use soybean::sim::SimConfig;
 /// use soybean::spmd::execute;
 ///
 /// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
-/// let plan = k_cut(&g, 1);
-/// let program = lower(&g, &plan, &SimConfig::default());
+/// let plan = try_k_cut(&g, 1).unwrap();
+/// let program = try_lower(&g, &plan, &SimConfig::default()).unwrap();
 /// let init = seed_values(&g, 7);
 /// let report = execute(&g, &plan, &program, &init).unwrap();
 /// // Observed collective traffic is exactly the plan's Theorem-1 total.
@@ -650,7 +743,7 @@ pub fn execute(
 /// all stalled workers get to report their own wait site, and the
 /// minimum is taken over the full set rather than whichever deadline
 /// happened to expire first.
-fn root_cause(errors: Vec<ExecError>) -> Option<ExecError> {
+pub(crate) fn root_cause(errors: Vec<ExecError>) -> Option<ExecError> {
     fn key(e: &ExecError) -> (u8, usize, u8, usize) {
         match e {
             ExecError::Worker { device, reason } if reason == POISON_REASON => {
@@ -665,159 +758,29 @@ fn root_cause(errors: Vec<ExecError>) -> Option<ExecError> {
     errors.into_iter().min_by_key(key)
 }
 
-/// [`execute`] with explicit [`ExecOptions`]: a watchdog deadline and an
-/// optional fault-injection plan. The default path (`faults: None`)
-/// reduces every hook to one branch on a `None`, so `execute` stays as
-/// fast as before the fault-tolerance layer existed — pinned by the
-/// `exec_micro` bench against the BENCH_exec baseline.
-pub fn execute_with(
-    g: &Graph,
-    plan: &Plan,
-    program: &LoweredProgram,
-    init: &[Option<Vec<f32>>],
-    opts: &ExecOptions,
-) -> Result<ExecReport, ExecError> {
-    let tasks = try_build_shard_tasks(g, plan)?;
-    program.validate_for(plan)?;
-    let devices = plan.devices();
-    if opts.faults.is_some() {
-        // Injected panics unwind through catch_unwind like real kernel
-        // panics, but should not spam stderr across a 200-trial suite.
-        super::fault::install_quiet_panic_hook();
-    }
-    for (d, prog) in program.programs.iter().enumerate() {
-        for (pc, instr) in prog.instrs.iter().enumerate() {
-            if let Instr::Compute { op, .. } = instr {
-                if *op >= g.ops.len() {
-                    return Err(ExecError::Plan(PlanError::MalformedProgram {
-                        device: d,
-                        pc,
-                        reason: format!("compute of unknown op {op}"),
-                    }));
-                }
-            }
-        }
-    }
-    if program.total_bytes() != plan.total_cost() {
-        return Err(ExecError::MeterMismatch {
-            metered: program.total_bytes(),
-            plan: plan.total_cost(),
-        });
-    }
-    // Slice every device's home shard of every producerless tensor
-    // (validate_init: the same input contract as the serial interpreter).
-    let produced = crate::graph::validate_init(g, init)?;
-    let mut homes: Vec<Vec<Option<ShardBuf>>> = vec![vec![None; g.tensors.len()]; devices];
-    for t in &g.tensors {
-        if produced[t.id] {
-            continue;
-        }
-        // Invariant: validate_init checked presence and length.
-        let v = init[t.id].as_ref().expect("validated init value");
-        for (d, home) in homes.iter_mut().enumerate() {
-            let region = resident_region(&t.shape, &plan.tiles[t.id], d);
-            home[t.id] = Some(ShardBuf::from_full(v, &t.shape, region));
-        }
-    }
+/// Whether a worker failure must stay *silent* (no poison broadcast).
+///
+/// Two failure classes must NOT poison their peers:
+///
+/// - An injected kill is silent device loss — a machine that lost power
+///   sends nothing, so the peers' watchdogs, not a courtesy broadcast,
+///   must discover it.
+/// - A timeout: the stall has already spread, so the peers' deadlines
+///   expire near-simultaneously with ours — poisoning here races those
+///   expiries and can convert the *true* stall site's timeout into a
+///   cascade, corrupting root-cause attribution (caught by
+///   tools/proto/fault_mirror.py). Every wait is supervised, so nobody
+///   needs the poison to terminate.
+pub(crate) fn is_silent_failure(out: &Result<DeviceOutcome, ExecError>) -> bool {
+    matches!(out, Err(ExecError::Timeout { .. }))
+        || matches!(out, Err(ExecError::Worker { reason, .. }) if reason == KILLED_REASON)
+}
 
-    // One channel per device; every worker holds a sender to every peer.
-    // The main thread keeps no sender alive, so a fully-drained exchange
-    // can observe disconnection instead of blocking forever.
-    let (txs, rxs): (Vec<Sender<Msg>>, Vec<Receiver<Msg>>) = (0..devices).map(|_| channel()).unzip();
-    let sender_sets: Vec<Vec<Sender<Msg>>> = (0..devices).map(|_| txs.clone()).collect();
-    drop(txs);
-    let results: Vec<Result<DeviceOutcome, ExecError>> = std::thread::scope(|s| {
-        let handles: Vec<_> = rxs
-            .into_iter()
-            .zip(sender_sets)
-            .enumerate()
-            .map(|(d, (rx, senders))| {
-                let worker = Worker {
-                    d,
-                    k: plan.k,
-                    devices,
-                    g,
-                    plan,
-                    tasks: &tasks,
-                    program,
-                    senders: senders.clone(),
-                    rx,
-                    inbox: BTreeMap::new(),
-                    home: std::mem::take(&mut homes[d]),
-                    instr_bytes: 0,
-                    payload_bytes: 0,
-                    op_payload: vec![0; g.ops.len()],
-                    deadline: opts.deadline,
-                    faults: opts.faults.as_ref(),
-                };
-                s.spawn(move || {
-                    let out = match catch_unwind(AssertUnwindSafe(|| worker.run())) {
-                        Ok(r) => r,
-                        Err(_) => Err(ExecError::Worker {
-                            device: d,
-                            reason: "worker thread panicked".into(),
-                        }),
-                    };
-                    // Two failure classes must NOT poison their peers:
-                    //
-                    // - An injected kill is *silent* device loss — a
-                    //   machine that lost power sends nothing, so the
-                    //   peers' watchdogs, not a courtesy broadcast, must
-                    //   discover it.
-                    // - A timeout: the stall has already spread, so the
-                    //   peers' deadlines expire near-simultaneously with
-                    //   ours — poisoning here races those expiries and
-                    //   can convert the *true* stall site's timeout into
-                    //   a cascade, corrupting root-cause attribution
-                    //   (caught by tools/proto/fault_mirror.py). Every
-                    //   wait is supervised, so nobody needs the poison
-                    //   to terminate.
-                    let silent = matches!(&out, Err(ExecError::Timeout { .. }))
-                        || matches!(
-                            &out,
-                            Err(ExecError::Worker { reason, .. }) if reason == KILLED_REASON
-                        );
-                    if out.is_err() && !silent {
-                        // Poison every peer so nobody blocks on a message
-                        // this worker will never send.
-                        for tx in &senders {
-                            let _ = tx.send(Msg {
-                                from: d,
-                                op: 0,
-                                slot: POISON_SLOT,
-                                pieces: Vec::new(),
-                                sum: 0,
-                            });
-                        }
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .enumerate()
-            .map(|(d, h)| {
-                h.join().unwrap_or_else(|_| {
-                    Err(ExecError::Worker { device: d, reason: "worker thread panicked".into() })
-                })
-            })
-            .collect()
-    });
-    // Report the root cause (real failure > timeout > poison cascade).
-    let mut outcomes = Vec::with_capacity(devices);
-    let mut errors = Vec::new();
-    for r in results {
-        match r {
-            Ok(o) => outcomes.push(o),
-            Err(e) => errors.push(e),
-        }
-    }
-    if let Some(e) = root_cause(errors) {
-        return Err(e);
-    }
-
-    // Reassemble every tensor, checking replica shards agree bitwise.
+/// Reassemble every tensor from the devices' home shards, checking that
+/// replicated shards agree bitwise, and sum the byte meters — the tail
+/// half of a step, shared by the transient [`execute_with`] path and the
+/// persistent [`WorkerPool`].
+pub(crate) fn reassemble(g: &Graph, outcomes: &[DeviceOutcome]) -> Result<ExecReport, ExecError> {
     let mut tensors = Vec::with_capacity(g.tensors.len());
     for t in &g.tensors {
         let n: usize = t.shape.iter().product();
@@ -850,7 +813,7 @@ pub fn execute_with(
     }
 
     Ok(ExecReport {
-        devices,
+        devices: outcomes.len(),
         tensors,
         instr_bytes: outcomes.iter().map(|o| o.instr_bytes).sum(),
         payload_bytes: outcomes.iter().map(|o| o.payload_bytes).sum(),
@@ -858,6 +821,31 @@ pub fn execute_with(
             .map(|i| outcomes.iter().map(|o| o.op_payload[i]).sum())
             .collect(),
     })
+}
+
+/// [`execute`] with explicit [`ExecOptions`]: a watchdog deadline and an
+/// optional fault-injection plan. The default path (`faults: None`)
+/// reduces every hook to one branch on a `None`, so `execute` stays as
+/// fast as before the fault-tolerance layer existed — pinned by the
+/// `exec_micro` bench against the BENCH_exec baseline.
+///
+/// This is the one-shot convenience path: it validates the step into a
+/// [`StepCtx`], spins up a transient [`WorkerPool`], runs the single
+/// step, and tears the pool down. Callers executing the same program
+/// repeatedly (serving, training loops) should hold a [`WorkerPool`] —
+/// or a [`crate::serve::ServeEngine`] — so the worker threads stay warm
+/// across steps.
+pub fn execute_with(
+    g: &Graph,
+    plan: &Plan,
+    program: &LoweredProgram,
+    init: &[Option<Vec<f32>>],
+    opts: &ExecOptions,
+) -> Result<ExecReport, ExecError> {
+    let ctx =
+        Arc::new(StepCtx::try_new(g.clone(), plan.clone(), program.clone(), opts.clone())?);
+    let mut pool = WorkerPool::spawn(ctx.devices());
+    pool.run_step(&ctx, init)
 }
 
 #[cfg(test)]

@@ -31,11 +31,13 @@
 mod buf;
 mod exec;
 pub mod fault;
+mod pool;
 mod recover;
 
 pub use buf::{for_each_row, ShardBuf};
 pub use exec::{execute, execute_with, ExecError, ExecOptions, ExecReport};
 pub use fault::{Fault, FaultKind, FaultPlan};
+pub use pool::{StepCtx, WorkerPool};
 pub use recover::{
     execute_with_recovery, Checkpoint, RecoverOptions, RecoveryOutcome, RecoveryReport,
 };
@@ -60,9 +62,9 @@ pub fn worst_divergence(g: &Graph, report: &ExecReport, serial: &[Vec<f32>]) -> 
 mod tests {
     use super::*;
     use crate::graph::{eval_serial, seed_values, GraphBuilder};
-    use crate::lower::{lower, try_lower};
+    use crate::lower::try_lower;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{baselines, eval_plan, k_cut, Plan, PlanError, Planner, Strategy};
+    use crate::planner::{baselines, eval_plan, try_k_cut, Plan, PlanError, Planner, Strategy};
     use crate::sim::SimConfig;
     use crate::tiling::Tile;
 
@@ -75,8 +77,8 @@ mod tests {
         // k = 0: one device, no collectives, exact agreement (the
         // executor degenerates into the interpreter).
         let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 6], bias: true });
-        let plan = Planner::plan(&g, 0, Strategy::Soybean);
-        let program = lower(&g, &plan, &cfg());
+        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
         let init = seed_values(&g, 1);
         let r = execute(&g, &plan, &program, &init).unwrap();
         assert_eq!(r.instr_bytes, 0);
@@ -106,8 +108,8 @@ mod tests {
     #[test]
     fn soybean_plan_matches_serial_at_4_devices() {
         let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 12, 8], bias: false });
-        let plan = k_cut(&g, 2);
-        let program = lower(&g, &plan, &cfg());
+        let plan = try_k_cut(&g, 2).unwrap();
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
         let init = seed_values(&g, 3);
         let r = execute(&g, &plan, &program, &init).unwrap();
         assert_eq!(r.instr_bytes, plan.total_cost());
@@ -119,8 +121,8 @@ mod tests {
     #[test]
     fn malformed_plan_reports_structured_error() {
         let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
-        let plan = k_cut(&g, 1);
-        let program = lower(&g, &plan, &cfg());
+        let plan = try_k_cut(&g, 1).unwrap();
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
         let init = seed_values(&g, 1);
         // Wrong tensor count.
         let bad = Plan { k: 1, tiles: vec![vec![Tile::Rep]], cut_costs: vec![0] };
@@ -142,8 +144,8 @@ mod tests {
     #[test]
     fn meter_mismatch_rejected() {
         let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
-        let plan = k_cut(&g, 1);
-        let program = lower(&g, &plan, &cfg());
+        let plan = try_k_cut(&g, 1).unwrap();
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
         let init = seed_values(&g, 1);
         // Execute against a plan whose Theorem-1 total disagrees with the
         // program: the executor refuses rather than mis-metering.
@@ -160,8 +162,8 @@ mod tests {
     #[test]
     fn missing_input_reported() {
         let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
-        let plan = k_cut(&g, 1);
-        let program = lower(&g, &plan, &cfg());
+        let plan = try_k_cut(&g, 1).unwrap();
+        let program = try_lower(&g, &plan, &cfg()).unwrap();
         let mut init = seed_values(&g, 1);
         init[0] = None;
         assert!(matches!(

@@ -1,0 +1,294 @@
+//! Persistent SPMD worker pool: spawn threads once, dispatch steps many
+//! times.
+//!
+//! The one-shot [`super::execute`] path pays thread spawn + teardown on
+//! every call, which is pure overhead when the same lowered program runs
+//! step after step — the serving scenario ROADMAP item 2 names, and the
+//! amortization story the planner's whole value proposition rests on
+//! (find the tiling once, execute it forever). This module splits the
+//! executor's lifecycle in two:
+//!
+//! - [`StepCtx`] is one fully *validated* step — graph, plan, lowered
+//!   program, shard schedule, and options, checked once by
+//!   [`StepCtx::try_new`] (shard schedule builds, program validates
+//!   against the plan, every compute targets a known op, and the lowered
+//!   byte meter equals the plan's Theorem-1 cost). Immutable and
+//!   `Arc`-shared, so dispatching it is a pointer bump, not a re-plan.
+//! - [`WorkerPool`] owns one long-lived OS thread per device plus the
+//!   inter-device data channels. Each thread loops on a private job
+//!   queue; [`WorkerPool::run_step`] slices the input shards, hands every
+//!   thread a job, and blocks until all devices report — a step barrier.
+//!
+//! Because the barrier completes before the next dispatch, the only
+//! cross-step hazard is a message a *failed* step stranded in a data
+//! channel. Every [`super::exec::Msg`] therefore carries the step's
+//! sequence number, and receivers discard strays from other steps —
+//! including stale poison — before interpreting them.
+//!
+//! Failure semantics are identical to the transient path (they share the
+//! worker body): a failing worker broadcasts poison unless the failure
+//! must stay silent (kill, timeout), the pool ranks the collected errors
+//! by root cause, and the surviving threads stay warm for the next step.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::exec::{resident_region, try_build_shard_tasks, ShardTask};
+use crate::graph::{validate_init, Graph};
+use crate::lower::{Instr, LoweredProgram};
+use crate::planner::{Plan, PlanError};
+
+use super::buf::ShardBuf;
+use super::exec::{
+    is_silent_failure, reassemble, root_cause, DeviceOutcome, ExecError, ExecOptions, ExecReport,
+    Msg, Worker,
+};
+
+/// One fully validated, immutable step: everything a [`WorkerPool`]
+/// needs to execute a lowered program except the input values.
+///
+/// Validation happens once, at construction — repeated dispatch of the
+/// same context ([`WorkerPool::run_step`], the serving plan cache) pays
+/// none of it again.
+pub struct StepCtx {
+    pub(crate) g: Graph,
+    pub(crate) plan: Plan,
+    pub(crate) program: LoweredProgram,
+    pub(crate) tasks: Vec<ShardTask>,
+    pub(crate) opts: ExecOptions,
+}
+
+impl StepCtx {
+    /// Validate `(g, plan, program, opts)` into a dispatchable step.
+    ///
+    /// Runs the executor's full admission suite: the shard schedule must
+    /// build, the program must validate against the plan, every compute
+    /// instruction must target a known op, and the program's collective
+    /// byte meter must equal the plan's Theorem-1 cost bit for bit (the
+    /// one-theory contract; [`ExecError::MeterMismatch`] otherwise).
+    pub fn try_new(
+        g: Graph,
+        plan: Plan,
+        program: LoweredProgram,
+        opts: ExecOptions,
+    ) -> Result<Self, ExecError> {
+        let tasks = try_build_shard_tasks(&g, &plan)?;
+        program.validate_for(&plan)?;
+        for (d, prog) in program.programs.iter().enumerate() {
+            for (pc, instr) in prog.instrs.iter().enumerate() {
+                if let Instr::Compute { op, .. } = instr {
+                    if *op >= g.ops.len() {
+                        return Err(ExecError::Plan(PlanError::MalformedProgram {
+                            device: d,
+                            pc,
+                            reason: format!("compute of unknown op {op}"),
+                        }));
+                    }
+                }
+            }
+        }
+        if program.total_bytes() != plan.total_cost() {
+            return Err(ExecError::MeterMismatch {
+                metered: program.total_bytes(),
+                plan: plan.total_cost(),
+            });
+        }
+        Ok(StepCtx { g, plan, program, tasks, opts })
+    }
+
+    /// Device count the step is lowered for (`2^k`).
+    pub fn devices(&self) -> usize {
+        self.plan.devices()
+    }
+
+    /// The dataflow graph.
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    /// The tiling plan.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The lowered program.
+    pub fn program(&self) -> &LoweredProgram {
+        &self.program
+    }
+
+    /// The execution options the step runs under.
+    pub fn options(&self) -> &ExecOptions {
+        &self.opts
+    }
+}
+
+/// One dispatched unit of work: the step to run and this device's
+/// pre-sliced home shards.
+struct StepJob {
+    seq: u64,
+    ctx: Arc<StepCtx>,
+    home: Vec<Option<ShardBuf>>,
+}
+
+/// A pool of persistent SPMD worker threads — one per device — that stay
+/// warm across steps.
+///
+/// [`spawn`](WorkerPool::spawn) creates the threads and their data
+/// channels once; [`run_step`](WorkerPool::run_step) dispatches one
+/// validated [`StepCtx`] and blocks until every device reports (a step
+/// barrier). Worker threads survive failed steps — a panic is caught at
+/// the job boundary — so a pool keeps serving after a fault, which is
+/// what the serving engine and the chaos suites rely on.
+///
+/// Dropping the pool closes the job queues and joins every thread.
+pub struct WorkerPool {
+    devices: usize,
+    seq: u64,
+    job_txs: Vec<Sender<StepJob>>,
+    result_rx: Receiver<(usize, Result<DeviceOutcome, ExecError>)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `devices` persistent worker threads and wire up the full
+    /// inter-device channel mesh (every worker holds a sender to every
+    /// peer; the pool itself keeps no data sender alive).
+    pub fn spawn(devices: usize) -> Self {
+        let (data_txs, data_rxs): (Vec<Sender<Msg>>, Vec<Receiver<Msg>>) =
+            (0..devices).map(|_| channel()).unzip();
+        let (result_tx, result_rx) = channel();
+        let mut job_txs = Vec::with_capacity(devices);
+        let mut handles = Vec::with_capacity(devices);
+        for (d, rx) in data_rxs.into_iter().enumerate() {
+            let senders = data_txs.clone();
+            let (job_tx, job_rx) = channel::<StepJob>();
+            job_txs.push(job_tx);
+            let result_tx = result_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                // The worker loop: block for the next step, run it, report,
+                // repeat until the pool drops the job queue.
+                while let Ok(job) = job_rx.recv() {
+                    let ctx = job.ctx;
+                    let worker = Worker::for_step(d, &ctx, &senders, &rx, job.seq, job.home);
+                    let out = match catch_unwind(AssertUnwindSafe(|| worker.run())) {
+                        Ok(r) => r,
+                        Err(_) => Err(ExecError::Worker {
+                            device: d,
+                            reason: "worker thread panicked".into(),
+                        }),
+                    };
+                    if out.is_err() && !is_silent_failure(&out) {
+                        // Poison every peer (tagged with this step's seq)
+                        // so nobody blocks on a message this worker will
+                        // never send. Silent classes skip this — see
+                        // `is_silent_failure`.
+                        for tx in &senders {
+                            let _ = tx.send(Msg::poison(d, job.seq));
+                        }
+                    }
+                    if result_tx.send((d, out)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        WorkerPool { devices, seq: 0, job_txs, result_rx, handles }
+    }
+
+    /// Worker-thread count the pool was spawned with.
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Steps dispatched so far.
+    pub fn steps(&self) -> u64 {
+        self.seq
+    }
+
+    /// Execute one step of `ctx` on the warm workers.
+    ///
+    /// `init` is the same producerless-tensor value vector the serial
+    /// interpreter takes; the pool slices every device's home shards from
+    /// it, dispatches one job per worker, and blocks until all devices
+    /// report. On failure the ranked root cause is returned (real failure
+    /// > timeout > poison cascade) and the pool remains usable.
+    pub fn run_step(
+        &mut self,
+        ctx: &Arc<StepCtx>,
+        init: &[Option<Vec<f32>>],
+    ) -> Result<ExecReport, ExecError> {
+        if ctx.devices() != self.devices {
+            return Err(ExecError::Plan(PlanError::MalformedPlan {
+                reason: format!(
+                    "step is lowered for {} devices but the pool has {} workers",
+                    ctx.devices(),
+                    self.devices
+                ),
+            }));
+        }
+        if ctx.opts.faults.is_some() {
+            // Injected panics unwind through catch_unwind like real kernel
+            // panics, but should not spam stderr across a 200-trial suite.
+            super::fault::install_quiet_panic_hook();
+        }
+        // Slice every device's home shard of every producerless tensor
+        // (validate_init: the same input contract as the interpreter's).
+        let g = &ctx.g;
+        let produced = validate_init(g, init)?;
+        let mut homes: Vec<Vec<Option<ShardBuf>>> =
+            vec![vec![None; g.tensors.len()]; self.devices];
+        for t in &g.tensors {
+            if produced[t.id] {
+                continue;
+            }
+            // Invariant: validate_init checked presence and length.
+            let v = init[t.id].as_ref().expect("validated init value");
+            for (d, home) in homes.iter_mut().enumerate() {
+                let region = resident_region(&t.shape, &ctx.plan.tiles[t.id], d);
+                home[t.id] = Some(ShardBuf::from_full(v, &t.shape, region));
+            }
+        }
+        self.seq += 1;
+        let seq = self.seq;
+        for (tx, home) in self.job_txs.iter().zip(homes) {
+            tx.send(StepJob { seq, ctx: Arc::clone(ctx), home }).map_err(|_| {
+                ExecError::Worker { device: 0, reason: "worker pool shut down".into() }
+            })?;
+        }
+        // Step barrier: every device reports before the next dispatch, so
+        // no message with a *future* seq can ever exist in a channel.
+        let mut outcomes: Vec<Option<DeviceOutcome>> =
+            (0..self.devices).map(|_| None).collect();
+        let mut errors = Vec::new();
+        for _ in 0..self.devices {
+            let (d, out) = self.result_rx.recv().map_err(|_| ExecError::Worker {
+                device: 0,
+                reason: "worker pool shut down".into(),
+            })?;
+            match out {
+                Ok(o) => outcomes[d] = Some(o),
+                Err(e) => errors.push(e),
+            }
+        }
+        if let Some(e) = root_cause(errors) {
+            return Err(e);
+        }
+        // No error: the barrier collected every device's outcome.
+        let outcomes: Vec<DeviceOutcome> =
+            outcomes.into_iter().map(|o| o.expect("every worker reported")).collect();
+        reassemble(g, &outcomes)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job queues ends every worker loop; join so no
+        // thread outlives the pool.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

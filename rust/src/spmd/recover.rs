@@ -122,6 +122,36 @@ impl Default for RecoverOptions {
     }
 }
 
+impl RecoverOptions {
+    /// Set the per-attempt execution options (builder style).
+    #[must_use]
+    pub fn exec(mut self, exec: ExecOptions) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Set the retry budget (builder style).
+    #[must_use]
+    pub fn max_retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Set the base backoff (builder style).
+    #[must_use]
+    pub fn backoff(mut self, backoff: Duration) -> Self {
+        self.backoff = backoff;
+        self
+    }
+
+    /// Set the re-lowering cost config (builder style).
+    #[must_use]
+    pub fn sim(mut self, sim: SimConfig) -> Self {
+        self.sim = sim;
+        self
+    }
+}
+
 /// How a recovered step eventually succeeded.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RecoveryOutcome {
@@ -188,22 +218,25 @@ fn implicated_device(e: &ExecError) -> Option<usize> {
 ///
 /// ```
 /// use soybean::graph::{eval_serial, max_rel_err, seed_values};
-/// use soybean::lower::lower;
+/// use soybean::lower::try_lower;
 /// use soybean::models::{mlp, MlpConfig};
-/// use soybean::planner::k_cut;
+/// use soybean::planner::try_k_cut;
 /// use soybean::sim::SimConfig;
-/// use soybean::spmd::{execute_with_recovery, FaultPlan, RecoverOptions, RecoveryOutcome};
+/// use soybean::spmd::{
+///     execute_with_recovery, ExecOptions, FaultPlan, RecoverOptions, RecoveryOutcome,
+/// };
 /// use std::time::Duration;
 ///
 /// let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
-/// let plan = k_cut(&g, 2);
-/// let program = lower(&g, &plan, &SimConfig::default());
+/// let plan = try_k_cut(&g, 2).unwrap();
+/// let program = try_lower(&g, &plan, &SimConfig::default()).unwrap();
 /// let init = seed_values(&g, 7);
 ///
-/// let mut opts = RecoverOptions::default();
-/// opts.exec.deadline = Duration::from_millis(500);
-/// opts.exec.faults = Some(FaultPlan::kill(1, 0)); // device 1 dies at op 0, every attempt
-/// opts.backoff = Duration::from_millis(1);
+/// let opts = RecoverOptions::default()
+///     .exec(ExecOptions::default()
+///         .deadline(Duration::from_millis(500))
+///         .fault_plan(FaultPlan::kill(1, 0))) // device 1 dies at op 0, every attempt
+///     .backoff(Duration::from_millis(1));
 ///
 /// let r = execute_with_recovery(&g, &plan, &program, &init, &opts).unwrap();
 /// assert_eq!(
@@ -261,7 +294,7 @@ pub fn execute_with_recovery(
     // The dead device is out of the recovery world: its injected faults
     // died with it, so the survivors run clean (a fresh fault plan for
     // the new device numbering would be a different experiment).
-    let clean = ExecOptions { deadline: opts.exec.deadline, faults: None };
+    let clean = ExecOptions::default().deadline(opts.exec.deadline);
     let report = execute_with(g, &new_plan, &new_program, &ckpt.values, &clean)?;
     let devices = new_plan.devices();
     Ok(RecoveryReport {
@@ -277,7 +310,7 @@ mod tests {
     use super::*;
     use crate::graph::seed_values;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::k_cut;
+    use crate::planner::try_k_cut;
     use crate::spmd::execute;
 
     #[test]
@@ -294,8 +327,8 @@ mod tests {
     #[test]
     fn checkpoint_after_carries_producerless_state() {
         let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 4], bias: false });
-        let plan = k_cut(&g, 1);
-        let program = crate::lower::lower(&g, &plan, &SimConfig::default());
+        let plan = try_k_cut(&g, 1).unwrap();
+        let program = crate::lower::try_lower(&g, &plan, &SimConfig::default()).unwrap();
         let init = seed_values(&g, 5);
         let report = execute(&g, &plan, &program, &init).unwrap();
         let next = Checkpoint::after(&g, 0, &report);

@@ -23,36 +23,34 @@ use soybean::models::{
     alexnet_scaled, mlp, transformer, vgg16_scaled, MlpConfig, TransformerConfig,
 };
 use soybean::planner::{classic_dp_form, eval_plan, Planner, Strategy};
-use soybean::sim::SimConfig;
+use soybean::sim::{SimConfig, Topology};
 use soybean::spmd::{execute, worst_divergence};
 use soybean::tiling::candidate_tiles;
 use soybean::util::rng::Rng;
-use soybean::Graph;
+use soybean::{Graph, Session};
 
 const TOL: f64 = 1e-5;
 
-/// Run the full strategy × device-count matrix for one workload.
+/// Run the full strategy × device-count matrix for one workload,
+/// through the [`Session`] facade: build (plan + lower + validate,
+/// with the DP baseline's forced classic gradient-aggregation form
+/// applied internally so its byte meter stays honest), execute, and
+/// compare. A flat topology keeps the SOYBEAN candidate bit-identical
+/// to the byte k-cut plan the matrix has always pinned.
 fn diff_matrix(name: &str, g: &Graph, ks: &[usize]) {
-    let cfg = SimConfig::default();
     let init = seed_values(g, 42);
     let serial = eval_serial(g, &init).expect("serial evaluation");
     for &k in ks {
+        let topo = Topology::flat(k, 10.0e9, 20e-6, 4.0);
         for strat in Strategy::all() {
             let label = format!("{name}/{}/k{k}", strat.name());
-            let plan = Planner::plan(g, k, strat);
-            // DP baselines are priced with the forced classic gradient
-            // aggregation; their lowering must force the same forms to
-            // keep the meter identity.
-            let program = if strat == Strategy::DataParallel {
-                try_lower_forced(g, &plan, &cfg, &classic_dp_form)
-            } else {
-                try_lower(g, &plan, &cfg)
-            }
-            .unwrap_or_else(|e| panic!("{label}: lowering failed: {e}"));
-            let r = execute(g, &plan, &program, &init)
+            let session = Session::with_strategy(g.clone(), 1 << k, &topo, strat)
+                .unwrap_or_else(|e| panic!("{label}: session build failed: {e}"));
+            let r = session
+                .execute(&init)
                 .unwrap_or_else(|e| panic!("{label}: execution failed: {e}"));
             // Observed collective traffic == Theorem-1, bit for bit.
-            assert_eq!(r.instr_bytes, plan.total_cost(), "{label}: byte meter");
+            assert_eq!(r.instr_bytes, session.plan().total_cost(), "{label}: byte meter");
             let (worst, tensor) = worst_divergence(g, &r, &serial);
             assert!(
                 worst <= TOL,
@@ -101,7 +99,7 @@ fn differential_vgg16() {
 fn send_recv_unscatterable_loss_sums_partials() {
     let cfg = SimConfig::default();
     let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: false });
-    let plan = Planner::plan(&g, 1, Strategy::DataParallel);
+    let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
     let program = try_lower_forced(&g, &plan, &cfg, &classic_dp_form).unwrap();
     let loss = g.tensors.iter().find(|t| t.rank() == 0).expect("scalar loss");
     assert!(
@@ -131,7 +129,7 @@ fn send_recv_unscatterable_loss_sums_partials() {
 fn model_parallel_gamma_grad_regression() {
     let cfg = SimConfig::default();
     let g = transformer(&TransformerConfig::tiny());
-    let plan = Planner::plan(&g, 1, Strategy::ModelParallel);
+    let plan = Planner::try_plan(&g, 1, Strategy::ModelParallel).unwrap();
     let program = try_lower(&g, &plan, &cfg).unwrap();
     let init = seed_values(&g, 11);
     let r = execute(&g, &plan, &program, &init).unwrap();

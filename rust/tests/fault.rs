@@ -24,9 +24,9 @@
 use std::time::{Duration, Instant};
 
 use soybean::graph::{eval_serial, seed_values};
-use soybean::lower::lower;
+use soybean::lower::try_lower;
 use soybean::models::{mlp, transformer, MlpConfig, TransformerConfig};
-use soybean::planner::k_cut;
+use soybean::planner::try_k_cut;
 use soybean::sim::SimConfig;
 use soybean::spmd::fault::install_quiet_panic_hook;
 use soybean::spmd::{
@@ -45,8 +45,8 @@ const CHAOS_DEADLINE: Duration = Duration::from_millis(250);
 /// backward) with enough ops to give the seeded site picker a real space.
 fn chaos_workload() -> (Graph, soybean::planner::Plan, soybean::lower::LoweredProgram) {
     let g = mlp(&MlpConfig { batch: 8, dims: vec![6, 8, 6], bias: false });
-    let plan = k_cut(&g, 2);
-    let program = lower(&g, &plan, &SimConfig::default());
+    let plan = try_k_cut(&g, 2).unwrap();
+    let program = try_lower(&g, &plan, &SimConfig::default()).unwrap();
     (g, plan, program)
 }
 
@@ -74,7 +74,7 @@ fn property_seeded_faults_terminate_with_correct_root_cause() {
         let fp = FaultPlan::seeded(seed, devices, ops);
         let fault = fp.faults[0].clone();
         let label = format!("seed {seed}: {}", fp.describe());
-        let opts = ExecOptions { deadline: CHAOS_DEADLINE, faults: Some(fp) };
+        let opts = ExecOptions::default().deadline(CHAOS_DEADLINE).fault_plan(fp);
         let start = Instant::now();
         let result = execute_with(&g, &plan, &program, &init, &opts);
         let elapsed = start.elapsed();
@@ -139,10 +139,9 @@ fn transient_panic_is_retried_once() {
     install_quiet_panic_hook();
     let (g, plan, program) = chaos_workload();
     let init = seed_values(&g, 7);
-    let mut opts = RecoverOptions::default();
-    opts.exec.deadline = CHAOS_DEADLINE;
-    opts.exec.faults = Some(FaultPlan::panic_at(2, 1));
-    opts.backoff = Duration::from_millis(1);
+    let opts = RecoverOptions::default()
+        .exec(ExecOptions::default().deadline(CHAOS_DEADLINE).fault_plan(FaultPlan::panic_at(2, 1)))
+        .backoff(Duration::from_millis(1));
     let r = execute_with_recovery(&g, &plan, &program, &init, &opts).unwrap();
     assert_eq!(r.outcome, RecoveryOutcome::Retried { retries: 1 });
     assert_eq!(r.failures.len(), 1);
@@ -167,10 +166,13 @@ fn dropped_message_times_out_then_recovers_by_retry() {
     // probe deterministically until the drop bites.
     let mut hit = None;
     for m in &program.transfers {
-        let mut opts = RecoverOptions::default();
-        opts.exec.deadline = CHAOS_DEADLINE;
-        opts.exec.faults = Some(FaultPlan::drop_message(1, m.op));
-        opts.backoff = Duration::from_millis(1);
+        let opts = RecoverOptions::default()
+            .exec(
+                ExecOptions::default()
+                    .deadline(CHAOS_DEADLINE)
+                    .fault_plan(FaultPlan::drop_message(1, m.op)),
+            )
+            .backoff(Duration::from_millis(1));
         let r = execute_with_recovery(&g, &plan, &program, &init, &opts).unwrap();
         match r.outcome {
             RecoveryOutcome::Clean => continue, // device 1 had nothing to send here
@@ -201,10 +203,9 @@ fn corrupt_payload_is_detected_at_the_receiver() {
     let init = seed_values(&g, 9);
     let mut detected = false;
     for m in &program.transfers {
-        let opts = ExecOptions {
-            deadline: CHAOS_DEADLINE,
-            faults: Some(FaultPlan::corrupt_payload(0, m.op)),
-        };
+        let opts = ExecOptions::default()
+            .deadline(CHAOS_DEADLINE)
+            .fault_plan(FaultPlan::corrupt_payload(0, m.op));
         match execute_with(&g, &plan, &program, &init, &opts) {
             Ok(r) => {
                 // Device 0 sent nothing for this op — numbers stay exact.
@@ -232,7 +233,7 @@ fn corrupt_payload_is_detected_at_the_receiver() {
 fn silent_kill_terminates_via_watchdogs_and_names_the_dead_worker() {
     let (g, plan, program) = chaos_workload();
     let init = seed_values(&g, 10);
-    let opts = ExecOptions { deadline: CHAOS_DEADLINE, faults: Some(FaultPlan::kill(3, 0)) };
+    let opts = ExecOptions::default().deadline(CHAOS_DEADLINE).fault_plan(FaultPlan::kill(3, 0));
     let start = Instant::now();
     let err = execute_with(&g, &plan, &program, &init, &opts).unwrap_err();
     let elapsed = start.elapsed();
@@ -254,14 +255,17 @@ fn silent_kill_terminates_via_watchdogs_and_names_the_dead_worker() {
 /// within 1e-5, with the recovery run's collective meter equal to the
 /// *new* plan's Theorem-1 cost.
 fn recovery_differential(name: &str, g: &Graph, kill_device: usize) {
-    let plan = k_cut(g, 2);
-    let program = lower(g, &plan, &SimConfig::default());
+    let plan = try_k_cut(g, 2).unwrap();
+    let program = try_lower(g, &plan, &SimConfig::default()).unwrap();
     let init = seed_values(g, 42);
-    let mut opts = RecoverOptions::default();
-    opts.exec.deadline = Duration::from_secs(5);
-    opts.exec.faults = Some(FaultPlan::kill(kill_device, 0));
-    opts.max_retries = 1;
-    opts.backoff = Duration::from_millis(1);
+    let opts = RecoverOptions::default()
+        .exec(
+            ExecOptions::default()
+                .deadline(Duration::from_secs(5))
+                .fault_plan(FaultPlan::kill(kill_device, 0)),
+        )
+        .max_retries(1)
+        .backoff(Duration::from_millis(1));
     let r = execute_with_recovery(g, &plan, &program, &init, &opts)
         .unwrap_or_else(|e| panic!("{name}: recovery failed: {e}"));
     assert_eq!(

@@ -1,0 +1,289 @@
+//! End-to-end tests of the high-level serving surface: everything here
+//! goes through [`Session`] / [`ServeEngine`] only — no direct
+//! planner/lowering/executor calls — so the facade is exercised exactly
+//! the way downstream users hold it.
+//!
+//! The correctness oracle stays the serial interpreter: for every
+//! request of `u` units the engine's reassembled per-request outputs
+//! must match `eval_serial` on the `u`-unit graph within 1e-5, no
+//! matter how requests were coalesced, padded, or planned.
+
+use std::time::Duration;
+
+use soybean::graph::{eval_serial, max_rel_err, seed_values, Graph};
+use soybean::models::{mlp, transformer, MlpConfig, TransformerConfig};
+use soybean::planner::PlanError;
+use soybean::serve::{ServeClient, ServeEngine, ServeError, ServeOptions, ServeRequest};
+use soybean::sim::Topology;
+use soybean::spmd::worst_divergence;
+use soybean::{Error, Session};
+
+const TOL: f64 = 1e-5;
+
+/// One serving unit = one MLP batch row.
+fn mlp_units(u: usize) -> Graph {
+    mlp(&MlpConfig { batch: u, dims: vec![6, 8, 6], bias: false })
+}
+
+/// One serving unit = two encoder sequences (the transformer builder
+/// requires an even batch, so `rebatch(1)` must already be legal).
+fn tf_units(u: usize) -> Graph {
+    transformer(&TransformerConfig {
+        batch: 2 * u,
+        seq: 4,
+        d_model: 8,
+        heads: 2,
+        d_ff: 16,
+        layers: 2,
+        classes: 8,
+    })
+}
+
+/// Build the request for `u` units of `rebatch` and the serial
+/// expectation for `output`: feeds come from [`seed_values`] of the
+/// `u`-unit graph (whose weight values agree with the base session's by
+/// id-seeded construction), the expectation from [`eval_serial`].
+fn request_and_expected(
+    rebatch: &dyn Fn(usize) -> Graph,
+    feed_names: &[String],
+    output: &str,
+    u: usize,
+    seed: u64,
+) -> (ServeRequest, Vec<f32>) {
+    let g = rebatch(u);
+    let init = seed_values(&g, seed);
+    let mut req = ServeRequest::new(u);
+    for name in feed_names {
+        let t = g.tensors.iter().find(|t| &t.name == name).expect("feed tensor");
+        req = req.feed(name.clone(), init[t.id].clone().expect("feed value"));
+    }
+    let serial = eval_serial(&g, &init).expect("serial evaluation");
+    let out = g.tensors.iter().find(|t| t.name == output).expect("output tensor");
+    (req, serial[out.id].clone())
+}
+
+fn infer_and_check(
+    client: &ServeClient,
+    rebatch: &dyn Fn(usize) -> Graph,
+    feed_names: &[String],
+    output: &str,
+    u: usize,
+    seed: u64,
+) {
+    let (req, expected) = request_and_expected(rebatch, feed_names, output, u, seed);
+    let resp = client.infer(req).expect("inference");
+    assert_eq!(resp.units, u);
+    let got = &resp.outputs[output];
+    assert_eq!(got.len(), expected.len(), "u={u}: wrong output length");
+    let err = max_rel_err(got, &expected);
+    assert!(err <= TOL, "u={u} seed={seed}: diverged from serial by {err:e}");
+}
+
+/// Session end to end: build, execute, simulate, summarize — and the
+/// executed step matches the serial interpreter on every tensor.
+#[test]
+fn session_mlp_executes_and_matches_serial() {
+    let s = Session::build(mlp_units(8), 4, &Topology::p2_8xlarge()).expect("build");
+    assert_eq!(s.devices(), 4);
+    let init = seed_values(s.graph(), 11);
+    let report = s.execute(&init).expect("execute");
+    assert_eq!(report.instr_bytes, s.plan().total_cost(), "meter != Theorem-1");
+    let serial = eval_serial(s.graph(), &init).expect("serial");
+    let (worst, tensor) = worst_divergence(s.graph(), &report, &serial);
+    assert!(worst <= TOL, "diverged on `{tensor}` by {worst:e}");
+
+    let sim = s.simulate().expect("simulate");
+    assert_eq!(sim.total_bytes, s.plan().total_cost(), "sim meter != Theorem-1");
+
+    let summary = s.plan_summary();
+    assert_eq!(summary.devices, 4);
+    assert_eq!(summary.k, 2);
+    assert_eq!(summary.total_bytes, s.plan().total_cost());
+    // Display must mention the winning candidate so logs are grep-able.
+    assert!(format!("{summary}").contains(summary.chosen));
+}
+
+#[test]
+fn session_rejects_non_power_of_two_device_counts() {
+    for devices in [0, 3, 6] {
+        match Session::build(mlp_units(8), devices, &Topology::p2_8xlarge()) {
+            Err(Error::Plan(PlanError::MalformedConfig { .. })) => {}
+            Err(other) => panic!("devices={devices}: wrong error {other:?}"),
+            Ok(_) => panic!("devices={devices}: expected MalformedConfig"),
+        }
+    }
+}
+
+/// The tentpole differential gate: requests of varying unit counts,
+/// served through coalesced + padded batches on persistent workers,
+/// each match the serial interpreter on the head output.
+#[test]
+fn serve_mlp_requests_match_serial() {
+    let session = Session::build(mlp_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 42);
+    let engine = ServeEngine::launch(
+        &session,
+        mlp_units,
+        &base_init,
+        ServeOptions::default().max_batch(8).output("fc1.out"),
+    )
+    .expect("launch");
+    assert_eq!(engine.output_names(), ["fc1.out".to_string()]);
+    let feeds: Vec<String> = engine.feed_names().to_vec();
+    assert!(feeds.contains(&"x".to_string()) && feeds.contains(&"y".to_string()), "{feeds:?}");
+
+    let client = engine.client();
+    // Unit counts straddling the padding boundary (align = 4 devices).
+    for (i, u) in [1usize, 2, 3, 4, 5, 7].into_iter().enumerate() {
+        infer_and_check(&client, &mlp_units, &feeds, "fc1.out", u, 42 + i as u64);
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 6);
+    engine.shutdown();
+}
+
+#[test]
+fn serve_transformer_requests_match_serial() {
+    let session = Session::build(tf_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 7);
+    let engine = ServeEngine::launch(
+        &session,
+        tf_units,
+        &base_init,
+        ServeOptions::default().max_batch(8).output("head.out"),
+    )
+    .expect("launch");
+    let feeds: Vec<String> = engine.feed_names().to_vec();
+    let client = engine.client();
+    for (i, u) in [1usize, 2, 4].into_iter().enumerate() {
+        infer_and_check(&client, &tf_units, &feeds, "head.out", u, 7 + i as u64);
+    }
+    engine.shutdown();
+}
+
+/// Concurrent clients: every thread's every response still matches its
+/// own serial expectation, under real coalescing races.
+#[test]
+fn serve_concurrent_clients_all_match_serial() {
+    let session = Session::build(mlp_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 42);
+    let engine = ServeEngine::launch(
+        &session,
+        mlp_units,
+        &base_init,
+        ServeOptions::default()
+            .max_batch(16)
+            .max_linger(Duration::from_millis(1))
+            .output("fc1.out"),
+    )
+    .expect("launch");
+    let feeds: Vec<String> = engine.feed_names().to_vec();
+
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let client = engine.client();
+            let feeds = feeds.clone();
+            scope.spawn(move || {
+                for r in 0..6u64 {
+                    let u = 1 + ((t + r) % 4) as usize;
+                    infer_and_check(&client, &mlp_units, &feeds, "fc1.out", u, 100 + t * 31 + r);
+                }
+            });
+        }
+    });
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 24);
+    assert!(stats.batches <= 24, "batches never exceed requests");
+    engine.shutdown();
+}
+
+/// After warmup has populated the plan cache for every padded batch
+/// extent in play, a measurement window is pure cache hits.
+#[test]
+fn serve_cache_hit_rate_is_one_after_warmup() {
+    let session = Session::build(mlp_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 42);
+    let engine = ServeEngine::launch(
+        &session,
+        mlp_units,
+        &base_init,
+        ServeOptions::default().max_batch(4).output("fc1.out"),
+    )
+    .expect("launch");
+    let feeds: Vec<String> = engine.feed_names().to_vec();
+    let client = engine.client();
+
+    // Warmup: every unit count up to max_batch (all pad to extent 4).
+    for u in 1..=4usize {
+        infer_and_check(&client, &mlp_units, &feeds, "fc1.out", u, 200 + u as u64);
+    }
+    engine.reset_stats();
+    for u in [3usize, 1, 4, 2, 4, 1] {
+        infer_and_check(&client, &mlp_units, &feeds, "fc1.out", u, 300 + u as u64);
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.cache_misses, 0, "warmed extents must not re-plan");
+    assert_eq!(stats.cache_hit_rate, 1.0);
+    assert!(stats.p99_latency >= stats.p50_latency);
+    engine.shutdown();
+}
+
+/// Malformed requests fail fast with a structured [`ServeError`], and
+/// never poison the engine for well-formed traffic behind them.
+#[test]
+fn serve_bad_requests_report_structured_errors() {
+    let session = Session::build(mlp_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 42);
+    let engine = ServeEngine::launch(
+        &session,
+        mlp_units,
+        &base_init,
+        ServeOptions::default().max_batch(4).output("fc1.out"),
+    )
+    .expect("launch");
+    let feeds: Vec<String> = engine.feed_names().to_vec();
+    let client = engine.client();
+
+    let bad = [
+        ServeRequest::new(0),                              // zero units
+        ServeRequest::new(5),                              // exceeds max_batch
+        ServeRequest::new(1).feed("x", vec![0.0; 6]),      // missing feed `y`
+        ServeRequest::new(1).feed("x", vec![0.0; 5]).feed("y", vec![0.0; 6]), // wrong length
+        ServeRequest::new(1)
+            .feed("x", vec![0.0; 6])
+            .feed("y", vec![0.0; 6])
+            .feed("w0", vec![0.0; 48]), // not a feed tensor
+    ];
+    for (i, req) in bad.into_iter().enumerate() {
+        match client.infer(req) {
+            Err(Error::Serve(ServeError::BadRequest { .. })) => {}
+            other => panic!("bad request {i}: expected BadRequest, got {other:?}"),
+        }
+    }
+    // The engine is still healthy.
+    infer_and_check(&client, &mlp_units, &feeds, "fc1.out", 2, 400);
+    engine.shutdown();
+}
+
+/// Shutdown drains queued requests with `Closed` instead of hanging the
+/// callers.
+#[test]
+fn serve_shutdown_closes_pending_clients() {
+    let session = Session::build(mlp_units(4), 4, &Topology::p2_8xlarge()).expect("build");
+    let base_init = seed_values(session.graph(), 42);
+    let engine = ServeEngine::launch(
+        &session,
+        mlp_units,
+        &base_init,
+        ServeOptions::default().max_batch(4).output("fc1.out"),
+    )
+    .expect("launch");
+    let client = engine.client();
+    engine.shutdown();
+    let (req, _) = request_and_expected(&mlp_units, &["x".into(), "y".into()], "fc1.out", 1, 1);
+    match client.infer(req) {
+        Err(Error::Serve(ServeError::Closed)) => {}
+        other => panic!("expected Closed after shutdown, got {other:?}"),
+    }
+}
