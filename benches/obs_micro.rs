@@ -1,0 +1,133 @@
+//! Observability micro-benchmark (ISSUE-8 acceptance gates):
+//!
+//! - **tracing is near-free**: the same 8-device (`k = 3`) 4-layer
+//!   encoder step from `exec_micro` is timed with `ExecOptions::trace`
+//!   off and on, and the traced run must stay within **5%** of the
+//!   untraced one (min-of-iterations, the least noisy statistic; the
+//!   gate is overridable via `OBS_MICRO_MAX_OVERHEAD` for noisy shared
+//!   runners, mirroring `PLANNER_MICRO_MIN_SPEEDUP`);
+//! - **bytes reconcile**: the traced step's metered collective markers
+//!   sum to the executor's collective meter, which equals the plan's
+//!   Theorem-1 total bit for bit;
+//! - **the drift report exists**: [`soybean::obs::calibrate`] joins the
+//!   measured spans against the engine's modeled step and the resulting
+//!   [`soybean::obs::CalibrationReport`] is dumped to `obs_report.json`
+//!   (with the measured Chrome trace beside it as
+//!   `obs_trace_measured.json`) for the CI artifact upload.
+//!
+//! Results go to `BENCH_obs.json` (the `BENCH_planner.json` schema) for
+//! the CI perf-trajectory diff against `ci/baselines/BENCH_obs.json`.
+//!
+//! Run with `cargo bench --bench obs_micro`.
+
+use std::time::Duration;
+
+use soybean::graph::seed_values;
+use soybean::lower::try_lower;
+use soybean::models::{transformer, TransformerConfig};
+use soybean::obs::{calibrate, measured_trace_json};
+use soybean::planner::try_k_cut;
+use soybean::sim::{try_run_program, SimConfig, Topology};
+use soybean::spmd::{execute_with, ExecOptions};
+use soybean::util::bench::{time_it, BenchLog};
+
+fn main() {
+    println!("== observability micro-benchmarks ==");
+    let mut log = BenchLog::new("obs_micro");
+    let cfg = SimConfig::default();
+
+    // The exec_micro workload: the 8-device 4-layer encoder.
+    let bench_cfg = TransformerConfig {
+        batch: 8,
+        seq: 32,
+        d_model: 64,
+        heads: 4,
+        d_ff: 128,
+        layers: 4,
+        classes: 64,
+    };
+    let g = transformer(&bench_cfg);
+    let plan = try_k_cut(&g, 3).unwrap();
+    let program = try_lower(&g, &plan, &cfg).unwrap();
+    let init = seed_values(&g, 42);
+    let topo = Topology::from_sim(&cfg, 3);
+
+    // Reconciliation gate before timing: one traced step's metered
+    // collective markers == executor meter == Theorem-1.
+    let traced_opts = ExecOptions::default().trace(true);
+    let report =
+        execute_with(&g, &plan, &program, &init, &traced_opts).expect("traced execution");
+    let trace = report.trace.as_ref().expect("tracing was on");
+    assert_eq!(
+        trace.collective_bytes(),
+        report.instr_bytes,
+        "metered span bytes != executor collective meter"
+    );
+    assert_eq!(report.instr_bytes, plan.total_cost(), "executor meter != Theorem-1");
+    assert!(!trace.spans.is_empty(), "traced step produced no spans");
+
+    // The drift report for the same step, dumped beside the bench JSON.
+    let modeled = try_run_program(&program, &topo).expect("modeled run");
+    let cal = calibrate(&g, &program, &topo, &modeled, trace);
+    assert_eq!(cal.metered_span_bytes, plan.total_cost());
+    assert!(cal.collectives.iter().all(|c| c.measured_bytes == c.modeled_bytes));
+    print!("{cal}");
+    cal.write_json("obs_report.json").expect("writing obs_report.json");
+    std::fs::write("obs_trace_measured.json", measured_trace_json(trace, &program))
+        .expect("writing obs_trace_measured.json");
+
+    // The overhead gate: tracing off vs on over the identical step.
+    let plain_opts = ExecOptions::default();
+    let m_off = time_it(1, Duration::from_millis(200), || {
+        std::hint::black_box(
+            execute_with(&g, &plan, &program, &init, &plain_opts).expect("execution"),
+        );
+    });
+    let m_on = time_it(1, Duration::from_millis(200), || {
+        std::hint::black_box(
+            execute_with(&g, &plan, &program, &init, &traced_opts).expect("execution"),
+        );
+    });
+    let overhead = m_on.min.as_secs_f64() / m_off.min.as_secs_f64() - 1.0;
+    log.row(
+        "obs/exec-untraced",
+        &[("ms", format!("{:.2}", m_off.mean_ms())), ("iters", m_off.iters.to_string())],
+    );
+    log.row(
+        "obs/exec-traced",
+        &[
+            ("ms", format!("{:.2}", m_on.mean_ms())),
+            ("iters", m_on.iters.to_string()),
+            ("overhead_pct", format!("{:.2}", overhead * 100.0)),
+            ("spans", trace.spans.len().to_string()),
+        ],
+    );
+    log.row(
+        "obs/drift-report",
+        &[
+            ("step_ratio", format!("{:.4}", cal.step_ratio)),
+            ("kernel_rows", cal.kernels.len().to_string()),
+            ("collective_rows", cal.collectives.len().to_string()),
+            ("metered_MB", format!("{:.3}", cal.metered_span_bytes as f64 / 1e6)),
+        ],
+    );
+
+    // Shared CI runners time noisily; the committed default is the
+    // ISSUE-8 5% bound, overridable the way PLANNER_MICRO_MIN_SPEEDUP is.
+    let max_overhead = std::env::var("OBS_MICRO_MAX_OVERHEAD")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.05);
+    assert!(
+        overhead <= max_overhead,
+        "tracing overhead {:.2}% exceeds the {:.2}% gate \
+         (untraced min {:.2} ms, traced min {:.2} ms; override via OBS_MICRO_MAX_OVERHEAD)",
+        overhead * 100.0,
+        max_overhead * 100.0,
+        m_off.min.as_secs_f64() * 1e3,
+        m_on.min.as_secs_f64() * 1e3
+    );
+
+    log.write_json("BENCH_obs.json").expect("writing BENCH_obs.json");
+    println!("wrote BENCH_obs.json, obs_report.json, obs_trace_measured.json");
+}

@@ -2,12 +2,19 @@
 """Perf-trajectory diff for the BENCH_*.json files the micro-benches emit.
 
 Usage: diff_bench.py <baseline.json> <current.json> [--threshold 1.30]
+       diff_bench.py --self-test
 
 Compares every numeric timing column (``ms``, ``ref_ms``) per row label and
 emits a GitHub Actions ``::warning::`` annotation when the current value
-exceeds baseline * threshold (default +30%). Always exits 0: shared CI
-runners time noisily, so the gate warns instead of failing — the committed
-baseline plus the uploaded artifact keep the trajectory reviewable.
+exceeds baseline * threshold (default +30%). Rows present in the baseline
+but absent from the run are warn-level diffs too — a silently dropped bench
+row is how a perf gate rots. Always exits 0: shared CI runners time
+noisily, so the gate warns instead of failing — the committed baseline plus
+the uploaded artifact keep the trajectory reviewable.
+
+``--self-test`` runs the built-in fixture checks (regression detection,
+missing-row detection, missing-timing-key tolerance) and exits non-zero on
+any failure; CI runs it before the real diffs so the gate itself is gated.
 
 Refreshing the baseline: download ``bench-json`` from a representative
 green run and copy the files into ci/baselines/ (see ci/baselines/README.md).
@@ -22,7 +29,102 @@ def rows_by_label(doc):
     return {r.get("label"): r for r in doc.get("rows", []) if isinstance(r, dict)}
 
 
+def diff(baseline, current, threshold):
+    """Diff two parsed bench documents.
+
+    Returns ``(regressions, missing, lines)``: over-threshold timing rows,
+    baseline rows absent from the run, and the report lines to print.
+    """
+    base_rows = rows_by_label(baseline)
+    cur_rows = rows_by_label(current)
+    lines = []
+    regressions = 0
+
+    for label, cur in sorted(cur_rows.items()):
+        base = base_rows.get(label)
+        if base is None:
+            lines.append(f"  {label}: new row (no baseline)")
+            continue
+        compared = False
+        for key in TIMING_KEYS:
+            b, c = base.get(key), cur.get(key)
+            if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) or b <= 0:
+                continue
+            compared = True
+            ratio = c / b
+            status = "ok"
+            if ratio > threshold:
+                regressions += 1
+                status = "REGRESSION"
+                lines.append(
+                    f"::warning title=plan-time regression::{label} {key}: "
+                    f"{b:.2f} -> {c:.2f} ms ({ratio:.2f}x, threshold {threshold:.2f}x)"
+                )
+            lines.append(f"  {label} {key}: {b:.2f} -> {c:.2f} ms ({ratio:.2f}x) {status}")
+        if not compared and any(isinstance(base.get(k), (int, float)) for k in TIMING_KEYS):
+            lines.append(
+                f"::warning title=missing timing column::{label}: baseline has a timing "
+                "column the run no longer reports"
+            )
+
+    missing = sorted(set(base_rows) - set(cur_rows))
+    for label in missing:
+        lines.append(
+            f"::warning title=missing bench row::{label} present in baseline but not in run"
+        )
+    return regressions, missing, lines
+
+
+def self_test():
+    """Fixture checks for the diff logic itself. Returns 0 on success."""
+    base = {
+        "rows": [
+            {"label": "a", "ms": 10.0},
+            {"label": "b", "ms": 5.0, "ref_ms": 2.0},
+            {"label": "gone", "ms": 1.0},
+            {"label": "pinned-only"},
+        ]
+    }
+    cur = {
+        "rows": [
+            {"label": "a", "ms": 20.0},
+            {"label": "b", "ms": 5.5, "ref_ms": 2.1},
+            {"label": "fresh", "ms": 3.0},
+            {"label": "pinned-only"},
+        ]
+    }
+    regressions, missing, lines = diff(base, cur, 1.30)
+    checks = [
+        ("regression counted", regressions == 1),
+        ("missing row is a diff", missing == ["gone"]),
+        ("missing row warns", any("missing bench row" in l and "gone" in l for l in lines)),
+        ("new row tolerated", any("fresh: new row" in l for l in lines)),
+        ("within-threshold ok", any(l.startswith("  b ms") and l.endswith("ok") for l in lines)),
+        # A label-seeded baseline row with no timings compares nothing and
+        # raises nothing — that's the pinned-row-set convention.
+        ("pinned row silent", not any("pinned-only" in l for l in lines)),
+    ]
+    failed = [name for name, ok in checks if not ok]
+    for name, ok in checks:
+        print(f"  self-test {'ok  ' if ok else 'FAIL'} {name}")
+    if failed:
+        print(f"diff_bench --self-test: {len(failed)} failed: {', '.join(failed)}")
+        return 1
+
+    # Dropped timing key: baseline timed, current lost the column.
+    _, _, lines = diff(
+        {"rows": [{"label": "a", "ms": 10.0}]}, {"rows": [{"label": "a"}]}, 1.30
+    )
+    if not any("missing timing column" in l for l in lines):
+        print("diff_bench --self-test: FAIL dropped timing key not flagged")
+        return 1
+    print("diff_bench --self-test: all checks passed")
+    return 0
+
+
 def main(argv):
+    if "--self-test" in argv:
+        return self_test()
     if len(argv) < 3:
         print(__doc__)
         return 2
@@ -40,40 +142,20 @@ def main(argv):
     with open(current_path) as f:
         current = json.load(f)
 
-    base_rows = rows_by_label(baseline)
-    cur_rows = rows_by_label(current)
-    if not base_rows:
+    if not rows_by_label(baseline):
         print(
             f"::notice::baseline {baseline_path} has no rows yet — seed it from a green "
             "run's bench-json artifact (ci/baselines/README.md)"
         )
         return 0
 
-    regressions = 0
-    for label, cur in sorted(cur_rows.items()):
-        base = base_rows.get(label)
-        if base is None:
-            print(f"  {label}: new row (no baseline)")
-            continue
-        for key in TIMING_KEYS:
-            b, c = base.get(key), cur.get(key)
-            if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) or b <= 0:
-                continue
-            ratio = c / b
-            status = "ok"
-            if ratio > threshold:
-                regressions += 1
-                status = "REGRESSION"
-                print(
-                    f"::warning title=plan-time regression::{label} {key}: "
-                    f"{b:.2f} -> {c:.2f} ms ({ratio:.2f}x, threshold {threshold:.2f}x)"
-                )
-            print(f"  {label} {key}: {b:.2f} -> {c:.2f} ms ({ratio:.2f}x) {status}")
-
-    missing = sorted(set(base_rows) - set(cur_rows))
-    for label in missing:
-        print(f"::warning title=missing bench row::{label} present in baseline but not in run")
-    print(f"diff_bench: {len(cur_rows)} rows, {regressions} over-threshold (warn-only gate)")
+    regressions, missing, lines = diff(baseline, current, threshold)
+    for line in lines:
+        print(line)
+    print(
+        f"diff_bench: {len(rows_by_label(current))} rows, {regressions} over-threshold, "
+        f"{len(missing)} missing (warn-only gate)"
+    )
     return 0
 
 

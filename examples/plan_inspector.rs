@@ -36,12 +36,20 @@
 //! deviation from the serial interpreter, the Theorem-1 byte meter the
 //! executor observed (asserted equal to the plan cost), and the real
 //! channel payload volume.
+//!
+//! With `--profile`, each executable workload runs one **traced** step
+//! ([`Session::profile`], docs/observability.md): the drift report
+//! (per-kernel and per-collective modeled-vs-measured ratios, worst
+//! offenders) prints to stdout and is written as
+//! `obs_report_<model>.json`, with the modeled+measured overlay Chrome
+//! trace beside it as `obs_overlay_<model>.json`.
 
 use soybean::exec::Placement;
 use soybean::graph::{eval_serial, seed_values};
 use soybean::models::{
     alexnet, alexnet_scaled, mlp, transformer, vgg16, MlpConfig, TransformerConfig,
 };
+use soybean::obs::overlay_trace_json;
 use soybean::planner::{classify, try_plan_topology_aware};
 use soybean::sim::{chrome_trace_json, try_run_program, Topology};
 use soybean::spmd::{
@@ -144,6 +152,25 @@ fn execute_and_compare(name: &str, g: soybean::Graph) {
     assert!(worst <= 1e-5, "{name}: differential gate failed");
 }
 
+/// `--profile`: run one traced 8-device step, join the measured spans
+/// against the engine's modeled schedule, and dump the drift report plus
+/// the modeled+measured overlay trace (docs/observability.md).
+fn profile_workload(name: &str, g: soybean::Graph) {
+    let topo = Topology::p2_8xlarge();
+    let session = Session::build(g, 8, &topo).expect("session build");
+    let init = seed_values(session.graph(), 42);
+    let p = session.profile(&init).expect("profiled step");
+    println!("\n--- {name}: measured vs modeled (8 devices) ---");
+    print!("{}", p.calibration);
+    let report_path = format!("obs_report_{name}.json");
+    p.calibration.write_json(&report_path).expect("writing drift report");
+    let trace = p.exec.trace.as_ref().expect("profile always traces");
+    let trace_path = format!("obs_overlay_{name}.json");
+    std::fs::write(&trace_path, overlay_trace_json(&p.modeled, &topo, trace, session.program()))
+        .expect("writing overlay trace");
+    println!("wrote {report_path} and {trace_path} — open the overlay in chrome://tracing");
+}
+
 /// Compile the plan to SPMD programs and (optionally) schedule it.
 fn lower_and_trace(name: &str, g: soybean::Graph, trace: bool) {
     let topo = Topology::p2_8xlarge();
@@ -199,6 +226,7 @@ fn main() {
     let do_lower = args.iter().any(|a| a == "--lower");
     let do_trace = args.iter().any(|a| a == "--trace");
     let do_execute = args.iter().any(|a| a == "--execute");
+    let do_profile = args.iter().any(|a| a == "--profile");
     let topo_preset = args
         .iter()
         .position(|a| a == "--topology")
@@ -286,7 +314,16 @@ fn main() {
         execute_and_compare("alexnet-67px", alexnet_scaled(8, 67, 256));
     }
 
-    // 6. `--topology <preset>`: close the planner/topology loop — plan
+    // 6. `--profile`: the observability loop — one traced step per
+    // executable workload, joined against the engine's model
+    // (docs/observability.md).
+    if do_profile {
+        println!("\n=== measured vs modeled profiling (8 devices) ===");
+        profile_workload("mlp", mlp(&MlpConfig::fig8(16, 16)));
+        profile_workload("transformer-4L", transformer(&TransformerConfig::tiny4()));
+    }
+
+    // 7. `--topology <preset>`: close the planner/topology loop — plan
     // both ways on a hierarchical interconnect and show the candidate
     // scoreboard (docs/topology.md).
     if let Some(preset) = topo_preset {

@@ -50,6 +50,12 @@
 //!   (plan once, execute forever — the unified facade over planner +
 //!   lowering + executor) and [`serve::ServeEngine`] (persistent warm
 //!   worker pool, dynamic batching, plan cache, latency stats).
+//! - [`obs`] — observability: per-instruction span tracing in the real
+//!   executor, the unified Chrome-trace writer (modeled, measured, and
+//!   overlaid), the measured-vs-modeled drift report
+//!   ([`obs::CalibrationReport`]), and the shared metrics registry
+//!   (counters + histograms) the executor, recovery loop, and serving
+//!   stats all report into.
 //! - [`coordinator`] — the training loop: BSP batches, SGD, metrics.
 //! - [`models`] — the model zoo: MLP, parametric CNN, AlexNet, VGG-16 as
 //!   semantic graphs (the paper's evaluation workloads).
@@ -68,6 +74,7 @@ pub mod figures;
 pub mod graph;
 pub mod lower;
 pub mod models;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod serve;
@@ -117,4 +124,9 @@ pub mod book {
     /// batching, plan caching, and the stats surface.
     #[doc = include_str!("../../docs/serving.md")]
     pub mod serving {}
+
+    /// Observability: span tracing, the Chrome-trace overlay, the
+    /// measured-vs-modeled drift report, and the metrics registry.
+    #[doc = include_str!("../../docs/observability.md")]
+    pub mod observability {}
 }

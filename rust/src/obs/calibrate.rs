@@ -1,0 +1,420 @@
+//! The drift report: join measured executor spans against the
+//! discrete-event engine's modeled step.
+//!
+//! ROADMAP item 5 ("calibrate the cost model against measured execution")
+//! needs exactly one artifact: for every kernel and every lowered
+//! collective, *what the engine predicted* next to *what the threaded
+//! executor actually took*. [`calibrate`] computes that join and returns a
+//! [`CalibrationReport`]; [`Session::profile`](crate::serve::Session::profile)
+//! is the one-call facade (traced step + engine run + join) and
+//! `plan_inspector --profile` dumps the report beside the overlay trace.
+//!
+//! Join semantics:
+//!
+//! - **Kernels**: modeled seconds come from the `Compute` instructions of
+//!   device 0's stream (SPMD — all streams carry the same op sequence);
+//!   measured seconds are the mean `Compute`-span duration across devices.
+//! - **Collectives**: each lowered transfer group (gid) is modeled as
+//!   `Topology::transfer_seconds(cut, pair_bytes)`. Measured comm time is
+//!   the mean per-device wall-clock of the `Wait` + `Send` spans attached
+//!   to the same `(op, tensor)` site; when stacked cuts lower one logical
+//!   conversion into several gids sharing a site, the measured time is
+//!   split across them in proportion to their modeled seconds.
+//! - **Bytes reconcile exactly**: the metered collective markers recorded
+//!   by the workers sum to the executor's collective meter, which equals
+//!   the plan's Theorem-1 total bit for bit, and per gid they equal
+//!   `pair_bytes << cut` — the model and the measurement agree on *bytes*
+//!   by construction, so every ratio in the report is purely about *time*.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, OpId};
+use crate::lower::{Instr, LoweredProgram};
+use crate::obs::trace::{SpanKind, StepTrace, OUT_SLOT};
+use crate::sim::{EngineReport, Topology};
+use crate::spmd::ExecReport;
+
+/// Modeled-vs-measured row for one graph op's local kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDrift {
+    /// Graph op id.
+    pub op: OpId,
+    /// Human-readable op name (`LoweredProgram::op_names`).
+    pub name: String,
+    /// Engine-modeled seconds for one execution of the kernel.
+    pub modeled_s: f64,
+    /// Mean measured seconds per device.
+    pub measured_s: f64,
+    /// `measured_s / modeled_s` (`0.0` when the model predicts zero).
+    pub ratio: f64,
+}
+
+/// Modeled-vs-measured row for one lowered transfer group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectiveDrift {
+    /// Transfer group id (index into `LoweredProgram::transfers`).
+    pub gid: usize,
+    /// Collective kind name (`all_gather`, `reduce_scatter`, ...).
+    pub kind: &'static str,
+    /// Name of the tensor being converted.
+    pub tensor: String,
+    /// Op the transfer is attached to (consumer for input gathers,
+    /// producer for output conversions).
+    pub op: OpId,
+    /// Cut level the transfer crosses.
+    pub cut: usize,
+    /// Modeled bytes: `pair_bytes << cut`, the group's Theorem-1 share.
+    pub modeled_bytes: u64,
+    /// Measured bytes from the workers' metered collective markers.
+    /// Equals `modeled_bytes` whenever the step ran fault-free.
+    pub measured_bytes: u64,
+    /// Engine-modeled wall-clock seconds for the group.
+    pub modeled_s: f64,
+    /// Measured seconds attributed to the group (see module docs).
+    pub measured_s: f64,
+    /// `measured_s / modeled_s` (`0.0` when the model predicts zero).
+    pub ratio: f64,
+}
+
+/// The drift report: per-kernel and per-collective modeled-vs-measured
+/// ratios plus aggregate step error. Produced by [`calibrate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    /// Number of devices in the step.
+    pub devices: usize,
+    /// Engine-modeled step wall-clock (seconds).
+    pub modeled_step_s: f64,
+    /// Measured step wall-clock: latest span end (seconds).
+    pub measured_step_s: f64,
+    /// `measured_step_s / modeled_step_s` — the aggregate step error.
+    pub step_ratio: f64,
+    /// Engine-modeled pure-compute critical path (seconds).
+    pub modeled_compute_s: f64,
+    /// Measured compute: max over devices of summed kernel span seconds.
+    pub measured_compute_s: f64,
+    /// Sum of all metered collective-marker bytes — reconciles bit for
+    /// bit with the plan's Theorem-1 total on a fault-free step.
+    pub metered_span_bytes: u64,
+    /// One row per graph op that computed or was modeled.
+    pub kernels: Vec<KernelDrift>,
+    /// One row per lowered transfer group.
+    pub collectives: Vec<CollectiveDrift>,
+}
+
+impl CalibrationReport {
+    /// The `n` rows whose modeled and measured times disagree by the
+    /// largest factor, as `(label, drift_factor)` with
+    /// `drift_factor = max(ratio, 1/ratio)`. Rows the model prices at
+    /// zero seconds are skipped (no meaningful ratio).
+    #[must_use]
+    pub fn worst_offenders(&self, n: usize) -> Vec<(String, f64)> {
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        for k in &self.kernels {
+            if k.ratio > 0.0 {
+                rows.push((format!("kernel {} ({})", k.op, k.name), k.ratio.max(1.0 / k.ratio)));
+            }
+        }
+        for c in &self.collectives {
+            if c.ratio > 0.0 {
+                let label = format!("collective gid{} {}:{} cut{}", c.gid, c.kind, c.tensor, c.cut);
+                rows.push((label, c.ratio.max(1.0 / c.ratio)));
+            }
+        }
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        rows.truncate(n);
+        rows
+    }
+
+    /// Render the full report as JSON (the `obs_report.json` schema).
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"devices\": {},\n", self.devices));
+        s.push_str(&format!("  \"modeled_step_s\": {},\n", self.modeled_step_s));
+        s.push_str(&format!("  \"measured_step_s\": {},\n", self.measured_step_s));
+        s.push_str(&format!("  \"step_ratio\": {},\n", self.step_ratio));
+        s.push_str(&format!("  \"modeled_compute_s\": {},\n", self.modeled_compute_s));
+        s.push_str(&format!("  \"measured_compute_s\": {},\n", self.measured_compute_s));
+        s.push_str(&format!("  \"metered_span_bytes\": {},\n", self.metered_span_bytes));
+        s.push_str("  \"kernels\": [\n");
+        for (i, k) in self.kernels.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"op\": {}, \"name\": {}, \"modeled_s\": {}, \"measured_s\": {}, \
+                 \"ratio\": {}}}{}\n",
+                k.op,
+                crate::util::bench::json_str(&k.name),
+                k.modeled_s,
+                k.measured_s,
+                k.ratio,
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"collectives\": [\n");
+        for (i, c) in self.collectives.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"gid\": {}, \"kind\": \"{}\", \"tensor\": {}, \"op\": {}, \
+                 \"cut\": {}, \"modeled_bytes\": {}, \"measured_bytes\": {}, \"modeled_s\": {}, \
+                 \"measured_s\": {}, \"ratio\": {}}}{}\n",
+                c.gid,
+                c.kind,
+                crate::util::bench::json_str(&c.tensor),
+                c.op,
+                c.cut,
+                c.modeled_bytes,
+                c.measured_bytes,
+                c.modeled_s,
+                c.measured_s,
+                c.ratio,
+                if i + 1 < self.collectives.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write [`Self::to_json`] to a file (conventionally
+    /// `obs_report.json`).
+    ///
+    /// # Errors
+    /// Propagates the underlying I/O error.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+impl std::fmt::Display for CalibrationReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "calibration over {} devices: step modeled {:.3} ms / measured {:.3} ms \
+             (ratio {:.3})",
+            self.devices,
+            self.modeled_step_s * 1e3,
+            self.measured_step_s * 1e3,
+            self.step_ratio
+        )?;
+        writeln!(
+            f,
+            "  compute modeled {:.3} ms / measured {:.3} ms; metered collective bytes {}",
+            self.modeled_compute_s * 1e3,
+            self.measured_compute_s * 1e3,
+            self.metered_span_bytes
+        )?;
+        writeln!(
+            f,
+            "  {} kernel rows, {} collective rows; worst offenders:",
+            self.kernels.len(),
+            self.collectives.len()
+        )?;
+        for (label, factor) in self.worst_offenders(5) {
+            writeln!(f, "    {factor:8.3}x  {label}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A profiled step: the measured [`ExecReport`] (with its span trace), the
+/// engine's modeled [`EngineReport`], and the joined [`CalibrationReport`].
+/// Returned by [`Session::profile`](crate::serve::Session::profile).
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// The traced real execution.
+    pub exec: ExecReport,
+    /// The engine's modeled schedule of the same program.
+    pub modeled: EngineReport,
+    /// The modeled-vs-measured join.
+    pub calibration: CalibrationReport,
+}
+
+/// Tensor a span's `(op, slot)` site refers to, mirroring the executor's
+/// wire protocol: input slots index `Op::inputs`, [`OUT_SLOT`] means the
+/// op's (single) output.
+fn slot_tensor(g: &Graph, op: OpId, slot: u8) -> usize {
+    if slot == OUT_SLOT {
+        g.ops[op].outputs[0]
+    } else {
+        g.ops[op].inputs[slot as usize]
+    }
+}
+
+/// Join a measured [`StepTrace`] against the engine's modeled step for the
+/// same lowered program. See the module docs for the join semantics.
+#[must_use]
+pub fn calibrate(
+    g: &Graph,
+    program: &LoweredProgram,
+    topo: &Topology,
+    modeled: &EngineReport,
+    trace: &StepTrace,
+) -> CalibrationReport {
+    let devices = program.devices;
+    let nd = devices as f64;
+
+    // Kernels: modeled from device 0's stream (SPMD — identical streams),
+    // measured as the per-device mean of Compute spans.
+    let mut modeled_op: BTreeMap<OpId, f64> = BTreeMap::new();
+    for i in &program.programs[0].instrs {
+        if let Instr::Compute { op, seconds } = i {
+            *modeled_op.entry(*op).or_insert(0.0) += *seconds;
+        }
+    }
+    let mut meas_op: BTreeMap<OpId, f64> = BTreeMap::new();
+    let mut per_device_compute = vec![0.0f64; devices];
+    for s in &trace.spans {
+        if s.kind == SpanKind::Compute {
+            *meas_op.entry(s.op).or_insert(0.0) += s.dur_s();
+            per_device_compute[s.device] += s.dur_s();
+        }
+    }
+    let mut ops: Vec<OpId> = modeled_op.keys().chain(meas_op.keys()).copied().collect();
+    ops.sort_unstable();
+    ops.dedup();
+    let kernels: Vec<KernelDrift> = ops
+        .into_iter()
+        .map(|op| {
+            let modeled_s = modeled_op.get(&op).copied().unwrap_or(0.0);
+            let measured_s = meas_op.get(&op).copied().unwrap_or(0.0) / nd;
+            KernelDrift {
+                op,
+                name: program.op_names[op].clone(),
+                modeled_s,
+                measured_s,
+                ratio: if modeled_s > 0.0 { measured_s / modeled_s } else { 0.0 },
+            }
+        })
+        .collect();
+
+    // Measured comm wall-clock by (op, tensor) site: Wait + Send spans,
+    // mean per device.
+    let mut comm: BTreeMap<(OpId, usize), f64> = BTreeMap::new();
+    for s in &trace.spans {
+        if matches!(s.kind, SpanKind::Wait | SpanKind::Send) {
+            *comm.entry((s.op, slot_tensor(g, s.op, s.slot))).or_insert(0.0) += s.dur_s();
+        }
+    }
+
+    // Metered bytes per transfer group from the collective markers.
+    let mut gid_bytes = vec![0u64; program.transfers.len()];
+    let mut metered_span_bytes = 0u64;
+    for s in &trace.spans {
+        if let Some(gid) = s.gid {
+            gid_bytes[gid] += s.bytes;
+            metered_span_bytes += s.bytes;
+        }
+    }
+
+    // Modeled seconds per gid; gids sharing an (op, tensor) site split the
+    // site's measured time in proportion to their modeled seconds.
+    let modeled_gid: Vec<f64> =
+        program.transfers.iter().map(|m| topo.transfer_seconds(m.cut, m.pair_bytes)).collect();
+    let mut site_modeled: BTreeMap<(OpId, usize), f64> = BTreeMap::new();
+    let mut site_count: BTreeMap<(OpId, usize), usize> = BTreeMap::new();
+    for (i, m) in program.transfers.iter().enumerate() {
+        *site_modeled.entry((m.op, m.tensor)).or_insert(0.0) += modeled_gid[i];
+        *site_count.entry((m.op, m.tensor)).or_insert(0) += 1;
+    }
+    let collectives: Vec<CollectiveDrift> = program
+        .transfers
+        .iter()
+        .enumerate()
+        .map(|(gid, m)| {
+            let key = (m.op, m.tensor);
+            let site_measured = comm.get(&key).copied().unwrap_or(0.0) / nd;
+            let share = if site_modeled[&key] > 0.0 {
+                modeled_gid[gid] / site_modeled[&key]
+            } else {
+                1.0 / site_count[&key] as f64
+            };
+            let modeled_s = modeled_gid[gid];
+            let measured_s = site_measured * share;
+            CollectiveDrift {
+                gid,
+                kind: m.kind.name(),
+                tensor: program.tensor_names[m.tensor].clone(),
+                op: m.op,
+                cut: m.cut,
+                modeled_bytes: m.pair_bytes << m.cut,
+                measured_bytes: gid_bytes[gid],
+                modeled_s,
+                measured_s,
+                ratio: if modeled_s > 0.0 { measured_s / modeled_s } else { 0.0 },
+            }
+        })
+        .collect();
+
+    let measured_step_s = trace.step_s();
+    let measured_compute_s = per_device_compute.iter().fold(0.0f64, |a, &b| a.max(b));
+    CalibrationReport {
+        devices,
+        modeled_step_s: modeled.step_s,
+        measured_step_s,
+        step_ratio: if modeled.step_s > 0.0 { measured_step_s / modeled.step_s } else { 0.0 },
+        modeled_compute_s: modeled.compute_s,
+        measured_compute_s,
+        metered_span_bytes,
+        kernels,
+        collectives,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::seed_values;
+    use crate::lower::try_lower;
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::{Planner, Strategy};
+    use crate::sim::{try_run_program, SimConfig};
+    use crate::spmd::{execute_with, ExecOptions};
+
+    #[test]
+    fn calibration_joins_a_real_traced_step() {
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![6, 8, 6], bias: true });
+        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).expect("plan");
+        let program = try_lower(&g, &plan, &SimConfig::default()).expect("lower");
+        let topo = Topology::from_sim(&SimConfig::default(), 1);
+        let init = seed_values(&g, 3);
+        let opts = ExecOptions::default().trace(true);
+        let report = execute_with(&g, &plan, &program, &init, &opts).expect("exec");
+        let trace = report.trace.clone().expect("tracing was on");
+        let modeled = try_run_program(&program, &topo).expect("engine");
+        let cal = calibrate(&g, &program, &topo, &modeled, &trace);
+
+        // Bytes reconcile: markers == collective meter == Theorem-1.
+        assert_eq!(cal.metered_span_bytes, report.instr_bytes);
+        assert_eq!(cal.metered_span_bytes, plan.total_cost());
+        for c in &cal.collectives {
+            assert_eq!(c.measured_bytes, c.modeled_bytes, "gid {}", c.gid);
+            assert!(c.modeled_s > 0.0, "gid {} priced at zero", c.gid);
+        }
+        assert_eq!(cal.collectives.len(), program.transfers.len());
+        assert!(!cal.kernels.is_empty());
+        assert!(cal.measured_step_s > 0.0 && cal.modeled_step_s > 0.0);
+        assert!(cal.step_ratio > 0.0);
+
+        // The report serializes to valid JSON with every section present.
+        let json = cal.to_json();
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        assert_eq!(doc.get("devices").and_then(|v| v.as_usize()), Some(2));
+        assert!(doc.get("kernels").unwrap().as_arr().unwrap().len() == cal.kernels.len());
+        assert!(doc.get("collectives").unwrap().as_arr().unwrap().len() == cal.collectives.len());
+        assert!(!cal.worst_offenders(3).is_empty());
+        assert!(format!("{cal}").contains("worst offenders"));
+    }
+
+    #[test]
+    fn untraced_spans_yield_zero_measurements_but_full_model_rows() {
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).expect("plan");
+        let program = try_lower(&g, &plan, &SimConfig::default()).expect("lower");
+        let topo = Topology::from_sim(&SimConfig::default(), 1);
+        let modeled = try_run_program(&program, &topo).expect("engine");
+        let cal = calibrate(&g, &program, &topo, &modeled, &StepTrace::default());
+        assert_eq!(cal.metered_span_bytes, 0);
+        assert_eq!(cal.measured_step_s, 0.0);
+        assert!(cal.collectives.iter().all(|c| c.measured_s == 0.0 && c.modeled_s > 0.0));
+        // Zero-measurement rows are skipped by the offender ranking only
+        // when the *model* prices them at zero; here ratios are 0.0.
+        assert!(cal.collectives.iter().all(|c| c.ratio == 0.0));
+    }
+}

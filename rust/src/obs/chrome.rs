@@ -1,0 +1,292 @@
+//! Chrome-trace (`chrome://tracing` / Perfetto) writers for modeled and
+//! measured timelines.
+//!
+//! The discrete-event engine's writer used to live in `sim::engine`; it is
+//! factored here so the simulated schedule and the real executor's span
+//! trace emit the *same* schema and can be overlaid in one viewer:
+//!
+//! - [`chrome_trace_json`] — the modeled timeline (pid 0 = devices, pid 1 =
+//!   interconnect link lanes), unchanged from its `sim::engine` days and
+//!   still re-exported as `soybean::sim::chrome_trace_json`.
+//! - [`measured_trace_json`] — a [`StepTrace`] from a traced executor run,
+//!   same pid/tid layout for the device lanes.
+//! - [`overlay_trace_json`] — both in one file: modeled on pids 0/1,
+//!   measured on pid 2, sharing the `t = 0` step origin so drift is
+//!   visible by eye.
+
+use crate::lower::LoweredProgram;
+use crate::obs::trace::{SpanKind, StepTrace, OUT_SLOT};
+use crate::sim::engine::Lane;
+use crate::sim::{EngineReport, Topology};
+
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn link_tid(cut: usize, pair: usize) -> usize {
+    (cut << 16) | pair
+}
+
+/// Comma-separated event accumulator for one `traceEvents` array.
+struct TraceDoc {
+    s: String,
+    first: bool,
+}
+
+impl TraceDoc {
+    fn new() -> Self {
+        TraceDoc {
+            s: String::from("{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n"),
+            first: true,
+        }
+    }
+
+    fn push(&mut self, line: String) {
+        if !self.first {
+            self.s.push_str(",\n");
+        }
+        self.first = false;
+        self.s.push_str(&line);
+    }
+
+    fn meta_process(&mut self, pid: usize, name: &str) {
+        self.push(format!(
+            "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        ));
+    }
+
+    fn meta_thread(&mut self, pid: usize, tid: usize, name: &str) {
+        self.push(format!(
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        ));
+    }
+
+    fn complete(&mut self, name: &str, pid: usize, tid: usize, ts_s: f64, dur_s: f64, bytes: u64) {
+        use std::fmt::Write as _;
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{{\"ph\":\"X\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3}",
+            esc(name),
+            ts_s * 1e6,
+            dur_s * 1e6
+        );
+        if bytes > 0 {
+            let _ = write!(line, ",\"args\":{{\"bytes\":{bytes}}}");
+        }
+        line.push('}');
+        self.push(line);
+    }
+
+    fn finish(mut self) -> String {
+        self.s.push_str("\n]\n}\n");
+        self.s
+    }
+}
+
+/// Emit the modeled timeline onto a document: devices as `pid_base`
+/// threads, link instances as `pid_base + 1` threads named by tier.
+fn emit_modeled(doc: &mut TraceDoc, report: &EngineReport, topo: &Topology, pid_base: usize) {
+    for d in 0..report.devices {
+        doc.meta_thread(pid_base, d, &format!("gpu{d}"));
+    }
+    // Name every link lane that actually carried traffic.
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for e in &report.trace {
+        if let Lane::Link { cut, pair } = e.lane {
+            if !seen.contains(&(cut, pair)) {
+                seen.push((cut, pair));
+                let lane_name = format!("{} pair{pair}", topo.link(cut).name);
+                doc.meta_thread(pid_base + 1, link_tid(cut, pair), &lane_name);
+            }
+        }
+    }
+    for e in &report.trace {
+        let (pid, tid) = match e.lane {
+            Lane::Device(d) => (pid_base, d),
+            Lane::Link { cut, pair } => (pid_base + 1, link_tid(cut, pair)),
+        };
+        doc.complete(&e.name, pid, tid, e.start_s, e.dur_s, e.bytes);
+    }
+}
+
+/// Span display name: kernels carry their op name; collective markers are
+/// named like the engine's link spans (`all_gather:tensor`) so modeled and
+/// measured lanes line up; sends/waits name the op side they stalled on.
+fn span_name(span: &crate::obs::trace::Span, program: &LoweredProgram) -> String {
+    if let Some(gid) = span.gid {
+        let m = &program.transfers[gid];
+        return format!("{}:{}", span.kind.name(), program.tensor_names[m.tensor]);
+    }
+    match span.kind {
+        SpanKind::Compute => program.op_names[span.op].clone(),
+        _ => {
+            let side = if span.slot == OUT_SLOT {
+                "out".to_string()
+            } else {
+                format!("in{}", span.slot)
+            };
+            format!("{}:{}#{side}", span.kind.name(), program.op_names[span.op])
+        }
+    }
+}
+
+/// Emit a measured [`StepTrace`] onto a document as `pid` device threads.
+fn emit_measured(doc: &mut TraceDoc, trace: &StepTrace, program: &LoweredProgram, pid: usize) {
+    let devices = trace.spans.iter().map(|s| s.device + 1).max().unwrap_or(0);
+    for d in 0..devices {
+        doc.meta_thread(pid, d, &format!("gpu{d}"));
+    }
+    for s in &trace.spans {
+        doc.complete(&span_name(s, program), pid, s.device, s.start_s, s.dur_s(), s.bytes);
+    }
+}
+
+/// Render an engine report's timeline as Chrome-trace JSON
+/// (`chrome://tracing` / Perfetto "load trace"). Devices appear as pid 0
+/// threads, interconnect link instances as pid 1 threads named after their
+/// tier.
+#[must_use]
+pub fn chrome_trace_json(report: &EngineReport, topo: &Topology) -> String {
+    let mut doc = TraceDoc::new();
+    doc.meta_process(0, "devices");
+    doc.meta_process(1, "interconnect");
+    emit_modeled(&mut doc, report, topo, 0);
+    doc.finish()
+}
+
+/// Render a measured executor [`StepTrace`] in the same Chrome-trace
+/// schema as [`chrome_trace_json`]: devices as pid 0 threads, one complete
+/// event per span, byte payloads in `args.bytes`.
+#[must_use]
+pub fn measured_trace_json(trace: &StepTrace, program: &LoweredProgram) -> String {
+    let mut doc = TraceDoc::new();
+    doc.meta_process(0, "devices");
+    emit_measured(&mut doc, trace, program, 0);
+    doc.finish()
+}
+
+/// Render modeled and measured timelines in one Chrome-trace file: the
+/// engine's schedule on pids 0/1 (exactly as [`chrome_trace_json`] lays it
+/// out) and the measured spans on pid 2, sharing the `t = 0` origin.
+#[must_use]
+pub fn overlay_trace_json(
+    modeled: &EngineReport,
+    topo: &Topology,
+    measured: &StepTrace,
+    program: &LoweredProgram,
+) -> String {
+    let mut doc = TraceDoc::new();
+    doc.meta_process(0, "devices (modeled)");
+    doc.meta_process(1, "interconnect (modeled)");
+    doc.meta_process(2, "devices (measured)");
+    emit_modeled(&mut doc, modeled, topo, 0);
+    emit_measured(&mut doc, measured, program, 2);
+    doc.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::try_lower;
+    use crate::models::{mlp, MlpConfig};
+    use crate::obs::trace::Span;
+    use crate::planner::{Planner, Strategy};
+    use crate::sim::{try_run_program, SimConfig};
+
+    fn modeled() -> (crate::graph::Graph, LoweredProgram, Topology, EngineReport) {
+        let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
+        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
+        let p = try_lower(&g, &plan, &SimConfig::default()).unwrap();
+        let topo = Topology::p2_8xlarge();
+        let r = try_run_program(&p, &topo).unwrap();
+        (g, p, topo, r)
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let (g, p, topo, r) = modeled();
+        let json = chrome_trace_json(&r, &topo);
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.len() >= g.ops.len());
+        // Every complete event carries non-negative microsecond stamps.
+        for e in events {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
+                assert!(e.get("ts").is_some() && e.get("dur").is_some());
+            }
+        }
+        let _ = p;
+    }
+
+    #[test]
+    fn measured_and_overlay_share_the_schema() {
+        let (_g, p, topo, r) = modeled();
+        let gid = if p.transfers.is_empty() { None } else { Some(0) };
+        let spans = vec![
+            Span {
+                device: 0,
+                op: 0,
+                kind: SpanKind::Compute,
+                slot: 0,
+                gid: None,
+                start_s: 0.0,
+                end_s: 1e-3,
+                bytes: 0,
+            },
+            Span {
+                device: 1,
+                op: 0,
+                kind: SpanKind::Wait,
+                slot: OUT_SLOT,
+                gid: None,
+                start_s: 1e-3,
+                end_s: 2e-3,
+                bytes: 64,
+            },
+            Span {
+                device: 1,
+                op: p.transfers.first().map_or(0, |m| m.op),
+                kind: SpanKind::AllGather,
+                slot: 0,
+                gid,
+                start_s: 2e-3,
+                end_s: 2e-3,
+                bytes: 128,
+            },
+        ];
+        let trace = StepTrace::merge(vec![spans]);
+        let measured = measured_trace_json(&trace, &p);
+        let doc = crate::util::json::parse(&measured).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 device threads named + 1 process meta + 3 spans.
+        assert!(events.len() >= 6);
+        assert!(measured.contains(&p.op_names[0]));
+        assert!(measured.contains("wait:"));
+
+        let overlay = overlay_trace_json(&r, &topo, &trace, &p);
+        let doc = crate::util::json::parse(&overlay).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Overlay carries both the modeled events and the measured pid 2.
+        assert!(overlay.contains("devices (measured)"));
+        assert!(overlay.contains("devices (modeled)"));
+        assert!(events.iter().any(|e| {
+            e.get("pid").and_then(|p| p.as_usize()) == Some(2)
+                && e.get("ph").and_then(|p| p.as_str()) == Some("X")
+        }));
+        if gid.is_some() {
+            assert!(measured.contains("all_gather:"));
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Named monotonic counters and histograms shared by the executor, the
+//! recovery loop, and the serve engine.
+//!
+//! [`Histogram`] is the percentile machinery that used to live inside
+//! `serve::stats` (nearest-rank, the convention the serving p50/p95/p99
+//! have always used), moved here so every subsystem shares one
+//! implementation. [`Metrics`] is a cheap clonable registry handle —
+//! `Arc<Mutex<..>>` inside — wired through `ExecOptions::metrics`: the
+//! worker pool counts steps/failures/bytes, `execute_with_recovery` counts
+//! retries and replans, and the serve engine can observe anything else
+//! through the same handle.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// A sample window with nearest-rank percentiles.
+///
+/// Samples are unitless `f64`s (callers conventionally record seconds).
+/// All accessors return `0.0` on an empty window rather than panicking, so
+/// snapshots taken before any traffic are well-formed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    /// New empty histogram.
+    #[must_use]
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of recorded samples.
+    #[must_use]
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// True when no samples have been recorded.
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Arithmetic mean (`0.0` when empty).
+    #[must_use]
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Smallest sample (`0.0` when empty).
+    #[must_use]
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Largest sample (`0.0` when empty).
+    #[must_use]
+    pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank percentile: the smallest sample with at least `q·n`
+    /// samples at or below it (so `percentile(0.5)` of 9 samples is the
+    /// 5th smallest). `0.0` when empty; any `q >= 1.0` yields the max and
+    /// any `q <= 0` the min.
+    #[must_use]
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        let rank = (q * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+
+    /// One-shot summary (count, mean, p50/p95/p99, max).
+    #[must_use]
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+            max: self.max(),
+        }
+    }
+
+    /// Drop all samples.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+}
+
+/// Point-in-time digest of one [`Histogram`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    /// Number of samples in the window.
+    pub count: u64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Nearest-rank median.
+    pub p50: f64,
+    /// Nearest-rank 95th percentile.
+    pub p95: f64,
+    /// Nearest-rank 99th percentile.
+    pub p99: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Clonable registry of named monotonic counters and histograms.
+///
+/// Cloning shares the underlying store, so the same handle can be threaded
+/// into `ExecOptions`, held by a test, and read back after the run:
+///
+/// ```
+/// use soybean::obs::Metrics;
+/// let m = Metrics::new();
+/// let handle = m.clone();
+/// handle.inc("exec.steps", 1);
+/// m.observe("exec.step_seconds", 0.25);
+/// assert_eq!(m.counter("exec.steps"), 1);
+/// assert_eq!(m.snapshot().histograms["exec.step_seconds"].count, 1);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<MetricsInner>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    #[must_use]
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Add `by` to the named counter (created at zero on first use).
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut inner = self.inner.lock().expect("metrics lock");
+        *inner.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut inner = self.inner.lock().expect("metrics lock");
+        inner.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Current value of the named counter (`0` if never incremented).
+    #[must_use]
+    pub fn counter(&self, name: &str) -> u64 {
+        let inner = self.inner.lock().expect("metrics lock");
+        inner.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Point-in-time snapshot of every counter and histogram.
+    #[must_use]
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().expect("metrics lock");
+        MetricsSnapshot {
+            counters: inner.counters.clone(),
+            histograms: inner.histograms.iter().map(|(k, h)| (k.clone(), h.summary())).collect(),
+        }
+    }
+}
+
+/// Snapshot returned by [`Metrics::snapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Histogram digests by name.
+    pub histograms: BTreeMap<String, HistSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Render the snapshot as a JSON object (counters as integers,
+    /// histograms as `{count, mean, p50, p95, p99, max}` objects).
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": {");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{k}\": {v}"));
+        }
+        out.push_str("\n  },\n  \"histograms\": {");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    \"{k}\": {{\"count\": {}, \"mean\": {}, \"p50\": {}, \"p95\": {}, \
+                 \"p99\": {}, \"max\": {}}}",
+                h.count, h.mean, h.p50, h.p95, h.p99, h.max
+            ));
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Satellite: edge cases for the shared percentile machinery that
+    // serving latency stats now run on.
+
+    #[test]
+    fn empty_window_is_all_zeros() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.summary(), HistSummary::default());
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = Histogram::new();
+        h.record(4.25);
+        for q in [0.0, 0.01, 0.5, 0.95, 0.99, 1.0, 2.0] {
+            assert_eq!(h.percentile(q), 4.25, "q={q}");
+        }
+        assert_eq!(h.mean(), 4.25);
+        assert_eq!(h.min(), 4.25);
+        assert_eq!(h.max(), 4.25);
+    }
+
+    #[test]
+    fn all_equal_latencies_collapse() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(0.007);
+        }
+        let s = h.summary();
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (0.007, 0.007, 0.007, 0.007));
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_matches_the_serving_convention() {
+        // 1..=9: p50 is the 5th smallest, p95/p99 round up to the max.
+        let mut h = Histogram::new();
+        for v in (1..=9).rev() {
+            h.record(f64::from(v));
+        }
+        assert_eq!(h.percentile(0.50), 5.0);
+        assert_eq!(h.percentile(0.95), 9.0);
+        assert_eq!(h.percentile(0.99), 9.0);
+        assert_eq!(h.min(), 1.0);
+        h.clear();
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn metrics_counters_accumulate_across_clones() {
+        let m = Metrics::new();
+        m.inc("recover.retries", 2);
+        m.clone().inc("recover.retries", 1);
+        assert_eq!(m.counter("recover.retries"), 3);
+        assert_eq!(m.counter("never.touched"), 0);
+        m.observe("lat", 1.0);
+        m.observe("lat", 3.0);
+        let snap = m.snapshot();
+        assert_eq!(snap.counters["recover.retries"], 3);
+        assert_eq!(snap.histograms["lat"].mean, 2.0);
+        let json = snap.to_json();
+        assert!(json.contains("\"recover.retries\": 3"));
+        assert!(json.contains("\"count\": 2"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability: end-to-end tracing and measured-vs-modeled telemetry
+//! for the real SPMD executor.
+//!
+//! Four pieces, threaded through the whole execution vertical:
+//!
+//! - [`trace`] — per-worker span buffers. With `ExecOptions::trace` on,
+//!   every compute phase, collective send, wait stall, and metered
+//!   collective instruction becomes a [`Span`] in the step's
+//!   [`StepTrace`]; off (the default), each site costs one branch.
+//! - [`chrome`] — the unified Chrome-trace writer (factored out of
+//!   `sim::engine`), so modeled and measured timelines share one schema
+//!   and [`overlay_trace_json`] can put them side by side in
+//!   `chrome://tracing`.
+//! - [`mod@calibrate`] — the drift report: joins a measured [`StepTrace`]
+//!   against the discrete-event engine's modeled step into a
+//!   [`CalibrationReport`] (per-kernel and per-collective ratios,
+//!   aggregate step error, worst-N offenders, `obs_report.json`).
+//! - [`metrics`] — named monotonic counters + histograms ([`Metrics`]),
+//!   shared by the executor (steps/failures/step-seconds), the recovery
+//!   loop (retries/replans), and the serving stats (whose percentile
+//!   machinery now lives here as [`Histogram`]).
+//!
+//! See the book chapter: [`crate::book::observability`].
+
+pub mod calibrate;
+pub mod chrome;
+pub mod metrics;
+pub mod trace;
+
+pub use calibrate::{calibrate, CalibrationReport, CollectiveDrift, KernelDrift, ProfileReport};
+pub use chrome::{chrome_trace_json, measured_trace_json, overlay_trace_json};
+pub use metrics::{HistSummary, Histogram, Metrics, MetricsSnapshot};
+pub use trace::{Span, SpanContext, SpanKind, StepTrace, TraceBuf, OUT_SLOT};

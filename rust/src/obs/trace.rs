@@ -1,0 +1,268 @@
+//! Span tracing for the real SPMD executor.
+//!
+//! When [`ExecOptions::trace`](crate::spmd::ExecOptions) is on, every worker
+//! thread records one [`Span`] per compute phase, collective send, wait
+//! stall, and metered collective instruction into a private [`TraceBuf`] —
+//! one `Vec` per worker, drained into the step's [`StepTrace`] after the
+//! barrier, so the hot path never touches a lock or another thread's
+//! buffer. With tracing off (the default) the executor pays a single
+//! `Option` branch per site, the same discipline as the fault hooks.
+//!
+//! Timestamps are `f64` seconds measured from a shared per-step epoch (one
+//! `Instant` captured in `run_step` before dispatch), so spans from
+//! different workers share a clock and can be overlaid against the
+//! discrete-event engine's modeled timeline, which also starts at `t = 0`.
+
+use std::time::Instant;
+
+use crate::graph::OpId;
+
+/// Slot tag for output-side spans. Input-side spans carry their input slot
+/// index; output scatter/conversion activity is tagged with this sentinel
+/// (mirroring the executor's wire protocol, where real slots are `< 254`).
+pub const OUT_SLOT: u8 = u8::MAX;
+
+/// What a [`Span`] measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Local kernel execution (`apply_op`) for one op.
+    Compute,
+    /// Serializing + enqueueing one outbound payload (checksum + channel
+    /// send; includes any injected delay when fault injection is active).
+    Send,
+    /// Blocked in `recv` waiting for a peer's payload (the wait stall).
+    Wait,
+    /// Metered `AllGather` instruction (zero-duration marker carrying the
+    /// instruction's Theorem-1 byte cost).
+    AllGather,
+    /// Metered `ReduceScatter` instruction (zero-duration byte marker).
+    ReduceScatter,
+    /// Metered `AllToAll` instruction (zero-duration byte marker).
+    AllToAll,
+    /// Metered `SendRecv` instruction (zero-duration byte marker).
+    SendRecv,
+}
+
+impl SpanKind {
+    /// Stable lower-snake name (matches `CollectiveKind::name` for the
+    /// collective kinds, so measured markers join against modeled spans).
+    #[must_use]
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Send => "send",
+            SpanKind::Wait => "wait",
+            SpanKind::AllGather => "all_gather",
+            SpanKind::ReduceScatter => "reduce_scatter",
+            SpanKind::AllToAll => "all_to_all",
+            SpanKind::SendRecv => "send_recv",
+        }
+    }
+
+    /// True for the four metered collective-instruction kinds.
+    #[must_use]
+    pub fn is_collective(self) -> bool {
+        matches!(
+            self,
+            SpanKind::AllGather | SpanKind::ReduceScatter | SpanKind::AllToAll | SpanKind::SendRecv
+        )
+    }
+}
+
+/// One traced interval on one device: `(device, op, instr-kind, slot)` plus
+/// start/end seconds since the step epoch and the payload bytes involved.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Device (worker thread) that recorded the span.
+    pub device: usize,
+    /// Graph op the activity belongs to (consumer op for input gathers,
+    /// producer op for output conversions — same convention as
+    /// `TransferMeta::op`).
+    pub op: OpId,
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Input slot for input-side activity, [`OUT_SLOT`] for output-side.
+    pub slot: u8,
+    /// For metered collective markers: the lowered transfer group id, the
+    /// join key into `LoweredProgram::transfers`. `None` for wall-clock
+    /// spans (compute/send/wait).
+    pub gid: Option<usize>,
+    /// Seconds since the step epoch at span start.
+    pub start_s: f64,
+    /// Seconds since the step epoch at span end (`== start_s` for
+    /// zero-duration meter markers).
+    pub end_s: f64,
+    /// Payload bytes: received bytes for waits, sent bytes for sends, the
+    /// instruction's Theorem-1 bytes for collective markers, 0 for compute.
+    pub bytes: u64,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    #[must_use]
+    pub fn dur_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Span context attached to watchdog/corruption errors when tracing is on:
+/// the last span the failing worker completed before the error, so the
+/// structured root cause carries timing evidence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanContext {
+    /// Op of the last completed span.
+    pub op: OpId,
+    /// Slot of the last completed span ([`OUT_SLOT`] for output-side).
+    pub slot: u8,
+    /// Milliseconds from the step epoch to the moment the error was raised.
+    pub elapsed_ms: u64,
+}
+
+impl std::fmt::Display for SpanContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.slot == OUT_SLOT {
+            write!(f, "last span op {} (output) at +{} ms", self.op, self.elapsed_ms)
+        } else {
+            write!(f, "last span op {} slot {} at +{} ms", self.op, self.slot, self.elapsed_ms)
+        }
+    }
+}
+
+/// Per-worker span buffer: a plain `Vec` owned by one worker thread, so
+/// recording is a push with no synchronization. Drained into a
+/// [`StepTrace`] at the step barrier.
+#[derive(Debug)]
+pub struct TraceBuf {
+    epoch: Instant,
+    spans: Vec<Span>,
+}
+
+impl TraceBuf {
+    /// New empty buffer measuring against the given step epoch.
+    #[must_use]
+    pub fn new(epoch: Instant) -> Self {
+        TraceBuf { epoch, spans: Vec::with_capacity(64) }
+    }
+
+    /// Seconds elapsed since the step epoch.
+    #[must_use]
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a span.
+    pub fn push(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+
+    /// Context for error enrichment: the last completed span plus the
+    /// elapsed time at the moment of the call. `None` if nothing has been
+    /// recorded yet.
+    #[must_use]
+    pub fn last_context(&self) -> Option<SpanContext> {
+        let last = self.spans.last()?;
+        Some(SpanContext {
+            op: last.op,
+            slot: last.slot,
+            elapsed_ms: self.epoch.elapsed().as_millis() as u64,
+        })
+    }
+
+    /// Consume the buffer, yielding its spans.
+    #[must_use]
+    pub fn into_spans(self) -> Vec<Span> {
+        self.spans
+    }
+}
+
+/// All spans from one executed step, merged across workers and sorted by
+/// start time. Attached to `ExecReport::trace` when tracing is on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepTrace {
+    /// The merged spans, ordered by `start_s` (ties broken by device).
+    pub spans: Vec<Span>,
+}
+
+impl StepTrace {
+    /// Merge per-worker span vectors into one ordered trace.
+    #[must_use]
+    pub fn merge(per_worker: Vec<Vec<Span>>) -> Self {
+        let mut spans: Vec<Span> = per_worker.into_iter().flatten().collect();
+        spans.sort_by(|a, b| {
+            a.start_s.total_cmp(&b.start_s).then_with(|| a.device.cmp(&b.device))
+        });
+        StepTrace { spans }
+    }
+
+    /// Measured step wall-clock: the latest span end, in seconds.
+    #[must_use]
+    pub fn step_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.end_s).fold(0.0, f64::max)
+    }
+
+    /// Sum of the metered collective markers' bytes. Reconciles bit for
+    /// bit with the executor's collective meter and therefore with the
+    /// plan's Theorem-1 total.
+    #[must_use]
+    pub fn collective_bytes(&self) -> u64 {
+        self.spans.iter().filter(|s| s.kind.is_collective()).map(|s| s.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(device: usize, kind: SpanKind, start_s: f64, end_s: f64, bytes: u64) -> Span {
+        Span { device, op: 0, kind, slot: 0, gid: None, start_s, end_s, bytes }
+    }
+
+    #[test]
+    fn merge_orders_by_start_then_device() {
+        let t = StepTrace::merge(vec![
+            vec![span(1, SpanKind::Compute, 2.0, 3.0, 0)],
+            vec![span(0, SpanKind::Wait, 2.0, 2.5, 8), span(0, SpanKind::Compute, 0.5, 1.0, 0)],
+        ]);
+        let order: Vec<(usize, f64)> = t.spans.iter().map(|s| (s.device, s.start_s)).collect();
+        assert_eq!(order, vec![(0, 0.5), (0, 2.0), (1, 2.0)]);
+        assert_eq!(t.step_s(), 3.0);
+    }
+
+    #[test]
+    fn collective_bytes_counts_only_meter_markers() {
+        let mut ag = span(0, SpanKind::AllGather, 1.0, 1.0, 100);
+        ag.gid = Some(0);
+        let t = StepTrace::merge(vec![vec![
+            span(0, SpanKind::Wait, 0.0, 1.0, 9999),
+            ag,
+            span(0, SpanKind::ReduceScatter, 1.0, 1.0, 28),
+        ]]);
+        assert_eq!(t.collective_bytes(), 128);
+    }
+
+    #[test]
+    fn trace_buf_records_and_reports_context() {
+        let mut buf = TraceBuf::new(Instant::now() - Duration::from_millis(50));
+        assert!(buf.last_context().is_none());
+        let t0 = buf.now();
+        assert!(t0 >= 0.050);
+        buf.push(Span {
+            device: 2,
+            op: 7,
+            kind: SpanKind::Wait,
+            slot: 1,
+            gid: None,
+            start_s: t0,
+            end_s: buf.now(),
+            bytes: 16,
+        });
+        let ctx = buf.last_context().expect("one span recorded");
+        assert_eq!((ctx.op, ctx.slot), (7, 1));
+        assert!(ctx.elapsed_ms >= 50);
+        assert_eq!(format!("{ctx}"), format!("last span op 7 slot 1 at +{} ms", ctx.elapsed_ms));
+        let out = SpanContext { op: 3, slot: OUT_SLOT, elapsed_ms: 9 };
+        assert_eq!(format!("{out}"), "last span op 3 (output) at +9 ms");
+        assert_eq!(buf.into_spans().len(), 1);
+    }
+}

@@ -369,6 +369,9 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
                 },
             };
             let Some(first) = self.admit(first) else { continue };
+            // The batch opens here: the linger stage runs from this
+            // instant to dispatch ([`StatsInner::record_batch_stages`]).
+            let opened = Instant::now();
             let mut units = first.req.units;
             let mut batch = vec![first];
             // Linger for stragglers up to max_linger or a full batch.
@@ -395,7 +398,7 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
                     Err(RecvTimeoutError::Timeout) => break,
                 }
             }
-            self.serve_batch(batch, units);
+            self.serve_batch(batch, units, opened);
         }
         // Shutting down: everything still queued will never be served.
         if let Some(e) = self.carry.take() {
@@ -443,13 +446,20 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
         Some(env)
     }
 
-    /// Execute one coalesced batch and reply to every member.
-    fn serve_batch(&mut self, batch: Vec<Envelope>, units: usize) {
+    /// Execute one coalesced batch and reply to every member. `opened`
+    /// is when the batch's first member was admitted — the linger stage
+    /// runs from there to this call.
+    fn serve_batch(&mut self, batch: Vec<Envelope>, units: usize, opened: Instant) {
         let broadcast = |batch: Vec<Envelope>, e: Error| {
             for env in batch {
                 let _ = env.reply.send(Err(e.clone()));
             }
         };
+        let linger_s = opened.elapsed().as_secs_f64();
+        // Queue wait ends at batch pickup: sample every member now,
+        // before planning and execution add to it.
+        let queue_waits: Vec<f64> =
+            batch.iter().map(|e| e.submitted.elapsed().as_secs_f64()).collect();
         let padded = units.div_ceil(self.align) * self.align;
         let g = (self.rebatch)(padded);
         let key = PlanKey::of(&g, self.devices, &self.topo);
@@ -504,13 +514,16 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
             }
         }
 
+        let exec_t0 = Instant::now();
         let report = match self.pool.run_step(&ctx, &init) {
             Ok(r) => r,
             Err(e) => return broadcast(batch, Error::from(e)),
         };
-        self.stats.lock().expect("stats lock").record_batch(units);
+        let execute_s = exec_t0.elapsed().as_secs_f64();
 
         // Slice each member's rows back out and reply.
+        let slice_t0 = Instant::now();
+        let mut latencies = Vec::with_capacity(batch.len());
         let mut off = 0;
         for env in batch {
             let u = env.req.units;
@@ -525,7 +538,7 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
                 outputs.insert(name.clone(), rows);
             }
             let latency = env.submitted.elapsed();
-            self.stats.lock().expect("stats lock").record_request(latency);
+            latencies.push(latency);
             let resp = ServeResponse {
                 outputs,
                 units: u,
@@ -535,6 +548,19 @@ impl<F: Fn(usize) -> Graph> Scheduler<F> {
             };
             let _ = env.reply.send(Ok(resp));
             off += u;
+        }
+        let slice_s = slice_t0.elapsed().as_secs_f64();
+
+        // One lock for the whole batch's bookkeeping — replies are
+        // already on their way.
+        let mut stats = self.stats.lock().expect("stats lock");
+        stats.record_batch(units);
+        stats.record_batch_stages(linger_s, execute_s, slice_s);
+        for w in queue_waits {
+            stats.record_queue_wait(w);
+        }
+        for l in latencies {
+            stats.record_request(l);
         }
     }
 }

@@ -37,7 +37,7 @@ pub use engine::{
     PendingResponse, ServeClient, ServeEngine, ServeOptions, ServeRequest, ServeResponse,
 };
 pub use session::{PlanSummary, Session};
-pub use stats::ServeStats;
+pub use stats::{ServeStats, StageBreakdown};
 
 use std::fmt;
 

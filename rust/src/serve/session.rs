@@ -16,10 +16,11 @@ use std::sync::Arc;
 use crate::error::Error;
 use crate::graph::Graph;
 use crate::lower::{try_lower, try_lower_forced, LoweredProgram};
+use crate::obs::{calibrate, ProfileReport};
 use crate::planner::{
     baselines, classic_dp_form, classify, try_plan_topology_aware, Plan, PlanError, Strategy,
 };
-use crate::sim::{try_simulate, try_simulate_forced, SimReport, Topology};
+use crate::sim::{try_run_program, try_simulate, try_simulate_forced, SimReport, Topology};
 use crate::spmd::{ExecOptions, ExecReport, StepCtx, WorkerPool};
 
 /// Run the full planning pipeline for `(g, devices, topo)` under a
@@ -173,6 +174,30 @@ impl Session {
         Ok(report)
     }
 
+    /// Profile one step: execute it with span tracing on, schedule the
+    /// same program through the discrete-event engine, and join the two
+    /// into a [`CalibrationReport`](crate::obs::CalibrationReport) — the
+    /// measured-vs-modeled drift of every kernel and collective.
+    ///
+    /// The session's own execution options are respected (deadline,
+    /// metrics handle); only the trace flag is forced on, for this call.
+    pub fn profile(&self, init: &[Option<Vec<f32>>]) -> Result<ProfileReport, Error> {
+        let old = &*self.ctx;
+        let traced = Arc::new(StepCtx {
+            g: old.g.clone(),
+            plan: old.plan.clone(),
+            program: old.program.clone(),
+            tasks: old.tasks.clone(),
+            opts: old.opts.clone().trace(true),
+        });
+        let mut pool = WorkerPool::spawn(self.devices());
+        let exec = pool.run_step(&traced, init)?;
+        let modeled = try_run_program(self.program(), &self.topo)?;
+        let trace = exec.trace.as_ref().expect("profile ran with tracing on");
+        let calibration = calibrate(self.graph(), self.program(), &self.topo, &modeled, trace);
+        Ok(ProfileReport { exec, modeled, calibration })
+    }
+
     /// A compact, printable description of what was planned.
     pub fn plan_summary(&self) -> PlanSummary {
         let plan = self.plan();
@@ -322,5 +347,22 @@ mod tests {
         let sim = s.simulate().unwrap();
         assert_eq!(sim.devices, 4);
         assert!(sim.step_s > 0.0);
+    }
+
+    #[test]
+    fn profile_joins_measured_and_modeled() {
+        use crate::graph::seed_values;
+        let s = Session::build(small(), 4, &Topology::p2_8xlarge()).unwrap();
+        let init = seed_values(s.graph(), 5);
+        let p = s.profile(&init).unwrap();
+        assert_eq!(p.calibration.devices, 4);
+        // The trace's metered markers reconcile with the Theorem-1 total.
+        assert_eq!(p.calibration.metered_span_bytes, s.plan().total_cost());
+        assert!(p.exec.trace.is_some());
+        assert!(p.modeled.step_s > 0.0);
+        // Profiling forces tracing only for its own step: the session's
+        // options are untouched, so a later execute stays untraced.
+        let r = s.execute(&init).unwrap();
+        assert!(r.trace.is_none());
     }
 }

@@ -1,14 +1,21 @@
 //! The serving stats surface: latency percentiles, throughput, batch
-//! shapes, and the plan-cache hit rate.
+//! shapes, the plan-cache hit rate, and the per-stage request breakdown.
 //!
 //! The engine's scheduler records one latency sample per served request
-//! (submit → reply) and one histogram bump per executed batch; the
-//! [`ServeStats`] snapshot derives the aggregates. Counters reset as a
-//! unit ([`super::ServeEngine::reset_stats`]) so a measurement window can
-//! exclude warmup — the bench and the hit-rate gate both rely on that.
+//! (submit → reply), one histogram bump per executed batch, and — since
+//! the observability layer — where each request's time went: queueing,
+//! lingering for batch-mates, executing on the pool, and slicing the
+//! batched output back apart ([`StageBreakdown`]). The percentile
+//! machinery is the shared [`crate::obs::Histogram`], so serving and the
+//! executor metrics agree on the nearest-rank convention. Counters reset
+//! as a unit ([`super::ServeEngine::reset_stats`]) so a measurement
+//! window can exclude warmup — the bench and the hit-rate gate both rely
+//! on that.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::obs::{HistSummary, Histogram};
 
 /// A point-in-time snapshot of the engine's serving statistics.
 #[derive(Debug, Clone)]
@@ -35,6 +42,27 @@ pub struct ServeStats {
     pub cache_misses: u64,
     /// Hits over total lookups (0.0 before any lookup).
     pub cache_hit_rate: f64,
+    /// Where request time went: per-stage latency summaries.
+    pub stages: StageBreakdown,
+}
+
+/// Per-stage latency summaries of the serving pipeline, in seconds.
+///
+/// `queue_wait` is sampled per *request* (submit → batch pickup); the
+/// other three are sampled per *batch* — a request's end-to-end latency
+/// is its queue wait plus the linger/execute/slice of the batch that
+/// carried it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    /// Submit → the scheduler picked the request into a batch.
+    pub queue_wait: HistSummary,
+    /// Time the opened batch lingered for batch-mates before dispatch.
+    pub linger: HistSummary,
+    /// Time the batch spent executing on the worker pool.
+    pub execute: HistSummary,
+    /// Time spent slicing the batched output back into per-request
+    /// replies.
+    pub slice: HistSummary,
 }
 
 /// The mutable accumulator behind [`ServeStats`] — owned by the engine,
@@ -44,7 +72,11 @@ pub(crate) struct StatsInner {
     started: Instant,
     requests: u64,
     batches: u64,
-    latencies: Vec<Duration>,
+    latencies: Histogram,
+    queue_wait: Histogram,
+    linger: Histogram,
+    execute: Histogram,
+    slice: Histogram,
     batch_histogram: BTreeMap<usize, u64>,
     cache_hits: u64,
     cache_misses: u64,
@@ -56,7 +88,11 @@ impl StatsInner {
             started: Instant::now(),
             requests: 0,
             batches: 0,
-            latencies: Vec::new(),
+            latencies: Histogram::new(),
+            queue_wait: Histogram::new(),
+            linger: Histogram::new(),
+            execute: Histogram::new(),
+            slice: Histogram::new(),
             batch_histogram: BTreeMap::new(),
             cache_hits: 0,
             cache_misses: 0,
@@ -72,7 +108,19 @@ impl StatsInner {
     /// Record one served request's submit → reply latency.
     pub(crate) fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
-        self.latencies.push(latency);
+        self.latencies.record(latency.as_secs_f64());
+    }
+
+    /// Record one request's queue wait (submit → batch pickup).
+    pub(crate) fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_wait.record(seconds);
+    }
+
+    /// Record one batch's linger / execute / slice stage durations.
+    pub(crate) fn record_batch_stages(&mut self, linger: f64, execute: f64, slice: f64) {
+        self.linger.record(linger);
+        self.execute.record(execute);
+        self.slice.record(slice);
     }
 
     /// Record one plan-cache lookup.
@@ -93,17 +141,15 @@ impl StatsInner {
     pub(crate) fn snapshot(&self) -> ServeStats {
         let elapsed = self.started.elapsed();
         let secs = elapsed.as_secs_f64();
-        let mut sorted = self.latencies.clone();
-        sorted.sort_unstable();
         let lookups = self.cache_hits + self.cache_misses;
         ServeStats {
             requests: self.requests,
             batches: self.batches,
             elapsed,
             throughput_rps: if secs > 0.0 { self.requests as f64 / secs } else { 0.0 },
-            p50_latency: percentile(&sorted, 0.50),
-            p95_latency: percentile(&sorted, 0.95),
-            p99_latency: percentile(&sorted, 0.99),
+            p50_latency: Duration::from_secs_f64(self.latencies.percentile(0.50)),
+            p95_latency: Duration::from_secs_f64(self.latencies.percentile(0.95)),
+            p99_latency: Duration::from_secs_f64(self.latencies.percentile(0.99)),
             batch_histogram: self.batch_histogram.clone(),
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
@@ -112,33 +158,32 @@ impl StatsInner {
             } else {
                 self.cache_hits as f64 / lookups as f64
             },
+            stages: StageBreakdown {
+                queue_wait: self.queue_wait.summary(),
+                linger: self.linger.summary(),
+                execute: self.execute.summary(),
+                slice: self.slice.summary(),
+            },
         }
     }
-}
-
-/// The `q`-quantile of an ascending-sorted sample set, by the
-/// nearest-rank method (`ceil(q·n)`-th smallest); zero for an empty set.
-fn percentile(sorted: &[Duration], q: f64) -> Duration {
-    if sorted.is_empty() {
-        return Duration::ZERO;
-    }
-    let rank = (q * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// The latency percentiles ride the shared [`Histogram`], and the
+    /// seconds → `Duration` round trip is exact at millisecond scale.
     #[test]
     fn percentile_is_nearest_rank() {
-        let ms: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
-        assert_eq!(percentile(&ms, 0.50), Duration::from_millis(50));
-        assert_eq!(percentile(&ms, 0.95), Duration::from_millis(95));
-        assert_eq!(percentile(&ms, 0.99), Duration::from_millis(99));
-        assert_eq!(percentile(&ms, 1.0), Duration::from_millis(100));
-        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
-        assert_eq!(percentile(&[Duration::from_millis(7)], 0.5), Duration::from_millis(7));
+        let mut s = StatsInner::new();
+        for i in 1..=100 {
+            s.record_request(Duration::from_millis(i));
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.p50_latency, Duration::from_millis(50));
+        assert_eq!(snap.p95_latency, Duration::from_millis(95));
+        assert_eq!(snap.p99_latency, Duration::from_millis(99));
     }
 
     #[test]
@@ -165,5 +210,26 @@ mod tests {
         let snap = s.snapshot();
         assert_eq!((snap.requests, snap.batches), (0, 0));
         assert_eq!(snap.cache_hit_rate, 0.0);
+        assert_eq!(snap.stages, StageBreakdown::default(), "stages reset with the window");
+    }
+
+    /// The stage breakdown aggregates per-request queue waits and
+    /// per-batch linger/execute/slice independently.
+    #[test]
+    fn stage_breakdown_separates_request_and_batch_samples() {
+        let mut s = StatsInner::new();
+        s.record_queue_wait(0.002);
+        s.record_queue_wait(0.004);
+        s.record_queue_wait(0.006);
+        s.record_batch_stages(0.001, 0.010, 0.0005);
+        let snap = s.snapshot();
+        assert_eq!(snap.stages.queue_wait.count, 3);
+        assert!((snap.stages.queue_wait.mean - 0.004).abs() < 1e-12);
+        assert_eq!(snap.stages.queue_wait.p50, 0.004);
+        assert_eq!(snap.stages.linger.count, 1);
+        assert_eq!(snap.stages.execute.p99, 0.010);
+        assert_eq!(snap.stages.slice.max, 0.0005);
+        // An empty stage stays all-zero rather than NaN.
+        assert_eq!(StageBreakdown::default().linger.p95, 0.0);
     }
 }

@@ -44,9 +44,10 @@
 //! charges it once per collective phase). Metered bytes per tier are
 //! identical bit for bit.
 //!
-//! The engine additionally emits Chrome-trace JSON
-//! ([`chrome_trace_json`]): open `chrome://tracing` (or Perfetto) and load
-//! the file to see device compute/wait lanes and per-link transfer spans.
+//! The engine's timeline renders as Chrome-trace JSON via
+//! [`crate::obs::chrome_trace_json`]: open `chrome://tracing` (or
+//! Perfetto) and load the file to see device compute/wait lanes and
+//! per-link transfer spans.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -464,93 +465,6 @@ fn run_program_unchecked(program: &LoweredProgram, topo: &Topology) -> EngineRep
     }
 }
 
-/// Render a report's timeline as Chrome-trace JSON (`chrome://tracing` /
-/// Perfetto "load trace"). Devices appear as pid 0 threads, interconnect
-/// link instances as pid 1 threads named after their tier.
-pub fn chrome_trace_json(report: &EngineReport, topo: &Topology) -> String {
-    use std::fmt::Write as _;
-    fn esc(s: &str) -> String {
-        s.chars()
-            .flat_map(|c| match c {
-                '"' => "\\\"".chars().collect::<Vec<_>>(),
-                '\\' => "\\\\".chars().collect(),
-                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
-                c => vec![c],
-            })
-            .collect()
-    }
-    let link_tid = |cut: usize, pair: usize| (cut << 16) | pair;
-
-    let mut s = String::new();
-    s.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n");
-    let mut first = true;
-    let push = |s: &mut String, line: String, first: &mut bool| {
-        if !*first {
-            s.push_str(",\n");
-        }
-        *first = false;
-        s.push_str(&line);
-    };
-    for (pid, pname) in [(0, "devices"), (1, "interconnect")] {
-        push(
-            &mut s,
-            format!(
-                "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\"args\":{{\"name\":\"{pname}\"}}}}"
-            ),
-            &mut first,
-        );
-    }
-    for d in 0..report.devices {
-        push(
-            &mut s,
-            format!(
-                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":0,\"tid\":{d},\"args\":{{\"name\":\"gpu{d}\"}}}}"
-            ),
-            &mut first,
-        );
-    }
-    // Name every link lane that actually carried traffic.
-    let mut seen: Vec<(usize, usize)> = Vec::new();
-    for e in &report.trace {
-        if let Lane::Link { cut, pair } = e.lane {
-            if !seen.contains(&(cut, pair)) {
-                seen.push((cut, pair));
-                let lane_name = format!("{} pair{pair}", esc(&topo.link(cut).name));
-                let tid = link_tid(cut, pair);
-                push(
-                    &mut s,
-                    format!(
-                        "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{tid},\
-                         \"args\":{{\"name\":\"{lane_name}\"}}}}"
-                    ),
-                    &mut first,
-                );
-            }
-        }
-    }
-    for e in &report.trace {
-        let (pid, tid) = match e.lane {
-            Lane::Device(d) => (0usize, d),
-            Lane::Link { cut, pair } => (1, link_tid(cut, pair)),
-        };
-        let mut line = String::new();
-        let _ = write!(
-            line,
-            "{{\"ph\":\"X\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3}",
-            esc(&e.name),
-            e.start_s * 1e6,
-            e.dur_s * 1e6
-        );
-        if e.bytes > 0 {
-            let _ = write!(line, ",\"args\":{{\"bytes\":{}}}", e.bytes);
-        }
-        line.push('}');
-        push(&mut s, line, &mut first);
-    }
-    s.push_str("\n]\n}\n");
-    s
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -692,25 +606,6 @@ mod tests {
         // Both lane families show up.
         assert!(r.trace.iter().any(|e| matches!(e.lane, Lane::Device(_))));
         assert!(r.trace.iter().any(|e| matches!(e.lane, Lane::Link { .. })));
-    }
-
-    #[test]
-    fn chrome_trace_is_valid_json() {
-        let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
-        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
-        let p = try_lower(&g, &plan, &cfg()).unwrap();
-        let topo = Topology::p2_8xlarge();
-        let r = try_run_program(&p, &topo).unwrap();
-        let json = chrome_trace_json(&r, &topo);
-        let doc = crate::util::json::parse(&json).expect("valid JSON");
-        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
-        assert!(events.len() >= g.ops.len());
-        // Every complete event carries non-negative microsecond stamps.
-        for e in events {
-            if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
-                assert!(e.get("ts").is_some() && e.get("dur").is_some());
-            }
-        }
     }
 
     #[test]

@@ -37,7 +37,10 @@ pub mod engine;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
-pub use engine::{chrome_trace_json, try_run_program, EngineReport, TierLink, Topology};
+pub use engine::{try_run_program, EngineReport, TierLink, Topology};
+// The trace writer moved to the observability layer; the historical
+// `sim::chrome_trace_json` path stays valid through this re-export.
+pub use crate::obs::chrome::chrome_trace_json;
 pub use simulate::{
     try_simulate, try_simulate_classic_dp, try_simulate_forced, SimConfig, SimReport,
 };

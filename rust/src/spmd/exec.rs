@@ -54,7 +54,8 @@ use std::time::{Duration, Instant};
 
 use crate::exec::{gather_sources, resident_region, Region, ShardTask};
 use crate::graph::{apply_op, Graph, InterpError, OpId, View};
-use crate::lower::{Instr, LoweredProgram};
+use crate::lower::{CollectiveKind, Instr, LoweredProgram};
+use crate::obs::{Metrics, Span, SpanContext, SpanKind, StepTrace, TraceBuf};
 use crate::planner::{Plan, PlanError};
 use crate::util::checksum::Fnv64;
 
@@ -63,7 +64,9 @@ use super::fault::{FaultKind, FaultPlan, InjectedPanic, KILLED_REASON};
 use super::pool::{StepCtx, WorkerPool};
 
 /// Slot tag for output scatter-reduce messages (inputs use their index).
-pub(crate) const OUT_SLOT: u8 = u8::MAX;
+/// The canonical constant lives in [`crate::obs`] so spans and error
+/// contexts share the convention.
+pub(crate) const OUT_SLOT: u8 = crate::obs::OUT_SLOT;
 /// Slot tag a failing worker broadcasts so peers error instead of block.
 pub(crate) const POISON_SLOT: u8 = u8::MAX - 1;
 /// Reason string of a cascade abort (a worker that stopped because a
@@ -140,13 +143,29 @@ pub struct ExecOptions {
     /// [`WorkerPool`]) see one arming state: a transient fault that fired
     /// once stays fired.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Span tracing (`false` by default): when on, every worker records
+    /// per-instruction wall-clock spans into a private buffer, drained
+    /// into `ExecReport::trace` at the step barrier. Off, every trace
+    /// site reduces to one branch on a `None` — the same discipline as
+    /// the fault hooks, pinned by the `obs_micro` overhead gate.
+    pub trace: bool,
+    /// Metrics registry handle; when set, the pool counts
+    /// `exec.steps` / `exec.failures` / `exec.instr_bytes` and observes
+    /// `exec.step_seconds`, and [`super::execute_with_recovery`] counts
+    /// `recover.retries` / `recover.replans` through the same handle.
+    pub metrics: Option<Metrics>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
         // Generous enough that no healthy exchange on a loaded CI runner
         // ever trips it; chaos suites shrink it to keep trials fast.
-        ExecOptions { deadline: Duration::from_secs(60), faults: None }
+        ExecOptions {
+            deadline: Duration::from_secs(60),
+            faults: None,
+            trace: false,
+            metrics: None,
+        }
     }
 }
 
@@ -163,6 +182,21 @@ impl ExecOptions {
     #[must_use]
     pub fn fault_plan(mut self, faults: FaultPlan) -> Self {
         self.faults = Some(Arc::new(faults));
+        self
+    }
+
+    /// Toggle span tracing (builder style).
+    #[must_use]
+    pub fn trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Attach a metrics registry handle (builder style). Clones of the
+    /// options share the registry, so counters survive retries.
+    #[must_use]
+    pub fn metrics(mut self, metrics: Metrics) -> Self {
+        self.metrics = Some(metrics);
         self
     }
 }
@@ -211,6 +245,9 @@ pub enum ExecError {
         peer: usize,
         /// How long the watchdog waited, in milliseconds.
         waited_ms: u64,
+        /// When tracing is on: the failing worker's last completed span,
+        /// so the root cause carries timing evidence. `None` untraced.
+        context: Option<SpanContext>,
     },
     /// A received payload failed its FNV-1a integrity check — bits
     /// changed between the sender's digest and the receiver's.
@@ -221,6 +258,9 @@ pub enum ExecError {
         op: OpId,
         /// Device the message came from.
         from: usize,
+        /// When tracing is on: the receiver's last completed span before
+        /// the corrupt payload arrived. `None` untraced.
+        context: Option<SpanContext>,
     },
     /// A recovery checkpoint failed its checksum at restore time
     /// ([`super::Checkpoint::verify`]).
@@ -252,7 +292,7 @@ impl fmt::Display for ExecError {
             ExecError::Worker { device, reason } => {
                 write!(f, "worker {device} failed: {reason}")
             }
-            ExecError::Timeout { device, op, slot, peer, waited_ms } => {
+            ExecError::Timeout { device, op, slot, peer, waited_ms, context } => {
                 let phase = if *slot == OUT_SLOT {
                     "output scatter".to_string()
                 } else {
@@ -262,10 +302,21 @@ impl fmt::Display for ExecError {
                     f,
                     "device {device} timed out after {waited_ms} ms waiting on device {peer} \
                      for op {op} ({phase})"
-                )
+                )?;
+                if let Some(ctx) = context {
+                    write!(f, "; {ctx}")?;
+                }
+                Ok(())
             }
-            ExecError::Corrupt { device, op, from } => {
-                write!(f, "device {device} received a corrupt payload from device {from} for op {op}")
+            ExecError::Corrupt { device, op, from, context } => {
+                write!(
+                    f,
+                    "device {device} received a corrupt payload from device {from} for op {op}"
+                )?;
+                if let Some(ctx) = context {
+                    write!(f, "; {ctx}")?;
+                }
+                Ok(())
             }
             ExecError::CheckpointCorrupt { step } => {
                 write!(f, "checkpoint of step {step} failed its checksum at restore")
@@ -307,6 +358,11 @@ pub struct ExecReport {
     /// Payload bytes attributed to each op's exchanges (indexed by
     /// `OpId`); sums to `payload_bytes`.
     pub op_payload_bytes: Vec<u64>,
+    /// Measured spans from every worker, merged and time-ordered —
+    /// `Some` iff the step ran with [`ExecOptions::trace`] on. Feed it to
+    /// [`fn@crate::obs::calibrate`] or
+    /// [`crate::obs::measured_trace_json`].
+    pub trace: Option<StepTrace>,
 }
 
 /// What one worker thread hands back.
@@ -315,6 +371,7 @@ pub(crate) struct DeviceOutcome {
     instr_bytes: u64,
     payload_bytes: u64,
     op_payload: Vec<u64>,
+    spans: Vec<Span>,
 }
 
 /// The per-step execution state of one device. A persistent pool thread
@@ -343,10 +400,15 @@ pub(crate) struct Worker<'a> {
     deadline: Duration,
     /// Armed fault-injection sites; `None` on the production path.
     faults: Option<&'a FaultPlan>,
+    /// Span buffer; `Some` iff [`ExecOptions::trace`] — every trace site
+    /// is one branch on this option, so the untraced path stays free.
+    trace: Option<TraceBuf>,
 }
 
 impl<'a> Worker<'a> {
     /// Wire up device `d`'s execution state for one step of `ctx`.
+    /// `epoch` is the step's shared trace origin (captured once by the
+    /// pool before dispatch so all workers measure on one clock).
     pub(crate) fn for_step(
         d: usize,
         ctx: &'a StepCtx,
@@ -354,6 +416,7 @@ impl<'a> Worker<'a> {
         rx: &'a Receiver<Msg>,
         seq: u64,
         home: Vec<Option<ShardBuf>>,
+        epoch: Instant,
     ) -> Self {
         Worker {
             d,
@@ -373,6 +436,7 @@ impl<'a> Worker<'a> {
             op_payload: vec![0; ctx.g.ops.len()],
             deadline: ctx.opts.deadline,
             faults: ctx.opts.faults.as_deref(),
+            trace: ctx.opts.trace.then(|| TraceBuf::new(epoch)),
         }
     }
 
@@ -386,7 +450,13 @@ impl<'a> Worker<'a> {
                 // Collective starts: the Theorem-1 byte meter. The data
                 // the collective realizes moves in the op-granular
                 // exchanges of `compute` (module docs).
-                other => self.instr_bytes += other.bytes(),
+                other => {
+                    let bytes = other.bytes();
+                    self.instr_bytes += bytes;
+                    if self.trace.is_some() {
+                        self.meter_span(instr, bytes);
+                    }
+                }
             }
         }
         Ok(DeviceOutcome {
@@ -394,7 +464,43 @@ impl<'a> Worker<'a> {
             instr_bytes: self.instr_bytes,
             payload_bytes: self.payload_bytes,
             op_payload: self.op_payload,
+            spans: self.trace.map_or_else(Vec::new, TraceBuf::into_spans),
         })
+    }
+
+    /// Record the zero-duration byte marker for one metered collective
+    /// instruction: kind/op/tensor from the transfer group's metadata,
+    /// bytes from the instruction — so the trace's collective payloads
+    /// sum to the Theorem-1 meter bit for bit. Only called when tracing.
+    fn meter_span(&mut self, instr: &Instr, bytes: u64) {
+        let Some(gid) = instr.started_gid() else { return };
+        let m = &self.program.transfers[gid];
+        let kind = match m.kind {
+            CollectiveKind::AllGather => SpanKind::AllGather,
+            CollectiveKind::ReduceScatter => SpanKind::ReduceScatter,
+            CollectiveKind::AllToAll => SpanKind::AllToAll,
+            CollectiveKind::SendRecv => SpanKind::SendRecv,
+        };
+        // Input gathers meter at the consuming slot; output conversions
+        // at the scatter side — the same (op, slot) key the wall-clock
+        // spans use.
+        let slot = self.g.ops[m.op]
+            .inputs
+            .iter()
+            .position(|&t| t == m.tensor)
+            .map_or(OUT_SLOT, |s| s as u8);
+        let tb = self.trace.as_mut().expect("meter_span is gated on tracing");
+        let now = tb.now();
+        tb.push(Span {
+            device: self.d,
+            op: m.op,
+            kind,
+            slot,
+            gid: Some(gid),
+            start_s: now,
+            end_s: now,
+            bytes,
+        });
     }
 
     /// Block until the `(op, slot)` message from `from` is available —
@@ -408,20 +514,42 @@ impl<'a> Worker<'a> {
         from: usize,
     ) -> Result<Pieces, ExecError> {
         let expiry = Instant::now() + self.deadline;
-        let timeout = |d: usize, deadline: Duration| ExecError::Timeout {
-            device: d,
-            op,
-            slot,
-            peer: from,
-            waited_ms: deadline.as_millis() as u64,
+        // Trace entry stamp (one branch untraced); the wait span closes
+        // when the expected message is consumed below.
+        let t0 = self.trace.as_ref().map(TraceBuf::now);
+        let timeout = |d: usize, deadline: Duration, context: Option<SpanContext>| {
+            ExecError::Timeout {
+                device: d,
+                op,
+                slot,
+                peer: from,
+                waited_ms: deadline.as_millis() as u64,
+                context,
+            }
         };
         loop {
             if let Some(pieces) = self.inbox.remove(&(op, slot, from)) {
+                if let Some(t0) = t0 {
+                    let bytes: u64 = pieces.iter().map(|(r, _)| r.elements() * 4).sum();
+                    let tb = self.trace.as_mut().expect("t0 implies tracing");
+                    let end = tb.now();
+                    tb.push(Span {
+                        device: self.d,
+                        op,
+                        kind: SpanKind::Wait,
+                        slot,
+                        gid: None,
+                        start_s: t0,
+                        end_s: end,
+                        bytes,
+                    });
+                }
                 return Ok(pieces);
             }
             let remaining = expiry.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
-                return Err(timeout(self.d, self.deadline));
+                let ctx = self.trace.as_ref().and_then(TraceBuf::last_context);
+                return Err(timeout(self.d, self.deadline, ctx));
             }
             match self.rx.recv_timeout(remaining) {
                 Ok(m) if m.seq != self.seq => {
@@ -441,12 +569,18 @@ impl<'a> Worker<'a> {
                     // mismatch is structured corruption, not a mystery
                     // divergence three ops later.
                     if checksum_pieces(&m.pieces) != m.sum {
-                        return Err(ExecError::Corrupt { device: self.d, op: m.op, from: m.from });
+                        return Err(ExecError::Corrupt {
+                            device: self.d,
+                            op: m.op,
+                            from: m.from,
+                            context: self.trace.as_ref().and_then(TraceBuf::last_context),
+                        });
                     }
                     self.inbox.insert((m.op, m.slot, m.from), m.pieces);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    return Err(timeout(self.d, self.deadline));
+                    let ctx = self.trace.as_ref().and_then(TraceBuf::last_context);
+                    return Err(timeout(self.d, self.deadline, ctx));
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(ExecError::Worker {
@@ -464,6 +598,7 @@ impl<'a> Worker<'a> {
         let bytes: u64 = pieces.iter().map(|(r, _)| r.elements() * 4).sum();
         self.payload_bytes += bytes;
         self.op_payload[op] += bytes;
+        let t0 = self.trace.as_ref().map(TraceBuf::now);
         // Digest before injection: a corrupted payload carries the clean
         // sum, exactly like wire corruption under a real transport.
         let sum = checksum_pieces(&pieces);
@@ -484,6 +619,20 @@ impl<'a> Worker<'a> {
         // A send only fails if the receiver died; the poison/abort path
         // reports that failure, so the result here is ignorable.
         let _ = self.senders[to].send(Msg { from: self.d, seq: self.seq, op, slot, pieces, sum });
+        if let Some(t0) = t0 {
+            let tb = self.trace.as_mut().expect("t0 implies tracing");
+            let end = tb.now();
+            tb.push(Span {
+                device: self.d,
+                op,
+                kind: SpanKind::Send,
+                slot,
+                gid: None,
+                start_s: t0,
+                end_s: end,
+                bytes,
+            });
+        }
     }
 
     /// §5.2 phase 1: assemble one input in the op's required layout.
@@ -669,6 +818,7 @@ impl<'a> Worker<'a> {
             .iter()
             .map(|b| View { data: &b.data, shape: &b.region.shape, offset: &b.region.offset })
             .collect();
+        let t0 = self.trace.as_ref().map(TraceBuf::now);
         let data = catch_unwind(AssertUnwindSafe(|| {
             apply_op(g, &g.ops[op], &views, &out_region.shape)
         }))
@@ -676,6 +826,20 @@ impl<'a> Worker<'a> {
             device: self.d,
             reason: format!("kernel for op `{}` panicked", g.ops[op].name),
         })?;
+        if let Some(t0) = t0 {
+            let tb = self.trace.as_mut().expect("t0 implies tracing");
+            let end = tb.now();
+            tb.push(Span {
+                device: self.d,
+                op,
+                kind: SpanKind::Compute,
+                slot: 0,
+                gid: None,
+                start_s: t0,
+                end_s: end,
+                bytes: 0,
+            });
+        }
         self.scatter_output(op, ShardBuf { region: out_region, data })
     }
 }
@@ -779,8 +943,13 @@ pub(crate) fn is_silent_failure(out: &Result<DeviceOutcome, ExecError>) -> bool 
 /// Reassemble every tensor from the devices' home shards, checking that
 /// replicated shards agree bitwise, and sum the byte meters — the tail
 /// half of a step, shared by the transient [`execute_with`] path and the
-/// persistent [`WorkerPool`].
-pub(crate) fn reassemble(g: &Graph, outcomes: &[DeviceOutcome]) -> Result<ExecReport, ExecError> {
+/// persistent [`WorkerPool`]. `traced` mirrors [`ExecOptions::trace`]:
+/// when on, the per-worker span buffers are merged into the report.
+pub(crate) fn reassemble(
+    g: &Graph,
+    outcomes: &[DeviceOutcome],
+    traced: bool,
+) -> Result<ExecReport, ExecError> {
     let mut tensors = Vec::with_capacity(g.tensors.len());
     for t in &g.tensors {
         let n: usize = t.shape.iter().product();
@@ -820,6 +989,8 @@ pub(crate) fn reassemble(g: &Graph, outcomes: &[DeviceOutcome]) -> Result<ExecRe
         op_payload_bytes: (0..g.ops.len())
             .map(|i| outcomes.iter().map(|o| o.op_payload[i]).sum())
             .collect(),
+        trace: traced
+            .then(|| StepTrace::merge(outcomes.iter().map(|o| o.spans.clone()).collect())),
     })
 }
 
@@ -857,7 +1028,7 @@ mod tests {
     }
 
     fn timeout(device: usize, op: OpId, slot: u8) -> ExecError {
-        ExecError::Timeout { device, op, slot, peer: 0, waited_ms: 100 }
+        ExecError::Timeout { device, op, slot, peer: 0, waited_ms: 100, context: None }
     }
 
     /// The PR-5 contract, now explicit: a real failure beats the poison
@@ -872,7 +1043,7 @@ mod tests {
     /// Full rank ordering: real failure > timeout > poison cascade.
     #[test]
     fn root_cause_ranks_real_over_timeout_over_poison() {
-        let real = ExecError::Corrupt { device: 1, op: 3, from: 0 };
+        let real = ExecError::Corrupt { device: 1, op: 3, from: 0, context: None };
         let picked =
             root_cause(vec![poison(0), timeout(2, 1, 0), real.clone(), timeout(3, 2, OUT_SLOT)]);
         assert_eq!(picked, Some(real));
@@ -935,9 +1106,31 @@ mod tests {
                 "Timeout",
             ),
             (
-                ExecError::Corrupt { device: 2, op: 5, from: 6 },
+                ExecError::Corrupt { device: 2, op: 5, from: 6, context: None },
                 "device 2 received a corrupt payload from device 6 for op 5",
                 "Corrupt",
+            ),
+            (
+                ExecError::Corrupt {
+                    device: 2,
+                    op: 5,
+                    from: 6,
+                    context: Some(SpanContext { op: 4, slot: 1, elapsed_ms: 12 }),
+                },
+                "last span op 4 slot 1 at +12 ms",
+                "Corrupt",
+            ),
+            (
+                ExecError::Timeout {
+                    device: 1,
+                    op: 4,
+                    slot: 2,
+                    peer: 0,
+                    waited_ms: 100,
+                    context: Some(SpanContext { op: 3, slot: OUT_SLOT, elapsed_ms: 95 }),
+                },
+                "last span op 3 (output) at +95 ms",
+                "Timeout",
             ),
             (
                 ExecError::CheckpointCorrupt { step: 7 },

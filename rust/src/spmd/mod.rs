@@ -27,6 +27,14 @@
 //! injection, watchdog deadlines on every wait site, checksummed
 //! checkpoints, and elastic re-planning on permanent device loss — the
 //! narrative is docs/execution.md §Fault tolerance.
+//!
+//! The observability layer ([`crate::obs`]) threads through the same
+//! hooks: [`ExecOptions::trace`] records per-instruction wall-clock
+//! spans into `ExecReport::trace`, and [`ExecOptions::metrics`] counts
+//! steps, failures, retries, and re-plans through a shared
+//! [`crate::obs::Metrics`] registry — both `Option`-gated so the
+//! default path pays one branch per site
+//! ([`crate::book::observability`]).
 
 mod buf;
 mod exec;

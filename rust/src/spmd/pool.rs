@@ -34,6 +34,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::exec::{resident_region, try_build_shard_tasks, ShardTask};
 use crate::graph::{validate_init, Graph};
@@ -124,12 +125,14 @@ impl StepCtx {
     }
 }
 
-/// One dispatched unit of work: the step to run and this device's
-/// pre-sliced home shards.
+/// One dispatched unit of work: the step to run, this device's pre-sliced
+/// home shards, and the step's shared trace epoch (all workers measure
+/// spans from the same origin, so a merged trace is on one clock).
 struct StepJob {
     seq: u64,
     ctx: Arc<StepCtx>,
     home: Vec<Option<ShardBuf>>,
+    epoch: Instant,
 }
 
 /// A pool of persistent SPMD worker threads — one per device — that stay
@@ -171,7 +174,8 @@ impl WorkerPool {
                 // repeat until the pool drops the job queue.
                 while let Ok(job) = job_rx.recv() {
                     let ctx = job.ctx;
-                    let worker = Worker::for_step(d, &ctx, &senders, &rx, job.seq, job.home);
+                    let worker =
+                        Worker::for_step(d, &ctx, &senders, &rx, job.seq, job.home, job.epoch);
                     let out = match catch_unwind(AssertUnwindSafe(|| worker.run())) {
                         Ok(r) => r,
                         Err(_) => Err(ExecError::Worker {
@@ -252,8 +256,11 @@ impl WorkerPool {
         }
         self.seq += 1;
         let seq = self.seq;
+        // The step's trace epoch: captured once, after slicing, so worker
+        // spans start near t = 0 and share one monotonic clock.
+        let epoch = Instant::now();
         for (tx, home) in self.job_txs.iter().zip(homes) {
-            tx.send(StepJob { seq, ctx: Arc::clone(ctx), home }).map_err(|_| {
+            tx.send(StepJob { seq, ctx: Arc::clone(ctx), home, epoch }).map_err(|_| {
                 ExecError::Worker { device: 0, reason: "worker pool shut down".into() }
             })?;
         }
@@ -273,12 +280,29 @@ impl WorkerPool {
             }
         }
         if let Some(e) = root_cause(errors) {
+            if let Some(m) = &ctx.opts.metrics {
+                m.inc("exec.failures", 1);
+            }
             return Err(e);
         }
         // No error: the barrier collected every device's outcome.
         let outcomes: Vec<DeviceOutcome> =
             outcomes.into_iter().map(|o| o.expect("every worker reported")).collect();
-        reassemble(g, &outcomes)
+        let report = match reassemble(g, &outcomes, ctx.opts.trace) {
+            Ok(r) => r,
+            Err(e) => {
+                if let Some(m) = &ctx.opts.metrics {
+                    m.inc("exec.failures", 1);
+                }
+                return Err(e);
+            }
+        };
+        if let Some(m) = &ctx.opts.metrics {
+            m.inc("exec.steps", 1);
+            m.inc("exec.instr_bytes", report.instr_bytes);
+            m.observe("exec.step_seconds", epoch.elapsed().as_secs_f64());
+        }
+        Ok(report)
     }
 }
 

@@ -263,6 +263,9 @@ pub fn execute_with_recovery(
     // disarmed after firing and persistent ones keep firing.
     for attempt in 0..=opts.max_retries {
         if attempt > 0 {
+            if let Some(m) = &opts.exec.metrics {
+                m.inc("recover.retries", 1);
+            }
             ckpt.verify()?;
             std::thread::sleep(opts.backoff * (1u32 << (attempt - 1).min(16)));
         }
@@ -291,10 +294,16 @@ pub fn execute_with_recovery(
     let new_plan = replan_after_loss(g, plan)?;
     let new_program = try_lower(g, &new_plan, &opts.sim)?;
     new_program.validate_for(&new_plan)?;
+    if let Some(m) = &opts.exec.metrics {
+        m.inc("recover.replans", 1);
+    }
     // The dead device is out of the recovery world: its injected faults
     // died with it, so the survivors run clean (a fresh fault plan for
-    // the new device numbering would be a different experiment).
-    let clean = ExecOptions::default().deadline(opts.exec.deadline);
+    // the new device numbering would be a different experiment) — but the
+    // metrics handle and trace flag carry over, so recovery steps stay
+    // observable.
+    let mut clean = ExecOptions::default().deadline(opts.exec.deadline).trace(opts.exec.trace);
+    clean.metrics = opts.exec.metrics.clone();
     let report = execute_with(g, &new_plan, &new_program, &ckpt.values, &clean)?;
     let devices = new_plan.devices();
     Ok(RecoveryReport {
@@ -355,20 +364,28 @@ mod tests {
             op: 0,
             slot: 0,
             peer: 1,
-            waited_ms: 1
+            waited_ms: 1,
+            context: None
         }));
-        assert!(retryable(&ExecError::Corrupt { device: 0, op: 0, from: 1 }));
+        assert!(retryable(&ExecError::Corrupt { device: 0, op: 0, from: 1, context: None }));
     }
 
     #[test]
     fn implicated_device_names_the_stalled_party() {
         assert_eq!(
-            implicated_device(&ExecError::Timeout { device: 2, op: 0, slot: 0, peer: 3, waited_ms: 1 }),
+            implicated_device(&ExecError::Timeout {
+                device: 2,
+                op: 0,
+                slot: 0,
+                peer: 3,
+                waited_ms: 1,
+                context: None
+            }),
             Some(3),
             "a timeout implicates the peer that went quiet, not the waiter"
         );
         assert_eq!(
-            implicated_device(&ExecError::Corrupt { device: 2, op: 0, from: 1 }),
+            implicated_device(&ExecError::Corrupt { device: 2, op: 0, from: 1, context: None }),
             Some(1)
         );
         assert_eq!(implicated_device(&ExecError::MeterMismatch { metered: 1, plan: 2 }), None);

@@ -121,9 +121,10 @@ impl BenchLog {
     }
 }
 
-/// Minimal JSON string escaping (labels and column keys are ASCII-ish, but
-/// stay correct regardless).
-fn json_str(s: &str) -> String {
+/// Minimal JSON string escaping, quotes included (labels and column keys
+/// are ASCII-ish, but stay correct regardless). Shared with the
+/// observability report writers.
+pub fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

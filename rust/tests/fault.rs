@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use soybean::graph::{eval_serial, seed_values};
 use soybean::lower::try_lower;
 use soybean::models::{mlp, transformer, MlpConfig, TransformerConfig};
+use soybean::obs::Metrics;
 use soybean::planner::try_k_cut;
 use soybean::sim::SimConfig;
 use soybean::spmd::fault::install_quiet_panic_hook;
@@ -213,7 +214,7 @@ fn corrupt_payload_is_detected_at_the_receiver() {
                 let (worst, _) = worst_divergence(&g, &r, &serial);
                 assert!(worst <= TOL);
             }
-            Err(ExecError::Corrupt { from, op, device }) => {
+            Err(ExecError::Corrupt { from, op, device, .. }) => {
                 assert_eq!(from, 0);
                 assert_eq!(op, m.op);
                 assert_ne!(device, 0, "a device never receives its own send");
@@ -248,6 +249,39 @@ fn silent_kill_terminates_via_watchdogs_and_names_the_dead_worker() {
         }
         other => panic!("expected the dead worker as root cause, got {other}"),
     }
+}
+
+/// Layer 2e (ISSUE-8): an injected kill must leave a full audit trail in
+/// the shared metrics registry — the failed attempts, the retry, the
+/// elastic re-plan, and the final clean step are all counted through the
+/// one handle the recovery loop carries across plans.
+#[test]
+fn injected_kill_populates_recovery_counters() {
+    let (g, plan, program) = chaos_workload();
+    let init = seed_values(&g, 11);
+    let metrics = Metrics::new();
+    let opts = RecoverOptions::default()
+        .exec(
+            ExecOptions::default()
+                .deadline(CHAOS_DEADLINE)
+                .fault_plan(FaultPlan::kill(1, 0))
+                .metrics(metrics.clone()),
+        )
+        .max_retries(1)
+        .backoff(Duration::from_millis(1));
+    let r = execute_with_recovery(&g, &plan, &program, &init, &opts).unwrap();
+    assert!(
+        matches!(r.outcome, RecoveryOutcome::Replanned { lost_device: 1, .. }),
+        "expected a re-plan, got {:?}",
+        r.outcome
+    );
+    assert_eq!(metrics.counter("recover.retries"), 1, "one retry before the loss is permanent");
+    assert_eq!(metrics.counter("recover.replans"), 1, "one elastic re-plan");
+    assert_eq!(metrics.counter("exec.failures"), 2, "attempt 0 + the retry both failed");
+    assert_eq!(metrics.counter("exec.steps"), 1, "only the re-planned run completed");
+    let snap = metrics.snapshot();
+    assert_eq!(snap.histograms["exec.step_seconds"].count, 1, "the clean step was timed");
+    assert!(snap.counters["exec.instr_bytes"] > 0, "the clean step metered its collectives");
 }
 
 /// Layer 3: the ISSUE-6 acceptance gate — permanent device loss recovers
