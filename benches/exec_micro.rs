@@ -1,8 +1,8 @@
 //! Threaded SPMD executor micro-benchmark (ISSUE-5 acceptance gates):
 //!
-//! - one **execute step** of the 8-device (`k = 3`) 4-layer transformer
-//!   encoder — plan → lower → run on real `f32` shard buffers across 8
-//!   worker threads — completes in **< 10 s** wall-clock;
+//! - one **steady-state execute step** of the 8-device (`k = 3`) 4-layer
+//!   transformer encoder — plan → lower → run on real `f32` shard buffers
+//!   across 8 worker threads — completes in **< 2 s** wall-clock;
 //! - the run is differentially checked on the spot: executor output ==
 //!   serial interpreter within 1e-5 relative tolerance, and the
 //!   executor's collective byte meter == the plan's Theorem-1 total bit
@@ -18,11 +18,19 @@
 //! that the injection hooks and watchdog plumbing cost the fault-free
 //! path nothing beyond the committed noise threshold.
 //!
+//! The fast kernels' per-shape schedule search is a one-time cost: the
+//! first step at a new shape set searches and memoizes, every later step
+//! hits the [`ScheduleCache`]. The timed windows therefore warm one step
+//! before measuring (steady state is what the gate bounds), and the cold,
+//! search-inclusive first step is reported separately (`cold_ms`) after an
+//! explicit cache clear — previously the warmup-less serial window silently
+//! folded the search into its mean.
+//!
 //! Run with `cargo bench --bench exec_micro`.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use soybean::graph::{eval_serial, seed_values};
+use soybean::graph::{eval_serial, seed_values, ScheduleCache};
 use soybean::lower::try_lower;
 use soybean::models::{transformer, TransformerConfig};
 use soybean::planner::try_k_cut;
@@ -52,16 +60,26 @@ fn main() {
     assert_eq!(program.total_bytes(), plan.total_cost(), "lowered bytes != plan cost");
     let init = seed_values(&g, 42);
 
-    // Correctness before timing: the differential gate on this config.
-    let m_serial = time_it(0, Duration::from_millis(1), || {
-        std::hint::black_box(eval_serial(&g, &init).expect("serial evaluation"));
-    });
-    let serial = eval_serial(&g, &init).unwrap();
+    // The cold, search-inclusive first step: clear the global schedule
+    // cache so this one timing pays every per-shape search, then never
+    // clear again — all later windows measure the steady state.
+    ScheduleCache::global().clear();
+    let t0 = Instant::now();
     let report = execute(&g, &plan, &program, &init).expect("threaded execution");
+    let cold = t0.elapsed();
+    let schedules = ScheduleCache::global().len();
+
+    // Correctness before timing: the differential gate on this config.
+    let serial = eval_serial(&g, &init).unwrap();
     assert_eq!(report.instr_bytes, plan.total_cost(), "executor meter != Theorem-1");
     let (worst, tensor) = worst_divergence(&g, &report, &serial);
     assert!(worst <= 1e-5, "differential gate: diverged on `{tensor}` by {worst:e}");
 
+    // Steady state: one warmup iteration before each measured window (the
+    // cache is already warm, but the warmup also settles allocator state).
+    let m_serial = time_it(1, Duration::from_millis(1), || {
+        std::hint::black_box(eval_serial(&g, &init).expect("serial evaluation"));
+    });
     let m_exec = time_it(1, Duration::from_millis(200), || {
         std::hint::black_box(execute(&g, &plan, &program, &init).expect("execution"));
     });
@@ -69,6 +87,8 @@ fn main() {
         "exec/encoder-4L",
         &[
             ("ms", format!("{:.2}", m_exec.mean_ms())),
+            ("cold_ms", format!("{:.2}", cold.as_secs_f64() * 1e3)),
+            ("schedules", schedules.to_string()),
             ("serial_ms", format!("{:.2}", m_serial.mean_ms())),
             ("devices", report.devices.to_string()),
             ("collective_MB", format!("{:.3}", report.instr_bytes as f64 / 1e6)),
@@ -77,11 +97,12 @@ fn main() {
         ],
     );
 
-    // The acceptance gate: one executed step of the 8-device 4-layer
-    // encoder stays under 10 s even on noisy shared runners.
+    // The acceptance gate (tightened from 10 s when the blocked kernels
+    // landed): one steady-state executed step of the 8-device 4-layer
+    // encoder stays under 2 s even on noisy shared runners.
     assert!(
-        m_exec.mean.as_secs_f64() < 10.0,
-        "8-device 4-layer encoder execute step took {:.0} ms (target < 10 s)",
+        m_exec.mean.as_secs_f64() < 2.0,
+        "8-device 4-layer encoder execute step took {:.0} ms (target < 2 s)",
         m_exec.mean_ms()
     );
 

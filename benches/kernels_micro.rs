@@ -1,0 +1,242 @@
+//! Per-kernel micro-benchmark: blocked fast kernels vs the naive oracle
+//! (the PR-9 acceptance gate).
+//!
+//! The workload shapes are not hand-picked: the bench scans the same
+//! 4-layer encoder training graph `exec_micro` executes and ranks its
+//! `MatMul` / `BatchedMatMul` shapes by total FLOP volume, so the gate is
+//! tied to the shapes that actually dominate the executor's step time.
+//! For each ranked shape the fast path (warm [`ScheduleCache`]) and the
+//! naive oracle are timed back-to-back, reporting GFLOP/s and the
+//! speedup ratio; outputs are cross-checked within [`KERNEL_ORACLE_TOL`]
+//! before any timing is trusted.
+//!
+//! **Gate**: the top two matmul shapes must show ≥ 10× speedup over the
+//! naive oracle (override with `KERNELS_MICRO_MIN_SPEEDUP` for unusual
+//! runners). The batched-matmul and conv rows are reported un-gated —
+//! their trend is tracked by the CI diff against
+//! `ci/baselines/BENCH_kernels.json`.
+//!
+//! Row labels are rank-based (`kernel/mm-rank1`…), not shape-based, so the
+//! label-seeded baseline stays valid if the encoder config shifts.
+//!
+//! Run with `cargo bench --bench kernels_micro`.
+
+use std::time::Duration;
+
+use soybean::graph::{
+    apply_op_with, max_rel_err, Graph, KernelBackend, Op, OpKind, ScheduleCache, View, KERNEL_ORACLE_TOL,
+};
+use soybean::models::{transformer, TransformerConfig};
+use soybean::util::bench::{time_it, BenchLog};
+use soybean::util::rng::Rng;
+
+/// One aggregated GEMM shape from the scanned graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct GemmShape {
+    /// `0` for MatMul; the batch-group count for BatchedMatMul.
+    groups: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    /// How many ops in the graph run this exact shape per step.
+    count: usize,
+}
+
+impl GemmShape {
+    fn flops_per_op(&self) -> f64 {
+        2.0 * self.groups.max(1) as f64 * (self.m * self.k * self.n) as f64
+    }
+}
+
+/// Scan a training graph and rank its GEMM shapes by per-step FLOP volume.
+fn ranked_gemm_shapes(g: &Graph) -> (Vec<GemmShape>, Vec<GemmShape>) {
+    let mut shapes: Vec<GemmShape> = Vec::new();
+    for op in &g.ops {
+        let (groups, ta, tb) = match op.kind {
+            OpKind::MatMul { ta, tb } => (0, ta, tb),
+            OpKind::BatchedMatMul { ta, tb } => (g.tensors[op.inputs[0]].shape[0], ta, tb),
+            _ => continue,
+        };
+        let sa = &g.tensors[op.inputs[0]].shape;
+        let sb = &g.tensors[op.inputs[1]].shape;
+        let off = usize::from(groups > 0);
+        let (m, k) = if ta { (sa[off + 1], sa[off]) } else { (sa[off], sa[off + 1]) };
+        let n = if tb { sb[off] } else { sb[off + 1] };
+        let probe = GemmShape { groups, m, k, n, ta, tb, count: 1 };
+        match shapes.iter_mut().find(|s| {
+            (s.groups, s.m, s.k, s.n, s.ta, s.tb) == (probe.groups, probe.m, probe.k, probe.n, probe.ta, probe.tb)
+        }) {
+            Some(s) => s.count += 1,
+            None => shapes.push(probe),
+        }
+    }
+    let mut mm: Vec<GemmShape> = shapes.iter().copied().filter(|s| s.groups == 0).collect();
+    let mut bmm: Vec<GemmShape> = shapes.iter().copied().filter(|s| s.groups > 0).collect();
+    let volume = |s: &GemmShape| s.flops_per_op() * s.count as f64;
+    mm.sort_by(|a, b| volume(b).partial_cmp(&volume(a)).unwrap().then_with(|| (a.m, a.k, a.n).cmp(&(b.m, b.k, b.n))));
+    bmm.sort_by(|a, b| volume(b).partial_cmp(&volume(a)).unwrap().then_with(|| (a.m, a.k, a.n).cmp(&(b.m, b.k, b.n))));
+    (mm, bmm)
+}
+
+/// Time one shape on both backends (fast first warms the schedule cache
+/// before its measured window via `time_it`'s warmup iteration) and return
+/// `(fast_ms, naive_ms, gflops_fast)`.
+fn bench_shape(shape: &GemmShape, rng: &mut Rng) -> (f64, f64, f64) {
+    let (groups, m, k, n) = (shape.groups, shape.m, shape.k, shape.n);
+    let (ar, ac) = if shape.ta { (k, m) } else { (m, k) };
+    let (br, bc) = if shape.tb { (n, k) } else { (k, n) };
+    let ga = groups.max(1);
+    let a = rng.normal_vec(ga * ar * ac, 1.0);
+    let b = rng.normal_vec(ga * br * bc, 1.0);
+    let (kind, ashape, bshape, oshape) = if groups > 0 {
+        (
+            OpKind::BatchedMatMul { ta: shape.ta, tb: shape.tb },
+            vec![groups, ar, ac],
+            vec![groups, br, bc],
+            vec![groups, m, n],
+        )
+    } else {
+        (OpKind::MatMul { ta: shape.ta, tb: shape.tb }, vec![ar, ac], vec![br, bc], vec![m, n])
+    };
+    let g = Graph::default();
+    let op = Op { id: 0, kind, inputs: vec![0, 0], outputs: vec![0], name: "bench".into() };
+    let views = [View::full(&a, &ashape), View::full(&b, &bshape)];
+
+    // Correctness before timing.
+    let fast = apply_op_with(KernelBackend::Fast, &g, &op, &views, &oshape);
+    let naive = apply_op_with(KernelBackend::Naive, &g, &op, &views, &oshape);
+    let err = max_rel_err(&fast, &naive);
+    assert!(err <= KERNEL_ORACLE_TOL, "{shape:?}: fast diverged from oracle by {err:e}");
+
+    let m_fast = time_it(1, Duration::from_millis(100), || {
+        std::hint::black_box(apply_op_with(KernelBackend::Fast, &g, &op, &views, &oshape));
+    });
+    let m_naive = time_it(1, Duration::from_millis(100), || {
+        std::hint::black_box(apply_op_with(KernelBackend::Naive, &g, &op, &views, &oshape));
+    });
+    let gflops = shape.flops_per_op() / m_fast.mean.as_secs_f64() / 1e9;
+    (m_fast.mean_ms(), m_naive.mean_ms(), gflops)
+}
+
+fn main() {
+    println!("== blocked kernel micro-benchmarks (fast vs naive oracle) ==");
+    let mut log = BenchLog::new("kernels_micro");
+    let mut rng = Rng::new(0x4B4D_4943);
+
+    // The exec_micro bench workload: rank its GEMM shapes by volume.
+    let bench_cfg = TransformerConfig {
+        batch: 8,
+        seq: 32,
+        d_model: 64,
+        heads: 4,
+        d_ff: 128,
+        layers: 4,
+        classes: 64,
+    };
+    let g = transformer(&bench_cfg);
+    let (mm, bmm) = ranked_gemm_shapes(&g);
+    assert!(mm.len() >= 2 && !bmm.is_empty(), "encoder graph lost its GEMM shapes?");
+
+    let min_speedup: f64 = std::env::var("KERNELS_MICRO_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10.0);
+
+    let mut gated_speedups: Vec<(String, f64)> = Vec::new();
+    for (rank, shape) in mm.iter().take(4).enumerate() {
+        let (fast_ms, naive_ms, gflops) = bench_shape(shape, &mut rng);
+        let speedup = naive_ms / fast_ms;
+        let label = format!("kernel/mm-rank{}", rank + 1);
+        log.row(
+            &label,
+            &[
+                ("ms", format!("{fast_ms:.4}")),
+                ("naive_ms", format!("{naive_ms:.4}")),
+                ("speedup", format!("{speedup:.2}")),
+                ("gflops", format!("{gflops:.2}")),
+                ("m", shape.m.to_string()),
+                ("k", shape.k.to_string()),
+                ("n", shape.n.to_string()),
+                ("ops_per_step", shape.count.to_string()),
+            ],
+        );
+        if rank < 2 {
+            gated_speedups.push((label, speedup));
+        }
+    }
+
+    for (rank, shape) in bmm.iter().take(2).enumerate() {
+        let (fast_ms, naive_ms, gflops) = bench_shape(shape, &mut rng);
+        log.row(
+            &format!("kernel/bmm-rank{}", rank + 1),
+            &[
+                ("ms", format!("{fast_ms:.4}")),
+                ("naive_ms", format!("{naive_ms:.4}")),
+                ("speedup", format!("{:.2}", naive_ms / fast_ms)),
+                ("gflops", format!("{gflops:.2}")),
+                ("groups", shape.groups.to_string()),
+                ("m", shape.m.to_string()),
+                ("k", shape.k.to_string()),
+                ("n", shape.n.to_string()),
+            ],
+        );
+    }
+
+    // A representative conv lowering (un-gated; VGG-ish interior layer).
+    {
+        let (n, h, w, cin, kh, kw, cout) = (4usize, 16usize, 16usize, 16usize, 3usize, 3usize, 16usize);
+        let x = rng.normal_vec(n * h * w * cin, 1.0);
+        let wt = rng.normal_vec(kh * kw * cin * cout, 1.0);
+        let g0 = Graph::default();
+        let op = Op {
+            id: 0,
+            kind: OpKind::Conv2d { stride: 1, pad: 1 },
+            inputs: vec![0, 0],
+            outputs: vec![0],
+            name: "bench-conv".into(),
+        };
+        let oshape = [n, h, w, cout];
+        let views = [View::full(&x, &[n, h, w, cin]), View::full(&wt, &[kh, kw, cin, cout])];
+        let fast = apply_op_with(KernelBackend::Fast, &g0, &op, &views, &oshape);
+        let naive = apply_op_with(KernelBackend::Naive, &g0, &op, &views, &oshape);
+        let err = max_rel_err(&fast, &naive);
+        assert!(err <= KERNEL_ORACLE_TOL, "conv: fast diverged from oracle by {err:e}");
+        let m_fast = time_it(1, Duration::from_millis(100), || {
+            std::hint::black_box(apply_op_with(KernelBackend::Fast, &g0, &op, &views, &oshape));
+        });
+        let m_naive = time_it(1, Duration::from_millis(100), || {
+            std::hint::black_box(apply_op_with(KernelBackend::Naive, &g0, &op, &views, &oshape));
+        });
+        let flops = 2.0 * (n * h * w * cout * kh * kw * cin) as f64;
+        log.row(
+            "kernel/conv-fwd",
+            &[
+                ("ms", format!("{:.4}", m_fast.mean_ms())),
+                ("naive_ms", format!("{:.4}", m_naive.mean_ms())),
+                ("speedup", format!("{:.2}", m_naive.mean.as_secs_f64() / m_fast.mean.as_secs_f64())),
+                ("gflops", format!("{:.2}", flops / m_fast.mean.as_secs_f64() / 1e9)),
+            ],
+        );
+    }
+
+    // Schedule-search bookkeeping: how many shapes this run memoized.
+    let cache = ScheduleCache::global();
+    log.row(
+        "kernel/schedule-cache",
+        &[("schedules", cache.len().to_string()), ("searches", cache.searches().to_string())],
+    );
+
+    // The acceptance gate: the encoder's two dominant matmul shapes must
+    // ride the blocked kernels at ≥ 10× the naive oracle.
+    for (label, speedup) in &gated_speedups {
+        assert!(
+            speedup >= &min_speedup,
+            "{label}: fast kernel is only {speedup:.2}x over naive (gate: >= {min_speedup}x)"
+        );
+    }
+
+    log.write_json("BENCH_kernels.json").expect("writing BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
+}

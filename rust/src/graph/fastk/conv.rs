@@ -1,0 +1,216 @@
+//! Convolution lowered to im2col-GEMM (forward, backward-data,
+//! backward-filter), riding the blocked [`super::gemm`] drivers.
+//!
+//! Layouts are the graph's NHWC ⊛ HWIO: the filter's stored
+//! `[KH, KW, Cin, Cout]` buffer *is* row-major `[KH·KW·Cin, Cout]`, and an
+//! im2col row for output site `(n, oi, oj)` enumerates `(a, b, ci)` in
+//! exactly the order the naive kernel's window loops accumulate — so each
+//! output element's contraction keeps the oracle's sequential order (the
+//! tolerance argument in docs/kernels.md §Tolerance). Out-of-bounds window
+//! taps pack as explicit zeros, which contribute exact `+0` terms.
+//!
+//! Rows are processed in bounded blocks ([`row_block`]) so the packed
+//! im2col scratch stays cache-friendly and memory-bounded on large
+//! activations; blocks ascend in row order, preserving the global
+//! accumulation order for backward-filter's carried `f64` accumulator and
+//! backward-data's scatter-add.
+
+use super::gemm::{gemm_f64, gemm_into, MatRef};
+use super::schedule::ScheduleCache;
+use crate::graph::kernels::View;
+
+/// Cap on `rows × k2` elements materialized per im2col block (~8 MB of
+/// `f32`); at least one row always proceeds.
+fn row_block(k2: usize) -> usize {
+    (2 * 1024 * 1024 / k2.max(1)).max(1)
+}
+
+/// Geometry of one lowering: input plane, window, output plane.
+struct ConvGeom {
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    oh: usize,
+    ow: usize,
+    stride: usize,
+    pad: usize,
+}
+
+impl ConvGeom {
+    /// im2col row width: one entry per `(a, b, ci)` window tap.
+    fn k2(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Total output sites = im2col row count.
+    fn rows(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// Decompose a global row index into its `(n, oi, oj)` output site.
+    fn site(&self, row: usize) -> (usize, usize, usize) {
+        (row / (self.oh * self.ow), row % (self.oh * self.ow) / self.ow, row % self.ow)
+    }
+
+    /// The input tap for window offset `(a, b)` at output site `(oi, oj)`,
+    /// or `None` when it falls in the padding (same predicate as the naive
+    /// kernel's bounds skip).
+    fn tap(&self, oi: usize, oj: usize, a: usize, b: usize) -> Option<(usize, usize)> {
+        let ih = oi * self.stride + a;
+        let iw = oj * self.stride + b;
+        if ih < self.pad || ih - self.pad >= self.h || iw < self.pad || iw - self.pad >= self.w {
+            None
+        } else {
+            Some((ih - self.pad, iw - self.pad))
+        }
+    }
+}
+
+/// Materialize im2col rows `[start, start+rows)` of `x` into `buf`
+/// (`rows × k2`, zero-filled where the window leaves the input).
+fn im2col(x: &[f32], g: &ConvGeom, start: usize, rows: usize, buf: &mut Vec<f32>) {
+    let k2 = g.k2();
+    buf.clear();
+    buf.resize(rows * k2, 0.0);
+    for r in 0..rows {
+        let (ni, oi, oj) = g.site(start + r);
+        for a in 0..g.kh {
+            for b in 0..g.kw {
+                if let Some((ih, iw)) = g.tap(oi, oj, a, b) {
+                    let src = ((ni * g.h + ih) * g.w + iw) * g.cin;
+                    let dst = r * k2 + (a * g.kw + b) * g.cin;
+                    buf[dst..dst + g.cin].copy_from_slice(&x[src..src + g.cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Forward conv: `out[row, co] = im2col(x)[row, ·] · w[·, co]`, blocked
+/// over rows. The GEMM output layout is already NHWC.
+pub(crate) fn conv2d(x: &View<'_>, w: &View<'_>, out_shape: &[usize], stride: usize, pad: usize, cache: &ScheduleCache) -> Vec<f32> {
+    let g = ConvGeom {
+        n: x.shape[0],
+        h: x.shape[1],
+        w: x.shape[2],
+        cin: x.shape[3],
+        kh: w.shape[0],
+        kw: w.shape[1],
+        cout: w.shape[3],
+        oh: out_shape[1],
+        ow: out_shape[2],
+        stride,
+        pad,
+    };
+    let k2 = g.k2();
+    let wmat = MatRef { data: w.data, rows: k2, cols: g.cout, trans: false };
+    let mut out = Vec::with_capacity(g.rows() * g.cout);
+    let mut xcol = Vec::new();
+    let mut start = 0;
+    while start < g.rows() {
+        let rows = row_block(k2).min(g.rows() - start);
+        im2col(x.data, &g, start, rows, &mut xcol);
+        let a = MatRef { data: &xcol, rows, cols: k2, trans: false };
+        out.extend(gemm_f64(&a, &wmat, cache).into_iter().map(|v| v as f32));
+        start += rows;
+    }
+    out
+}
+
+/// Backward-data: `dcol = dz · wᵀ` (kept in `f64`), then col2im
+/// scatter-add into an `f64` image accumulator, rounded once. Both the
+/// GEMM contraction (over `co`) and the scatter order match the naive
+/// kernel's loops exactly.
+pub(crate) fn conv2d_bwd_data(
+    dz: &View<'_>,
+    w: &View<'_>,
+    out_shape: &[usize],
+    stride: usize,
+    pad: usize,
+    cache: &ScheduleCache,
+) -> Vec<f32> {
+    let g = ConvGeom {
+        n: dz.shape[0],
+        h: out_shape[1],
+        w: out_shape[2],
+        cin: w.shape[2],
+        kh: w.shape[0],
+        kw: w.shape[1],
+        cout: dz.shape[3],
+        oh: dz.shape[1],
+        ow: dz.shape[2],
+        stride,
+        pad,
+    };
+    let k2 = g.k2();
+    // wᵀ: logical [Cout, K2] over the stored [K2, Cout] buffer.
+    let wmat = MatRef { data: w.data, rows: k2, cols: g.cout, trans: true };
+    let mut dx64 = vec![0.0f64; g.n * g.h * g.w * g.cin];
+    let mut start = 0;
+    while start < g.rows() {
+        let rows = row_block(k2).min(g.rows() - start);
+        let dzb = MatRef { data: &dz.data[start * g.cout..(start + rows) * g.cout], rows, cols: g.cout, trans: false };
+        let dcol = gemm_f64(&dzb, &wmat, cache);
+        for r in 0..rows {
+            let (ni, oi, oj) = g.site(start + r);
+            for a in 0..g.kh {
+                for b in 0..g.kw {
+                    if let Some((ih, iw)) = g.tap(oi, oj, a, b) {
+                        let src = r * k2 + (a * g.kw + b) * g.cin;
+                        let dst = ((ni * g.h + ih) * g.w + iw) * g.cin;
+                        for ci in 0..g.cin {
+                            dx64[dst + ci] += dcol[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+        start += rows;
+    }
+    dx64.into_iter().map(|v| v as f32).collect()
+}
+
+/// Backward-filter: `dw = im2col(x)ᵀ · dz`, contracting over output sites
+/// in ascending row order. Row blocks carry the `f64` accumulator through
+/// [`gemm_into`], so the whole contraction rounds to `f32` exactly once.
+pub(crate) fn conv2d_bwd_filter(
+    x: &View<'_>,
+    dz: &View<'_>,
+    out_shape: &[usize],
+    stride: usize,
+    pad: usize,
+    cache: &ScheduleCache,
+) -> Vec<f32> {
+    let g = ConvGeom {
+        n: x.shape[0],
+        h: x.shape[1],
+        w: x.shape[2],
+        cin: x.shape[3],
+        kh: out_shape[0],
+        kw: out_shape[1],
+        cout: dz.shape[3],
+        oh: dz.shape[1],
+        ow: dz.shape[2],
+        stride,
+        pad,
+    };
+    let k2 = g.k2();
+    let mut dw64 = vec![0.0f64; k2 * g.cout];
+    let mut xcol = Vec::new();
+    let mut start = 0;
+    while start < g.rows() {
+        let rows = row_block(k2).min(g.rows() - start);
+        im2col(x.data, &g, start, rows, &mut xcol);
+        // xcolᵀ: logical [K2, rows] over the stored [rows, K2] block.
+        let a = MatRef { data: &xcol, rows, cols: k2, trans: true };
+        let dzb = MatRef { data: &dz.data[start * g.cout..(start + rows) * g.cout], rows, cols: g.cout, trans: false };
+        let sched = cache.schedule_for(k2, rows, g.cout);
+        gemm_into(&mut dw64, &a, &dzb, &sched);
+        start += rows;
+    }
+    dw64.into_iter().map(|v| v as f32).collect()
+}

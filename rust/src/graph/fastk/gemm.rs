@@ -1,0 +1,308 @@
+//! Blocked, transposed-packed GEMM with `f64` accumulation.
+//!
+//! The driver walks the classic three-level blocking (column panels of
+//! `nc`, contraction blocks of `kc`, row blocks of `mc` — see the
+//! [`Schedule`] docs), packs both operands into contiguous micro-panels
+//! (transposition is resolved at pack time, hoisting the orientation
+//! branches out of the O(m·k·n) inner loop), and runs an `mr`×`nr`
+//! register-tile micro-kernel innermost. Storage is `f32`; the output
+//! accumulates in a full-precision `f64` scratch that is rounded to `f32`
+//! exactly once — the same contract as the naive oracle.
+//!
+//! ## Accumulation order
+//!
+//! Each output element's contraction runs in ascending `k` order: the
+//! micro-kernel walks its packed panels `k`-major, and the `f64` scratch
+//! carries the partial sum across successive `kc` blocks, so blocking
+//! never reorders the per-element sum relative to the naive triple loop.
+//! Products of `f32` values are exact in `f64` (24+24 ≤ 53 mantissa bits),
+//! which is what makes the oracle suite's tight tolerance hold — see
+//! docs/kernels.md §Tolerance for the full argument and the weaker
+//! *contract* bound future SIMD schedules are held to.
+
+use std::time::Instant;
+
+use super::schedule::{Schedule, ScheduleCache};
+
+/// A logical matrix operand: a stored row-major `f32` buffer plus the
+/// transposition flag that selects the logical orientation (mirroring the
+/// naive kernel's `(data, (rows, cols), trans)` triple).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct MatRef<'a> {
+    /// Stored elements, row-major over `rows`×`cols`.
+    pub data: &'a [f32],
+    /// Stored row count.
+    pub rows: usize,
+    /// Stored column count.
+    pub cols: usize,
+    /// Interpret as the transpose (logical dims swap).
+    pub trans: bool,
+}
+
+impl MatRef<'_> {
+    /// Logical `(rows, cols)` after applying the transposition flag.
+    pub(crate) fn logical_dims(&self) -> (usize, usize) {
+        if self.trans {
+            (self.cols, self.rows)
+        } else {
+            (self.rows, self.cols)
+        }
+    }
+}
+
+/// Pack the A block `rows [ic, ic+mb) × contraction [pc, pc+kb)` into
+/// `mr`-tall micro-panels, each laid out `k`-major (`kb` groups of up to
+/// `mr` consecutive rows), converting to `f64` once here so the
+/// micro-kernel's inner loop is pure `f64` mul/add on contiguous panels.
+/// A boundary panel ([`super::schedule::boundary_size`]`(mb, mr)` rows) is
+/// packed at its true extent — never padded.
+fn pack_a(a: &MatRef<'_>, ic: usize, mb: usize, pc: usize, kb: usize, mr: usize, buf: &mut Vec<f64>) {
+    buf.clear();
+    buf.reserve(mb * kb);
+    let mut i0 = 0;
+    while i0 < mb {
+        let mr_eff = mr.min(mb - i0);
+        if a.trans {
+            // Logical A[i, l] = data[l·cols + i]: panel rows are contiguous.
+            for l in 0..kb {
+                let row = &a.data[(pc + l) * a.cols + ic + i0..];
+                for &v in &row[..mr_eff] {
+                    buf.push(v as f64);
+                }
+            }
+        } else {
+            for l in 0..kb {
+                for i in 0..mr_eff {
+                    buf.push(a.data[(ic + i0 + i) * a.cols + pc + l] as f64);
+                }
+            }
+        }
+        i0 += mr_eff;
+    }
+}
+
+/// Pack the B block `contraction [pc, pc+kb) × cols [jc, jc+nb)` into
+/// `nr`-wide `k`-major micro-panels (the mirror of [`pack_a`]).
+fn pack_b(b: &MatRef<'_>, pc: usize, kb: usize, jc: usize, nb: usize, nr: usize, buf: &mut Vec<f64>) {
+    buf.clear();
+    buf.reserve(nb * kb);
+    let mut j0 = 0;
+    while j0 < nb {
+        let nr_eff = nr.min(nb - j0);
+        if b.trans {
+            // Logical B[l, j] = data[j·cols + l].
+            for l in 0..kb {
+                for j in 0..nr_eff {
+                    buf.push(b.data[(jc + j0 + j) * b.cols + pc + l] as f64);
+                }
+            }
+        } else {
+            for l in 0..kb {
+                let row = &b.data[(pc + l) * b.cols + jc + j0..];
+                for &v in &row[..nr_eff] {
+                    buf.push(v as f64);
+                }
+            }
+        }
+        j0 += nr_eff;
+    }
+}
+
+/// Full `MR`×`NR` micro-kernel: load the register accumulator from the
+/// `f64` scratch, stream both packed panels `k`-major (`ap` is `kb`
+/// chunks of `MR`, `bp` of `NR`), store back. Const dimensions let the
+/// compiler keep the accumulator in registers and unroll/vectorize the
+/// rank-1 update.
+#[inline]
+fn micro_full<const MR: usize, const NR: usize>(ap: &[f64], bp: &[f64], c: &mut [f64], c_off: usize, ldc: usize) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (i, row) in acc.iter_mut().enumerate() {
+        row.copy_from_slice(&c[c_off + i * ldc..c_off + i * ldc + NR]);
+    }
+    for (ar, br) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (i, row) in acc.iter_mut().enumerate() {
+            let ai = ar[i];
+            for (j, accv) in row.iter_mut().enumerate() {
+                *accv += ai * br[j];
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        c[c_off + i * ldc..c_off + i * ldc + NR].copy_from_slice(row);
+    }
+}
+
+/// Generic boundary micro-kernel for partial tiles (`mr_eff < mr` and/or
+/// `nr_eff < nr` — the explicit [`super::schedule::boundary_size`] tiles).
+/// Same `k`-major walk and accumulation order as [`micro_full`], at
+/// runtime extents.
+fn micro_any(mr_eff: usize, nr_eff: usize, ap: &[f64], bp: &[f64], c: &mut [f64], c_off: usize, ldc: usize) {
+    const MAX_R: usize = 8;
+    debug_assert!(mr_eff <= MAX_R && nr_eff <= MAX_R);
+    let mut acc = [[0.0f64; MAX_R]; MAX_R];
+    for i in 0..mr_eff {
+        acc[i][..nr_eff].copy_from_slice(&c[c_off + i * ldc..c_off + i * ldc + nr_eff]);
+    }
+    for (ar, br) in ap.chunks_exact(mr_eff).zip(bp.chunks_exact(nr_eff)) {
+        for i in 0..mr_eff {
+            let ai = ar[i];
+            for j in 0..nr_eff {
+                acc[i][j] += ai * br[j];
+            }
+        }
+    }
+    for i in 0..mr_eff {
+        c[c_off + i * ldc..c_off + i * ldc + nr_eff].copy_from_slice(&acc[i][..nr_eff]);
+    }
+}
+
+/// Blocked GEMM core: **adds** `op(a)·op(b)` into the `m`×`n` `f64`
+/// scratch `c64` under schedule `s`. Callers zero (or carry) the scratch;
+/// conv backward-filter exploits the carry to accumulate row blocks.
+pub(crate) fn gemm_into(c64: &mut [f64], a: &MatRef<'_>, b: &MatRef<'_>, s: &Schedule) {
+    let (m, k) = a.logical_dims();
+    let (kb2, n) = b.logical_dims();
+    debug_assert_eq!(k, kb2, "gemm contraction mismatch");
+    debug_assert_eq!(c64.len(), m * n, "gemm scratch size");
+    let mut apack: Vec<f64> = Vec::new();
+    let mut bpack: Vec<f64> = Vec::new();
+    let mut jc = 0;
+    while jc < n {
+        let nb = s.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kb = s.kc.min(k - pc);
+            pack_b(b, pc, kb, jc, nb, s.nr, &mut bpack);
+            let mut ic = 0;
+            while ic < m {
+                let mb = s.mc.min(m - ic);
+                pack_a(a, ic, mb, pc, kb, s.mr, &mut apack);
+                let mut j0 = 0;
+                while j0 < nb {
+                    let nr_eff = s.nr.min(nb - j0);
+                    let bp = &bpack[j0 * kb..(j0 + nr_eff) * kb];
+                    let mut i0 = 0;
+                    while i0 < mb {
+                        let mr_eff = s.mr.min(mb - i0);
+                        let ap = &apack[i0 * kb..(i0 + mr_eff) * kb];
+                        let c_off = (ic + i0) * n + jc + j0;
+                        if mr_eff == s.mr && nr_eff == s.nr {
+                            match (s.mr, s.nr) {
+                                (4, 4) => micro_full::<4, 4>(ap, bp, c64, c_off, n),
+                                (4, 8) => micro_full::<4, 8>(ap, bp, c64, c_off, n),
+                                (8, 4) => micro_full::<8, 4>(ap, bp, c64, c_off, n),
+                                (8, 8) => micro_full::<8, 8>(ap, bp, c64, c_off, n),
+                                _ => micro_any(mr_eff, nr_eff, ap, bp, c64, c_off, n),
+                            }
+                        } else {
+                            micro_any(mr_eff, nr_eff, ap, bp, c64, c_off, n);
+                        }
+                        i0 += mr_eff;
+                    }
+                    j0 += nr_eff;
+                }
+                ic += mb;
+            }
+            pc += kb;
+        }
+        jc += nb;
+    }
+}
+
+/// Schedule-cached GEMM producing the `f64` accumulator (conv
+/// backward-data consumes it before any rounding). Looks the schedule up
+/// in `cache` and records the one-shot first-execution measurement.
+pub(crate) fn gemm_f64(a: &MatRef<'_>, b: &MatRef<'_>, cache: &ScheduleCache) -> Vec<f64> {
+    let (m, k) = a.logical_dims();
+    let n = b.logical_dims().1;
+    let (sched, fresh) = cache.lookup(m, k, n);
+    let t0 = fresh.then(Instant::now);
+    let mut c64 = vec![0.0f64; m * n];
+    gemm_into(&mut c64, a, b, &sched);
+    if let Some(t0) = t0 {
+        cache.record_measured(m, k, n, t0.elapsed());
+    }
+    c64
+}
+
+/// Schedule-cached GEMM rounded once to `f32` — the fast path behind
+/// `MatMul` and each `BatchedMatMul` group.
+pub(crate) fn gemm_f32(a: &MatRef<'_>, b: &MatRef<'_>, cache: &ScheduleCache) -> Vec<f32> {
+    gemm_f64(a, b, cache).into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &MatRef<'_>, b: &MatRef<'_>) -> Vec<f32> {
+        let (m, k) = a.logical_dims();
+        let n = b.logical_dims().1;
+        let at = |i: usize, l: usize| if a.trans { a.data[l * a.cols + i] } else { a.data[i * a.cols + l] };
+        let bt = |l: usize, j: usize| if b.trans { b.data[j * b.cols + l] } else { b.data[l * b.cols + j] };
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += at(i, l) as f64 * bt(l, j) as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_bitwise_across_schedules_and_transposes() {
+        // Order-preserving blocking ⇒ bit-identical to the sequential
+        // triple loop, for every transpose combo and odd boundary extent.
+        let mut rng = Rng::new(0xFA57_6E44);
+        let cache = ScheduleCache::new();
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 5, 9), (65, 33, 17), (64, 64, 64), (13, 257, 3)] {
+            for (ta, tb) in [(false, false), (true, false), (false, true), (true, true)] {
+                let adata: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+                let bdata: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+                let (ar, ac) = if ta { (k, m) } else { (m, k) };
+                let (br, bc) = if tb { (n, k) } else { (k, n) };
+                let a = MatRef { data: &adata, rows: ar, cols: ac, trans: ta };
+                let b = MatRef { data: &bdata, rows: br, cols: bc, trans: tb };
+                let want = naive(&a, &b);
+                let got = gemm_f32(&a, &b, &cache);
+                assert!(
+                    got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "({m},{k},{n}) ta={ta} tb={tb} diverged from the sequential order"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_into_accumulates() {
+        // Two half-contractions carried through the scratch == one full one.
+        let adata: Vec<f32> = (0..6 * 10).map(|i| (i as f32).sin()).collect();
+        let bdata: Vec<f32> = (0..10 * 4).map(|i| (i as f32).cos()).collect();
+        let s = Schedule { mc: 4, kc: 3, nc: 4, mr: 4, nr: 4 };
+        let mut whole = vec![0.0f64; 6 * 4];
+        gemm_into(&mut whole, &MatRef { data: &adata, rows: 6, cols: 10, trans: false }, &MatRef {
+            data: &bdata,
+            rows: 10,
+            cols: 4,
+            trans: false,
+        }, &s);
+        let mut halves = vec![0.0f64; 6 * 4];
+        for half in 0..2 {
+            let acols: Vec<f32> =
+                (0..6).flat_map(|i| adata[i * 10 + half * 5..i * 10 + half * 5 + 5].to_vec()).collect();
+            let brows = &bdata[half * 5 * 4..(half + 1) * 5 * 4];
+            gemm_into(&mut halves, &MatRef { data: &acols, rows: 6, cols: 5, trans: false }, &MatRef {
+                data: brows,
+                rows: 5,
+                cols: 4,
+                trans: false,
+            }, &s);
+        }
+        assert_eq!(whole, halves);
+    }
+}

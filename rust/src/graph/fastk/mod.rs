@@ -1,0 +1,227 @@
+//! The fast kernel layer: blocked, schedule-searched compute for the
+//! numeric hot path, dispatched per [`KernelBackend`].
+//!
+//! The heavy operators — `MatMul`, `BatchedMatMul`, and the three conv
+//! operators (lowered to im2col-GEMM) — run through the packed blocked
+//! GEMM in [`gemm`], under a per-shape [`Schedule`] chosen by the
+//! deterministic search in [`schedule`] and memoized in a
+//! [`ScheduleCache`]. Everything else falls through to the naive kernel
+//! library (`graph/kernels.rs`), which is **kept as the oracle**: the
+//! property suite in `rust/tests/kernels.rs` differentially tests every
+//! accelerated kernel against it over hundreds of seeded shapes, and
+//! [`accelerated_op_names`] is the coverage contract that keeps a new fast
+//! kernel from landing un-oracled.
+//!
+//! Both interpreters ride this dispatcher: [`apply_op`] (the default
+//! [`KernelBackend::Fast`]) is what `eval_serial`, the threaded SPMD
+//! executor, and the serving engine call; [`apply_op_with`] pins a backend
+//! explicitly (tests, `ExecOptions::backend`). The full design — blocking
+//! scheme, search space, boundary-tile handling, and the accumulation-order
+//! tolerance argument — is the book chapter docs/kernels.md.
+
+mod conv;
+mod gemm;
+mod schedule;
+
+pub use schedule::{boundary_size, steps_dim, Schedule, ScheduleCache, ScheduleReport};
+
+use gemm::MatRef;
+
+use super::kernels::{apply_op_naive, View};
+use super::{Graph, Op, OpKind};
+
+/// Which kernel implementation executes an op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelBackend {
+    /// The reference triple-loop library (`graph/kernels.rs`) — the oracle
+    /// the property suite measures the fast path against.
+    Naive,
+    /// Blocked, packed, schedule-searched kernels (the default).
+    #[default]
+    Fast,
+}
+
+/// Documented fast-vs-oracle agreement bound (relative error in
+/// [`super::max_rel_err`]'s metric).
+///
+/// The current blocked kernels preserve each output element's contraction
+/// order, so they agree with the oracle *bit for bit* (every `f32×f32`
+/// product is exact in `f64`; see docs/kernels.md §Tolerance). The public
+/// contract is deliberately the weaker reassociation bound
+/// `2·ε₃₂ + κ·K·ε₆₄ ≲ 1e-6` for the suite's shapes and conditioning, so a
+/// future SIMD schedule that *does* reorder the `f64` sum stays legal
+/// without loosening any downstream gate: the differential harness's 1e-5
+/// keeps ≥10× headroom over this bound (asserted in
+/// `rust/tests/differential.rs`).
+pub const KERNEL_ORACLE_TOL: f64 = 1e-6;
+
+/// Names of the op kinds with a fast (non-oracle) kernel — the coverage
+/// contract of the oracle property suite: `rust/tests/kernels.rs` asserts
+/// that every name here has a generated oracle case set (and vice versa),
+/// so extending [`is_accelerated`] without extending the suite fails CI.
+pub fn accelerated_op_names() -> &'static [&'static str] {
+    &["MatMul", "BatchedMatMul", "Conv2d", "Conv2dBwdData", "Conv2dBwdFilter"]
+}
+
+/// Whether `kind` dispatches to a fast kernel under
+/// [`KernelBackend::Fast`]. This predicate *is* the dispatch condition
+/// ([`apply_op_with`] consults it before matching), so it cannot drift
+/// from the implementation.
+pub fn is_accelerated(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::MatMul { .. }
+            | OpKind::BatchedMatMul { .. }
+            | OpKind::Conv2d { .. }
+            | OpKind::Conv2dBwdData { .. }
+            | OpKind::Conv2dBwdFilter { .. }
+    )
+}
+
+/// The variant name of `kind` (no payload), the vocabulary
+/// [`accelerated_op_names`] and the oracle suite's coverage ledger share.
+pub fn op_kind_label(kind: &OpKind) -> &'static str {
+    match kind {
+        OpKind::MatMul { .. } => "MatMul",
+        OpKind::Conv2d { .. } => "Conv2d",
+        OpKind::Conv2dBwdData { .. } => "Conv2dBwdData",
+        OpKind::Conv2dBwdFilter { .. } => "Conv2dBwdFilter",
+        OpKind::Ew(_) => "Ew",
+        OpKind::Pool2 => "Pool2",
+        OpKind::Pool2Bwd => "Pool2Bwd",
+        OpKind::Flatten => "Flatten",
+        OpKind::FlattenBwd => "FlattenBwd",
+        OpKind::BiasAdd => "BiasAdd",
+        OpKind::ReduceSumRows => "ReduceSumRows",
+        OpKind::SoftmaxXent => "SoftmaxXent",
+        OpKind::SoftmaxXentGrad => "SoftmaxXentGrad",
+        OpKind::SgdUpdate => "SgdUpdate",
+        OpKind::BatchedMatMul { .. } => "BatchedMatMul",
+        OpKind::LayerNorm => "LayerNorm",
+        OpKind::LayerNormGrad => "LayerNormGrad",
+        OpKind::LayerNormGammaGrad => "LayerNormGammaGrad",
+        OpKind::Softmax => "Softmax",
+        OpKind::SoftmaxGrad => "SoftmaxGrad",
+        OpKind::SplitHeads { .. } => "SplitHeads",
+        OpKind::MergeHeads { .. } => "MergeHeads",
+        OpKind::QkvSlice { .. } => "QkvSlice",
+        OpKind::QkvConcat => "QkvConcat",
+    }
+}
+
+/// Apply `op` with the **default backend** ([`KernelBackend::Fast`], global
+/// [`ScheduleCache`]) — the entry point both interpreters and the serving
+/// engine share. Same contract as the former naive `apply_op`: shard-local
+/// operand [`View`]s in, the dense row-major output region out.
+pub fn apply_op(g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
+    apply_op_with(KernelBackend::default(), g, op, ins, out_shape)
+}
+
+/// Apply `op` under an explicit backend. [`KernelBackend::Fast`] uses the
+/// process-global [`ScheduleCache`]; ops without a fast kernel
+/// ([`is_accelerated`] is false) fall through to the oracle either way.
+pub fn apply_op_with(backend: KernelBackend, g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
+    match backend {
+        KernelBackend::Naive => apply_op_naive(g, op, ins, out_shape),
+        KernelBackend::Fast => apply_op_fast_in(ScheduleCache::global(), g, op, ins, out_shape),
+    }
+}
+
+/// The fast path against an explicit [`ScheduleCache`] — what the
+/// determinism tests (two fresh caches, four racing threads) and the
+/// cold-vs-warm bench split call directly.
+pub fn apply_op_fast_in(cache: &ScheduleCache, g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
+    if !is_accelerated(&op.kind) {
+        return apply_op_naive(g, op, ins, out_shape);
+    }
+    assert_eq!(ins.len(), op.inputs.len(), "kernel arity mismatch for {}", op.name);
+    match op.kind {
+        OpKind::MatMul { ta, tb } => {
+            let (a, b) = (&ins[0], &ins[1]);
+            gemm::gemm_f32(
+                &MatRef { data: a.data, rows: a.shape[0], cols: a.shape[1], trans: ta },
+                &MatRef { data: b.data, rows: b.shape[0], cols: b.shape[1], trans: tb },
+                cache,
+            )
+        }
+        OpKind::BatchedMatMul { ta, tb } => {
+            let (a, b) = (&ins[0], &ins[1]);
+            let groups = a.shape[0];
+            let (ap, aq) = (a.shape[1], a.shape[2]);
+            let (bp, bq) = (b.shape[1], b.shape[2]);
+            let mut out = Vec::with_capacity(out_shape.iter().product());
+            for gi in 0..groups {
+                let asl = &a.data[gi * ap * aq..(gi + 1) * ap * aq];
+                let bsl = &b.data[gi * bp * bq..(gi + 1) * bp * bq];
+                out.extend(gemm::gemm_f32(
+                    &MatRef { data: asl, rows: ap, cols: aq, trans: ta },
+                    &MatRef { data: bsl, rows: bp, cols: bq, trans: tb },
+                    cache,
+                ));
+            }
+            out
+        }
+        OpKind::Conv2d { stride, pad } => conv::conv2d(&ins[0], &ins[1], out_shape, stride, pad, cache),
+        OpKind::Conv2dBwdData { stride, pad } => {
+            conv::conv2d_bwd_data(&ins[0], &ins[1], out_shape, stride, pad, cache)
+        }
+        OpKind::Conv2dBwdFilter { stride, pad } => {
+            conv::conv2d_bwd_filter(&ins[0], &ins[1], out_shape, stride, pad, cache)
+        }
+        _ => unreachable!("is_accelerated admits {} without a fast kernel arm", op_kind_label(&op.kind)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<OpKind> {
+        use crate::graph::EwKind;
+        vec![
+            OpKind::MatMul { ta: false, tb: false },
+            OpKind::Conv2d { stride: 1, pad: 0 },
+            OpKind::Conv2dBwdData { stride: 1, pad: 0 },
+            OpKind::Conv2dBwdFilter { stride: 1, pad: 0 },
+            OpKind::Ew(EwKind::Relu),
+            OpKind::Pool2,
+            OpKind::Pool2Bwd,
+            OpKind::Flatten,
+            OpKind::FlattenBwd,
+            OpKind::BiasAdd,
+            OpKind::ReduceSumRows,
+            OpKind::SoftmaxXent,
+            OpKind::SoftmaxXentGrad,
+            OpKind::SgdUpdate,
+            OpKind::BatchedMatMul { ta: false, tb: true },
+            OpKind::LayerNorm,
+            OpKind::LayerNormGrad,
+            OpKind::LayerNormGammaGrad,
+            OpKind::Softmax,
+            OpKind::SoftmaxGrad,
+            OpKind::SplitHeads { heads: 2 },
+            OpKind::MergeHeads { heads: 2 },
+            OpKind::QkvSlice { part: 0 },
+            OpKind::QkvConcat,
+        ]
+    }
+
+    #[test]
+    fn accelerated_names_match_predicate() {
+        // The name list and the dispatch predicate agree on every variant
+        // of the vocabulary — the coverage contract's foundation.
+        for kind in all_kinds() {
+            assert_eq!(
+                is_accelerated(&kind),
+                accelerated_op_names().contains(&op_kind_label(&kind)),
+                "{:?} disagrees with accelerated_op_names()",
+                kind
+            );
+        }
+    }
+
+    #[test]
+    fn default_backend_is_fast() {
+        assert_eq!(KernelBackend::default(), KernelBackend::Fast);
+    }
+}

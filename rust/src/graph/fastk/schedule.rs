@@ -1,0 +1,325 @@
+//! Per-shape schedule search for the blocked GEMM drivers.
+//!
+//! A [`Schedule`] is a full blocking decision for one logical GEMM shape
+//! `(m, k, n)`: the three cache-block extents `mc`/`kc`/`nc` and the
+//! register micro-tile `mr`×`nr`. Candidates are enumerated over a small
+//! fixed grid, clamped to the shape with morello-style [`steps_dim`] /
+//! [`boundary_size`] arithmetic (a non-divisible extent yields an explicit
+//! smaller boundary tile — never padding), scored by a tiny deterministic
+//! cost model, and memoized per shape in a [`ScheduleCache`].
+//!
+//! ## Determinism contract
+//!
+//! The *chosen* schedule is a pure function of `(m, k, n)`: candidates are
+//! enumerated in a canonical sorted order and the first strict cost minimum
+//! wins, so two fresh caches — or four racing threads on one cache — always
+//! converge on the bit-identical schedule (pinned by
+//! `rust/tests/kernels.rs`). The one-shot wall-clock measurement the cache
+//! records next to each entry ([`ScheduleReport::measured`]) is
+//! observability for `kernels_micro` and the drift report; it deliberately
+//! does **not** steer selection, because a timing-steered choice would make
+//! plans and BENCH numbers irreproducible (docs/kernels.md §Search).
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// How many tiles of extent `tile` cover an axis of extent `origin`
+/// (morello's `Tiling::steps_dim`): `⌈origin / tile⌉`.
+pub fn steps_dim(origin: usize, tile: usize) -> usize {
+    origin.div_ceil(tile)
+}
+
+/// Extent of the final, partial tile along an axis — `origin mod tile`,
+/// `0` when the tiling divides evenly (morello's `Tiling::boundary_size`).
+/// The drivers execute this boundary tile explicitly at its true extent.
+pub fn boundary_size(origin: usize, tile: usize) -> usize {
+    origin % tile
+}
+
+/// One blocking decision for a logical `(m, k, n)` GEMM.
+///
+/// The blocked driver walks `nc`-wide column panels, `kc`-deep contraction
+/// blocks and `mc`-tall row blocks (packing operands per block), and runs an
+/// `mr`×`nr` register micro-tile innermost. Every field is already clamped
+/// to the shape it was searched for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Schedule {
+    /// Row-block extent (rows of A packed per block).
+    pub mc: usize,
+    /// Contraction-block extent (the `f64` scratch row is re-walked once
+    /// per `kc` block).
+    pub kc: usize,
+    /// Column-panel extent (columns of B packed per panel).
+    pub nc: usize,
+    /// Micro-tile rows (register accumulator height).
+    pub mr: usize,
+    /// Micro-tile columns (register accumulator width).
+    pub nr: usize,
+}
+
+/// Register micro-tiles with specialized (const-unrolled) micro-kernels.
+const MICRO: &[(usize, usize)] = &[(4, 4), (4, 8), (8, 4), (8, 8)];
+/// Candidate contraction-block depths.
+const KC: &[usize] = &[64, 128, 256];
+/// Candidate row-block heights (multiples of every candidate `mr`).
+const MC: &[usize] = &[32, 64, 128];
+/// Candidate column-panel widths (multiples of every candidate `nr`).
+const NC: &[usize] = &[64, 128, 256];
+
+/// Enumerate the candidate schedules for shape `(m, k, n)`: the fixed grid,
+/// clamped so no block exceeds its axis. Clamping collapses duplicates
+/// (small shapes clamp many grid points to the same schedule); the
+/// `BTreeSet` both dedupes and fixes the canonical search order.
+pub(crate) fn candidates(m: usize, k: usize, n: usize) -> BTreeSet<Schedule> {
+    let mut set = BTreeSet::new();
+    for &(mr, nr) in MICRO {
+        for &kc in KC {
+            for &mc in MC {
+                for &nc in NC {
+                    set.insert(Schedule {
+                        mc: mc.min(m).max(1),
+                        kc: kc.min(k).max(1),
+                        nc: nc.min(n).max(1),
+                        mr,
+                        nr,
+                    });
+                }
+            }
+        }
+    }
+    set
+}
+
+/// The tiny deterministic cost model, in abstract "element touch" units.
+///
+/// Terms: packed-operand traffic (A repacked once per `nc` sweep, B once
+/// per `(kc, nc)` block), the `f64` scratch row re-walked per `kc` block,
+/// and micro-kernel work — full `mr`×`nr` tiles at an efficiency that
+/// rewards large register tiles, boundary tiles ([`boundary_size`] ≠ 0) at
+/// a 3× penalty because they run the generic scalar micro-kernel. Blocks
+/// that overflow the L1/L2/L3 working-set budgets are penalized
+/// multiplicatively. Pure integer-derived `f64` arithmetic — no
+/// measurement, no ambient state — so the argmin is reproducible.
+pub(crate) fn model_cost(m: usize, k: usize, n: usize, s: &Schedule) -> f64 {
+    let (mf, kf, nf) = (m as f64, k as f64, n as f64);
+    // Packing traffic (read + write), in elements.
+    let pack_a = steps_dim(n, s.nc) as f64 * mf * kf * 2.0;
+    let pack_b = kf * nf * 2.0;
+    // The f64 scratch row is loaded + stored once per contraction block.
+    let c_traffic = 2.0 * mf * nf * steps_dim(k, s.kc) as f64;
+    // Fraction of the output covered by full micro-tiles; the remainder is
+    // boundary tiles of extent `boundary_size(m, mr)` / `boundary_size(n, nr)`.
+    let full_m = (m - boundary_size(m, s.mr)) as f64 / mf;
+    let full_n = (n - boundary_size(n, s.nr)) as f64 / nf;
+    let full_frac = full_m * full_n;
+    // A full tile amortizes `mr + nr` panel loads over `mr·nr` FMAs.
+    let eff = (s.mr * s.nr) as f64 / (s.mr * s.nr + s.mr + s.nr) as f64;
+    let flops = mf * kf * nf;
+    let mut inner = flops * full_frac / eff + flops * (1.0 - full_frac) * 3.0;
+    // Working-set fits: B micro-panel in L1, A block in L2, B block in L3
+    // (packed panels are f64, hence the ×8).
+    if s.kc * s.nr * 8 > 32 * 1024 {
+        inner *= 1.5;
+    }
+    if s.mc * s.kc * 8 > 192 * 1024 {
+        inner *= 1.5;
+    }
+    if s.kc * s.nc * 8 > 2 * 1024 * 1024 {
+        inner *= 1.2;
+    }
+    inner + pack_a + pack_b + c_traffic
+}
+
+/// Deterministic schedule search for `(m, k, n)`: score every candidate,
+/// return the first strict minimum in canonical order (plus its modeled
+/// cost). Same inputs → bit-identical output, on any thread.
+pub(crate) fn search(m: usize, k: usize, n: usize) -> (Schedule, f64) {
+    let mut best: Option<(Schedule, f64)> = None;
+    for s in candidates(m, k, n) {
+        let c = model_cost(m, k, n, &s);
+        match best {
+            Some((_, bc)) if c >= bc => {}
+            _ => best = Some((s, c)),
+        }
+    }
+    best.expect("candidate grid is never empty")
+}
+
+/// One memoized search result, as reported by [`ScheduleCache::report`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleReport {
+    /// Logical GEMM rows.
+    pub m: usize,
+    /// Logical contraction depth.
+    pub k: usize,
+    /// Logical GEMM columns.
+    pub n: usize,
+    /// The schedule the search chose (deterministic in `(m, k, n)`).
+    pub schedule: Schedule,
+    /// Its modeled cost (the quantity the search minimized).
+    pub model_cost: f64,
+    /// One-shot wall-clock of the first execution at this shape —
+    /// recorded for observability (kernels_micro, drift reports), never
+    /// consulted by the search. `None` until the shape first runs.
+    pub measured: Option<Duration>,
+}
+
+struct Entry {
+    schedule: Schedule,
+    model_cost: f64,
+    measured: Option<Duration>,
+}
+
+/// Memoized per-shape schedules: the kernel-level analogue of the
+/// planner's per-graph cost LUTs (plan once, execute many).
+///
+/// The process-global instance ([`ScheduleCache::global`]) backs the
+/// default fast path; tests construct fresh instances to pin search
+/// determinism, and benches [`clear`](ScheduleCache::clear) the global one
+/// to time the cold (search-inclusive) first step separately from the
+/// warm steady state.
+pub struct ScheduleCache {
+    inner: Mutex<HashMap<(usize, usize, usize), Entry>>,
+    /// Searches actually run (cold misses); lookups − searches = hits.
+    searches: std::sync::atomic::AtomicU64,
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScheduleCache {
+    /// An empty cache (fresh searches on first use).
+    pub fn new() -> Self {
+        ScheduleCache { inner: Mutex::new(HashMap::new()), searches: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// The process-global cache the default fast path memoizes into.
+    pub fn global() -> &'static ScheduleCache {
+        static GLOBAL: OnceLock<ScheduleCache> = OnceLock::new();
+        GLOBAL.get_or_init(ScheduleCache::new)
+    }
+
+    /// The memoized (or freshly searched) schedule for `(m, k, n)`.
+    pub fn schedule_for(&self, m: usize, k: usize, n: usize) -> Schedule {
+        self.lookup(m, k, n).0
+    }
+
+    /// Like [`schedule_for`](Self::schedule_for), plus whether this call
+    /// inserted the entry (the "first execution" flag the one-shot
+    /// measurement keys on).
+    pub(crate) fn lookup(&self, m: usize, k: usize, n: usize) -> (Schedule, bool) {
+        if let Some(e) = self.inner.lock().expect("schedule cache poisoned").get(&(m, k, n)) {
+            return (e.schedule, false);
+        }
+        // Search outside the lock: it is pure, so racing threads compute
+        // the identical winner and first-insert just wins the tie.
+        let (schedule, model_cost) = search(m, k, n);
+        self.searches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut map = self.inner.lock().expect("schedule cache poisoned");
+        let fresh = !map.contains_key(&(m, k, n));
+        map.entry((m, k, n)).or_insert(Entry { schedule, model_cost, measured: None });
+        (schedule, fresh)
+    }
+
+    /// Record the one-shot measurement for `(m, k, n)` (first write wins).
+    pub(crate) fn record_measured(&self, m: usize, k: usize, n: usize, d: Duration) {
+        let mut map = self.inner.lock().expect("schedule cache poisoned");
+        if let Some(e) = map.get_mut(&(m, k, n)) {
+            e.measured.get_or_insert(d);
+        }
+    }
+
+    /// Memoized shape count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("schedule cache poisoned").len()
+    }
+
+    /// True when no shape has been searched yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Searches actually executed (cache misses) since construction.
+    pub fn searches(&self) -> u64 {
+        self.searches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Drop every memoized schedule (benches use this to re-time the cold,
+    /// search-inclusive path on a warm process).
+    pub fn clear(&self) {
+        self.inner.lock().expect("schedule cache poisoned").clear();
+    }
+
+    /// Every memoized entry, sorted by shape (deterministic order).
+    pub fn report(&self) -> Vec<ScheduleReport> {
+        let map = self.inner.lock().expect("schedule cache poisoned");
+        let mut rows: Vec<ScheduleReport> = map
+            .iter()
+            .map(|(&(m, k, n), e)| ScheduleReport {
+                m,
+                k,
+                n,
+                schedule: e.schedule,
+                model_cost: e.model_cost,
+                measured: e.measured,
+            })
+            .collect();
+        rows.sort_by_key(|r| (r.m, r.k, r.n));
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_and_boundary_arithmetic() {
+        // 257 in tiles of 64: 5 steps, the last of extent 1.
+        assert_eq!(steps_dim(257, 64), 5);
+        assert_eq!(boundary_size(257, 64), 1);
+        // Evenly divisible: no boundary tile.
+        assert_eq!(steps_dim(256, 64), 4);
+        assert_eq!(boundary_size(256, 64), 0);
+        assert_eq!(steps_dim(1, 64), 1);
+        assert_eq!(boundary_size(1, 64), 1);
+    }
+
+    #[test]
+    fn candidates_clamp_to_shape() {
+        for s in candidates(5, 3, 7) {
+            assert!(s.mc <= 5 && s.kc <= 3 && s.nc <= 7, "{s:?} escapes the shape");
+            assert!(s.mc >= 1 && s.kc >= 1 && s.nc >= 1);
+        }
+        // Large shapes keep the full grid alive.
+        assert!(candidates(512, 512, 512).len() > 50);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let (a, ca) = search(300, 77, 129);
+        let (b, cb) = search(300, 77, 129);
+        assert_eq!(a, b);
+        assert_eq!(ca.to_bits(), cb.to_bits());
+    }
+
+    #[test]
+    fn cache_memoizes_and_counts() {
+        let c = ScheduleCache::new();
+        assert!(c.is_empty());
+        let (s1, fresh1) = c.lookup(64, 64, 64);
+        let (s2, fresh2) = c.lookup(64, 64, 64);
+        assert_eq!(s1, s2);
+        assert!(fresh1 && !fresh2);
+        assert_eq!((c.len(), c.searches()), (1, 1));
+        c.record_measured(64, 64, 64, Duration::from_micros(5));
+        c.record_measured(64, 64, 64, Duration::from_micros(9));
+        assert_eq!(c.report()[0].measured, Some(Duration::from_micros(5)), "first write wins");
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -10,7 +10,8 @@
 
 use std::fmt;
 
-use super::kernels::{apply_op, View};
+use super::fastk::{apply_op_with, KernelBackend};
+use super::kernels::View;
 use super::{Graph, TensorKind};
 use crate::util::rng::Rng;
 
@@ -78,6 +79,17 @@ impl std::error::Error for InterpError {}
 /// assert!(vals[loss.id][0].is_finite());
 /// ```
 pub fn eval_serial(g: &Graph, init: &[Option<Vec<f32>>]) -> Result<Vec<Vec<f32>>, InterpError> {
+    eval_serial_with(g, init, KernelBackend::default())
+}
+
+/// [`eval_serial`] under an explicit kernel backend — the oracle suite
+/// compares a [`KernelBackend::Fast`] evaluation of a whole graph against
+/// the [`KernelBackend::Naive`] reference this way.
+pub fn eval_serial_with(
+    g: &Graph,
+    init: &[Option<Vec<f32>>],
+    backend: KernelBackend,
+) -> Result<Vec<Vec<f32>>, InterpError> {
     let produced = validate_init(g, init)?;
     let mut vals: Vec<Vec<f32>> = vec![Vec::new(); g.tensors.len()];
     for t in &g.tensors {
@@ -93,7 +105,7 @@ pub fn eval_serial(g: &Graph, init: &[Option<Vec<f32>>]) -> Result<Vec<Vec<f32>>
             .iter()
             .map(|&t| View::full(&vals[t], &g.tensors[t].shape))
             .collect();
-        let out = apply_op(g, op, &views, &g.tensors[op.outputs[0]].shape);
+        let out = apply_op_with(backend, g, op, &views, &g.tensors[op.outputs[0]].shape);
         vals[op.outputs[0]] = out;
     }
     Ok(vals)

@@ -1,8 +1,14 @@
-//! Numeric kernels for the full operator vocabulary.
+//! The naive reference kernels — the **oracle** of the fast kernel layer.
 //!
-//! One kernel library serves both interpreters: the serial reference
-//! ([`super::eval_serial`]) calls every kernel on whole tensors, the
-//! threaded SPMD executor ([`crate::spmd`]) on shard-local regions. A kernel sees
+//! One kernel library defines the numeric semantics of every operator as
+//! transparent triple loops: both interpreters used to run these directly;
+//! since the `fastk` layer landed, the hot operators dispatch to blocked
+//! kernels ([`super::apply_op_with`] under [`super::KernelBackend::Fast`],
+//! the default) and this library is the reference path selected by
+//! [`super::KernelBackend::Naive`] — every fast kernel is differentially
+//! tested against [`apply_op_naive`] over hundreds of seeded shapes
+//! (`rust/tests/kernels.rs`), and the non-accelerated operators still
+//! execute here on every backend. A kernel sees
 //! its operands as [`View`]s — a dense row-major buffer plus the region's
 //! shape and absolute offset — and never needs to know which caller it is:
 //! the §4 aligned forms guarantee that every axis a kernel's semantics
@@ -17,10 +23,12 @@
 //! ## Determinism and the tolerance model
 //!
 //! Storage is `f32`; every accumulation runs in `f64` and rounds once on
-//! store. Serial and sharded execution therefore differ only where a
-//! reduction is split across devices (partial sums rounded to `f32` before
-//! the cross-device add) — a few ULPs per tensor, which is what lets the
-//! differential harness assert a tight 1e-5 relative tolerance
+//! store. The blocked kernels preserve this contract *and* each output
+//! element's accumulation order (docs/kernels.md §Tolerance), so serial
+//! and sharded execution still differ only where a reduction is split
+//! across devices (partial sums rounded to `f32` before the cross-device
+//! add) — a few ULPs per tensor, which is what lets the differential
+//! harness assert a tight 1e-5 relative tolerance
 //! (docs/execution.md §Tolerance).
 
 use crate::graph::{EwKind, Graph, Op, OpKind};
@@ -131,13 +139,18 @@ fn matmul(a: &[f32], (p, q): (usize, usize), b: &[f32], (r, s): (usize, usize), 
     out
 }
 
-/// Apply `op` to shard-local operand views, producing the dense row-major
-/// buffer of the output region of shape `out_shape`.
+/// Apply `op` with the **naive reference kernels**, producing the dense
+/// row-major buffer of the output region of shape `out_shape`.
+///
+/// This is the oracle path ([`super::KernelBackend::Naive`]); production
+/// callers go through [`super::apply_op`], which dispatches the hot
+/// operators to the blocked `fastk` kernels and falls through to this
+/// function for everything else.
 ///
 /// `g` supplies the *global* tensor shapes the mean-loss kernels scale by.
 /// Shape/arity mismatches are invariant violations (the shard schedule
 /// guarantees aligned local shapes) and panic.
-pub fn apply_op(g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
+pub fn apply_op_naive(g: &Graph, op: &Op, ins: &[View<'_>], out_shape: &[usize]) -> Vec<f32> {
     assert_eq!(ins.len(), op.inputs.len(), "kernel arity mismatch for {}", op.name);
     match op.kind {
         OpKind::MatMul { ta, tb } => {
@@ -629,10 +642,10 @@ mod tests {
         b.flatten("f", x);
         let g = b.finish();
         let data: Vec<f32> = (0..8).map(|v| v as f32).collect(); // NHWC order
-        let out = apply_op(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 2])], &[1, 8]);
+        let out = apply_op_naive(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 2])], &[1, 8]);
         assert_eq!(out, vec![0.0, 2.0, 4.0, 6.0, 1.0, 3.0, 5.0, 7.0]);
         // And FlattenBwd inverts it.
-        let back = apply_op(
+        let back = apply_op_naive(
             &g,
             &crate::graph::Op {
                 id: 1,
@@ -658,9 +671,9 @@ mod tests {
         let g = b.finish();
         let logits = [1.0f32, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
         let onehot = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
-        let full = apply_op(&g, &g.ops[0], &[view(&logits, &[4, 2]), view(&onehot, &[4, 2])], &[]);
+        let full = apply_op_naive(&g, &g.ops[0], &[view(&logits, &[4, 2]), view(&onehot, &[4, 2])], &[]);
         let half =
-            apply_op(&g, &g.ops[0], &[view(&logits[..4], &[2, 2]), view(&onehot[..4], &[2, 2])], &[]);
+            apply_op_naive(&g, &g.ops[0], &[view(&logits[..4], &[2, 2]), view(&onehot[..4], &[2, 2])], &[]);
         assert!((full[0] - 2.0 * half[0]).abs() < 1e-6);
     }
 
@@ -675,10 +688,10 @@ mod tests {
         let g = b.finish();
         let xd = [1.0f32, 3.0, 2.0, 6.0];
         let dyd = [1.0f32, 1.0, 1.0, 1.0];
-        let full = apply_op(&g, &g.ops[0], &[view(&dyd, &[2, 2]), view(&xd, &[2, 2])], &[2]);
+        let full = apply_op_naive(&g, &g.ops[0], &[view(&dyd, &[2, 2]), view(&xd, &[2, 2])], &[2]);
         // Column-1 slice of dy with offset (0, 1):
         let dy_sl = [1.0f32, 1.0];
-        let sliced = apply_op(
+        let sliced = apply_op_naive(
             &g,
             &g.ops[0],
             &[
@@ -699,8 +712,8 @@ mod tests {
         b.merge_heads("mh", sh, 2);
         let g = b.finish();
         let data: Vec<f32> = (0..16).map(|v| v as f32).collect();
-        let heads = apply_op(&g, &g.ops[0], &[view(&data, &[4, 4])], &[4, 2, 2]);
-        let back = apply_op(&g, &g.ops[1], &[view(&heads, &[4, 2, 2])], &[4, 4]);
+        let heads = apply_op_naive(&g, &g.ops[0], &[view(&data, &[4, 4])], &[4, 2, 2]);
+        let back = apply_op_naive(&g, &g.ops[1], &[view(&heads, &[4, 2, 2])], &[4, 4]);
         assert_eq!(back, data);
     }
 
@@ -711,7 +724,7 @@ mod tests {
         b.pool2("p", x);
         let g = b.finish();
         let data = [3.0f32, 1.0, 3.0, 2.0]; // tie between (0,0) and (1,0)
-        let pooled = apply_op(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 1])], &[1, 1, 1, 1]);
+        let pooled = apply_op_naive(&g, &g.ops[0], &[view(&data, &[1, 2, 2, 1])], &[1, 1, 1, 1]);
         assert_eq!(pooled, vec![3.0]);
         let dz = [5.0f32];
         let bwd_op = crate::graph::Op {
@@ -721,7 +734,7 @@ mod tests {
             outputs: vec![x],
             name: "pb".into(),
         };
-        let dx = apply_op(
+        let dx = apply_op_naive(
             &g,
             &bwd_op,
             &[view(&dz, &[1, 1, 1, 1]), view(&data, &[1, 2, 2, 1]), view(&pooled, &[1, 1, 1, 1])],

@@ -7,14 +7,18 @@
 //! parameter updates. The result is a mostly-serial graph of tensor
 //! operators over which the tiling planner optimizes.
 //!
-//! The graph is also *executable*: [`kernels`](apply_op) implements the
-//! numeric semantics of every operator (shared with the threaded SPMD
-//! executor in [`crate::spmd`]), and [`eval_serial`] runs the whole
-//! training step on one thread — the ground truth of the differential
-//! harness (docs/execution.md).
+//! The graph is also *executable*: [`apply_op`] implements the numeric
+//! semantics of every operator (shared with the threaded SPMD executor in
+//! [`crate::spmd`]), dispatching the hot operators to the blocked,
+//! schedule-searched kernels of [`fastk`] (the default
+//! [`KernelBackend::Fast`]) with the naive library kept as the
+//! differential oracle ([`KernelBackend::Naive`], [`apply_op_naive`]);
+//! [`eval_serial`] runs the whole training step on one thread — the
+//! ground truth of the differential harness (docs/execution.md).
 
 mod autodiff;
 mod builder;
+pub mod fastk;
 mod interp;
 mod kernels;
 mod levels;
@@ -23,8 +27,12 @@ mod tensor;
 
 pub use autodiff::append_backward;
 pub use builder::GraphBuilder;
-pub use interp::{eval_serial, max_rel_err, seed_values, validate_init, InterpError};
-pub use kernels::{apply_op, View, LN_EPS, SGD_LR};
+pub use fastk::{
+    accelerated_op_names, apply_op, apply_op_with, is_accelerated, op_kind_label, KernelBackend, Schedule,
+    ScheduleCache, KERNEL_ORACLE_TOL,
+};
+pub use interp::{eval_serial, eval_serial_with, max_rel_err, seed_values, validate_init, InterpError};
+pub use kernels::{apply_op_naive, View, LN_EPS, SGD_LR};
 pub use levels::{bfs_levels, Levels};
 pub use op::{EwKind, Op, OpId, OpKind};
 pub use tensor::{TensorId, TensorInfo, TensorKind};

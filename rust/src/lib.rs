@@ -15,7 +15,9 @@
 //!
 //! - [`graph`] — the semantic dataflow graph: tensors, operators, a builder,
 //!   reverse-mode autodiff, and BFS levelization (the substrate the paper
-//!   inherits from MXNet's frontend).
+//!   inherits from MXNet's frontend). Its kernel library is two-tier: a
+//!   naive reference oracle plus blocked, schedule-searched fast kernels
+//!   ([`graph::KernelBackend`], `graph::fastk`).
 //! - [`tiling`] — the tiling algebra of §4.1–4.2.1: basic tilings
 //!   `{R, C, r}`, composition/flattening, ghost-area conversion costs, and
 //!   per-operator aligned tilings (Eq. 2).
@@ -119,6 +121,12 @@ pub mod book {
     /// interpreter, and the differential harness between them.
     #[doc = include_str!("../../docs/execution.md")]
     pub mod execution {}
+
+    /// Blocked cache-aware kernels: the `KernelBackend` dispatch seam, the
+    /// per-shape schedule search, boundary-tile handling, and the
+    /// accumulation-order tolerance argument behind the kernel oracle.
+    #[doc = include_str!("../../docs/kernels.md")]
+    pub mod kernels {}
 
     /// Serving: the `Session` facade, the persistent worker pool, dynamic
     /// batching, plan caching, and the stats surface.

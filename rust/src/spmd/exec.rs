@@ -53,7 +53,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::exec::{gather_sources, resident_region, Region, ShardTask};
-use crate::graph::{apply_op, Graph, InterpError, OpId, View};
+use crate::graph::{apply_op_with, Graph, InterpError, KernelBackend, OpId, View};
 use crate::lower::{CollectiveKind, Instr, LoweredProgram};
 use crate::obs::{Metrics, Span, SpanContext, SpanKind, StepTrace, TraceBuf};
 use crate::planner::{Plan, PlanError};
@@ -154,6 +154,12 @@ pub struct ExecOptions {
     /// `exec.step_seconds`, and [`super::execute_with_recovery`] counts
     /// `recover.retries` / `recover.replans` through the same handle.
     pub metrics: Option<Metrics>,
+    /// Kernel backend every worker dispatches compute through
+    /// ([`KernelBackend::Fast`] by default). The differential harness pins
+    /// [`KernelBackend::Naive`] on both sides to isolate partitioning bugs
+    /// from kernel bugs, and pins `Fast` on both sides to oracle the fast
+    /// path under sharded extents.
+    pub backend: KernelBackend,
 }
 
 impl Default for ExecOptions {
@@ -165,6 +171,7 @@ impl Default for ExecOptions {
             faults: None,
             trace: false,
             metrics: None,
+            backend: KernelBackend::default(),
         }
     }
 }
@@ -197,6 +204,13 @@ impl ExecOptions {
     #[must_use]
     pub fn metrics(mut self, metrics: Metrics) -> Self {
         self.metrics = Some(metrics);
+        self
+    }
+
+    /// Pin the kernel backend (builder style).
+    #[must_use]
+    pub fn backend(mut self, backend: KernelBackend) -> Self {
+        self.backend = backend;
         self
     }
 }
@@ -398,6 +412,9 @@ pub(crate) struct Worker<'a> {
     op_payload: Vec<u64>,
     /// Watchdog deadline per wait site ([`ExecOptions::deadline`]).
     deadline: Duration,
+    /// Kernel backend for every compute dispatch
+    /// ([`ExecOptions::backend`]).
+    backend: KernelBackend,
     /// Armed fault-injection sites; `None` on the production path.
     faults: Option<&'a FaultPlan>,
     /// Span buffer; `Some` iff [`ExecOptions::trace`] — every trace site
@@ -435,6 +452,7 @@ impl<'a> Worker<'a> {
             payload_bytes: 0,
             op_payload: vec![0; ctx.g.ops.len()],
             deadline: ctx.opts.deadline,
+            backend: ctx.opts.backend,
             faults: ctx.opts.faults.as_deref(),
             trace: ctx.opts.trace.then(|| TraceBuf::new(epoch)),
         }
@@ -820,7 +838,7 @@ impl<'a> Worker<'a> {
             .collect();
         let t0 = self.trace.as_ref().map(TraceBuf::now);
         let data = catch_unwind(AssertUnwindSafe(|| {
-            apply_op(g, &g.ops[op], &views, &out_region.shape)
+            apply_op_with(self.backend, g, &g.ops[op], &views, &out_region.shape)
         }))
         .map_err(|_| ExecError::Worker {
             device: self.d,

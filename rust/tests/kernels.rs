@@ -1,0 +1,583 @@
+//! The kernel-oracle property gate: every fast (blocked, schedule-searched)
+//! kernel must match the naive reference library over a seeded shape sweep.
+//!
+//! The naive kernels (`graph/kernels.rs`, [`KernelBackend::Naive`]) are the
+//! oracle; the blocked kernels (`graph/fastk`, [`KernelBackend::Fast`]) are
+//! the implementation under test. Each accelerated op runs ~200 seeded
+//! random cases with boundary extents (1, 7, 63, 65, 257) forced onto every
+//! dimension, every transpose-flag combination, and degenerate dims (k = 1,
+//! batch = 1), asserting agreement within [`KERNEL_ORACLE_TOL`] — a bound
+//! the current order-preserving kernels beat by meeting it *bit for bit*
+//! (docs/kernels.md §Tolerance).
+//!
+//! The suite is also the coverage contract: `every_accelerated_op_has_an_
+//! oracle_suite` cross-checks [`accelerated_op_names`] against the case
+//! registry here, so a new fast kernel cannot land without its oracle
+//! sweep, and a removed one cannot leave a stale sweep behind.
+//!
+//! Alongside the differential sweep live the schedule-search determinism
+//! pins (fresh caches and racing threads must choose the bit-identical
+//! schedule) and the adversarial ill-conditioned matmul.
+
+use std::sync::Arc;
+
+use soybean::graph::fastk::apply_op_fast_in;
+use soybean::graph::{
+    accelerated_op_names, apply_op_with, eval_serial_with, max_rel_err, seed_values, Graph, KernelBackend, Op, OpKind,
+    ScheduleCache, View, KERNEL_ORACLE_TOL,
+};
+use soybean::models::{transformer, TransformerConfig};
+use soybean::util::rng::Rng;
+
+/// Boundary extents forced onto every dimension of every op's case set:
+/// 1 (degenerate), 7/63/65 (straddling the micro-tile and block grids),
+/// 257 (one past a whole `kc`/`nc` candidate).
+const BOUNDARY: [usize; 5] = [1, 7, 63, 65, 257];
+
+/// Dimension pool for random GEMM cases (skewed toward block edges).
+const POOL: [usize; 13] = [1, 2, 3, 5, 7, 8, 16, 31, 63, 64, 65, 127, 257];
+
+/// Per-case work cap (`m·k·n`, or the conv MAC count) so the sweep stays
+/// fast under the unoptimized tier-1 `cargo test` build.
+const GEMM_WORK_CAP: usize = 1 << 18;
+const CONV_WORK_CAP: usize = 1 << 16;
+
+/// All four transpose-flag combinations, cycled across case indices.
+const COMBOS: [(bool, bool); 4] = [(false, false), (true, false), (false, true), (true, true)];
+
+// ---------------------------------------------------------------------------
+// Case generators (the per-op oracle registry)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct MmCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+}
+
+/// 200 seeded MatMul cases: a forced prefix guarantees every [`BOUNDARY`]
+/// extent appears on every dimension (and `k = 1` degenerates), the rest
+/// samples [`POOL`] under the work cap; transpose combos cycle by index.
+fn matmul_cases() -> Vec<MmCase> {
+    let forced: [(usize, usize, usize); 16] = [
+        (1, 7, 63),
+        (7, 63, 1),
+        (63, 1, 7),
+        (1, 65, 257),
+        (65, 257, 1),
+        (257, 1, 65),
+        (65, 63, 7),
+        (7, 65, 63),
+        (63, 7, 65),
+        (257, 3, 5),
+        (3, 257, 5),
+        (5, 3, 257),
+        (1, 1, 1),
+        (8, 8, 8),
+        (64, 64, 64),
+        (16, 1, 16),
+    ];
+    let mut rng = Rng::new(0x4B45_524E_0001);
+    (0..200)
+        .map(|i| {
+            let (ta, tb) = COMBOS[i % COMBOS.len()];
+            let (m, k, n) = forced.get(i).copied().unwrap_or_else(|| loop {
+                let d = (*rng.choose(&POOL), *rng.choose(&POOL), *rng.choose(&POOL));
+                if d.0 * d.1 * d.2 <= GEMM_WORK_CAP {
+                    break d;
+                }
+            });
+            MmCase { m, k, n, ta, tb }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BmmCase {
+    g: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+}
+
+/// 200 seeded BatchedMatMul cases; `batch = 1` is forced repeatedly and
+/// every [`BOUNDARY`] extent appears on each of `m`/`k`/`n`.
+fn bmm_cases() -> Vec<BmmCase> {
+    let forced: [(usize, usize, usize, usize); 12] = [
+        (1, 1, 7, 63),
+        (1, 7, 63, 1),
+        (1, 63, 1, 7),
+        (2, 65, 7, 63),
+        (3, 7, 65, 2),
+        (2, 63, 2, 65),
+        (1, 257, 2, 3),
+        (1, 3, 257, 2),
+        (1, 2, 3, 257),
+        (4, 16, 16, 16),
+        (7, 5, 9, 3),
+        (1, 1, 1, 1),
+    ];
+    let batch_pool = [1usize, 2, 3, 4, 7];
+    let dim_pool = [1usize, 2, 3, 5, 7, 8, 16, 31, 63, 64, 65];
+    let mut rng = Rng::new(0x4B45_524E_0002);
+    (0..200)
+        .map(|i| {
+            let (ta, tb) = COMBOS[i % COMBOS.len()];
+            let (g, m, k, n) = forced.get(i).copied().unwrap_or_else(|| loop {
+                let d = (
+                    *rng.choose(&batch_pool),
+                    *rng.choose(&dim_pool),
+                    *rng.choose(&dim_pool),
+                    *rng.choose(&dim_pool),
+                );
+                if d.0 * d.1 * d.2 * d.3 <= GEMM_WORK_CAP {
+                    break d;
+                }
+            });
+            BmmCase { g, m, k, n, ta, tb }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ConvCase {
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+}
+
+impl ConvCase {
+    fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    fn valid(&self) -> bool {
+        self.h + 2 * self.pad >= self.kh && self.w + 2 * self.pad >= self.kw
+    }
+
+    fn work(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        self.n * oh * ow * self.cout * self.kh * self.kw * self.cin
+    }
+}
+
+/// 200 seeded conv geometries, shared by all three conv operators (forward,
+/// backward-data, backward-filter — each gets its own differential sweep
+/// over the same geometry set). The forced prefix pins every window size
+/// {1,2,3,5}, both strides, all pads {0,1,2}, single-channel and
+/// single-image degenerates, and boundary-sized planes (1, 7, 63, 65).
+fn conv_cases() -> Vec<ConvCase> {
+    #[rustfmt::skip]
+    let forced: [ConvCase; 12] = [
+        ConvCase { n: 1, h: 1, w: 1, cin: 1, kh: 1, kw: 1, cout: 1, stride: 1, pad: 0 },
+        ConvCase { n: 1, h: 7, w: 7, cin: 2, kh: 2, kw: 2, cout: 3, stride: 1, pad: 0 },
+        ConvCase { n: 2, h: 5, w: 5, cin: 3, kh: 3, kw: 3, cout: 2, stride: 1, pad: 1 },
+        ConvCase { n: 1, h: 9, w: 9, cin: 2, kh: 5, kw: 5, cout: 2, stride: 2, pad: 2 },
+        ConvCase { n: 1, h: 63, w: 5, cin: 1, kh: 3, kw: 3, cout: 2, stride: 1, pad: 1 },
+        ConvCase { n: 1, h: 65, w: 3, cin: 1, kh: 2, kw: 2, cout: 1, stride: 2, pad: 0 },
+        ConvCase { n: 1, h: 3, w: 65, cin: 1, kh: 2, kw: 2, cout: 1, stride: 2, pad: 0 },
+        ConvCase { n: 1, h: 1, w: 8, cin: 2, kh: 1, kw: 3, cout: 2, stride: 1, pad: 1 },
+        ConvCase { n: 3, h: 8, w: 8, cin: 1, kh: 3, kw: 1, cout: 1, stride: 2, pad: 0 },
+        ConvCase { n: 1, h: 16, w: 16, cin: 3, kh: 3, kw: 3, cout: 3, stride: 2, pad: 1 },
+        ConvCase { n: 2, h: 7, w: 9, cin: 5, kh: 2, kw: 3, cout: 5, stride: 1, pad: 2 },
+        ConvCase { n: 1, h: 31, w: 31, cin: 1, kh: 5, kw: 5, cout: 1, stride: 2, pad: 2 },
+    ];
+    let plane = [1usize, 2, 3, 5, 7, 8, 9, 16, 31];
+    let chan = [1usize, 2, 3, 5];
+    let win = [1usize, 2, 3, 5];
+    let mut rng = Rng::new(0x4B45_524E_0003);
+    (0..200)
+        .map(|i| {
+            forced.get(i).copied().unwrap_or_else(|| loop {
+                let c = ConvCase {
+                    n: 1 + rng.below(2),
+                    h: *rng.choose(&plane),
+                    w: *rng.choose(&plane),
+                    cin: *rng.choose(&chan),
+                    kh: *rng.choose(&win),
+                    kw: *rng.choose(&win),
+                    cout: *rng.choose(&[1usize, 2, 3, 5, 8]),
+                    stride: 1 + rng.below(2),
+                    pad: rng.below(3),
+                };
+                if c.valid() && c.work() <= CONV_WORK_CAP {
+                    break c;
+                }
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Differential driver
+// ---------------------------------------------------------------------------
+
+/// Apply one op on both backends over the same operand views and return
+/// `(fast, naive)`. The op record is synthetic — the accelerated kernel
+/// arms read shapes from the views, never from the graph.
+fn run_both(kind: OpKind, ins: &[(&[f32], &[usize])], out_shape: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let g = Graph::default();
+    let op = Op {
+        id: 0,
+        kind,
+        inputs: vec![0; ins.len()],
+        outputs: vec![0],
+        name: "oracle-case".into(),
+    };
+    let views: Vec<View<'_>> = ins.iter().map(|(d, s)| View::full(d, s)).collect();
+    let fast = apply_op_with(KernelBackend::Fast, &g, &op, &views, out_shape);
+    let naive = apply_op_with(KernelBackend::Naive, &g, &op, &views, out_shape);
+    (fast, naive)
+}
+
+fn check(label: &str, fast: &[f32], naive: &[f32]) {
+    assert_eq!(fast.len(), naive.len(), "{label}: output length");
+    let err = max_rel_err(fast, naive);
+    assert!(
+        err <= KERNEL_ORACLE_TOL,
+        "{label}: fast diverged from oracle by {err:e} (bound {KERNEL_ORACLE_TOL:e})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Per-op oracle sweeps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oracle_matmul() {
+    let mut rng = Rng::new(0xD1FF_0001);
+    for (i, c) in matmul_cases().into_iter().enumerate() {
+        let (ar, ac) = if c.ta { (c.k, c.m) } else { (c.m, c.k) };
+        let (br, bc) = if c.tb { (c.n, c.k) } else { (c.k, c.n) };
+        let a = rng.normal_vec(ar * ac, 1.0);
+        let b = rng.normal_vec(br * bc, 1.0);
+        let (fast, naive) = run_both(
+            OpKind::MatMul { ta: c.ta, tb: c.tb },
+            &[(&a, &[ar, ac]), (&b, &[br, bc])],
+            &[c.m, c.n],
+        );
+        check(&format!("matmul case {i} ({c:?})"), &fast, &naive);
+    }
+}
+
+#[test]
+fn oracle_batched_matmul() {
+    let mut rng = Rng::new(0xD1FF_0002);
+    for (i, c) in bmm_cases().into_iter().enumerate() {
+        let (ar, ac) = if c.ta { (c.k, c.m) } else { (c.m, c.k) };
+        let (br, bc) = if c.tb { (c.n, c.k) } else { (c.k, c.n) };
+        let a = rng.normal_vec(c.g * ar * ac, 1.0);
+        let b = rng.normal_vec(c.g * br * bc, 1.0);
+        let (fast, naive) = run_both(
+            OpKind::BatchedMatMul { ta: c.ta, tb: c.tb },
+            &[(&a, &[c.g, ar, ac]), (&b, &[c.g, br, bc])],
+            &[c.g, c.m, c.n],
+        );
+        check(&format!("bmm case {i} ({c:?})"), &fast, &naive);
+    }
+}
+
+#[test]
+fn oracle_conv2d() {
+    let mut rng = Rng::new(0xD1FF_0003);
+    for (i, c) in conv_cases().into_iter().enumerate() {
+        let (oh, ow) = c.out_hw();
+        let x = rng.normal_vec(c.n * c.h * c.w * c.cin, 1.0);
+        let w = rng.normal_vec(c.kh * c.kw * c.cin * c.cout, 1.0);
+        let (fast, naive) = run_both(
+            OpKind::Conv2d { stride: c.stride, pad: c.pad },
+            &[(&x, &[c.n, c.h, c.w, c.cin]), (&w, &[c.kh, c.kw, c.cin, c.cout])],
+            &[c.n, oh, ow, c.cout],
+        );
+        check(&format!("conv2d case {i} ({c:?})"), &fast, &naive);
+    }
+}
+
+#[test]
+fn oracle_conv2d_bwd_data() {
+    let mut rng = Rng::new(0xD1FF_0004);
+    for (i, c) in conv_cases().into_iter().enumerate() {
+        let (oh, ow) = c.out_hw();
+        let dz = rng.normal_vec(c.n * oh * ow * c.cout, 1.0);
+        let w = rng.normal_vec(c.kh * c.kw * c.cin * c.cout, 1.0);
+        let (fast, naive) = run_both(
+            OpKind::Conv2dBwdData { stride: c.stride, pad: c.pad },
+            &[(&dz, &[c.n, oh, ow, c.cout]), (&w, &[c.kh, c.kw, c.cin, c.cout])],
+            &[c.n, c.h, c.w, c.cin],
+        );
+        check(&format!("conv2d-bwd-data case {i} ({c:?})"), &fast, &naive);
+    }
+}
+
+#[test]
+fn oracle_conv2d_bwd_filter() {
+    let mut rng = Rng::new(0xD1FF_0005);
+    for (i, c) in conv_cases().into_iter().enumerate() {
+        let (oh, ow) = c.out_hw();
+        let x = rng.normal_vec(c.n * c.h * c.w * c.cin, 1.0);
+        let dz = rng.normal_vec(c.n * oh * ow * c.cout, 1.0);
+        let (fast, naive) = run_both(
+            OpKind::Conv2dBwdFilter { stride: c.stride, pad: c.pad },
+            &[(&x, &[c.n, c.h, c.w, c.cin]), (&dz, &[c.n, oh, ow, c.cout])],
+            &[c.kh, c.kw, c.cin, c.cout],
+        );
+        check(&format!("conv2d-bwd-filter case {i} ({c:?})"), &fast, &naive);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coverage contract
+// ---------------------------------------------------------------------------
+
+/// The suite's case registry: op name → number of generated oracle cases.
+/// Extending [`accelerated_op_names`] without extending this registry (and
+/// a sweep over it) fails `every_accelerated_op_has_an_oracle_suite`.
+fn oracle_case_count(name: &str) -> Option<usize> {
+    match name {
+        "MatMul" => Some(matmul_cases().len()),
+        "BatchedMatMul" => Some(bmm_cases().len()),
+        "Conv2d" | "Conv2dBwdData" | "Conv2dBwdFilter" => Some(conv_cases().len()),
+        _ => None,
+    }
+}
+
+/// Names this registry covers — kept literal so the set comparison below
+/// catches both a missing sweep and a stale one.
+const REGISTERED: [&str; 5] = ["MatMul", "BatchedMatMul", "Conv2d", "Conv2dBwdData", "Conv2dBwdFilter"];
+
+#[test]
+fn every_accelerated_op_has_an_oracle_suite() {
+    let mut accel: Vec<&str> = accelerated_op_names().to_vec();
+    let mut registered: Vec<&str> = REGISTERED.to_vec();
+    accel.sort_unstable();
+    registered.sort_unstable();
+    assert_eq!(
+        accel, registered,
+        "accelerated_op_names() and the oracle case registry diverged — \
+         a fast kernel must land together with its oracle sweep in rust/tests/kernels.rs"
+    );
+    for name in REGISTERED {
+        let count = oracle_case_count(name).expect("registered name has a generator");
+        assert!(count >= 200, "op `{name}` has only {count} oracle cases (contract: ≥ 200)");
+    }
+}
+
+#[test]
+fn matmul_cases_cover_boundaries_and_transposes() {
+    let cases = matmul_cases();
+    for b in BOUNDARY {
+        assert!(cases.iter().any(|c| c.m == b), "no matmul case with m = {b}");
+        assert!(cases.iter().any(|c| c.k == b), "no matmul case with k = {b}");
+        assert!(cases.iter().any(|c| c.n == b), "no matmul case with n = {b}");
+    }
+    for (ta, tb) in COMBOS {
+        let hits = cases.iter().filter(|c| c.ta == ta && c.tb == tb).count();
+        assert!(hits >= 40, "transpose combo ({ta},{tb}) appears in only {hits} cases");
+    }
+    assert!(cases.iter().any(|c| c.k == 1), "no degenerate k = 1 matmul case");
+}
+
+#[test]
+fn bmm_cases_cover_boundaries_and_degenerate_batch() {
+    let cases = bmm_cases();
+    for b in [1usize, 7, 63, 65] {
+        assert!(cases.iter().any(|c| c.m == b), "no bmm case with m = {b}");
+        assert!(cases.iter().any(|c| c.k == b), "no bmm case with k = {b}");
+        assert!(cases.iter().any(|c| c.n == b), "no bmm case with n = {b}");
+    }
+    assert!(cases.iter().any(|c| c.m == 257 || c.k == 257 || c.n == 257), "no bmm case touching 257");
+    let singles = cases.iter().filter(|c| c.g == 1).count();
+    assert!(singles >= 10, "only {singles} bmm cases with batch = 1");
+    for (ta, tb) in COMBOS {
+        assert!(cases.iter().any(|c| c.ta == ta && c.tb == tb), "missing bmm transpose combo ({ta},{tb})");
+    }
+}
+
+#[test]
+fn conv_cases_cover_windows_strides_pads() {
+    let cases = conv_cases();
+    for k in [1usize, 2, 3, 5] {
+        assert!(cases.iter().any(|c| c.kh == k), "no conv case with kh = {k}");
+        assert!(cases.iter().any(|c| c.kw == k), "no conv case with kw = {k}");
+    }
+    for s in [1usize, 2] {
+        assert!(cases.iter().any(|c| c.stride == s), "no conv case with stride = {s}");
+    }
+    for p in [0usize, 1, 2] {
+        assert!(cases.iter().any(|c| c.pad == p), "no conv case with pad = {p}");
+    }
+    for b in [1usize, 7, 63, 65] {
+        assert!(cases.iter().any(|c| c.h == b || c.w == b), "no conv case with a {b}-sized plane");
+    }
+    assert!(cases.iter().any(|c| c.cin == 1 && c.cout == 1), "no single-channel conv case");
+    assert!(cases.iter().any(|c| c.n == 1), "no single-image conv case");
+}
+
+// ---------------------------------------------------------------------------
+// Tolerance model (satellite: docs/kernels.md §Tolerance)
+// ---------------------------------------------------------------------------
+
+/// Adversarial ill-conditioned matmul: huge alternating terms that cancel
+/// down to a tiny residual, so any reordering of the contraction would
+/// shift the result by far more than [`KERNEL_ORACLE_TOL`]. The fast path
+/// must still agree with the oracle within the documented bound (today it
+/// preserves the order exactly, so the bound holds with slack to spare).
+#[test]
+fn oracle_matmul_ill_conditioned() {
+    let (m, k, n) = (32usize, 64usize, 32usize);
+    let (big, eps) = (1.0e6f32, 1.0e-6f32);
+    // a[i][2t] = big, a[i][2t+1] = -big; b[2t][j] = base + ε, b[2t+1][j] =
+    // base, with the pair sharing one random base. Each pair's ~1e6-sized
+    // terms cancel down to big·ε ≈ 1, so any reordering of the per-element
+    // sum would move the result by far more than the bound.
+    let a: Vec<f32> = (0..m * k).map(|idx| if idx % 2 == 0 { big } else { -big }).collect();
+    let mut rng = Rng::new(0xAD5E_C0DE);
+    let mut b = vec![0.0f32; k * n];
+    for t in 0..k / 2 {
+        for j in 0..n {
+            let base = 1.0 + 0.25 * rng.normal() as f32;
+            b[2 * t * n + j] = base + eps;
+            b[(2 * t + 1) * n + j] = base;
+        }
+    }
+    let (fast, naive) = run_both(
+        OpKind::MatMul { ta: false, tb: false },
+        &[(&a, &[m, k]), (&b, &[k, n])],
+        &[m, n],
+    );
+    // Conditioning κ = Σ|terms| / |result| per element: terms are ~1e6,
+    // results are ~k·big·ε ≈ 64 — verify this really is adversarial.
+    let term_mass = big as f64 * 1.25 * k as f64;
+    let smallest = naive
+        .iter()
+        .fold(f64::INFINITY, |acc, &v| acc.min((v as f64).abs()))
+        .max(1e-30);
+    assert!(
+        term_mass / smallest > 1e5,
+        "matrix not ill-conditioned enough (κ ≈ {:e})",
+        term_mass / smallest
+    );
+    check("ill-conditioned matmul", &fast, &naive);
+}
+
+// ---------------------------------------------------------------------------
+// Schedule-search determinism (satellite 3)
+// ---------------------------------------------------------------------------
+
+/// Shapes spanning full-grid, clamped, and boundary-heavy regimes.
+const DET_SHAPES: [(usize, usize, usize); 4] = [(300, 77, 129), (64, 64, 64), (1, 257, 7), (13, 5, 3)];
+
+#[test]
+fn schedule_choice_is_identical_across_fresh_caches() {
+    let c1 = ScheduleCache::new();
+    let c2 = ScheduleCache::new();
+    for (m, k, n) in DET_SHAPES {
+        assert_eq!(
+            c1.schedule_for(m, k, n),
+            c2.schedule_for(m, k, n),
+            "({m},{k},{n}): two fresh caches chose different schedules"
+        );
+    }
+}
+
+#[test]
+fn fast_output_is_bit_identical_across_fresh_caches() {
+    let g = Graph::default();
+    let mut rng = Rng::new(0xDE7E_0001);
+    for (m, k, n) in DET_SHAPES {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let op = Op {
+            id: 0,
+            kind: OpKind::MatMul { ta: false, tb: false },
+            inputs: vec![0, 0],
+            outputs: vec![0],
+            name: "det".into(),
+        };
+        let views = [View::full(&a, &[m, k]), View::full(&b, &[k, n])];
+        let out1 = apply_op_fast_in(&ScheduleCache::new(), &g, &op, &views, &[m, n]);
+        let out2 = apply_op_fast_in(&ScheduleCache::new(), &g, &op, &views, &[m, n]);
+        assert!(
+            out1.iter().zip(&out2).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "({m},{k},{n}): fresh caches produced bitwise-different outputs"
+        );
+    }
+}
+
+/// Four threads race the search for the same shapes on one shared fresh
+/// cache: every thread must observe the same winner, the cache must hold
+/// exactly one entry per shape, and the computed outputs must be
+/// bit-identical — the search is pure in `(m, k, n)`, so a race can only
+/// duplicate work, never change the answer.
+#[test]
+fn schedule_search_single_winner_across_threads() {
+    let cache = Arc::new(ScheduleCache::new());
+    let g = Arc::new(Graph::default());
+    let (m, k, n) = (129usize, 65usize, 77usize);
+    let a = Arc::new(Rng::new(0xDE7E_0002).normal_vec(m * k, 1.0));
+    let b = Arc::new(Rng::new(0xDE7E_0003).normal_vec(k * n, 1.0));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (cache, g, a, b) = (cache.clone(), g.clone(), a.clone(), b.clone());
+            std::thread::spawn(move || {
+                let schedules: Vec<_> = DET_SHAPES.iter().map(|&(m, k, n)| cache.schedule_for(m, k, n)).collect();
+                let op = Op {
+                    id: 0,
+                    kind: OpKind::MatMul { ta: false, tb: false },
+                    inputs: vec![0, 0],
+                    outputs: vec![0],
+                    name: "race".into(),
+                };
+                let views = [View::full(&a, &[m, k]), View::full(&b, &[k, n])];
+                let out = apply_op_fast_in(&cache, &g, &op, &views, &[m, n]);
+                (schedules, out)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().expect("racing thread")).collect();
+    let (first_scheds, first_out) = &results[0];
+    for (scheds, out) in &results[1..] {
+        assert_eq!(scheds, first_scheds, "racing threads observed different schedule winners");
+        assert!(
+            out.iter().zip(first_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "racing threads computed bitwise-different outputs"
+        );
+    }
+    // One entry per distinct shape (DET_SHAPES plus the matmul's own).
+    assert_eq!(cache.len(), DET_SHAPES.len() + 1, "racing threads left duplicate cache entries");
+}
+
+// ---------------------------------------------------------------------------
+// Whole-graph cross-check
+// ---------------------------------------------------------------------------
+
+/// The fast backend must agree with the oracle not just per kernel but
+/// through a whole training step (attention, layer norms, softmax-xent and
+/// the SGD tail riding on the accelerated matmuls). Budgeted at the
+/// differential harness's 1e-5 — compounding across a graph is exactly
+/// what its 10× headroom over [`KERNEL_ORACLE_TOL`] is for.
+#[test]
+fn whole_graph_fast_matches_naive() {
+    let g = transformer(&TransformerConfig::tiny4());
+    let init = seed_values(&g, 42);
+    let fast = eval_serial_with(&g, &init, KernelBackend::Fast).expect("fast evaluation");
+    let naive = eval_serial_with(&g, &init, KernelBackend::Naive).expect("naive evaluation");
+    for t in &g.tensors {
+        let err = max_rel_err(&fast[t.id], &naive[t.id]);
+        assert!(err <= 1e-5, "tensor `{}` diverged by {err:e} across backends", t.name);
+    }
+}
