@@ -1,0 +1,165 @@
+//! Pipeline strategy micro-benchmark (PR-10 acceptance gates).
+//!
+//! Builds 2-stage pipelined strategies for the 4-layer encoder on the
+//! two-tier 2×4 machine ([`Topology::two_tier`]) and scores the full
+//! strategy portfolio ([`plan_strategy`]) for vgg16 and the encoder.
+//! The gates assert the pipeline axis actually closed:
+//!
+//! - **schedule structure** — neither scheduled step exceeds the
+//!   serial-stage reference, 1F1B stays within the documented 1.5×
+//!   envelope of GPipe (neither schedule dominates on step time — the
+//!   in-flight cap can delay tail forwards, which is why the portfolio
+//!   scores both; `tools/proto/pipeline_mirror.py` pins the envelope),
+//!   and 1F1B's peak activation stash is **strictly** smaller than
+//!   GPipe's on stage 0 (the cap is the whole point of 1F1B);
+//! - **portfolio dominance** — `plan_strategy`'s winner is never worse
+//!   than the pure-tiling candidate (structural: tiling is in the
+//!   portfolio and ties go to it) and **strictly better on at least
+//!   one** of vgg16 / encoder-4L: tiling must all-reduce every gradient
+//!   across the ethernet tier while a pipeline ships only boundary
+//!   activations over it;
+//! - **one-theory contract** — the lowered pipelined program's bytes
+//!   equal [`Strategy::total_cost`] bit for bit;
+//! - planning both models stays under the wall-clock budget.
+//!
+//! Results go to `BENCH_pipeline.json` (the `BENCH_planner.json`
+//! schema) for the CI perf-trajectory diff.
+//!
+//! Run with `cargo bench --bench pipeline_micro`.
+
+use std::time::Duration;
+
+use soybean::graph::bfs_levels;
+use soybean::lower::try_lower_strategy;
+use soybean::models::{transformer, vgg16, TransformerConfig};
+use soybean::planner::{pick_microbatches, plan_strategy, stage_cuts, Schedule, Strategy};
+use soybean::sim::{try_simulate_strategy, Topology};
+use soybean::util::bench::{time_it, BenchLog};
+
+fn main() {
+    println!("== pipeline strategy micro-benchmarks ==");
+    let mut log = BenchLog::new("pipeline_micro");
+    let topo = Topology::two_tier(3);
+    let cfg = topo.to_sim_config();
+
+    // Gate 1: schedule structure — the 4-layer encoder, 2 stages × 4
+    // microbatches, both schedules over the same cells.
+    let g = transformer(&TransformerConfig::micro());
+    let m = pick_microbatches(&g, 4);
+    assert_eq!(m, 4, "encoder-4L stopped being 4-microbatchable");
+    let levels = bfs_levels(&g);
+    let cuts = stage_cuts(&g, &levels, 2, 2, m).unwrap();
+    let gpipe = Strategy::try_build(&g, &cuts, 3, m, Schedule::GPipe).unwrap();
+    let f1b = Strategy::try_build(&g, &cuts, 3, m, Schedule::OneF1B).unwrap();
+
+    // One-theory contract across the stage axis.
+    let pp = try_lower_strategy(&g, &gpipe, &cfg).unwrap();
+    assert_eq!(pp.total_bytes(), gpipe.total_cost(), "lowered bytes != strategy cost");
+
+    let r_gpipe = try_simulate_strategy(&gpipe, &topo).unwrap();
+    let r_f1b = try_simulate_strategy(&f1b, &topo).unwrap();
+    assert!(
+        r_gpipe.step_s <= r_gpipe.serial_step_s + 1e-12,
+        "pipelined step {} worse than the serial-stage reference {}",
+        r_gpipe.step_s,
+        r_gpipe.serial_step_s
+    );
+    assert!(
+        r_f1b.step_s <= r_f1b.serial_step_s + 1e-12,
+        "1F1B step {} worse than the serial-stage reference {}",
+        r_f1b.step_s,
+        r_f1b.serial_step_s
+    );
+    // Neither schedule dominates on step time (the in-flight cap can
+    // delay tail forwards; the portfolio scores both), but 1F1B stays
+    // within the envelope the scheduler mirror pins.
+    assert!(
+        r_f1b.step_s <= r_gpipe.step_s * 1.5 + 1e-9,
+        "1F1B step {} outside the 1.5x GPipe envelope ({})",
+        r_f1b.step_s,
+        r_gpipe.step_s
+    );
+    // The in-flight cap is the whole point of 1F1B: stage 0 stashes at
+    // most its pipeline depth (2) while GPipe stashes all m microbatches.
+    assert!(
+        r_f1b.peak_stash[0] < r_gpipe.peak_stash[0],
+        "1F1B peak stash {} not strictly below GPipe's {}",
+        r_f1b.peak_stash[0],
+        r_gpipe.peak_stash[0]
+    );
+    log.row(
+        "schedule/encoder-4L",
+        &[
+            ("gpipe_step_ms", format!("{:.3}", r_gpipe.step_s * 1e3)),
+            ("f1b_step_ms", format!("{:.3}", r_f1b.step_s * 1e3)),
+            ("serial_step_ms", format!("{:.3}", r_gpipe.serial_step_s * 1e3)),
+            ("gpipe_bubble", format!("{:.3}", r_gpipe.bubble_fraction)),
+            ("f1b_bubble", format!("{:.3}", r_f1b.bubble_fraction)),
+            ("gpipe_stash0", r_gpipe.peak_stash[0].to_string()),
+            ("f1b_stash0", r_f1b.peak_stash[0].to_string()),
+        ],
+    );
+
+    // Gate 2: portfolio dominance on the two-tier machine.
+    let workloads: Vec<(&str, soybean::Graph)> = vec![
+        ("vgg16", vgg16(32)),
+        ("encoder-4L", transformer(&TransformerConfig::micro())),
+    ];
+    let mut strictly_better = Vec::new();
+    let mut total_plan_s = 0.0;
+    for (name, g) in &workloads {
+        let m_plan = time_it(0, Duration::from_millis(1), || {
+            std::hint::black_box(plan_strategy(g, 8, &topo).unwrap());
+        });
+        total_plan_s += m_plan.min.as_secs_f64();
+
+        let sp = plan_strategy(g, 8, &topo).unwrap();
+        assert!(
+            sp.step_s <= sp.tiling_step_s,
+            "{name}: portfolio winner {} lost to its own tiling seed {}",
+            sp.step_s,
+            sp.tiling_step_s
+        );
+        if sp.step_s < sp.tiling_step_s {
+            strictly_better.push(*name);
+        }
+        log.row(
+            &format!("strategy/{name}"),
+            &[
+                ("ms", format!("{:.2}", m_plan.mean_ms())),
+                ("chosen", sp.chosen.to_string()),
+                ("stages", sp.strategy.stage_count().to_string()),
+                ("ubatches", sp.strategy.microbatches.to_string()),
+                ("tiling_step_ms", format!("{:.3}", sp.tiling_step_s * 1e3)),
+                ("step_ms", format!("{:.3}", sp.step_s * 1e3)),
+                ("speedup", format!("{:.4}", sp.tiling_step_s / sp.step_s)),
+                ("bubble", format!("{:.3}", sp.report.bubble_fraction)),
+            ],
+        );
+        for s in &sp.scores {
+            println!(
+                "  {name}: candidate {:<10} step {:.3} ms, {:.1} MB",
+                s.name,
+                s.step_s * 1e3,
+                s.total_bytes as f64 / 1e6
+            );
+        }
+    }
+
+    // The PR-10 acceptance gate: on the two-tier 2×4 preset a pipelined
+    // strategy strictly beats pure tiling on at least one model.
+    assert!(
+        !strictly_better.is_empty(),
+        "no pipelined strategy strictly beat pure tiling on the two-tier preset"
+    );
+    println!("pipelining strictly better on: {}", strictly_better.join(", "));
+
+    assert!(
+        total_plan_s < 20.0,
+        "strategy planning of both models took {:.0} ms (target < 20 s)",
+        total_plan_s * 1e3
+    );
+
+    log.write_json("BENCH_pipeline.json").expect("writing BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json");
+}

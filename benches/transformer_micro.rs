@@ -22,7 +22,7 @@ use std::time::Duration;
 use soybean::graph::bfs_levels;
 use soybean::models::{attention_probe, transformer, TransformerConfig};
 use soybean::planner::bruteforce::brute_force;
-use soybean::planner::{classify, try_k_cut, try_one_cut, reference::one_cut_reference, Planner, Strategy};
+use soybean::planner::{classify, try_k_cut, try_one_cut, reference::one_cut_reference, Planner, PlanFamily};
 use soybean::sim::{try_simulate, try_simulate_classic_dp, SimConfig};
 use soybean::util::bench::{time_it, BenchLog};
 
@@ -99,7 +99,7 @@ fn main() {
     // Byte-level sanity against stock data parallelism + the simulator's
     // one-theory contract (metered bytes == Theorem-1 cost).
     let cfg = SimConfig::default();
-    let dp_plan = Planner::try_plan(g4, 3, Strategy::DataParallel).unwrap();
+    let dp_plan = Planner::try_plan(g4, 3, PlanFamily::DataParallel).unwrap();
     assert!(
         plan.total_cost() <= dp_plan.total_cost(),
         "SOYBEAN plan moves more bytes than DP ({} > {})",

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use soybean::coordinator::{init_mlp_params, ParallelTrainer, SyntheticData};
 use soybean::figures;
 use soybean::models::{mlp, MlpConfig};
-use soybean::planner::{Planner, Strategy};
+use soybean::planner::{Planner, PlanFamily};
 use soybean::runtime::Client;
 
 fn main() -> anyhow::Result<()> {
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let (x, y) = data.batch(400);
 
     let mut results = Vec::new();
-    for strat in [Strategy::DataParallel, Strategy::Soybean] {
+    for strat in [PlanFamily::DataParallel, PlanFamily::Soybean] {
         let params = init_mlp_params(3, &dims);
         let plan = Planner::try_plan(&g, 2, strat).unwrap();
         let mut t = ParallelTrainer::new(client.clone(), g.clone(), plan, &params, 0.05)?;

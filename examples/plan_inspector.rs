@@ -37,6 +37,14 @@
 //! executor observed (asserted equal to the plan cost), and the real
 //! channel payload volume.
 //!
+//! With `--pipeline`, the strategy portfolio (docs/pipeline.md) is
+//! scored for vgg16 and the transformer encoder on the two-tier preset:
+//! pure tiling vs `{2, 4}`-stage × `{GPipe, 1F1B}` pipelines, each
+//! engine-simulated. The candidate scoreboard, the winner's per-stage
+//! scoreboard (level range, device group, intra-cell bytes, busy time,
+//! peak activation stash, bubble fraction) and the stage-lane Chrome
+//! trace (`pipeline_trace_<model>.json`) are printed/written.
+//!
 //! With `--profile`, each executable workload runs one **traced** step
 //! ([`Session::profile`], docs/observability.md): the drift report
 //! (per-kernel and per-collective modeled-vs-measured ratios, worst
@@ -49,8 +57,8 @@ use soybean::graph::{eval_serial, seed_values};
 use soybean::models::{
     alexnet, alexnet_scaled, mlp, transformer, vgg16, MlpConfig, TransformerConfig,
 };
-use soybean::obs::overlay_trace_json;
-use soybean::planner::{classify, try_plan_topology_aware};
+use soybean::obs::{overlay_trace_json, pipeline_trace_json};
+use soybean::planner::{classify, plan_strategy, try_plan_topology_aware};
 use soybean::sim::{chrome_trace_json, try_run_program, Topology};
 use soybean::spmd::{
     execute_with_recovery, worst_divergence, ExecOptions, FaultPlan, RecoverOptions,
@@ -171,6 +179,63 @@ fn profile_workload(name: &str, g: soybean::Graph) {
     println!("wrote {report_path} and {trace_path} — open the overlay in chrome://tracing");
 }
 
+/// `--pipeline`: score the full strategy portfolio — pure tiling vs
+/// `{2, 4}`-stage × `{GPipe, 1F1B}` pipelines — on a hierarchical
+/// topology and print the winner's stage scoreboard (docs/pipeline.md).
+fn pipeline_report(name: &str, g: &soybean::Graph, topo: &Topology) {
+    let sp = plan_strategy(g, 8, topo).expect("strategy planning");
+    println!("\n--- {name}: strategy portfolio (8 devices) ---");
+    for s in &sp.scores {
+        let marker = if s.name == sp.chosen { " <- chosen" } else { "" };
+        println!(
+            "  {:<10} step {:8.3} ms   {:9.3} MB{marker}",
+            s.name,
+            s.step_s * 1e3,
+            s.total_bytes as f64 / 1e6
+        );
+    }
+    let (strat, rep) = (&sp.strategy, &sp.report);
+    println!(
+        "  winner `{}`: {} stage(s) x {} microbatch(es), schedule {}, bubble {:.1}%",
+        sp.chosen,
+        strat.stage_count(),
+        strat.microbatches,
+        strat.schedule.name(),
+        rep.bubble_fraction * 100.0
+    );
+    for spec in &strat.stages {
+        let cell_bytes: u64 = strat
+            .cells
+            .iter()
+            .filter(|c| c.stage == spec.stage)
+            .map(|c| c.plan.total_cost())
+            .sum();
+        println!(
+            "    stage {}: levels [{}, {}), devices {}..{} (k={}), \
+             intra-cell {:.3} MB/ubatch, busy {:.3} ms, peak stash {}",
+            spec.stage,
+            spec.level_lo,
+            spec.level_hi,
+            spec.device_lo,
+            spec.device_lo + spec.devices(),
+            spec.k,
+            cell_bytes as f64 / 1e6,
+            rep.stage_busy_s[spec.stage] * 1e3,
+            rep.peak_stash[spec.stage]
+        );
+    }
+    println!(
+        "  boundary {:.3} MB/ubatch; serial-stage {:.3} ms -> pipelined {:.3} ms",
+        strat.boundary_bytes() as f64 / 1e6,
+        rep.serial_step_s * 1e3,
+        rep.step_s * 1e3
+    );
+    let path = format!("pipeline_trace_{name}.json");
+    std::fs::write(&path, pipeline_trace_json(rep, &strat.cell_labels()))
+        .expect("writing pipeline trace");
+    println!("  wrote {path} — open in chrome://tracing");
+}
+
 /// Compile the plan to SPMD programs and (optionally) schedule it.
 fn lower_and_trace(name: &str, g: soybean::Graph, trace: bool) {
     let topo = Topology::p2_8xlarge();
@@ -227,6 +292,7 @@ fn main() {
     let do_trace = args.iter().any(|a| a == "--trace");
     let do_execute = args.iter().any(|a| a == "--execute");
     let do_profile = args.iter().any(|a| a == "--profile");
+    let do_pipeline = args.iter().any(|a| a == "--pipeline");
     let topo_preset = args
         .iter()
         .position(|a| a == "--topology")
@@ -323,7 +389,17 @@ fn main() {
         profile_workload("transformer-4L", transformer(&TransformerConfig::tiny4()));
     }
 
-    // 7. `--topology <preset>`: close the planner/topology loop — plan
+    // 7. `--pipeline`: the pipeline axis — score tiling vs pipelined
+    // strategies on a hierarchical interconnect and print the winner's
+    // stage scoreboard (docs/pipeline.md).
+    if do_pipeline {
+        let topo = Topology::two_tier(3);
+        println!("\n=== strategy portfolio on `two-tier` (8 devices) ===");
+        pipeline_report("vgg16", &vgg16(32), &topo);
+        pipeline_report("transformer", &transformer(&TransformerConfig::micro()), &topo);
+    }
+
+    // 8. `--topology <preset>`: close the planner/topology loop — plan
     // both ways on a hierarchical interconnect and show the candidate
     // scoreboard (docs/topology.md).
     if let Some(preset) = topo_preset {

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, SyntheticData};
 use soybean::models::{mlp, MlpConfig};
-use soybean::planner::{classify, Planner, Strategy};
+use soybean::planner::{classify, Planner, PlanFamily};
 use soybean::runtime::{ArtifactRegistry, Client};
 use soybean::sim::{try_simulate, try_simulate_classic_dp, SimConfig};
 
@@ -26,9 +26,9 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Plan for 4 devices; compare the three strategies.
     let sim_cfg = SimConfig::default();
-    for strat in Strategy::all() {
+    for strat in PlanFamily::all() {
         let plan = Planner::try_plan(&g, 2, strat).unwrap();
-        let r = if strat == Strategy::DataParallel {
+        let r = if strat == PlanFamily::DataParallel {
             try_simulate_classic_dp(&g, &plan, &sim_cfg).unwrap()
         } else {
             try_simulate(&g, &plan, &sim_cfg).unwrap()
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let params = init_mlp_params(42, &dims);
     let mut serial =
         SerialTrainer::from_artifact(&client, &reg, "mlp_step_small_pallas", params.clone(), 0.1)?;
-    let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+    let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
     let mut parallel = ParallelTrainer::new(client.clone(), g, plan, &params, 0.1)?;
 
     let mut data = SyntheticData::new(7, dims[0], *dims.last().unwrap());

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use soybean::coordinator::{init_mlp_params, ParallelTrainer, SerialTrainer, SyntheticData};
 use soybean::models::{mlp, MlpConfig};
-use soybean::planner::{classify, Planner, Strategy};
+use soybean::planner::{classify, Planner, PlanFamily};
 use soybean::runtime::{ArtifactRegistry, Client};
 
 fn main() -> anyhow::Result<()> {
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let mut serial = SerialTrainer::from_artifact(&client, &reg, "mlp_step", params.clone(), lr)?;
 
     // Parallel: SOYBEAN's optimal 4-device plan through the engine.
-    let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+    let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
     println!(
         "plan: {} over {} devices, {:.2} MB per step (vs DP {:.2} MB)",
         classify(&g, &plan.tiles),

@@ -132,7 +132,7 @@ mod tests {
     use super::*;
     use crate::coordinator::SyntheticData;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{Planner, Strategy};
+    use crate::planner::{Planner, PlanFamily};
 
     fn client() -> Arc<Client> {
         Arc::new(Client::cpu().expect("PJRT CPU client"))
@@ -195,10 +195,10 @@ mod tests {
         let (x, y) = data.batch(32);
 
         for (strategy, k) in [
-            (Strategy::DataParallel, 1),
-            (Strategy::DataParallel, 2),
-            (Strategy::ModelParallel, 1),
-            (Strategy::Soybean, 2),
+            (PlanFamily::DataParallel, 1),
+            (PlanFamily::DataParallel, 2),
+            (PlanFamily::ModelParallel, 1),
+            (PlanFamily::Soybean, 2),
         ] {
             let params = init_mlp_params(13, &SMALL_DIMS);
             let mut serial =
@@ -232,7 +232,7 @@ mod tests {
         let c = client();
         let cfg = MlpConfig { batch: 32, dims: SMALL_DIMS.to_vec(), bias: true };
         let g = mlp(&cfg);
-        let plan = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
+        let plan = Planner::try_plan(&g, 2, PlanFamily::DataParallel).unwrap();
         let params = init_mlp_params(17, &SMALL_DIMS);
         let mut par = ParallelTrainer::new(c, g, plan, &params, 0.05).unwrap();
         let mut data = SyntheticData::new(21, 64, 10);

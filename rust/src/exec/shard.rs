@@ -98,7 +98,7 @@ pub fn try_build_shard_tasks(g: &Graph, plan: &Plan) -> Result<Vec<ShardTask>, P
 mod tests {
     use super::*;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{baselines, Planner, Strategy};
+    use crate::planner::{baselines, Planner, PlanFamily};
     use crate::tiling::Tile;
 
     #[test]
@@ -156,7 +156,7 @@ mod tests {
             mlp(&MlpConfig::e2e()),
             crate::models::cnn5(16, 6, 4, 32, 10),
         ] {
-            let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+            let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             assert_eq!(tasks.len(), g.ops.len());
             assert_realizable(&g, &tasks);
@@ -169,10 +169,10 @@ mod tests {
         // head under 2+ cuts must not stack two column splits.
         let g = mlp(&MlpConfig { batch: 32, dims: vec![64, 128, 128, 10], bias: true });
         for (strat, k) in [
-            (Strategy::DataParallel, 2),
-            (Strategy::ModelParallel, 1),
-            (Strategy::Soybean, 2),
-            (Strategy::Soybean, 3),
+            (PlanFamily::DataParallel, 2),
+            (PlanFamily::ModelParallel, 1),
+            (PlanFamily::Soybean, 2),
+            (PlanFamily::Soybean, 3),
         ] {
             let plan = Planner::try_plan(&g, k, strat).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
@@ -210,7 +210,7 @@ mod tests {
         // The §5 execution-graph construction covers the new op set.
         let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
         for k in 0..=2 {
-            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
+            let plan = Planner::try_plan(&g, k, PlanFamily::Soybean).unwrap();
             let tasks = build_shard_tasks(&g, &plan);
             assert_eq!(tasks.len(), g.ops.len());
             assert_realizable(&g, &tasks);
@@ -220,7 +220,7 @@ mod tests {
     #[test]
     fn required_layouts_have_k_entries() {
         let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: true });
-        let plan = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
         for task in build_shard_tasks(&g, &plan) {
             assert_eq!(task.produced.len(), 3);
             for r in &task.required_ins {

@@ -8,14 +8,14 @@
 //! wins, by what factor, where the crossovers sit.
 
 use crate::models::{alexnet, cnn5, mlp, vgg16, MlpConfig};
-use crate::planner::{Planner, Strategy};
+use crate::planner::{Planner, PlanFamily};
 use crate::sim::{try_simulate, try_simulate_classic_dp, SimConfig, SimReport};
 use crate::tiling::paper_example;
 
 /// One measured point: strategy × device count.
 #[derive(Debug, Clone)]
 pub struct Point {
-    /// Strategy short name (`"DP"`, `"MP"`, `"SOYBEAN"`).
+    /// PlanFamily short name (`"DP"`, `"MP"`, `"SOYBEAN"`).
     pub strategy: &'static str,
     /// Device count (`2^k`).
     pub devices: usize,
@@ -32,9 +32,9 @@ pub struct Point {
 fn sweep(g: &crate::graph::Graph, ks: &[usize], cfg: &SimConfig) -> Vec<Point> {
     let mut out = Vec::new();
     for &k in ks {
-        for strat in Strategy::all() {
+        for strat in PlanFamily::all() {
             let plan = Planner::try_plan(g, k, strat).unwrap();
-            let r: SimReport = if strat == Strategy::DataParallel {
+            let r: SimReport = if strat == PlanFamily::DataParallel {
                 try_simulate_classic_dp(g, &plan, cfg).unwrap()
             } else {
                 try_simulate(g, &plan, cfg).unwrap()
@@ -111,9 +111,9 @@ pub fn fig10(model: &str, batches: &[usize], cfg: &SimConfig) -> (String, Vec<(u
             "vgg" => vgg16(b),
             other => panic!("unknown model {other}"),
         };
-        let p1 = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
-        let pdp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
-        let psoy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let p1 = Planner::try_plan(&g, 0, PlanFamily::Soybean).unwrap();
+        let pdp = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
+        let psoy = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
         let single = try_simulate(&g, &p1, cfg).unwrap();
         let dp = try_simulate_classic_dp(&g, &pdp, cfg).unwrap();
         let soy = try_simulate(&g, &psoy, cfg).unwrap();
@@ -141,9 +141,9 @@ pub fn example22() -> String {
 
     // The §4 conversion model on the full training graph, 16 devices.
     let gt = mlp(&MlpConfig { batch: 400, dims: vec![300; 6], bias: false });
-    let dp = Planner::try_plan(&gt, 4, Strategy::DataParallel).unwrap();
-    let mp = Planner::try_plan(&gt, 4, Strategy::ModelParallel).unwrap();
-    let soy = Planner::try_plan(&gt, 4, Strategy::Soybean).unwrap();
+    let dp = Planner::try_plan(&gt, 4, PlanFamily::DataParallel).unwrap();
+    let mp = Planner::try_plan(&gt, 4, PlanFamily::ModelParallel).unwrap();
+    let soy = Planner::try_plan(&gt, 4, PlanFamily::Soybean).unwrap();
     let _ = writeln!(s, "§4 conversion-cost model (full training step, k=4):");
     let _ = writeln!(s, "  data parallelism : {:>6.1} MB", dp.total_cost() as f64 / 1e6);
     let _ = writeln!(s, "  model parallelism: {:>6.1} MB", mp.total_cost() as f64 / 1e6);

@@ -22,8 +22,11 @@
 //!   `{R, C, r}`, composition/flattening, ghost-area conversion costs, and
 //!   per-operator aligned tilings (Eq. 2).
 //! - [`planner`] — §4.2.2's one-cut dynamic program, §4.3's recursive k-cut
-//!   algorithm, the pure data-/model-parallel baselines, and a brute-force
-//!   optimality checker.
+//!   algorithm, the pure data-/model-parallel baselines, a brute-force
+//!   optimality checker, and the pipeline axis: [`planner::Strategy`]
+//!   (stage partition × device groups × per-stage tilings × microbatch
+//!   schedule) with its portfolio planner [`planner::plan_strategy`],
+//!   never worse than pure tiling by construction.
 //! - [`exec`] — §5: partitioning each operator into `2^k` sub-operators,
 //!   inserting three-phase tiling conversions, and placing shards on the
 //!   device hierarchy.
@@ -116,6 +119,12 @@ pub mod book {
     /// portfolio.
     #[doc = include_str!("../../docs/topology.md")]
     pub mod topology {}
+
+    /// Pipeline parallelism: the `Strategy` type, stage cells and the
+    /// fused tail, exact microbatch merging, GPipe/1F1B schedules, and
+    /// the pipeline-aware portfolio.
+    #[doc = include_str!("../../docs/pipeline.md")]
+    pub mod pipeline {}
 
     /// Real execution: the threaded SPMD executor, the serial reference
     /// interpreter, and the differential harness between them.

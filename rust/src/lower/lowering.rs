@@ -356,7 +356,7 @@ mod tests {
     use super::*;
     use crate::graph::{append_backward, GraphBuilder, TensorKind};
     use crate::models::{cnn5, mlp, transformer, MlpConfig, TransformerConfig};
-    use crate::planner::{classic_dp_form, eval_plan, Planner, Strategy};
+    use crate::planner::{classic_dp_form, eval_plan, Planner, PlanFamily};
     use crate::sim::{try_simulate, try_simulate_classic_dp};
     use crate::tiling::candidate_tiles;
     use crate::util::rng::Rng;
@@ -368,7 +368,7 @@ mod tests {
     #[test]
     fn serial_plan_lowers_to_pure_compute() {
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 0, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         assert_eq!(p.devices, 1);
         assert_eq!(p.total_bytes(), 0);
@@ -382,23 +382,23 @@ mod tests {
         // The one-theory contract, three ways: lowered per-instruction
         // bytes == simulator-metered bytes == Theorem-1 plan cost, per
         // tier, across the zoo and every strategy.
-        // Strategy sweeps stick to combinations the §5 schedule builder is
+        // PlanFamily sweeps stick to combinations the §5 schedule builder is
         // proven to realize (all strategies on MLP/CNN; the transformer's
         // model-parallel baseline is not a materialization target).
-        let workloads: Vec<(&str, crate::graph::Graph, Vec<Strategy>)> = vec![
-            ("mlp", mlp(&MlpConfig::fig8(64, 64)), Strategy::all().to_vec()),
-            ("cnn", cnn5(64, 24, 4, 64, 10), Strategy::all().to_vec()),
+        let workloads: Vec<(&str, crate::graph::Graph, Vec<PlanFamily>)> = vec![
+            ("mlp", mlp(&MlpConfig::fig8(64, 64)), PlanFamily::all().to_vec()),
+            ("cnn", cnn5(64, 24, 4, 64, 10), PlanFamily::all().to_vec()),
             (
                 "transformer",
                 transformer(&TransformerConfig::tiny()),
-                vec![Strategy::Soybean, Strategy::DataParallel],
+                vec![PlanFamily::Soybean, PlanFamily::DataParallel],
             ),
         ];
         for (name, g, strategies) in &workloads {
             for &strat in strategies {
                 for k in 1..=2 {
                     let plan = Planner::try_plan(g, k, strat).unwrap();
-                    let (p, r) = if strat == Strategy::DataParallel {
+                    let (p, r) = if strat == PlanFamily::DataParallel {
                         (
                             try_lower_forced(g, &plan, &cfg(), &classic_dp_form).unwrap(),
                             try_simulate_classic_dp(g, &plan, &cfg()).unwrap(),
@@ -430,7 +430,7 @@ mod tests {
         // Stock data parallelism's allreduce decomposes into the classic
         // reduce-scatter + all-gather pair on every weight gradient.
         let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 32], bias: false });
-        let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
+        let plan = Planner::try_plan(&g, 1, PlanFamily::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
         let grad_ids: Vec<usize> = g
             .tensors
@@ -462,7 +462,7 @@ mod tests {
         // lowers to the point-to-point SendRecv path at full 2S volume.
         let g = mlp(&MlpConfig { batch: 64, dims: vec![32, 16], bias: false });
         let loss = g.tensors.iter().find(|t| t.rank() == 0).expect("scalar loss");
-        let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
+        let plan = Planner::try_plan(&g, 1, PlanFamily::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
         let m = p
             .transfers
@@ -486,7 +486,7 @@ mod tests {
     #[test]
     fn every_wait_follows_its_start() {
         let g = transformer(&TransformerConfig::tiny());
-        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         for prog in &p.programs {
             let mut started = vec![false; p.transfers.len()];

@@ -27,9 +27,11 @@
 
 mod ir;
 mod lowering;
+mod pipeline;
 
 pub use ir::{CollectiveKind, DeviceProgram, Instr, LoweredProgram, TransferMeta};
 pub use lowering::{gather_realized_bytes, try_lower, try_lower_forced};
+pub use pipeline::{try_lower_strategy, PipelinedProgram, StageTransfer};
 // The panicking variant stays re-exported (deprecated) for one release.
 #[allow(deprecated)]
 pub use lowering::lower;

@@ -1,0 +1,154 @@
+//! Lowering pipelined strategies: per-cell SPMD programs plus explicit
+//! stage-boundary `SendRecv` transfers.
+//!
+//! A [`PipelinedProgram`] is the [`Strategy`] analogue of
+//! [`LoweredProgram`]: one lowered program per cell (each produced by
+//! the existing [`try_lower`] on the cell's microbatch-shaped subgraph
+//! and intra-cell plan) plus one [`StageTransfer`] record per
+//! cross-stage boundary tensor. The byte identity extends across the
+//! stage axis: `total_bytes()` equals
+//! [`Strategy::total_cost`] bit for bit, because each cell program
+//! already equals its cell plan's Theorem-1 cost and the boundary
+//! records carry exactly the strategy's per-microbatch boundary bytes.
+//!
+//! For [`Strategy::single_stage`] the single cell program *is* the
+//! plain `try_lower` output on the original graph — the degenerate path
+//! stays bit-identical.
+
+use crate::graph::{Graph, TensorId};
+use crate::planner::{PlanError, Strategy};
+use crate::sim::SimConfig;
+
+use super::{try_lower, LoweredProgram};
+
+/// One cross-stage boundary transfer: a point-to-point `SendRecv`
+/// between the producing and consuming stage groups, repeated once per
+/// microbatch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageTransfer {
+    /// Tensor id in the original graph.
+    pub tensor: TensorId,
+    /// Producing stage.
+    pub from_stage: usize,
+    /// Consuming stage.
+    pub to_stage: usize,
+    /// Microbatch-shaped bytes per transfer.
+    pub bytes: u64,
+}
+
+/// A strategy compiled into per-cell SPMD programs plus stage-boundary
+/// transfers.
+#[derive(Debug, Clone)]
+pub struct PipelinedProgram {
+    /// Microbatches per step.
+    pub microbatches: usize,
+    /// One lowered program per cell, in the strategy's execution order.
+    pub cells: Vec<LoweredProgram>,
+    /// Cross-stage boundary transfers (per microbatch).
+    pub transfers: Vec<StageTransfer>,
+    /// Tensor labels of the original graph (for dumps and traces).
+    pub tensor_names: Vec<String>,
+}
+
+impl PipelinedProgram {
+    /// Total modeled bytes: per-cell Theorem-1 totals plus boundary
+    /// transfers, once per microbatch. Equals
+    /// [`Strategy::total_cost`] bit for bit.
+    pub fn total_bytes(&self) -> u64 {
+        let per_micro: u64 = self.cells.iter().map(LoweredProgram::total_bytes).sum::<u64>()
+            + self.transfers.iter().map(|t| t.bytes).sum::<u64>();
+        self.microbatches as u64 * per_micro
+    }
+
+    /// Boundary bytes shipped across stage groups for the whole step.
+    pub fn boundary_bytes(&self) -> u64 {
+        self.microbatches as u64 * self.transfers.iter().map(|t| t.bytes).sum::<u64>()
+    }
+
+    /// Structural validation of every cell stream (the split-phase
+    /// discipline of [`LoweredProgram::validate`]).
+    pub fn validate(&self) -> Result<(), PlanError> {
+        for cell in &self.cells {
+            cell.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Compile a strategy into per-cell programs plus boundary transfers.
+///
+/// The single-stage path delegates to [`try_lower`] on the original
+/// graph's clone inside the strategy — bytes, instruction streams, and
+/// transfer metadata all match the plain `Plan` path exactly.
+pub fn try_lower_strategy(
+    g: &Graph,
+    strategy: &Strategy,
+    cfg: &SimConfig,
+) -> Result<PipelinedProgram, PlanError> {
+    let mut cells = Vec::with_capacity(strategy.cells.len());
+    for cell in &strategy.cells {
+        cells.push(try_lower(&cell.graph, &cell.plan, cfg)?);
+    }
+    let transfers = strategy
+        .boundaries
+        .iter()
+        .filter(|b| b.bytes > 0)
+        .map(|b| StageTransfer {
+            tensor: b.tensor,
+            from_stage: strategy.cells[b.from_cell].stage,
+            to_stage: strategy.cells[b.to_cell].stage,
+            bytes: b.bytes,
+        })
+        .collect();
+    Ok(PipelinedProgram {
+        microbatches: strategy.microbatches,
+        cells,
+        transfers,
+        tensor_names: g.tensors.iter().map(|t| t.name.clone()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bfs_levels;
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::{try_k_cut, Schedule};
+
+    fn small_mlp() -> Graph {
+        mlp(&MlpConfig { batch: 16, dims: vec![8, 8, 8], bias: true })
+    }
+
+    /// The single-stage program is the plain `try_lower` output.
+    #[test]
+    fn single_stage_is_bit_identical() {
+        let g = small_mlp();
+        let cfg = SimConfig::default();
+        let plan = try_k_cut(&g, 2).unwrap();
+        let want = try_lower(&g, &plan, &cfg).unwrap();
+        let s = Strategy::single_stage(&g, plan.clone());
+        let pp = try_lower_strategy(&g, &s, &cfg).unwrap();
+        assert_eq!(pp.cells.len(), 1);
+        assert_eq!(pp.transfers.len(), 0);
+        assert_eq!(pp.total_bytes(), want.total_bytes());
+        assert_eq!(pp.total_bytes(), plan.total_cost());
+        assert_eq!(pp.cells[0].programs.len(), want.programs.len());
+        for (a, b) in pp.cells[0].programs.iter().zip(&want.programs) {
+            assert_eq!(a.instrs, b.instrs);
+        }
+    }
+
+    /// The byte identity extends across the stage axis.
+    #[test]
+    fn pipelined_total_matches_strategy_cost() {
+        let g = small_mlp();
+        let cut = bfs_levels(&g).levels.len() / 2;
+        let s = Strategy::try_build(&g, &[cut], 2, 2, Schedule::GPipe).unwrap();
+        let pp = try_lower_strategy(&g, &s, &SimConfig::default()).unwrap();
+        assert_eq!(pp.total_bytes(), s.total_cost());
+        assert!(pp.boundary_bytes() > 0);
+        assert!(pp.validate().is_ok());
+        // Every boundary transfer crosses distinct stages.
+        assert!(pp.transfers.iter().all(|t| t.from_stage != t.to_stage));
+    }
+}

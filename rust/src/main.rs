@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use soybean::figures;
 use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
-use soybean::planner::{classify, Planner, Strategy};
+use soybean::planner::{classify, Planner, PlanFamily};
 use soybean::sim::{try_simulate, SimConfig};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -38,11 +38,11 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn strategy_of(flags: &HashMap<String, String>) -> Strategy {
+fn strategy_of(flags: &HashMap<String, String>) -> PlanFamily {
     match flags.get("strategy").map(String::as_str) {
-        Some("dp") | Some("data") => Strategy::DataParallel,
-        Some("mp") | Some("model") => Strategy::ModelParallel,
-        _ => Strategy::Soybean,
+        Some("dp") | Some("data") => PlanFamily::DataParallel,
+        Some("mp") | Some("model") => PlanFamily::ModelParallel,
+        _ => PlanFamily::Soybean,
     }
 }
 
@@ -130,7 +130,7 @@ fn main() {
         "simulate" => {
             let g = model_graph(&flags);
             let k = get(&flags, "k", 3usize);
-            for strat in Strategy::all() {
+            for strat in PlanFamily::all() {
                 let plan = Planner::try_plan(&g, k, strat).unwrap();
                 let r = try_simulate(&g, &plan, &cfg).unwrap();
                 println!(

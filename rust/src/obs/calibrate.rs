@@ -17,9 +17,14 @@
 //! - **Collectives**: each lowered transfer group (gid) is modeled as
 //!   `Topology::transfer_seconds(cut, pair_bytes)`. Measured comm time is
 //!   the mean per-device wall-clock of the `Wait` + `Send` spans attached
-//!   to the same `(op, tensor)` site; when stacked cuts lower one logical
-//!   conversion into several gids sharing a site, the measured time is
-//!   split across them in proportion to their modeled seconds.
+//!   to the same `(stage, op, tensor)` site; when stacked cuts lower one
+//!   logical conversion into several gids sharing a site, the measured
+//!   time is split across them in proportion to their modeled seconds.
+//! - **Stages**: every join key carries the span's pipeline-stage tag
+//!   (`Span::stage`), so a multi-stage trace keeps per-stage attribution
+//!   — two cells reusing local op id 0 stay two distinct rows. Single-
+//!   stage traces (the only spans the plain executor emits) key
+//!   everything at stage 0 and reproduce the historical join exactly.
 //! - **Bytes reconcile exactly**: the metered collective markers recorded
 //!   by the workers sum to the executor's collective meter, which equals
 //!   the plan's Theorem-1 total bit for bit, and per gid they equal
@@ -37,6 +42,10 @@ use crate::spmd::ExecReport;
 /// Modeled-vs-measured row for one graph op's local kernel.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelDrift {
+    /// Pipeline stage the measured spans carried (0 for single-stage
+    /// steps). Multi-stage traces key drift by `(stage, op)` so the same
+    /// op id in two cells yields two rows.
+    pub stage: usize,
     /// Graph op id.
     pub op: OpId,
     /// Human-readable op name (`LoweredProgram::op_names`).
@@ -52,6 +61,10 @@ pub struct KernelDrift {
 /// Modeled-vs-measured row for one lowered transfer group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CollectiveDrift {
+    /// Pipeline stage of the group's metered markers (0 for single-stage
+    /// steps); with the stage, measured comm joins by `(stage, op,
+    /// tensor)`.
+    pub stage: usize,
     /// Transfer group id (index into `LoweredProgram::transfers`).
     pub gid: usize,
     /// Collective kind name (`all_gather`, `reduce_scatter`, ...).
@@ -109,14 +122,27 @@ impl CalibrationReport {
     #[must_use]
     pub fn worst_offenders(&self, n: usize) -> Vec<(String, f64)> {
         let mut rows: Vec<(String, f64)> = Vec::new();
+        // Stage prefixes only appear on multi-stage rows, so single-stage
+        // reports keep their historical labels.
+        let tag = |stage: usize| if stage > 0 { format!("s{stage} ") } else { String::new() };
         for k in &self.kernels {
             if k.ratio > 0.0 {
-                rows.push((format!("kernel {} ({})", k.op, k.name), k.ratio.max(1.0 / k.ratio)));
+                rows.push((
+                    format!("{}kernel {} ({})", tag(k.stage), k.op, k.name),
+                    k.ratio.max(1.0 / k.ratio),
+                ));
             }
         }
         for c in &self.collectives {
             if c.ratio > 0.0 {
-                let label = format!("collective gid{} {}:{} cut{}", c.gid, c.kind, c.tensor, c.cut);
+                let label = format!(
+                    "{}collective gid{} {}:{} cut{}",
+                    tag(c.stage),
+                    c.gid,
+                    c.kind,
+                    c.tensor,
+                    c.cut
+                );
                 rows.push((label, c.ratio.max(1.0 / c.ratio)));
             }
         }
@@ -139,8 +165,9 @@ impl CalibrationReport {
         s.push_str("  \"kernels\": [\n");
         for (i, k) in self.kernels.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"op\": {}, \"name\": {}, \"modeled_s\": {}, \"measured_s\": {}, \
-                 \"ratio\": {}}}{}\n",
+                "    {{\"stage\": {}, \"op\": {}, \"name\": {}, \"modeled_s\": {}, \
+                 \"measured_s\": {}, \"ratio\": {}}}{}\n",
+                k.stage,
                 k.op,
                 crate::util::bench::json_str(&k.name),
                 k.modeled_s,
@@ -152,9 +179,10 @@ impl CalibrationReport {
         s.push_str("  ],\n  \"collectives\": [\n");
         for (i, c) in self.collectives.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"gid\": {}, \"kind\": \"{}\", \"tensor\": {}, \"op\": {}, \
+                "    {{\"stage\": {}, \"gid\": {}, \"kind\": \"{}\", \"tensor\": {}, \"op\": {}, \
                  \"cut\": {}, \"modeled_bytes\": {}, \"measured_bytes\": {}, \"modeled_s\": {}, \
                  \"measured_s\": {}, \"ratio\": {}}}{}\n",
+                c.stage,
                 c.gid,
                 c.kind,
                 crate::util::bench::json_str(&c.tensor),
@@ -258,23 +286,28 @@ pub fn calibrate(
             *modeled_op.entry(*op).or_insert(0.0) += *seconds;
         }
     }
-    let mut meas_op: BTreeMap<OpId, f64> = BTreeMap::new();
+    let mut meas_op: BTreeMap<(usize, OpId), f64> = BTreeMap::new();
     let mut per_device_compute = vec![0.0f64; devices];
     for s in &trace.spans {
         if s.kind == SpanKind::Compute {
-            *meas_op.entry(s.op).or_insert(0.0) += s.dur_s();
+            *meas_op.entry((s.stage, s.op)).or_insert(0.0) += s.dur_s();
             per_device_compute[s.device] += s.dur_s();
         }
     }
-    let mut ops: Vec<OpId> = modeled_op.keys().chain(meas_op.keys()).copied().collect();
-    ops.sort_unstable();
-    ops.dedup();
-    let kernels: Vec<KernelDrift> = ops
+    // Row keys: every measured (stage, op) plus stage-0 rows for ops the
+    // model priced but the trace never measured. Single-stage traces
+    // reduce to the historical one-row-per-op join.
+    let mut keys: Vec<(usize, OpId)> =
+        modeled_op.keys().map(|&op| (0usize, op)).chain(meas_op.keys().copied()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let kernels: Vec<KernelDrift> = keys
         .into_iter()
-        .map(|op| {
+        .map(|(stage, op)| {
             let modeled_s = modeled_op.get(&op).copied().unwrap_or(0.0);
-            let measured_s = meas_op.get(&op).copied().unwrap_or(0.0) / nd;
+            let measured_s = meas_op.get(&(stage, op)).copied().unwrap_or(0.0) / nd;
             KernelDrift {
+                stage,
                 op,
                 name: program.op_names[op].clone(),
                 modeled_s,
@@ -284,20 +317,27 @@ pub fn calibrate(
         })
         .collect();
 
-    // Measured comm wall-clock by (op, tensor) site: Wait + Send spans,
-    // mean per device.
-    let mut comm: BTreeMap<(OpId, usize), f64> = BTreeMap::new();
+    // Measured comm wall-clock by (stage, op, tensor) site: Wait + Send
+    // spans, mean per device. The stage key keeps multi-stage traces
+    // from smearing two cells' stalls onto one site.
+    let mut comm: BTreeMap<(usize, OpId, usize), f64> = BTreeMap::new();
     for s in &trace.spans {
         if matches!(s.kind, SpanKind::Wait | SpanKind::Send) {
-            *comm.entry((s.op, slot_tensor(g, s.op, s.slot))).or_insert(0.0) += s.dur_s();
+            *comm.entry((s.stage, s.op, slot_tensor(g, s.op, s.slot))).or_insert(0.0) +=
+                s.dur_s();
         }
     }
 
-    // Metered bytes per transfer group from the collective markers.
+    // Metered bytes per transfer group from the collective markers; the
+    // first marker also pins the group's stage tag.
     let mut gid_bytes = vec![0u64; program.transfers.len()];
+    let mut gid_stage = vec![0usize; program.transfers.len()];
     let mut metered_span_bytes = 0u64;
     for s in &trace.spans {
         if let Some(gid) = s.gid {
+            if gid_bytes[gid] == 0 {
+                gid_stage[gid] = s.stage;
+            }
             gid_bytes[gid] += s.bytes;
             metered_span_bytes += s.bytes;
         }
@@ -319,7 +359,8 @@ pub fn calibrate(
         .enumerate()
         .map(|(gid, m)| {
             let key = (m.op, m.tensor);
-            let site_measured = comm.get(&key).copied().unwrap_or(0.0) / nd;
+            let stage = gid_stage[gid];
+            let site_measured = comm.get(&(stage, m.op, m.tensor)).copied().unwrap_or(0.0) / nd;
             let share = if site_modeled[&key] > 0.0 {
                 modeled_gid[gid] / site_modeled[&key]
             } else {
@@ -328,6 +369,7 @@ pub fn calibrate(
             let modeled_s = modeled_gid[gid];
             let measured_s = site_measured * share;
             CollectiveDrift {
+                stage,
                 gid,
                 kind: m.kind.name(),
                 tensor: program.tensor_names[m.tensor].clone(),
@@ -363,14 +405,14 @@ mod tests {
     use crate::graph::seed_values;
     use crate::lower::try_lower;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{Planner, Strategy};
+    use crate::planner::{Planner, PlanFamily};
     use crate::sim::{try_run_program, SimConfig};
     use crate::spmd::{execute_with, ExecOptions};
 
     #[test]
     fn calibration_joins_a_real_traced_step() {
         let g = mlp(&MlpConfig { batch: 8, dims: vec![6, 8, 6], bias: true });
-        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).expect("plan");
+        let plan = Planner::try_plan(&g, 1, PlanFamily::Soybean).expect("plan");
         let program = try_lower(&g, &plan, &SimConfig::default()).expect("lower");
         let topo = Topology::from_sim(&SimConfig::default(), 1);
         let init = seed_values(&g, 3);
@@ -405,7 +447,7 @@ mod tests {
     #[test]
     fn untraced_spans_yield_zero_measurements_but_full_model_rows() {
         let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
-        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).expect("plan");
+        let plan = Planner::try_plan(&g, 1, PlanFamily::Soybean).expect("plan");
         let program = try_lower(&g, &plan, &SimConfig::default()).expect("lower");
         let topo = Topology::from_sim(&SimConfig::default(), 1);
         let modeled = try_run_program(&program, &topo).expect("engine");
@@ -416,5 +458,38 @@ mod tests {
         // Zero-measurement rows are skipped by the offender ranking only
         // when the *model* prices them at zero; here ratios are 0.0.
         assert!(cal.collectives.iter().all(|c| c.ratio == 0.0));
+    }
+
+    #[test]
+    fn multi_stage_spans_keep_per_stage_rows() {
+        use crate::obs::trace::Span;
+
+        let g = mlp(&MlpConfig { batch: 8, dims: vec![4, 4], bias: false });
+        let plan = Planner::try_plan(&g, 1, PlanFamily::Soybean).expect("plan");
+        let program = try_lower(&g, &plan, &SimConfig::default()).expect("lower");
+        let topo = Topology::from_sim(&SimConfig::default(), 1);
+        let modeled = try_run_program(&program, &topo).expect("engine");
+        // The same op id measured under two stage tags: two kernel rows.
+        let mk = |stage: usize, dur: f64| Span {
+            device: 0,
+            op: 0,
+            kind: SpanKind::Compute,
+            slot: 0,
+            gid: None,
+            start_s: 0.0,
+            end_s: dur,
+            bytes: 0,
+            stage,
+        };
+        let trace = StepTrace::merge(vec![vec![mk(0, 1e-3), mk(1, 3e-3)]]);
+        let cal = calibrate(&g, &program, &topo, &modeled, &trace);
+        let s0: Vec<_> = cal.kernels.iter().filter(|k| k.op == 0 && k.stage == 0).collect();
+        let s1: Vec<_> = cal.kernels.iter().filter(|k| k.op == 0 && k.stage == 1).collect();
+        assert_eq!((s0.len(), s1.len()), (1, 1));
+        assert!(s1[0].measured_s > s0[0].measured_s);
+        // Stage-1 rows carry the stage prefix in offender labels and the
+        // stage field in JSON.
+        assert!(cal.to_json().contains("\"stage\": 1"));
+        assert!(cal.worst_offenders(20).iter().any(|(l, _)| l.starts_with("s1 ")));
     }
 }

@@ -28,6 +28,8 @@ pub mod metrics;
 pub mod trace;
 
 pub use calibrate::{calibrate, CalibrationReport, CollectiveDrift, KernelDrift, ProfileReport};
-pub use chrome::{chrome_trace_json, measured_trace_json, overlay_trace_json};
+pub use chrome::{
+    chrome_trace_json, measured_trace_json, overlay_trace_json, pipeline_trace_json,
+};
 pub use metrics::{HistSummary, Histogram, Metrics, MetricsSnapshot};
 pub use trace::{Span, SpanContext, SpanKind, StepTrace, TraceBuf, OUT_SLOT};

@@ -95,6 +95,12 @@ pub struct Span {
     /// Payload bytes: received bytes for waits, sent bytes for sends, the
     /// instruction's Theorem-1 bytes for collective markers, 0 for compute.
     pub bytes: u64,
+    /// Pipeline stage the span belongs to (0 for single-stage steps).
+    /// Stamped from [`ExecOptions::stage`](crate::spmd::ExecOptions) so
+    /// multi-stage traces keep per-stage attribution — the calibration
+    /// report keys drift by `(stage, op, tensor)` and the Chrome overlay
+    /// renders one lane group per stage.
+    pub stage: usize,
 }
 
 impl Span {
@@ -207,6 +213,25 @@ impl StepTrace {
     pub fn collective_bytes(&self) -> u64 {
         self.spans.iter().filter(|s| s.kind.is_collective()).map(|s| s.bytes).sum()
     }
+
+    /// Number of pipeline stages the trace spans (1 + the highest stage
+    /// tag; 1 for every single-stage step).
+    #[must_use]
+    pub fn stage_count(&self) -> usize {
+        self.spans.iter().map(|s| s.stage + 1).max().unwrap_or(1)
+    }
+
+    /// Busy seconds attributed to each stage (indexed by stage): the sum
+    /// of wall-clock span durations whose `stage` tag matches. The
+    /// multi-stage attribution the serving stats and drift reports key by.
+    #[must_use]
+    pub fn stage_busy_s(&self) -> Vec<f64> {
+        let mut busy = vec![0.0; self.stage_count()];
+        for s in &self.spans {
+            busy[s.stage] += s.dur_s();
+        }
+        busy
+    }
 }
 
 #[cfg(test)]
@@ -215,7 +240,7 @@ mod tests {
     use std::time::Duration;
 
     fn span(device: usize, kind: SpanKind, start_s: f64, end_s: f64, bytes: u64) -> Span {
-        Span { device, op: 0, kind, slot: 0, gid: None, start_s, end_s, bytes }
+        Span { device, op: 0, kind, slot: 0, gid: None, start_s, end_s, bytes, stage: 0 }
     }
 
     #[test]
@@ -256,6 +281,7 @@ mod tests {
             start_s: t0,
             end_s: buf.now(),
             bytes: 16,
+            stage: 0,
         });
         let ctx = buf.last_context().expect("one span recorded");
         assert_eq!((ctx.op, ctx.slot), (7, 1));

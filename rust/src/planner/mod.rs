@@ -17,12 +17,17 @@
 //! - [`topology`] — topology-aware planning: the weighted (seconds) DP
 //!   objective plus the simulator-scored candidate portfolio behind
 //!   [`plan_topology_aware`] (docs/topology.md).
+//! - [`strategy`] — pipeline-stage strategies: [`Strategy`] generalizes
+//!   [`Plan`] with a stage partition of the levelized graph, and
+//!   [`plan_strategy`] scores {tiling, pipeline, tiling×pipeline}
+//!   candidates with the same engine scoreboard (docs/pipeline.md).
 
 pub mod baselines;
 pub mod bruteforce;
 mod kcut;
 mod onecut;
 pub mod reference;
+pub mod strategy;
 pub mod topology;
 
 pub use kcut::{
@@ -30,6 +35,10 @@ pub use kcut::{
     try_k_cut, try_k_cut_weighted, validate_plan, Plan,
 };
 pub use onecut::{price, try_one_cut, OneCutPlan, OneCutSolver, PlanError};
+pub use strategy::{
+    batch_carrying, pick_microbatches, plan_strategy, stage_cuts, Boundary, Cell, Phase,
+    Schedule, StageSpec, Strategy, StrategyPlan,
+};
 pub use topology::{
     modeled_step_s, try_plan_topology_aware, CandidateScore, TopologyModel, TopologyPlan,
 };
@@ -46,7 +55,7 @@ use crate::tiling::TileSeq;
 
 /// Which planning strategy to use — the three lines of every figure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Strategy {
+pub enum PlanFamily {
     /// SOYBEAN's optimal k-cut tiling.
     Soybean,
     /// Pure data parallelism (`T_data`).
@@ -55,19 +64,19 @@ pub enum Strategy {
     ModelParallel,
 }
 
-impl Strategy {
+impl PlanFamily {
     /// Short display name (`"DP"`, `"MP"`, `"SOYBEAN"`).
     pub fn name(&self) -> &'static str {
         match self {
-            Strategy::Soybean => "SOYBEAN",
-            Strategy::DataParallel => "DP",
-            Strategy::ModelParallel => "MP",
+            PlanFamily::Soybean => "SOYBEAN",
+            PlanFamily::DataParallel => "DP",
+            PlanFamily::ModelParallel => "MP",
         }
     }
 
     /// Every strategy, baselines first (figure line order).
-    pub fn all() -> [Strategy; 3] {
-        [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean]
+    pub fn all() -> [PlanFamily; 3] {
+        [PlanFamily::DataParallel, PlanFamily::ModelParallel, PlanFamily::Soybean]
     }
 }
 
@@ -78,7 +87,7 @@ impl Planner {
     /// Produce a k-cut plan for `2^k` devices under the given strategy.
     /// Panics on planner failure.
     #[deprecated(note = "use `Planner::try_plan` and handle the `PlanError`")]
-    pub fn plan(g: &Graph, k: usize, strategy: Strategy) -> Plan {
+    pub fn plan(g: &Graph, k: usize, strategy: PlanFamily) -> Plan {
         Planner::try_plan(g, k, strategy).expect("planning failed")
     }
 
@@ -89,20 +98,20 @@ impl Planner {
     ///
     /// ```
     /// use soybean::models::{mlp, MlpConfig};
-    /// use soybean::planner::{Planner, Strategy};
+    /// use soybean::planner::{Planner, PlanFamily};
     ///
     /// let g = mlp(&MlpConfig { batch: 128, dims: vec![64, 64], bias: false });
-    /// let soy = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
-    /// let dp = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
+    /// let soy = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
+    /// let dp = Planner::try_plan(&g, 2, PlanFamily::DataParallel).unwrap();
     /// assert_eq!(soy.devices(), 4);
     /// // The optimum never moves more bytes than a fixed baseline.
     /// assert!(soy.total_cost() <= dp.total_cost());
     /// ```
-    pub fn try_plan(g: &Graph, k: usize, strategy: Strategy) -> Result<Plan, PlanError> {
+    pub fn try_plan(g: &Graph, k: usize, strategy: PlanFamily) -> Result<Plan, PlanError> {
         Ok(match strategy {
-            Strategy::Soybean => try_k_cut(g, k)?,
-            Strategy::DataParallel => baselines::data_parallel(g, k),
-            Strategy::ModelParallel => baselines::model_parallel(g, k),
+            PlanFamily::Soybean => try_k_cut(g, k)?,
+            PlanFamily::DataParallel => baselines::data_parallel(g, k),
+            PlanFamily::ModelParallel => baselines::model_parallel(g, k),
         })
     }
 }

@@ -1,0 +1,830 @@
+//! Pipeline-stage strategies: the inter-op parallelism axis layered on
+//! top of Theorem-1 tiling.
+//!
+//! A [`Strategy`] generalizes a [`Plan`]: it partitions the levelized
+//! graph ([`crate::graph::bfs_levels`]) into contiguous **pipeline
+//! stages**, assigns each stage a contiguous device group, and plans an
+//! intra-op tiling *within* each stage's group with the existing k-cut
+//! DP. [`Strategy::single_stage`] is the degenerate case — one stage on
+//! the full device set — and is bit-identical to the plain `Plan` path
+//! end to end (modeled bytes, simulated step, executed output), which is
+//! what lets every existing call site migrate mechanically.
+//!
+//! ## Stages and cells
+//!
+//! The BFS levelization is *undirected*, so the forward and backward
+//! operators of the same layers land in the same level (they are
+//! adjacent through the shared activations and weights). A contiguous
+//! level range is therefore a classic pipeline stage: it owns a layer
+//! span's forward **and** backward work. Within stage `s` the ops split
+//! into two **cells** by data dependence:
+//!
+//! - the *forward cell* `F_s`: ops with no transitive dependency on any
+//!   later stage;
+//! - the *backward cell* `B_s`: the rest (they wait on gradients flowing
+//!   back from stage `s+1`).
+//!
+//! The last stage has no later stage to wait on, so its backward work
+//! fuses into its (single) cell. Cells execute in the order
+//! `F_0 … F_{S-1}, B_{S-2} … B_0`; [`Strategy::try_build`] verifies that
+//! every producer→consumer edge respects this order and rejects the
+//! partition otherwise ([`PlanError::MalformedPlan`]).
+//!
+//! ## Microbatching
+//!
+//! Each cell's subgraph is **rebatched**: every batch-carrying tensor
+//! (see [`batch_carrying`]) has its leading axis divided by the
+//! microbatch count `m`, and the step runs the cell sequence once per
+//! microbatch. Per-microbatch activation gradients come out scaled by
+//! `m` relative to the serial graph (the loss is a *mean* over the
+//! microbatch), so the executor's merge divides them back; weight
+//! gradients, updated weights and the scalar loss are linear/affine in
+//! that mean, so averaging the per-microbatch values reproduces the
+//! serial step exactly — these identities are what keeps the pipelined
+//! differential gate at 1e-5 against [`crate::graph::eval_serial`].
+//!
+//! ## Cost accounting
+//!
+//! [`Strategy::total_cost`] extends Theorem 1 across the stage axis:
+//! `m × (Σ_cells intra-cell k-cut cost + Σ cross-stage boundary bytes)`.
+//! Boundary tensors cross between device groups once per microbatch as
+//! `SendRecv` transfers; same-stage forward→backward handoffs are local
+//! stashes and cost zero wire bytes. The lowered
+//! [`crate::lower::PipelinedProgram`] and the executor's byte meter both
+//! reconcile against this total bit for bit.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{bfs_levels, Graph, Levels, OpId, OpKind, TensorId, TensorKind};
+use crate::sim::Topology;
+
+use super::topology::{try_plan_topology_aware, CandidateScore, TopologyPlan};
+use super::{try_k_cut, Plan, PlanError};
+
+/// Microbatch schedule flavors for a pipelined step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// All forward microbatches, then all backward (GPipe).
+    GPipe,
+    /// One-forward-one-backward steady state with a bounded number of
+    /// in-flight microbatches per stage (PipeDream-style 1F1B).
+    OneF1B,
+}
+
+impl Schedule {
+    /// Lowercase display name (`"gpipe"` / `"1f1b"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::GPipe => "gpipe",
+            Schedule::OneF1B => "1f1b",
+        }
+    }
+
+    /// Both schedules, GPipe first.
+    pub fn all() -> [Schedule; 2] {
+        [Schedule::GPipe, Schedule::OneF1B]
+    }
+}
+
+/// Which half of a stage's work a cell holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Ops with no transitive dependency on later stages.
+    Forward,
+    /// Ops waiting on gradients from the next stage.
+    Backward,
+}
+
+impl Phase {
+    /// Short display name (`"fwd"` / `"bwd"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Forward => "fwd",
+            Phase::Backward => "bwd",
+        }
+    }
+}
+
+/// One pipeline stage: a contiguous level range on a contiguous device
+/// group.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Stage index (0 = the stage holding the model input).
+    pub stage: usize,
+    /// First level (inclusive) of this stage's range.
+    pub level_lo: usize,
+    /// One past the last level of this stage's range.
+    pub level_hi: usize,
+    /// First device of this stage's contiguous group.
+    pub device_lo: usize,
+    /// Cuts of the intra-stage tiling (the group spans `2^k` devices).
+    pub k: usize,
+}
+
+impl StageSpec {
+    /// Devices in this stage's group.
+    pub fn devices(&self) -> usize {
+        1 << self.k
+    }
+}
+
+/// One schedulable unit: a stage's forward or backward subgraph,
+/// rebatched to microbatch shape, with its own intra-op tiling plan.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// The stage this cell belongs to.
+    pub stage: usize,
+    /// Forward or backward half (the last stage's single cell is
+    /// `Forward` — its backward work fuses in).
+    pub phase: Phase,
+    /// The microbatch-shaped local subgraph.
+    pub graph: Graph,
+    /// Intra-cell tiling plan on the stage's device group.
+    pub plan: Plan,
+    /// Local op index → op id in the original graph.
+    pub ops: Vec<OpId>,
+    /// Local tensor index → tensor id in the original graph.
+    pub tensors: Vec<TensorId>,
+}
+
+impl Cell {
+    /// Display label, e.g. `"s0.fwd"`.
+    pub fn label(&self) -> String {
+        format!("s{}.{}", self.stage, self.phase.name())
+    }
+}
+
+/// A tensor produced in one cell and consumed in another.
+#[derive(Debug, Clone)]
+pub struct Boundary {
+    /// Tensor id in the original graph.
+    pub tensor: TensorId,
+    /// Producing cell (index into [`Strategy::cells`]).
+    pub from_cell: usize,
+    /// Consuming cell.
+    pub to_cell: usize,
+    /// Microbatch-shaped bytes crossing the stage boundary — zero when
+    /// both cells share a stage (a local activation stash, no wire).
+    pub bytes: u64,
+}
+
+impl Boundary {
+    /// True for same-stage forward→backward handoffs (no wire traffic).
+    pub fn is_stash(&self) -> bool {
+        self.bytes == 0
+    }
+}
+
+/// A generalized execution plan: pipeline stages × intra-stage tiling.
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    /// Total cuts across the whole device set (`2^k` devices).
+    pub k: usize,
+    /// Microbatches per step (1 = no microbatching).
+    pub microbatches: usize,
+    /// The microbatch schedule the step runs under.
+    pub schedule: Schedule,
+    /// The stages, in pipeline order.
+    pub stages: Vec<StageSpec>,
+    /// The cells, in execution order `F_0 … F_{S-1}, B_{S-2} … B_0`.
+    pub cells: Vec<Cell>,
+    /// Every cross-cell tensor handoff (stashes and wire transfers).
+    pub boundaries: Vec<Boundary>,
+}
+
+impl Strategy {
+    /// The degenerate strategy: one stage spanning every level on the
+    /// full device set, running the given plan. Bit-identical to the
+    /// plain `Plan` path: same Theorem-1 total, same lowered program,
+    /// same executed output.
+    pub fn single_stage(g: &Graph, plan: Plan) -> Strategy {
+        let levels = bfs_levels(g).levels.len();
+        let k = plan.k;
+        Strategy {
+            k,
+            microbatches: 1,
+            schedule: Schedule::GPipe,
+            stages: vec![StageSpec { stage: 0, level_lo: 0, level_hi: levels, device_lo: 0, k }],
+            cells: vec![Cell {
+                stage: 0,
+                phase: Phase::Forward,
+                graph: g.clone(),
+                plan,
+                ops: (0..g.ops.len()).collect(),
+                tensors: (0..g.tensors.len()).collect(),
+            }],
+            boundaries: Vec::new(),
+        }
+    }
+
+    /// Whether this is the degenerate single-stage strategy.
+    pub fn is_single_stage(&self) -> bool {
+        self.stages.len() == 1
+    }
+
+    /// Number of pipeline stages.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Devices the strategy spans (`2^k`).
+    pub fn devices(&self) -> usize {
+        1 << self.k
+    }
+
+    /// Wire bytes crossing stage boundaries, per microbatch.
+    pub fn boundary_bytes(&self) -> u64 {
+        self.boundaries.iter().map(|b| b.bytes).sum()
+    }
+
+    /// The strategy's modeled communication total: Theorem-1 intra-cell
+    /// cost plus cross-stage boundary bytes, once per microbatch. For
+    /// [`Strategy::single_stage`] this equals `plan.total_cost()` bit
+    /// for bit.
+    pub fn total_cost(&self) -> u64 {
+        let per_micro: u64 = self.cells.iter().map(|c| c.plan.total_cost()).sum::<u64>()
+            + self.boundary_bytes();
+        self.microbatches as u64 * per_micro
+    }
+
+    /// Display labels for the cells, in execution order.
+    pub fn cell_labels(&self) -> Vec<String> {
+        self.cells.iter().map(Cell::label).collect()
+    }
+
+    /// Build a pipelined strategy from explicit stage cuts.
+    ///
+    /// `cuts` are the interior level indices where a new stage starts
+    /// (`cuts.len() + 1` stages); `k` is the total cut count (`2^k`
+    /// devices split evenly across the stages, so the stage count must
+    /// be a power of two ≤ `2^k`); `microbatches` must divide every
+    /// batch-carrying tensor's leading axis. Fails with
+    /// [`PlanError::MalformedPlan`] when the partition is not
+    /// order-feasible or not microbatchable, and propagates intra-cell
+    /// planner errors.
+    pub fn try_build(
+        g: &Graph,
+        cuts: &[usize],
+        k: usize,
+        microbatches: usize,
+        schedule: Schedule,
+    ) -> Result<Strategy, PlanError> {
+        let malformed = |reason: String| Err(PlanError::MalformedPlan { reason });
+        let levels = bfs_levels(g);
+        let n_levels = levels.levels.len();
+        let s_count = cuts.len() + 1;
+        if !s_count.is_power_of_two() || s_count > (1 << k) {
+            return malformed(format!("{s_count} stages cannot split 2^{k} devices evenly"));
+        }
+        if cuts.windows(2).any(|w| w[0] >= w[1])
+            || cuts.iter().any(|&c| c == 0 || c >= n_levels)
+        {
+            return malformed(format!("stage cuts {cuts:?} are not interior to {n_levels} levels"));
+        }
+        if microbatches == 0 || !microbatches.is_power_of_two() {
+            return malformed(format!("{microbatches} microbatches (must be a power of two)"));
+        }
+        let k_stage = k - s_count.trailing_zeros() as usize;
+
+        // Stage of every level, then of every op.
+        let mut stage_of_level = vec![0usize; n_levels];
+        for (l, slot) in stage_of_level.iter_mut().enumerate() {
+            *slot = cuts.iter().filter(|&&c| c <= l).count();
+        }
+        let mut stage_of_op = vec![0usize; g.ops.len()];
+        for (l, ops) in levels.levels.iter().enumerate() {
+            for &u in ops {
+                stage_of_op[u] = stage_of_level[l];
+            }
+        }
+
+        // Transitive "highest stage this op depends on": producers come
+        // before consumers in topo order, so one forward sweep suffices.
+        let order = g.topo_order();
+        let mut need = vec![0usize; g.ops.len()];
+        for &u in &order {
+            let mut n = stage_of_op[u];
+            for &t in &g.ops[u].inputs {
+                if let Some(v) = g.producer(t) {
+                    n = n.max(need[v]);
+                }
+            }
+            need[u] = n;
+        }
+
+        // Cell of every op, in execution order F_0..F_{S-1}, B_{S-2}..B_0.
+        let cell_slots = 2 * s_count - 1;
+        let cell_of_op: Vec<usize> = (0..g.ops.len())
+            .map(|u| {
+                let s = stage_of_op[u];
+                if need[u] > s { 2 * (s_count - 1) - s } else { s }
+            })
+            .collect();
+
+        // Order feasibility: every edge must flow forward in cell order.
+        for op in &g.ops {
+            for &t in &op.inputs {
+                if let Some(v) = g.producer(t) {
+                    if cell_of_op[v] > cell_of_op[op.id] {
+                        return malformed(format!(
+                            "edge `{}` -> `{}` runs against the cell order at cuts {cuts:?}",
+                            g.ops[v].name, op.name
+                        ));
+                    }
+                }
+            }
+        }
+
+        // Microbatch shapes.
+        let carrying = batch_carrying(g);
+        let m = microbatches;
+        for t in &g.tensors {
+            if carrying[t.id] && t.shape[0] % m != 0 {
+                return malformed(format!(
+                    "tensor `{}` batch axis {} not divisible by {m} microbatches",
+                    t.name, t.shape[0]
+                ));
+            }
+        }
+        let micro_shape = |t: TensorId| -> Vec<usize> {
+            let mut s = g.tensors[t].shape.clone();
+            if carrying[t] {
+                s[0] /= m;
+            }
+            s
+        };
+
+        // Materialize the non-empty cells (execution order preserved).
+        let mut cells = Vec::new();
+        let mut cell_index = vec![usize::MAX; cell_slots];
+        for c in 0..cell_slots {
+            let ops: Vec<OpId> = order.iter().copied().filter(|&u| cell_of_op[u] == c).collect();
+            if ops.is_empty() {
+                continue;
+            }
+            let stage = if c < s_count { c } else { 2 * (s_count - 1) - c };
+            let phase = if c < s_count { Phase::Forward } else { Phase::Backward };
+            let mut local_of: BTreeMap<TensorId, usize> = BTreeMap::new();
+            let mut tensors = Vec::new();
+            let mut touch = |t: TensorId, tensors: &mut Vec<TensorId>| {
+                *local_of.entry(t).or_insert_with(|| {
+                    tensors.push(t);
+                    tensors.len() - 1
+                })
+            };
+            let mut local_ops = Vec::with_capacity(ops.len());
+            for (li, &u) in ops.iter().enumerate() {
+                let op = &g.ops[u];
+                let mut lop = op.clone();
+                lop.id = li;
+                lop.inputs = op.inputs.iter().map(|&t| touch(t, &mut tensors)).collect();
+                lop.outputs = op.outputs.iter().map(|&t| touch(t, &mut tensors)).collect();
+                local_ops.push(lop);
+            }
+            let local_tensors = tensors
+                .iter()
+                .enumerate()
+                .map(|(li, &t)| {
+                    let mut info = g.tensors[t].clone();
+                    info.id = li;
+                    info.shape = micro_shape(t);
+                    info
+                })
+                .collect();
+            let graph = Graph { tensors: local_tensors, ops: local_ops };
+            let plan = try_k_cut(&graph, k_stage)?;
+            cell_index[c] = cells.len();
+            cells.push(Cell { stage, phase, graph, plan, ops, tensors });
+        }
+
+        // Cross-cell handoffs: one boundary per (tensor, consuming cell).
+        let mut boundaries = Vec::new();
+        for t in &g.tensors {
+            let Some(v) = g.producer(t.id) else { continue };
+            let from = cell_index[cell_of_op[v]];
+            let mut seen = Vec::new();
+            for u in g.consumers(t.id) {
+                let to = cell_index[cell_of_op[u]];
+                if to == from || seen.contains(&to) {
+                    continue;
+                }
+                seen.push(to);
+                let cross_stage = cells[from].stage != cells[to].stage;
+                let bytes = if cross_stage {
+                    micro_shape(t.id).iter().map(|&d| d as u64).product::<u64>().max(1)
+                        * g.tensors[t.id].dtype_bytes as u64
+                } else {
+                    0
+                };
+                boundaries.push(Boundary { tensor: t.id, from_cell: from, to_cell: to, bytes });
+            }
+        }
+
+        let stages = (0..s_count)
+            .map(|s| StageSpec {
+                stage: s,
+                level_lo: if s == 0 { 0 } else { cuts[s - 1] },
+                level_hi: if s == s_count - 1 { n_levels } else { cuts[s] },
+                device_lo: s << k_stage,
+                k: k_stage,
+            })
+            .collect();
+
+        Ok(Strategy { k, microbatches: m, schedule, stages, cells, boundaries })
+    }
+}
+
+/// Which tensors carry the mini-batch along their leading axis.
+///
+/// Producerless tensors carry iff they are the model input or the
+/// labels; the flag then propagates through each operator: most ops
+/// preserve their first operand's batch axis, while the batch-reducing
+/// ops (weight-gradient matmuls/convolutions, the mean loss, column
+/// reductions, the SGD update) drop it. This is the rebatching rule the
+/// microbatch slicer, the cell builder, and the executor's merge all
+/// share.
+pub fn batch_carrying(g: &Graph) -> Vec<bool> {
+    let mut carry = vec![false; g.tensors.len()];
+    for t in &g.tensors {
+        if g.producer(t.id).is_none() {
+            carry[t.id] =
+                matches!(t.kind, TensorKind::Input | TensorKind::Label) && !t.shape.is_empty();
+        }
+    }
+    for &u in &g.topo_order() {
+        let op = &g.ops[u];
+        let c = match op.kind {
+            OpKind::Conv2dBwdFilter { .. }
+            | OpKind::SoftmaxXent
+            | OpKind::SgdUpdate
+            | OpKind::LayerNormGammaGrad
+            | OpKind::ReduceSumRows => false,
+            OpKind::MatMul { ta, .. } => !ta && carry[op.inputs[0]],
+            _ => carry[op.inputs[0]],
+        };
+        for &t in &op.outputs {
+            carry[t] = c && !g.tensors[t].shape.is_empty();
+        }
+    }
+    carry
+}
+
+/// The largest power-of-two microbatch count ≤ `target` that divides
+/// every batch-carrying tensor's leading axis (1 when nothing divides).
+pub fn pick_microbatches(g: &Graph, target: usize) -> usize {
+    let carrying = batch_carrying(g);
+    let mut m = target.max(1).next_power_of_two();
+    if m > target {
+        m /= 2;
+    }
+    while m > 1 {
+        let ok = g
+            .tensors
+            .iter()
+            .all(|t| !carrying[t.id] || t.shape[0] % m == 0);
+        if ok {
+            return m;
+        }
+        m /= 2;
+    }
+    1
+}
+
+/// A scored strategy: the winner of [`plan_strategy`]'s portfolio.
+#[derive(Debug, Clone)]
+pub struct StrategyPlan {
+    /// The fastest strategy found (single-stage tiling when nothing
+    /// pipelined beats it).
+    pub strategy: Strategy,
+    /// Name of the winning candidate (`"tiling"`, `"gpipe-2"`, …).
+    pub chosen: &'static str,
+    /// The winner's engine-simulated step (seconds).
+    pub step_s: f64,
+    /// The pure-tiling candidate's step — `step_s` never exceeds this.
+    pub tiling_step_s: f64,
+    /// The underlying topology-aware tiling plan (the portfolio's seed).
+    pub tiling: TopologyPlan,
+    /// Every candidate scored, portfolio order (tiling first).
+    pub scores: Vec<CandidateScore>,
+    /// The winner's pipeline simulation report.
+    pub report: crate::sim::PipelineReport,
+}
+
+fn candidate_name(stages: usize, schedule: Schedule) -> &'static str {
+    match (stages, schedule) {
+        (2, Schedule::GPipe) => "gpipe-2",
+        (2, Schedule::OneF1B) => "1f1b-2",
+        (4, Schedule::GPipe) => "gpipe-4",
+        (4, Schedule::OneF1B) => "1f1b-4",
+        _ => "pipeline",
+    }
+}
+
+/// Stage-partition DP: choose `s_count - 1` interior level cuts
+/// minimizing the byte objective — per-stage intra-op k-cut cost on the
+/// stage's (smaller) group plus boundary bytes at every cut — seeded by
+/// the existing odometer DP on each candidate level range. This is the
+/// *seed* objective; [`plan_strategy`] re-scores the surviving partition
+/// with the event engine's schedule simulation.
+pub fn stage_cuts(
+    g: &Graph,
+    levels: &Levels,
+    s_count: usize,
+    k_stage: usize,
+    microbatches: usize,
+) -> Result<Vec<usize>, PlanError> {
+    let n = levels.levels.len();
+    if n < s_count {
+        return Err(PlanError::MalformedPlan {
+            reason: format!("{n} levels cannot form {s_count} stages"),
+        });
+    }
+    let carrying = batch_carrying(g);
+    let m = microbatches as u64;
+    let micro_bytes = |t: TensorId| -> u64 {
+        let info = &g.tensors[t];
+        let mut elems: u64 = info.shape.iter().map(|&d| d as u64).product::<u64>().max(1);
+        if carrying[t] {
+            elems /= m;
+        }
+        elems * info.dtype_bytes as u64
+    };
+
+    // Candidate interior cuts, thinned so the DP stays O(32^2) k-cut
+    // seeds even on deep CNNs.
+    let mut cand: Vec<usize> = (1..n).collect();
+    if cand.len() > 32 {
+        let step = cand.len() as f64 / 32.0;
+        cand = (0..32).map(|i| 1 + (i as f64 * step) as usize).collect();
+        cand.dedup();
+    }
+    let mut points = vec![0];
+    points.extend(cand.iter().copied());
+    points.push(n);
+    points.dedup();
+    let p = points.len();
+
+    // Per-range intra-stage seed cost: odometer DP over the level
+    // range's micro-shaped subgraph (both phases together — the split
+    // into cells happens after the cut choice).
+    let carrying_shape = |t: TensorId| -> Vec<usize> {
+        let mut s = g.tensors[t].shape.clone();
+        if carrying[t] {
+            s[0] /= microbatches;
+        }
+        s
+    };
+    let range_cost = |lo: usize, hi: usize| -> u64 {
+        let mut ops: Vec<OpId> = Vec::new();
+        for lvl in &levels.levels[lo..hi] {
+            ops.extend(lvl.iter().copied());
+        }
+        ops.sort_unstable();
+        let order = g.topo_order();
+        let ops: Vec<OpId> = order.into_iter().filter(|u| ops.binary_search(u).is_ok()).collect();
+        let mut local_of: BTreeMap<TensorId, usize> = BTreeMap::new();
+        let mut tensors: Vec<TensorId> = Vec::new();
+        let mut local_ops = Vec::with_capacity(ops.len());
+        for (li, &u) in ops.iter().enumerate() {
+            let op = &g.ops[u];
+            let mut lop = op.clone();
+            lop.id = li;
+            let mut touch = |t: TensorId| {
+                *local_of.entry(t).or_insert_with(|| {
+                    tensors.push(t);
+                    tensors.len() - 1
+                })
+            };
+            lop.inputs = op.inputs.iter().map(|&t| touch(t)).collect();
+            lop.outputs = op.outputs.iter().map(|&t| touch(t)).collect();
+            local_ops.push(lop);
+        }
+        let local_tensors = tensors
+            .iter()
+            .enumerate()
+            .map(|(li, &t)| {
+                let mut info = g.tensors[t].clone();
+                info.id = li;
+                info.shape = carrying_shape(t);
+                info
+            })
+            .collect();
+        let sub = Graph { tensors: local_tensors, ops: local_ops };
+        match try_k_cut(&sub, k_stage) {
+            Ok(plan) => plan.total_cost(),
+            Err(_) => u64::MAX / 4,
+        }
+    };
+    let cost: Vec<Vec<u64>> = (0..p)
+        .map(|i| {
+            (0..p)
+                .map(|j| if j > i { range_cost(points[i], points[j]) } else { 0 })
+                .collect()
+        })
+        .collect();
+    let cut_bytes = |l: usize| -> u64 { levels.boundary[l - 1].iter().map(|&t| micro_bytes(t)).sum() };
+
+    // dp[s][j] = best cost of packing points[0..=j] into s stages.
+    let inf = u64::MAX / 2;
+    let mut dp = vec![vec![inf; p]; s_count + 1];
+    let mut from = vec![vec![usize::MAX; p]; s_count + 1];
+    dp[0][0] = 0;
+    for s in 1..=s_count {
+        for j in 1..p {
+            for i in (s - 1)..j {
+                if dp[s - 1][i] >= inf {
+                    continue;
+                }
+                let boundary = if i > 0 { cut_bytes(points[i]) } else { 0 };
+                let c = dp[s - 1][i].saturating_add(cost[i][j]).saturating_add(boundary);
+                if c < dp[s][j] {
+                    dp[s][j] = c;
+                    from[s][j] = i;
+                }
+            }
+        }
+    }
+    if dp[s_count][p - 1] >= inf {
+        return Err(PlanError::Infeasible);
+    }
+    let mut cuts = Vec::new();
+    let mut j = p - 1;
+    for s in (1..=s_count).rev() {
+        let i = from[s][j];
+        if i > 0 {
+            cuts.push(points[i]);
+        }
+        j = i;
+    }
+    cuts.reverse();
+    Ok(cuts)
+}
+
+/// Score a portfolio of {tiling-only, 2/4-stage pipeline × schedule}
+/// candidates on the actual topology and return the fastest — never
+/// worse than [`try_plan_topology_aware`]'s pure-tiling winner by
+/// construction (the tiling candidate is always in the portfolio and
+/// wins ties).
+///
+/// # Examples
+///
+/// ```
+/// use soybean::models::{mlp, MlpConfig};
+/// use soybean::planner::plan_strategy;
+/// use soybean::sim::Topology;
+///
+/// let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8, 8], bias: false });
+/// let sp = plan_strategy(&g, 4, &Topology::two_tier(2)).unwrap();
+/// // Never worse than the pure-tiling winner, by construction.
+/// assert!(sp.step_s <= sp.tiling_step_s);
+/// assert_eq!(sp.scores[0].name, "tiling");
+/// ```
+pub fn plan_strategy(
+    g: &Graph,
+    devices: usize,
+    topo: &Topology,
+) -> Result<StrategyPlan, PlanError> {
+    assert!(devices.is_power_of_two(), "device count must be a power of two");
+    let k = devices.trailing_zeros() as usize;
+    let tiling = try_plan_topology_aware(g, devices, topo)?;
+    let single = Strategy::single_stage(g, tiling.plan.clone());
+    let mut best_report = crate::sim::try_simulate_strategy(&single, topo)?;
+    let mut best = single;
+    let mut best_step = tiling.step_s;
+    let mut chosen: &'static str = "tiling";
+    let mut scores = vec![CandidateScore {
+        name: "tiling",
+        step_s: tiling.step_s,
+        total_bytes: tiling.plan.total_cost(),
+    }];
+
+    let levels = bfs_levels(g);
+    let m = pick_microbatches(g, 4);
+    for s_count in [2usize, 4] {
+        if s_count > devices || levels.levels.len() < s_count {
+            continue;
+        }
+        let k_stage = k - s_count.trailing_zeros() as usize;
+        let Ok(cuts) = stage_cuts(g, &levels, s_count, k_stage, m) else { continue };
+        for sched in Schedule::all() {
+            let Ok(strat) = Strategy::try_build(g, &cuts, k, m, sched) else { continue };
+            let Ok(report) = crate::sim::try_simulate_strategy(&strat, topo) else { continue };
+            let name = candidate_name(s_count, sched);
+            scores.push(CandidateScore {
+                name,
+                step_s: report.step_s,
+                total_bytes: strat.total_cost(),
+            });
+            if report.step_s < best_step {
+                best_step = report.step_s;
+                chosen = name;
+                best = strat;
+                best_report = report;
+            }
+        }
+    }
+
+    Ok(StrategyPlan {
+        strategy: best,
+        chosen,
+        step_s: best_step,
+        tiling_step_s: tiling.step_s,
+        tiling,
+        scores,
+        report: best_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mlp, transformer, MlpConfig, TransformerConfig};
+
+    fn small_mlp() -> Graph {
+        mlp(&MlpConfig { batch: 16, dims: vec![8, 8, 8], bias: true })
+    }
+
+    #[test]
+    fn single_stage_total_cost_is_plan_cost() {
+        let g = small_mlp();
+        let plan = try_k_cut(&g, 2).unwrap();
+        let want = plan.total_cost();
+        let s = Strategy::single_stage(&g, plan);
+        assert!(s.is_single_stage());
+        assert_eq!(s.total_cost(), want);
+        assert_eq!(s.boundary_bytes(), 0);
+        assert_eq!(s.devices(), 4);
+    }
+
+    #[test]
+    fn batch_carrying_marks_activation_chain_not_weights() {
+        let g = small_mlp();
+        let carry = batch_carrying(&g);
+        for t in &g.tensors {
+            match t.kind {
+                TensorKind::Input | TensorKind::Label => assert!(carry[t.id], "{}", t.name),
+                TensorKind::Weight
+                | TensorKind::WeightGrad
+                | TensorKind::UpdatedWeight
+                | TensorKind::Scalar => assert!(!carry[t.id], "{}", t.name),
+                TensorKind::Activation | TensorKind::Gradient => {
+                    assert_eq!(carry[t.id], t.shape.first() == Some(&16), "{}", t.name)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pick_microbatches_respects_divisibility() {
+        assert_eq!(pick_microbatches(&small_mlp(), 4), 4);
+        // Batch 4, seq 4 — the head view's leading axis is B·H = 8.
+        let g = transformer(&TransformerConfig::tiny());
+        assert!(pick_microbatches(&g, 4) >= 1);
+    }
+
+    #[test]
+    fn two_stage_build_partitions_cells_in_order() {
+        let g = small_mlp();
+        let levels = bfs_levels(&g);
+        let n = levels.levels.len();
+        assert!(n >= 2, "mlp should levelize into 2+ levels");
+        let strat = Strategy::try_build(&g, &[n / 2], 2, 2, Schedule::OneF1B).unwrap();
+        assert_eq!(strat.stage_count(), 2);
+        assert_eq!(strat.microbatches, 2);
+        // Stage groups tile the device range contiguously.
+        assert_eq!(strat.stages[0].device_lo, 0);
+        assert_eq!(strat.stages[1].device_lo, 2);
+        // Every op appears in exactly one cell.
+        let mut seen = vec![false; g.ops.len()];
+        for c in &strat.cells {
+            for &u in &c.ops {
+                assert!(!seen[u]);
+                seen[u] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // Cross-stage boundaries carry bytes; stashes don't.
+        assert!(strat.boundaries.iter().any(|b| b.bytes > 0));
+        assert!(strat.total_cost() > 0);
+    }
+
+    #[test]
+    fn stage_cuts_dp_returns_interior_cuts() {
+        let g = small_mlp();
+        let levels = bfs_levels(&g);
+        let cuts = stage_cuts(&g, &levels, 2, 1, 2).unwrap();
+        assert_eq!(cuts.len(), 1);
+        assert!(cuts[0] > 0 && cuts[0] < levels.levels.len());
+    }
+
+    #[test]
+    fn infeasible_cuts_are_rejected() {
+        let g = small_mlp();
+        // Non-power-of-two stage count.
+        let r = Strategy::try_build(&g, &[1, 2], 2, 1, Schedule::GPipe);
+        assert!(matches!(r, Err(PlanError::MalformedPlan { .. })));
+        // Cut out of range.
+        let r = Strategy::try_build(&g, &[0], 2, 1, Schedule::GPipe);
+        assert!(matches!(r, Err(PlanError::MalformedPlan { .. })));
+    }
+}

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::Error;
 use crate::graph::Graph;
-use crate::planner::{PlanError, Strategy};
+use crate::planner::{PlanError, PlanFamily};
 use crate::sim::Topology;
 use crate::spmd::{ExecOptions, WorkerPool};
 
@@ -342,7 +342,7 @@ struct Scheduler<F> {
     rebatch: F,
     devices: usize,
     topo: Topology,
-    strategy: Strategy,
+    strategy: PlanFamily,
     exec: ExecOptions,
     max_batch: usize,
     max_linger: Duration,

@@ -18,7 +18,8 @@ use crate::graph::Graph;
 use crate::lower::{try_lower, try_lower_forced, LoweredProgram};
 use crate::obs::{calibrate, ProfileReport};
 use crate::planner::{
-    baselines, classic_dp_form, classify, try_plan_topology_aware, Plan, PlanError, Strategy,
+    baselines, classic_dp_form, classify, try_plan_topology_aware, Plan, PlanError, PlanFamily,
+    Strategy,
 };
 use crate::sim::{try_run_program, try_simulate, try_simulate_forced, SimReport, Topology};
 use crate::spmd::{ExecOptions, ExecReport, StepCtx, WorkerPool};
@@ -31,7 +32,7 @@ pub(crate) fn build_ctx(
     g: Graph,
     devices: usize,
     topo: &Topology,
-    strategy: Strategy,
+    strategy: PlanFamily,
     exec: ExecOptions,
 ) -> Result<(Arc<StepCtx>, &'static str), Error> {
     if devices == 0 || !devices.is_power_of_two() {
@@ -42,7 +43,7 @@ pub(crate) fn build_ctx(
     let k = devices.trailing_zeros() as usize;
     let cfg = topo.to_sim_config();
     let (plan, program, chosen): (Plan, LoweredProgram, &'static str) = match strategy {
-        Strategy::Soybean => {
+        PlanFamily::Soybean => {
             let tp = try_plan_topology_aware(&g, devices, topo)?;
             let program = try_lower(&g, &tp.plan, &cfg)?;
             (tp.plan, program, tp.chosen)
@@ -50,12 +51,12 @@ pub(crate) fn build_ctx(
         // The DP baseline prices gradient aggregation in its classic
         // all-reduce form, so the matching forced lowering keeps the
         // meter identity the executor insists on.
-        Strategy::DataParallel => {
+        PlanFamily::DataParallel => {
             let plan = baselines::data_parallel(&g, k);
             let program = try_lower_forced(&g, &plan, &cfg, &classic_dp_form)?;
             (plan, program, "data-parallel")
         }
-        Strategy::ModelParallel => {
+        PlanFamily::ModelParallel => {
             let plan = baselines::model_parallel(&g, k);
             let program = try_lower(&g, &plan, &cfg)?;
             (plan, program, "model-parallel")
@@ -96,8 +97,14 @@ pub(crate) fn build_ctx(
 pub struct Session {
     ctx: Arc<StepCtx>,
     topo: Topology,
-    strategy: Strategy,
+    strategy: PlanFamily,
     chosen: &'static str,
+    /// The generalized execution strategy the session runs: today always
+    /// [`Strategy::single_stage`] over the chosen plan (serving steps
+    /// are single-stage), kept here so every consumer of the session —
+    /// summaries, stats, future pipelined serving — speaks the
+    /// stage-aware vocabulary.
+    strat: Strategy,
 }
 
 impl Session {
@@ -105,20 +112,21 @@ impl Session {
     /// portfolio), lower it, and validate the result. `devices` must be
     /// a nonzero power of two.
     pub fn build(g: Graph, devices: usize, topo: &Topology) -> Result<Session, Error> {
-        Session::with_strategy(g, devices, topo, Strategy::Soybean)
+        Session::with_strategy(g, devices, topo, PlanFamily::Soybean)
     }
 
     /// [`Session::build`] under an explicit strategy — the baselines the
-    /// figures compare against ([`Strategy::DataParallel`] keeps the
+    /// figures compare against ([`PlanFamily::DataParallel`] keeps the
     /// classic gradient-aggregation form so its byte meter stays honest).
     pub fn with_strategy(
         g: Graph,
         devices: usize,
         topo: &Topology,
-        strategy: Strategy,
+        strategy: PlanFamily,
     ) -> Result<Session, Error> {
         let (ctx, chosen) = build_ctx(g, devices, topo, strategy, ExecOptions::default())?;
-        Ok(Session { ctx, topo: topo.clone(), strategy, chosen })
+        let strat = Strategy::single_stage(ctx.graph(), ctx.plan().clone());
+        Ok(Session { ctx, topo: topo.clone(), strategy, chosen, strat })
     }
 
     /// Replace the execution options (watchdog deadline, fault plan) the
@@ -166,7 +174,7 @@ impl Session {
     pub fn simulate(&self) -> Result<SimReport, Error> {
         let cfg = self.topo.to_sim_config();
         let report = match self.strategy {
-            Strategy::DataParallel => {
+            PlanFamily::DataParallel => {
                 try_simulate_forced(self.graph(), self.plan(), &cfg, &classic_dp_form)?
             }
             _ => try_simulate(self.graph(), self.plan(), &cfg)?,
@@ -204,6 +212,7 @@ impl Session {
         PlanSummary {
             devices: plan.devices(),
             k: plan.k,
+            stages: self.strat.stage_count(),
             chosen: self.chosen,
             kind: classify(self.graph(), &plan.tiles),
             total_bytes: plan.total_cost(),
@@ -251,8 +260,16 @@ impl Session {
     }
 
     /// The strategy the session was built under.
-    pub fn strategy(&self) -> Strategy {
+    pub fn strategy(&self) -> PlanFamily {
         self.strategy
+    }
+
+    /// The generalized execution strategy (stages × tiling). Serving
+    /// sessions are single-stage today, so this is always the
+    /// [`Strategy::single_stage`] wrapper of [`Session::plan`] — the
+    /// stage-aware view pipelined serving will generalize.
+    pub fn execution_strategy(&self) -> &Strategy {
+        &self.strat
     }
 }
 
@@ -264,6 +281,9 @@ pub struct PlanSummary {
     pub devices: usize,
     /// Cut count.
     pub k: usize,
+    /// Pipeline stages of the execution strategy (1 for every serving
+    /// session today).
+    pub stages: usize,
     /// Winning planner candidate ([`Session::chosen_candidate`]).
     pub chosen: &'static str,
     /// Plan classification: `"data-parallel"`, `"model-parallel"`, or
@@ -283,8 +303,15 @@ impl fmt::Display for PlanSummary {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "plan: {} devices (k={}), candidate {} ({}), graph {} ops / {} tensors",
-            self.devices, self.k, self.chosen, self.kind, self.ops, self.tensors
+            "plan: {} devices (k={}), {} stage{}, candidate {} ({}), graph {} ops / {} tensors",
+            self.devices,
+            self.k,
+            self.stages,
+            if self.stages == 1 { "" } else { "s" },
+            self.chosen,
+            self.kind,
+            self.ops,
+            self.tensors
         )?;
         write!(f, "cost: {} B total, per-cut δ {:?}", self.total_bytes, self.cut_costs)
     }
@@ -318,17 +345,24 @@ mod tests {
         let sum = s.plan_summary();
         assert_eq!(sum.devices, 4);
         assert_eq!(sum.k, 2);
+        assert_eq!(sum.stages, 1);
         assert_eq!(sum.total_bytes, s.plan().total_cost());
         let shown = sum.to_string();
         assert!(shown.contains("4 devices"), "{shown}");
+        assert!(shown.contains("1 stage,"), "{shown}");
         assert!(shown.contains("B total"), "{shown}");
+        // The session's execution strategy is the degenerate wrapper of
+        // its plan — bit-identical cost.
+        let strat = s.execution_strategy();
+        assert!(strat.is_single_stage());
+        assert_eq!(strat.total_cost(), s.plan().total_cost());
     }
 
     #[test]
     fn strategies_yield_distinct_plans_and_honest_meters() {
         use crate::graph::seed_values;
         let topo = Topology::p2_8xlarge();
-        for strategy in Strategy::all() {
+        for strategy in PlanFamily::all() {
             let s = Session::with_strategy(small(), 2, &topo, strategy).unwrap();
             let init = seed_values(s.graph(), 3);
             let r = s.execute(&init).unwrap();

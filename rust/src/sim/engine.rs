@@ -470,7 +470,7 @@ mod tests {
     use super::*;
     use crate::lower::{try_lower, try_lower_forced};
     use crate::models::{mlp, transformer, MlpConfig, TransformerConfig};
-    use crate::planner::{classic_dp_form, Planner, Strategy};
+    use crate::planner::{classic_dp_form, Planner, PlanFamily};
     use crate::sim::{try_simulate, SimConfig};
 
     fn cfg() -> SimConfig {
@@ -481,7 +481,7 @@ mod tests {
     fn try_run_program_validates_inputs() {
         use crate::planner::PlanError;
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 1, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         // Well-formed program on a well-formed topology: same report.
         let topo = Topology::from_sim(&cfg(), 1);
@@ -506,7 +506,7 @@ mod tests {
     #[test]
     fn serial_program_is_pure_compute_time() {
         let g = mlp(&MlpConfig::fig8(64, 32));
-        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 0, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         let r = try_run_program(&p, &Topology::from_sim(&cfg(), 0)).unwrap();
         assert_eq!(r.step_s, r.compute_s);
@@ -520,7 +520,7 @@ mod tests {
     fn engine_meter_matches_analytic_sim_bit_for_bit() {
         let g = mlp(&MlpConfig::fig8(64, 64));
         for k in 1..=3 {
-            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
+            let plan = Planner::try_plan(&g, k, PlanFamily::Soybean).unwrap();
             let p = try_lower(&g, &plan, &cfg()).unwrap();
             let r = try_run_program(&p, &Topology::from_sim(&cfg(), k)).unwrap();
             let sim = try_simulate(&g, &plan, &cfg()).unwrap();
@@ -534,18 +534,18 @@ mod tests {
     #[test]
     fn step_time_within_documented_envelope() {
         // The module-docs contract: compute <= step <= compute + chain.
-        let workloads: Vec<(&str, crate::graph::Graph, Vec<Strategy>)> = vec![
-            ("mlp", mlp(&MlpConfig::fig8(512, 1024)), Strategy::all().to_vec()),
+        let workloads: Vec<(&str, crate::graph::Graph, Vec<PlanFamily>)> = vec![
+            ("mlp", mlp(&MlpConfig::fig8(512, 1024)), PlanFamily::all().to_vec()),
             (
                 "transformer",
                 transformer(&TransformerConfig::tiny()),
-                vec![Strategy::Soybean, Strategy::DataParallel],
+                vec![PlanFamily::Soybean, PlanFamily::DataParallel],
             ),
         ];
         for (name, g, strategies) in &workloads {
             for &strat in strategies {
                 let plan = Planner::try_plan(g, 2, strat).unwrap();
-                let p = if strat == Strategy::DataParallel {
+                let p = if strat == PlanFamily::DataParallel {
                     try_lower_forced(g, &plan, &cfg(), &classic_dp_form).unwrap()
                 } else {
                     try_lower(g, &plan, &cfg()).unwrap()
@@ -569,7 +569,7 @@ mod tests {
         // Gradient aggregation overlaps with the rest of the backward
         // pass: the engine must land strictly under compute + chain.
         let g = mlp(&MlpConfig::fig8(512, 4096));
-        let plan = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let plan = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
         let p = try_lower_forced(&g, &plan, &cfg(), &classic_dp_form).unwrap();
         let r = try_run_program(&p, &Topology::from_sim(&cfg(), 3)).unwrap();
         assert!(r.xfer_chain_s > 0.0);
@@ -585,7 +585,7 @@ mod tests {
     #[test]
     fn infinite_bandwidth_zero_latency_collapses_to_compute() {
         let g = mlp(&MlpConfig::fig8(128, 256));
-        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         let r = try_run_program(&p, &Topology::flat(2, f64::INFINITY, 0.0, 4.0)).unwrap();
         assert_eq!(r.step_s, r.compute_s);
@@ -595,7 +595,7 @@ mod tests {
     #[test]
     fn trace_spans_fit_inside_the_step() {
         let g = transformer(&TransformerConfig::tiny());
-        let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
         let p = try_lower(&g, &plan, &cfg()).unwrap();
         let r = try_run_program(&p, &Topology::p2_8xlarge()).unwrap();
         assert!(!r.trace.is_empty());

@@ -34,10 +34,12 @@
 
 pub mod compute;
 pub mod engine;
+pub mod pipeline;
 mod simulate;
 
 pub use compute::{shard_flops, EffModel};
 pub use engine::{try_run_program, EngineReport, TierLink, Topology};
+pub use pipeline::{stage_topology, try_simulate_strategy, PipelineReport};
 // The trace writer moved to the observability layer; the historical
 // `sim::chrome_trace_json` path stays valid through this re-export.
 pub use crate::obs::chrome::chrome_trace_json;

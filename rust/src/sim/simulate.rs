@@ -237,7 +237,7 @@ pub fn try_simulate_forced(
 mod tests {
     use super::*;
     use crate::models::{cnn5, mlp, MlpConfig};
-    use crate::planner::{Planner, Strategy};
+    use crate::planner::{Planner, PlanFamily};
 
     fn cfg() -> SimConfig {
         SimConfig::default()
@@ -246,7 +246,7 @@ mod tests {
     #[test]
     fn serial_plan_has_no_comm() {
         let g = mlp(&MlpConfig::fig8(512, 256));
-        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 0, PlanFamily::Soybean).unwrap();
         let r = try_simulate(&g, &plan, &cfg()).unwrap();
         assert_eq!(r.total_bytes, 0);
         assert_eq!(r.comm_s, 0.0);
@@ -259,11 +259,11 @@ mod tests {
         // The simulator meters the same theory the optimizer prices:
         // metered bytes == Theorem-1 total, exactly.
         let g = mlp(&MlpConfig::fig8(512, 512));
-        for strat in [Strategy::DataParallel, Strategy::ModelParallel, Strategy::Soybean] {
+        for strat in [PlanFamily::DataParallel, PlanFamily::ModelParallel, PlanFamily::Soybean] {
             let plan = Planner::try_plan(&g, 3, strat).unwrap();
             // The DP baseline is priced (and must be simulated) with the
             // classic gradient-aggregation forms.
-            let r = if strat == Strategy::DataParallel {
+            let r = if strat == PlanFamily::DataParallel {
                 try_simulate_classic_dp(&g, &plan, &cfg()).unwrap()
             } else {
                 try_simulate(&g, &plan, &cfg()).unwrap()
@@ -301,7 +301,7 @@ mod tests {
         // equal the plan's Theorem-1 cost bit for bit.
         let g = crate::models::transformer(&crate::models::TransformerConfig::tiny());
         for k in 1..=2 {
-            let plan = Planner::try_plan(&g, k, Strategy::Soybean).unwrap();
+            let plan = Planner::try_plan(&g, k, PlanFamily::Soybean).unwrap();
             let r = try_simulate(&g, &plan, &cfg()).unwrap();
             assert_eq!(r.total_bytes, plan.total_cost(), "k={k}");
         }
@@ -310,7 +310,7 @@ mod tests {
     #[test]
     fn compute_only_config_zeroes_overhead() {
         let g = mlp(&MlpConfig::fig8(512, 1024));
-        let plan = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let plan = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
         let r = try_simulate(&g, &plan, &cfg().compute_only()).unwrap();
         assert_eq!(r.overhead_s, 0.0);
         assert!(r.total_bytes > 0, "bytes still counted, just free");
@@ -321,7 +321,7 @@ mod tests {
         // Figure 8(a)'s qualitative claim: 8 GPUs, hidden 8192, batch 512:
         // DP's communication overhead far exceeds compute.
         let g = mlp(&MlpConfig::fig8(512, 8192));
-        let pdp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let pdp = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
         let dp = try_simulate(&g, &pdp, &cfg()).unwrap();
         assert!(
             dp.overhead_s > 2.0 * dp.compute_s,
@@ -330,7 +330,7 @@ mod tests {
             dp.compute_s
         );
         // And SOYBEAN's plan must beat DP end to end.
-        let psoy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let psoy = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
         let soy = try_simulate(&g, &psoy, &cfg()).unwrap();
         assert!(soy.step_s < dp.step_s);
     }
@@ -342,9 +342,9 @@ mod tests {
             (mlp(&MlpConfig::fig8(2048, 2048)), "mlp-big-batch"),
             (cnn5(256, 6, 4, 128, 10), "cnn-small-image"),
         ] {
-            let psoy = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
-            let pdp = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
-            let pmp = Planner::try_plan(&g, 2, Strategy::ModelParallel).unwrap();
+            let psoy = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
+            let pdp = Planner::try_plan(&g, 2, PlanFamily::DataParallel).unwrap();
+            let pmp = Planner::try_plan(&g, 2, PlanFamily::ModelParallel).unwrap();
             let soy = try_simulate(&g, &psoy, &cfg()).unwrap();
             let dp = try_simulate(&g, &pdp, &cfg()).unwrap();
             let mp = try_simulate(&g, &pmp, &cfg()).unwrap();
@@ -358,8 +358,8 @@ mod tests {
     #[test]
     fn more_devices_less_compute_per_step() {
         let g = mlp(&MlpConfig::fig8(2048, 1024));
-        let p1 = Planner::try_plan(&g, 1, Strategy::Soybean).unwrap();
-        let p3 = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
+        let p1 = Planner::try_plan(&g, 1, PlanFamily::Soybean).unwrap();
+        let p3 = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
         let r1 = try_simulate(&g, &p1, &cfg()).unwrap();
         let r3 = try_simulate(&g, &p3, &cfg()).unwrap();
         assert!(r3.compute_s < r1.compute_s);
@@ -370,8 +370,8 @@ mod tests {
         // §6.2: as the batch grows, DP's overhead ratio shrinks.
         let small = mlp(&MlpConfig::fig8(512, 4096));
         let large = mlp(&MlpConfig::fig8(4096, 4096));
-        let p_small = Planner::try_plan(&small, 3, Strategy::DataParallel).unwrap();
-        let p_large = Planner::try_plan(&large, 3, Strategy::DataParallel).unwrap();
+        let p_small = Planner::try_plan(&small, 3, PlanFamily::DataParallel).unwrap();
+        let p_large = Planner::try_plan(&large, 3, PlanFamily::DataParallel).unwrap();
         let r_small = try_simulate(&small, &p_small, &cfg()).unwrap();
         let r_large = try_simulate(&large, &p_large, &cfg()).unwrap();
         let ratio_small = r_small.overhead_s / r_small.compute_s;

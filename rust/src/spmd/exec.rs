@@ -160,6 +160,12 @@ pub struct ExecOptions {
     /// from kernel bugs, and pins `Fast` on both sides to oracle the fast
     /// path under sharded extents.
     pub backend: KernelBackend,
+    /// Pipeline stage this step executes as (0 for plain single-stage
+    /// steps). Stamped onto every recorded [`Span`] so multi-stage traces
+    /// keep per-stage attribution — set by
+    /// [`crate::spmd::try_execute_strategy`] when it runs a strategy's
+    /// cells.
+    pub stage: usize,
 }
 
 impl Default for ExecOptions {
@@ -172,6 +178,7 @@ impl Default for ExecOptions {
             trace: false,
             metrics: None,
             backend: KernelBackend::default(),
+            stage: 0,
         }
     }
 }
@@ -211,6 +218,14 @@ impl ExecOptions {
     #[must_use]
     pub fn backend(mut self, backend: KernelBackend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Tag the step with a pipeline stage (builder style); every span the
+    /// step records carries it.
+    #[must_use]
+    pub fn stage(mut self, stage: usize) -> Self {
+        self.stage = stage;
         self
     }
 }
@@ -420,6 +435,9 @@ pub(crate) struct Worker<'a> {
     /// Span buffer; `Some` iff [`ExecOptions::trace`] — every trace site
     /// is one branch on this option, so the untraced path stays free.
     trace: Option<TraceBuf>,
+    /// Pipeline stage tag stamped on every recorded span
+    /// ([`ExecOptions::stage`]; 0 for single-stage steps).
+    stage: usize,
 }
 
 impl<'a> Worker<'a> {
@@ -455,6 +473,7 @@ impl<'a> Worker<'a> {
             backend: ctx.opts.backend,
             faults: ctx.opts.faults.as_deref(),
             trace: ctx.opts.trace.then(|| TraceBuf::new(epoch)),
+            stage: ctx.opts.stage,
         }
     }
 
@@ -518,6 +537,7 @@ impl<'a> Worker<'a> {
             start_s: now,
             end_s: now,
             bytes,
+            stage: self.stage,
         });
     }
 
@@ -560,6 +580,7 @@ impl<'a> Worker<'a> {
                         start_s: t0,
                         end_s: end,
                         bytes,
+                        stage: self.stage,
                     });
                 }
                 return Ok(pieces);
@@ -649,6 +670,7 @@ impl<'a> Worker<'a> {
                 start_s: t0,
                 end_s: end,
                 bytes,
+                stage: self.stage,
             });
         }
     }
@@ -856,6 +878,7 @@ impl<'a> Worker<'a> {
                 start_s: t0,
                 end_s: end,
                 bytes: 0,
+                stage: self.stage,
             });
         }
         self.scatter_output(op, ShardBuf { region: out_region, data })

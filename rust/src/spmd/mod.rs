@@ -35,15 +35,24 @@
 //! [`crate::obs::Metrics`] registry — both `Option`-gated so the
 //! default path pays one branch per site
 //! ([`crate::book::observability`]).
+//!
+//! The pipeline axis rides on top of all of it:
+//! [`try_execute_strategy`] runs a [`crate::planner::Strategy`]'s cell
+//! sequence through this executor once per microbatch, stage-stamps the
+//! spans, merges the microbatch results exactly, and reconciles the
+//! summed meters against [`crate::planner::Strategy::total_cost`]
+//! ([`crate::book::pipeline`]).
 
 mod buf;
 mod exec;
 pub mod fault;
+mod pipeline;
 mod pool;
 mod recover;
 
 pub use buf::{for_each_row, ShardBuf};
 pub use exec::{execute, execute_with, ExecError, ExecOptions, ExecReport};
+pub use pipeline::{try_execute_strategy, StrategyExecReport};
 pub use fault::{Fault, FaultKind, FaultPlan};
 pub use pool::{StepCtx, WorkerPool};
 pub use recover::{
@@ -72,7 +81,7 @@ mod tests {
     use crate::graph::{eval_serial, seed_values, GraphBuilder};
     use crate::lower::try_lower;
     use crate::models::{mlp, MlpConfig};
-    use crate::planner::{baselines, eval_plan, try_k_cut, Plan, PlanError, Planner, Strategy};
+    use crate::planner::{baselines, eval_plan, try_k_cut, Plan, PlanError, Planner, PlanFamily};
     use crate::sim::SimConfig;
     use crate::tiling::Tile;
 
@@ -85,7 +94,7 @@ mod tests {
         // k = 0: one device, no collectives, exact agreement (the
         // executor degenerates into the interpreter).
         let g = mlp(&MlpConfig { batch: 4, dims: vec![4, 6], bias: true });
-        let plan = Planner::try_plan(&g, 0, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(&g, 0, PlanFamily::Soybean).unwrap();
         let program = try_lower(&g, &plan, &cfg()).unwrap();
         let init = seed_values(&g, 1);
         let r = execute(&g, &plan, &program, &init).unwrap();

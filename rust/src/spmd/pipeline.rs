@@ -1,0 +1,303 @@
+//! Pipelined SPMD execution: run a [`Strategy`]'s cell sequence on real
+//! tensors, once per microbatch, and merge the results back into the
+//! serial graph's tensors.
+//!
+//! This is the correctness half of the pipeline axis, the analogue of
+//! [`execute`](super::execute) for [`crate::lower::PipelinedProgram`]s.
+//! Each `(cell, microbatch)` task runs through the existing threaded
+//! executor on the cell's microbatch-shaped subgraph — numerics, shard
+//! exchanges, byte meter and all — with
+//! [`ExecOptions::stage`](super::ExecOptions) stamped so every span
+//! carries its stage. Between cells, boundary tensors hand off by value
+//! (the in-process stand-in for the stage-boundary `SendRecv`s, which
+//! are accounted separately — see the meter below).
+//!
+//! ## The microbatch merge
+//!
+//! With `m` microbatches the per-microbatch results recombine exactly
+//! (see [`batch_carrying`] for the carrying rule):
+//!
+//! - **carrying gradients** concatenate along the batch axis and scale
+//!   by `1/m`: each micro graph's loss is a *mean over its microbatch*,
+//!   so its activation gradients come out `m×` the serial ones;
+//! - **other carrying tensors** (activations, inputs) concatenate
+//!   directly — each microbatch computed a row slice of the full batch;
+//! - **non-carrying produced tensors** (weight gradients, updated
+//!   weights, the scalar loss) *average* across microbatches: they are
+//!   linear/affine in the per-microbatch mean, so the average equals the
+//!   serial value exactly;
+//! - **producerless tensors** (weights, inputs) pass through from the
+//!   initial values.
+//!
+//! ## The meter
+//!
+//! The executor's collective meter runs per cell execution; summed over
+//! every `(cell, microbatch)` task and added to the modeled boundary
+//! bytes (`m ×` [`Strategy::boundary_bytes`]), the total must equal
+//! [`Strategy::total_cost`] bit for bit, or the run is rejected with
+//! [`ExecError::MeterMismatch`] — the same one-theory contract the
+//! single-stage executor enforces, extended across the stage axis.
+//!
+//! The single-stage path delegates to [`execute_with`](super::execute_with)
+//! on the original graph and is bit-identical to it: same output bits,
+//! same meter, same trace shape.
+
+use crate::graph::{Graph, TensorKind};
+use crate::lower::PipelinedProgram;
+use crate::obs::StepTrace;
+use crate::planner::{batch_carrying, PlanError, Strategy};
+
+use super::exec::{execute_with, ExecError, ExecOptions, ExecReport};
+
+/// The result of executing a pipelined strategy.
+#[derive(Debug, Clone)]
+pub struct StrategyExecReport {
+    /// Devices the strategy spans (`2^k`).
+    pub devices: usize,
+    /// Every tensor of the original graph, merged across microbatches —
+    /// compare against [`crate::graph::eval_serial`] on the *unsliced*
+    /// inputs.
+    pub tensors: Vec<Vec<f32>>,
+    /// Metered intra-cell collective bytes, summed over every
+    /// `(cell, microbatch)` execution.
+    pub instr_bytes: u64,
+    /// Modeled cross-stage boundary bytes for the whole step
+    /// (`microbatches × Strategy::boundary_bytes`).
+    pub boundary_bytes: u64,
+    /// The strategy's Theorem-1 + boundary total. Always equals
+    /// `instr_bytes + boundary_bytes` — enforced, not assumed.
+    pub modeled_bytes: u64,
+    /// Merged span trace across every cell execution when
+    /// [`ExecOptions::trace`] is on; spans carry their stage tags.
+    pub trace: Option<StepTrace>,
+}
+
+impl StrategyExecReport {
+    /// Worst relative deviation from a serial reference, with the tensor
+    /// name it occurred on (the [`super::worst_divergence`] of this
+    /// report type).
+    #[must_use]
+    pub fn worst_divergence(&self, g: &Graph, serial: &[Vec<f32>]) -> (f64, String) {
+        let mut worst = (0.0f64, String::new());
+        for t in &g.tensors {
+            let err = crate::graph::max_rel_err(&self.tensors[t.id], &serial[t.id]);
+            if err > worst.0 {
+                worst = (err, t.name.clone());
+            }
+        }
+        worst
+    }
+}
+
+fn malformed(reason: String) -> ExecError {
+    ExecError::Plan(PlanError::MalformedPlan { reason })
+}
+
+/// Execute a pipelined strategy on real tensors.
+///
+/// `pp` must be the [`crate::lower::try_lower_strategy`] compilation of
+/// the same strategy. See the module docs for the merge and meter
+/// semantics.
+///
+/// # Errors
+/// Propagates per-cell executor failures and rejects byte totals that
+/// do not reconcile with the strategy ([`ExecError::MeterMismatch`]).
+pub fn try_execute_strategy(
+    g: &Graph,
+    strategy: &Strategy,
+    pp: &PipelinedProgram,
+    init: &[Option<Vec<f32>>],
+    opts: &ExecOptions,
+) -> Result<StrategyExecReport, ExecError> {
+    if pp.cells.len() != strategy.cells.len() {
+        return Err(malformed(format!(
+            "program has {} cells but the strategy has {}",
+            pp.cells.len(),
+            strategy.cells.len()
+        )));
+    }
+
+    // Degenerate path: the plain executor, bit for bit.
+    if strategy.is_single_stage() && strategy.microbatches == 1 {
+        let cell = &strategy.cells[0];
+        let r: ExecReport = execute_with(g, &cell.plan, &pp.cells[0], init, opts)?;
+        return Ok(StrategyExecReport {
+            devices: r.devices,
+            tensors: r.tensors,
+            instr_bytes: r.instr_bytes,
+            boundary_bytes: 0,
+            modeled_bytes: strategy.total_cost(),
+            trace: r.trace,
+        });
+    }
+
+    let m = strategy.microbatches;
+    let carrying = batch_carrying(g);
+    let row_slice = |full: &[f32], t: usize, mu: usize| -> Vec<f32> {
+        let rows = g.tensors[t].shape[0];
+        let row_len = full.len() / rows.max(1);
+        let lo = mu * (rows / m) * row_len;
+        let hi = (mu + 1) * (rows / m) * row_len;
+        full[lo..hi].to_vec()
+    };
+
+    // Per-microbatch values of every original tensor.
+    let mut micro: Vec<Vec<Option<Vec<f32>>>> = Vec::with_capacity(m);
+    let mut instr_bytes = 0u64;
+    let mut span_batches: Vec<Vec<crate::obs::Span>> = Vec::new();
+    for mu in 0..m {
+        // Seed from the (sliced) initial values.
+        let mut vals: Vec<Option<Vec<f32>>> = (0..g.tensors.len())
+            .map(|t| {
+                init.get(t).and_then(|v| v.as_ref()).map(|full| {
+                    if carrying[t] {
+                        row_slice(full, t, mu)
+                    } else {
+                        full.clone()
+                    }
+                })
+            })
+            .collect();
+        for (ci, cell) in strategy.cells.iter().enumerate() {
+            let produced = cell.graph.produced_mask();
+            let local_init: Vec<Option<Vec<f32>>> = cell
+                .tensors
+                .iter()
+                .enumerate()
+                .map(|(lt, &orig)| if produced[lt] { None } else { vals[orig].clone() })
+                .collect();
+            let cell_opts = opts.clone().stage(cell.stage);
+            let r = execute_with(&cell.graph, &cell.plan, &pp.cells[ci], &local_init, &cell_opts)?;
+            instr_bytes += r.instr_bytes;
+            if let Some(trace) = r.trace {
+                span_batches.push(trace.spans);
+            }
+            for (lt, &orig) in cell.tensors.iter().enumerate() {
+                if produced[lt] {
+                    vals[orig] = Some(r.tensors[lt].clone());
+                }
+            }
+        }
+        micro.push(vals);
+    }
+
+    // Merge microbatch results back into the serial graph's tensors.
+    let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(g.tensors.len());
+    for t in &g.tensors {
+        if g.producer(t.id).is_none() {
+            tensors.push(init.get(t.id).and_then(|v| v.clone()).unwrap_or_default());
+            continue;
+        }
+        let parts: Vec<&Vec<f32>> = (0..m)
+            .map(|mu| {
+                micro[mu][t.id].as_ref().ok_or_else(|| {
+                    malformed(format!("tensor `{}` never produced by any cell", t.name))
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let merged = if carrying[t.id] {
+            let mut v: Vec<f32> = parts.iter().flat_map(|p| p.iter().copied()).collect();
+            if t.kind == TensorKind::Gradient {
+                // Each micro loss is a mean over B/m rows, so micro
+                // activation gradients are m× the serial ones.
+                let inv = 1.0 / m as f32;
+                for x in &mut v {
+                    *x *= inv;
+                }
+            }
+            v
+        } else {
+            // Linear/affine in the microbatch mean: average exactly
+            // reproduces the serial value.
+            let inv = 1.0 / m as f32;
+            let mut v = vec![0.0f32; parts[0].len()];
+            for p in &parts {
+                for (a, &b) in v.iter_mut().zip(p.iter()) {
+                    *a += b * inv;
+                }
+            }
+            v
+        };
+        tensors.push(merged);
+    }
+
+    // The one-theory contract across the stage axis.
+    let boundary_bytes = m as u64 * strategy.boundary_bytes();
+    let modeled_bytes = strategy.total_cost();
+    if instr_bytes + boundary_bytes != modeled_bytes {
+        return Err(ExecError::MeterMismatch {
+            metered: instr_bytes + boundary_bytes,
+            plan: modeled_bytes,
+        });
+    }
+
+    let trace = if opts.trace { Some(StepTrace::merge(span_batches)) } else { None };
+    Ok(StrategyExecReport {
+        devices: strategy.devices(),
+        tensors,
+        instr_bytes,
+        boundary_bytes,
+        modeled_bytes,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bfs_levels, eval_serial, seed_values};
+    use crate::lower::{try_lower, try_lower_strategy};
+    use crate::models::{mlp, MlpConfig};
+    use crate::planner::{try_k_cut, Schedule};
+    use crate::sim::SimConfig;
+
+    fn small_mlp() -> crate::graph::Graph {
+        mlp(&MlpConfig { batch: 16, dims: vec![8, 8, 8], bias: true })
+    }
+
+    /// Single-stage execution is the plain executor, bit for bit.
+    #[test]
+    fn single_stage_is_bit_identical() {
+        let g = small_mlp();
+        let cfg = SimConfig::default();
+        let plan = try_k_cut(&g, 2).unwrap();
+        let program = try_lower(&g, &plan, &cfg).unwrap();
+        let init = seed_values(&g, 7);
+        let want = execute_with(&g, &plan, &program, &init, &ExecOptions::default()).unwrap();
+        let s = Strategy::single_stage(&g, plan);
+        let pp = try_lower_strategy(&g, &s, &cfg).unwrap();
+        let r = try_execute_strategy(&g, &s, &pp, &init, &ExecOptions::default()).unwrap();
+        assert_eq!(r.instr_bytes, want.instr_bytes);
+        assert_eq!(r.boundary_bytes, 0);
+        assert_eq!(r.modeled_bytes, want.instr_bytes);
+        for (a, b) in r.tensors.iter().zip(&want.tensors) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// Two stages, two microbatches: matches the serial interpreter and
+    /// the meter reconciles across the stage axis.
+    #[test]
+    fn two_stage_two_micro_matches_serial() {
+        let g = small_mlp();
+        let cfg = SimConfig::default();
+        let cut = bfs_levels(&g).levels.len() / 2;
+        let s = Strategy::try_build(&g, &[cut], 2, 2, Schedule::GPipe).unwrap();
+        let pp = try_lower_strategy(&g, &s, &cfg).unwrap();
+        let init = seed_values(&g, 11);
+        let opts = ExecOptions::default().trace(true);
+        let r = try_execute_strategy(&g, &s, &pp, &init, &opts).unwrap();
+        assert_eq!(r.instr_bytes + r.boundary_bytes, s.total_cost());
+        assert!(r.boundary_bytes > 0);
+        let serial = eval_serial(&g, &init).unwrap();
+        let (worst, t) = r.worst_divergence(&g, &serial);
+        assert!(worst <= 1e-5, "pipelined exec diverged on {t}: {worst:e}");
+        // The merged trace attributes spans to both stages.
+        let trace = r.trace.expect("tracing was on");
+        assert!(trace.stage_count() == 2);
+        assert!(trace.stage_busy_s().iter().all(|&b| b > 0.0));
+    }
+}

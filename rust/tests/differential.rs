@@ -27,7 +27,7 @@ use soybean::lower::{try_lower, try_lower_forced, CollectiveKind};
 use soybean::models::{
     alexnet_scaled, mlp, transformer, vgg16_scaled, MlpConfig, TransformerConfig,
 };
-use soybean::planner::{classic_dp_form, eval_plan, Planner, Strategy};
+use soybean::planner::{classic_dp_form, eval_plan, Planner, PlanFamily};
 use soybean::sim::{SimConfig, Topology};
 use soybean::spmd::{execute, worst_divergence};
 use soybean::tiling::candidate_tiles;
@@ -64,7 +64,7 @@ fn diff_matrix(name: &str, g: &Graph, ks: &[usize]) {
     let serial = eval_serial(g, &init).expect("serial evaluation");
     for &k in ks {
         let topo = Topology::flat(k, 10.0e9, 20e-6, 4.0);
-        for strat in Strategy::all() {
+        for strat in PlanFamily::all() {
             let label = format!("{name}/{}/k{k}", strat.name());
             let session = Session::with_strategy(g.clone(), 1 << k, &topo, strat)
                 .unwrap_or_else(|e| panic!("{label}: session build failed: {e}"));
@@ -121,7 +121,7 @@ fn differential_vgg16() {
 fn send_recv_unscatterable_loss_sums_partials() {
     let cfg = SimConfig::default();
     let g = mlp(&MlpConfig { batch: 16, dims: vec![8, 8], bias: false });
-    let plan = Planner::try_plan(&g, 1, Strategy::DataParallel).unwrap();
+    let plan = Planner::try_plan(&g, 1, PlanFamily::DataParallel).unwrap();
     let program = try_lower_forced(&g, &plan, &cfg, &classic_dp_form).unwrap();
     let loss = g.tensors.iter().find(|t| t.rank() == 0).expect("scalar loss");
     assert!(
@@ -151,7 +151,7 @@ fn send_recv_unscatterable_loss_sums_partials() {
 fn model_parallel_gamma_grad_regression() {
     let cfg = SimConfig::default();
     let g = transformer(&TransformerConfig::tiny());
-    let plan = Planner::try_plan(&g, 1, Strategy::ModelParallel).unwrap();
+    let plan = Planner::try_plan(&g, 1, PlanFamily::ModelParallel).unwrap();
     let program = try_lower(&g, &plan, &cfg).unwrap();
     let init = seed_values(&g, 11);
     let r = execute(&g, &plan, &program, &init).unwrap();

@@ -13,7 +13,7 @@ use soybean::lower::{try_lower, try_lower_forced, Instr};
 use soybean::models::{alexnet, cnn5, mlp, transformer, vgg16, MlpConfig, TransformerConfig};
 #[cfg(feature = "pjrt")]
 use soybean::planner::baselines;
-use soybean::planner::{classic_dp_form, classify, try_k_cut, Planner, Strategy};
+use soybean::planner::{classic_dp_form, classify, try_k_cut, Planner, PlanFamily};
 #[cfg(feature = "pjrt")]
 use soybean::runtime::{ArtifactRegistry, Client};
 use soybean::sim::{
@@ -97,9 +97,9 @@ fn soybean_dominates_baselines_across_the_zoo() {
         ("vgg16", vgg16(32)),
     ];
     for (name, g) in graphs {
-        let soy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
-        let dp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
-        let mp = Planner::try_plan(&g, 3, Strategy::ModelParallel).unwrap();
+        let soy = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
+        let dp = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
+        let mp = Planner::try_plan(&g, 3, PlanFamily::ModelParallel).unwrap();
         assert!(soy.total_cost() <= dp.total_cost(), "{name}: soy > dp bytes");
         assert!(soy.total_cost() <= mp.total_cost(), "{name}: soy > mp bytes");
         let rs = try_simulate(&g, &soy, &cfg).unwrap();
@@ -117,8 +117,8 @@ fn soybean_dominates_baselines_across_the_zoo() {
 fn headline_speedup_over_dp() {
     let cfg = SimConfig::default();
     for (g, batch, lo) in [(alexnet(256), 256usize, 1.3f64), (vgg16(64), 64, 1.3)] {
-        let psoy = Planner::try_plan(&g, 3, Strategy::Soybean).unwrap();
-        let pdp = Planner::try_plan(&g, 3, Strategy::DataParallel).unwrap();
+        let psoy = Planner::try_plan(&g, 3, PlanFamily::Soybean).unwrap();
+        let pdp = Planner::try_plan(&g, 3, PlanFamily::DataParallel).unwrap();
         let soy = try_simulate(&g, &psoy, &cfg).unwrap();
         let dp = try_simulate_classic_dp(&g, &pdp, &cfg).unwrap();
         let speedup = dp.step_s / soy.step_s;
@@ -160,7 +160,7 @@ fn alexnet_plan_is_one_weird_trick() {
 #[test]
 fn all_plans_materialize() {
     for g in [mlp(&MlpConfig::e2e()), cnn5(64, 24, 4, 64, 10), alexnet(64), vgg16(16)] {
-        for strat in Strategy::all() {
+        for strat in PlanFamily::all() {
             for k in 0..=3 {
                 let plan = Planner::try_plan(&g, k, strat).unwrap();
                 let tasks = build_shard_tasks(&g, &plan);
@@ -205,7 +205,7 @@ fn transformer_workload_end_to_end() {
     assert_eq!(r.total_bytes, plan.total_cost(), "sim bytes != transformer plan cost");
 
     // And the plan moves no more bytes than stock data parallelism.
-    let dp = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
+    let dp = Planner::try_plan(&g, 2, PlanFamily::DataParallel).unwrap();
     assert!(
         plan.total_cost() <= dp.total_cost(),
         "transformer: soy {} > dp {}",
@@ -254,7 +254,7 @@ fn lowering_acceptance_vgg_alexnet_transformer_8_devices() {
         ("transformer-4L", transformer(&TransformerConfig::micro())),
     ];
     for (name, g) in &workloads {
-        let plan = Planner::try_plan(g, 3, Strategy::Soybean).unwrap();
+        let plan = Planner::try_plan(g, 3, PlanFamily::Soybean).unwrap();
         let p = try_lower(g, &plan, &sim_cfg).unwrap();
         assert_eq!(p.devices, 8, "{name}");
         assert_eq!(p.total_bytes(), plan.total_cost(), "{name}: lowered bytes != Theorem-1 cost");
@@ -284,7 +284,7 @@ fn lowering_acceptance_vgg_alexnet_transformer_8_devices() {
 fn classic_dp_lowering_and_trace_roundtrip() {
     let sim_cfg = SimConfig::default();
     let g = alexnet(64);
-    let plan = Planner::try_plan(&g, 2, Strategy::DataParallel).unwrap();
+    let plan = Planner::try_plan(&g, 2, PlanFamily::DataParallel).unwrap();
     let p = try_lower_forced(&g, &plan, &sim_cfg, &classic_dp_form).unwrap();
     assert_eq!(p.total_bytes(), plan.total_cost(), "DP lowered bytes != plan cost");
     let sim = try_simulate_classic_dp(&g, &plan, &sim_cfg).unwrap();
@@ -316,7 +316,7 @@ fn three_way_numerics_agreement() {
         SerialTrainer::from_artifact(&client, &reg, "mlp_step_small_pallas", params.clone(), 0.1)
             .unwrap();
     let g = mlp(&MlpConfig { batch: 32, dims: dims.clone(), bias: true });
-    let plan = Planner::try_plan(&g, 2, Strategy::Soybean).unwrap();
+    let plan = Planner::try_plan(&g, 2, PlanFamily::Soybean).unwrap();
     let mut engine = ParallelTrainer::new(client, g, plan, &params, 0.1).unwrap();
 
     let mut data = SyntheticData::new(11, 64, 10);

@@ -1,0 +1,153 @@
+//! Differential gate for the pipeline axis: pipelined strategies must
+//! compute the serial graph's function.
+//!
+//! Two properties anchor the whole stage machinery:
+//!
+//! 1. **Single-stage bit identity** — [`Strategy::single_stage`] is the
+//!    plain `Plan` path, bit for bit: same Theorem-1 bytes, same modeled
+//!    step (`f64::to_bits`), same executed output (`f32::to_bits`).
+//! 2. **Pipelined correctness** — for every `(model, stages,
+//!    microbatches)` cell of the matrix, executing the pipelined program
+//!    on real tensors matches [`eval_serial`] within `1e-5`, and the
+//!    summed byte meters reconcile with [`Strategy::total_cost`].
+
+use soybean::graph::{bfs_levels, eval_serial, seed_values, Graph};
+use soybean::lower::{try_lower, try_lower_strategy};
+use soybean::models::{mlp, transformer, MlpConfig, TransformerConfig};
+use soybean::planner::{plan_strategy, stage_cuts, try_k_cut, Schedule, Strategy};
+use soybean::sim::{try_run_program, try_simulate_strategy, Topology};
+use soybean::spmd::{execute, try_execute_strategy, ExecOptions};
+
+fn pipeline_models() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("mlp", mlp(&MlpConfig { batch: 16, dims: vec![8, 8, 8], bias: true })),
+        ("transformer-4l", transformer(&TransformerConfig::tiny4())),
+    ]
+}
+
+/// Property 1: the degenerate strategy is the plain plan path, bit for
+/// bit — bytes, modeled step, and every output float.
+#[test]
+fn single_stage_is_bit_identical_end_to_end() {
+    let topo = Topology::p2_8xlarge();
+    let cfg = topo.to_sim_config();
+    for (name, g) in pipeline_models() {
+        let plan = try_k_cut(&g, 2).expect(name);
+        let program = try_lower(&g, &plan, &cfg).expect(name);
+        let init = seed_values(&g, 42);
+
+        let strat = Strategy::single_stage(&g, plan.clone());
+        assert_eq!(strat.total_cost(), plan.total_cost(), "{name}: bytes");
+
+        let pp = try_lower_strategy(&g, &strat, &cfg).expect(name);
+        assert_eq!(pp.total_bytes(), program.total_bytes(), "{name}: lowered bytes");
+
+        let want_step = try_run_program(&program, &topo).expect(name).step_s;
+        let got_step = try_simulate_strategy(&strat, &topo).expect(name).step_s;
+        assert_eq!(got_step.to_bits(), want_step.to_bits(), "{name}: modeled step");
+
+        let want = execute(&g, &plan, &program, &init).expect(name);
+        let got =
+            try_execute_strategy(&g, &strat, &pp, &init, &ExecOptions::default()).expect(name);
+        assert_eq!(got.instr_bytes, want.instr_bytes, "{name}: meter");
+        for t in &g.tensors {
+            let (a, b) = (&got.tensors[t.id], &want.tensors[t.id]);
+            assert_eq!(a.len(), b.len(), "{name}: {} length", t.name);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}: {} bits", t.name);
+            }
+        }
+    }
+}
+
+/// Property 2: the full matrix — `{mlp, transformer-4L} × {2, 4} stages
+/// × {1, 2, 4} microbatches` at 4 devices — against the serial
+/// interpreter, with the meter reconciling across the stage axis.
+#[test]
+fn pipelined_execution_matches_serial_across_the_matrix() {
+    let cfg = Topology::p2_8xlarge().to_sim_config();
+    let k = 2; // 4 devices
+    for (name, g) in pipeline_models() {
+        let levels = bfs_levels(&g);
+        let serial = eval_serial(&g, &seed_values(&g, 9)).expect(name);
+        assert!(
+            levels.levels.len() >= 4,
+            "{name}: expected a 4-stageable levelization, got {} levels",
+            levels.levels.len()
+        );
+        for s_count in [2usize, 4] {
+            let k_stage = k - s_count.trailing_zeros() as usize;
+            for m in [1usize, 2, 4] {
+                let label = format!("{name} s={s_count} m={m}");
+                let cuts = stage_cuts(&g, &levels, s_count, k_stage, m).expect(&label);
+                let strat =
+                    Strategy::try_build(&g, &cuts, k, m, Schedule::GPipe).expect(&label);
+                assert_eq!(strat.stage_count(), s_count, "{label}");
+                assert_eq!(strat.microbatches, m, "{label}");
+
+                let pp = try_lower_strategy(&g, &strat, &cfg).expect(&label);
+                assert_eq!(pp.total_bytes(), strat.total_cost(), "{label}: lowered bytes");
+
+                let init = seed_values(&g, 9);
+                let r = try_execute_strategy(&g, &strat, &pp, &init, &ExecOptions::default())
+                    .expect(&label);
+                // The one-theory contract across the stage axis.
+                assert_eq!(
+                    r.instr_bytes + r.boundary_bytes,
+                    strat.total_cost(),
+                    "{label}: meter"
+                );
+                let (worst, tensor) = r.worst_divergence(&g, &serial);
+                assert!(worst <= 1e-5, "{label}: diverged on {tensor}: {worst:e}");
+            }
+        }
+    }
+}
+
+/// Both schedules execute to the same numbers — the schedule only
+/// changes *when* tasks run, never *what* they compute.
+#[test]
+fn schedules_agree_on_the_numbers() {
+    let cfg = Topology::p2_8xlarge().to_sim_config();
+    let (name, g) = &pipeline_models()[0];
+    let levels = bfs_levels(g);
+    let cuts = stage_cuts(g, &levels, 2, 1, 2).expect(name);
+    let init = seed_values(g, 3);
+    let mut outs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for sched in [Schedule::GPipe, Schedule::OneF1B] {
+        let strat = Strategy::try_build(g, &cuts, 2, 2, sched).expect(name);
+        let pp = try_lower_strategy(g, &strat, &cfg).expect(name);
+        let r = try_execute_strategy(g, &strat, &pp, &init, &ExecOptions::default()).expect(name);
+        outs.push(r.tensors);
+    }
+    for (a, b) in outs[0].iter().zip(&outs[1]) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}: schedules diverged");
+        }
+    }
+}
+
+/// The strategy planner never loses to pure tiling, and traced pipelined
+/// execution attributes spans to every stage.
+#[test]
+fn plan_strategy_never_worse_and_traces_stages() {
+    let g = transformer(&TransformerConfig::tiny4());
+    let topo = Topology::two_tier(2); // 4 devices: 2 boxes × 2
+    let sp = plan_strategy(&g, 4, &topo).expect("plan_strategy");
+    assert!(sp.step_s <= sp.tiling_step_s, "portfolio lost to its own tiling seed");
+    assert_eq!(sp.scores[0].name, "tiling");
+    assert!(sp.scores.len() > 1, "no pipelined candidate was even scored");
+
+    // Trace a 2-stage run and check per-stage attribution.
+    let cfg = topo.to_sim_config();
+    let levels = bfs_levels(&g);
+    let cuts = stage_cuts(&g, &levels, 2, 1, 2).expect("cuts");
+    let strat = Strategy::try_build(&g, &cuts, 2, 2, Schedule::OneF1B).expect("build");
+    let pp = try_lower_strategy(&g, &strat, &cfg).expect("lower");
+    let init = seed_values(&g, 5);
+    let opts = ExecOptions::default().trace(true);
+    let r = try_execute_strategy(&g, &strat, &pp, &init, &opts).expect("exec");
+    let trace = r.trace.expect("tracing was on");
+    assert_eq!(trace.stage_count(), 2);
+    assert!(trace.stage_busy_s().iter().all(|&b| b > 0.0));
+}

@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Executable mirror of the pipeline axis (rust/src/{planner/strategy.rs,
+sim/pipeline.rs, spmd/pipeline.rs}).
+
+Three pieces of PR-10 logic are numeric enough to be worth validating
+outside the type system, so this mirror re-implements them in plain
+Python and property-checks them:
+
+1. **The greedy list scheduler** (sim/pipeline.rs): the same eligibility
+   rules (FIFO microbatches per cell, GPipe drain-all, the 1F1B
+   in-flight cap), the same pick rule (earliest start, 1F1B prefers
+   backward at ties), over the same cell structure `Strategy::try_build`
+   emits (F0..F(S-1), B(S-2)..B0 — the last stage's backward fuses into
+   its forward cell). Swept over stage counts, microbatch counts, cell
+   times and transfer times, asserting: no deadlock, makespan <= the
+   serial-stage reference, GPipe's stage-0 stash == m, 1F1B's stash <=
+   its pipeline depth, and bubble in [0, 1). Notably NOT asserted:
+   1F1B <= GPipe on step time — with heterogeneous cell times the
+   in-flight cap can delay tail forwards and cost up to ~1.5x (this
+   sweep found 1.47x), which is why the portfolio scores both schedules
+   instead of hard-coding a winner; the mirror pins the 1.5x envelope.
+
+2. **The stage-partition DP** (planner/strategy.rs stage_cuts): the same
+   candidate thinning and `dp[s][j]` recurrence over synthetic range/
+   boundary costs, checked against brute force over all cut choices.
+
+3. **The microbatch merge algebra** (spmd/pipeline.rs): a tiny linear +
+   mean-loss training step computed serially and microbatched; the
+   merge rules (concat carrying tensors, scale carried gradients by
+   1/m, average non-carrying products) must reproduce the serial values
+   to f64 round-off.
+
+Run: python3 tools/proto/pipeline_mirror.py
+"""
+
+import itertools
+import random
+
+FWD, BWD = "fwd", "bwd"
+
+
+def build_cells(s_count):
+    """Cell list in execution order, mirroring Strategy::try_build:
+    F0..F(S-1) then B(S-2)..B0; the last stage has no separate backward
+    cell. Returns (cells, deps) where cells[i] = (stage, phase) and
+    deps[i] = list of (from_cell, kind) with kind 'wire' or 'stash'."""
+    cells = [(s, FWD) for s in range(s_count)]
+    cells += [(s, BWD) for s in reversed(range(s_count - 1))]
+    idx = {c: i for i, c in enumerate(cells)}
+    deps = [[] for _ in cells]
+    for s in range(s_count - 1):
+        deps[idx[(s + 1, FWD)]].append((idx[(s, FWD)], "wire"))
+    for s in reversed(range(s_count - 1)):
+        src = (s + 1, BWD) if (s + 1, BWD) in idx else (s + 1, FWD)
+        deps[idx[(s, BWD)]].append((idx[src], "wire"))
+        deps[idx[(s, BWD)]].append((idx[(s, FWD)], "stash"))
+    return cells, deps
+
+
+def schedule(cells, deps, cell_s, xfer_s, m, sched):
+    """The greedy list scheduler of sim/pipeline.rs. Returns a dict of
+    step_s, serial_step_s, peak_stash, stage_busy, bubble."""
+    s_count = max(s for s, _ in cells) + 1
+    dep_t = [[(fc, xfer_s if kind == "wire" else 0.0) for fc, kind in d] for d in deps]
+    fwd_cell = [next((i for i, c in enumerate(cells) if c == (s, FWD)), None) for s in range(s_count)]
+    bwd_cell = [next((i for i, c in enumerate(cells) if c == (s, BWD)), None) for s in range(s_count)]
+
+    finish = [[None] * m for _ in cells]
+    scheduled = [[False] * m for _ in cells]
+    stage_free = [0.0] * s_count
+    stage_busy = [0.0] * s_count
+    fwd_done = [0] * s_count
+    bwd_done = [0] * s_count
+    peak_stash = [0] * s_count
+    remaining = len(cells) * m
+
+    while remaining > 0:
+        pick = None  # (start, rank, cell, mu)
+        for c, (s, phase) in enumerate(cells):
+            try:
+                mu = scheduled[c].index(False)
+            except ValueError:
+                continue
+            if not all(scheduled[fc][mu] and finish[fc][mu] is not None for fc, _ in dep_t[c]):
+                continue
+            if phase == BWD:
+                if sched == "gpipe" and fwd_cell[s] is not None:
+                    if not all(scheduled[fwd_cell[s]]):
+                        continue
+            elif sched == "1f1b" and bwd_cell[s] is not None:
+                cap = s_count - s
+                if fwd_done[s] - bwd_done[s] >= cap and bwd_done[s] < m:
+                    continue
+            est = max((finish[fc][mu] + x for fc, x in dep_t[c]), default=0.0)
+            start = max(est, stage_free[s])
+            if sched == "1f1b":
+                rank = c if phase == BWD else len(cells) + c
+            else:
+                rank = c
+            if pick is None or start < pick[0] - 1e-15 or (abs(start - pick[0]) <= 1e-15 and rank < pick[1]):
+                pick = (start, rank, c, mu)
+        assert pick is not None, f"deadlock: sched={sched} S={s_count} m={m}"
+        start, _, c, mu = pick
+        s, phase = cells[c]
+        end = start + cell_s[c]
+        finish[c][mu] = end
+        scheduled[c][mu] = True
+        stage_free[s] = end
+        stage_busy[s] += cell_s[c]
+        if phase == FWD:
+            fwd_done[s] += 1
+        else:
+            bwd_done[s] += 1
+        if bwd_cell[s] is not None:
+            peak_stash[s] = max(peak_stash[s], fwd_done[s] - bwd_done[s])
+        else:
+            peak_stash[s] = max(peak_stash[s], 1)
+        remaining -= 1
+
+    step = max(t for f in finish for t in f)
+    serial = m * (sum(cell_s) + sum(x for d in dep_t for _, x in d))
+    busy = sum(stage_busy)
+    bubble = max(0.0, 1.0 - busy / (s_count * step)) if step > 0 else 0.0
+    return dict(step_s=step, serial_step_s=serial, peak_stash=peak_stash,
+                stage_busy=stage_busy, bubble=bubble)
+
+
+def check_scheduler():
+    rng = random.Random(7)
+    trials = 0
+    worst_ratio = 0.0
+    for s_count in (2, 4):
+        cells, deps = build_cells(s_count)
+        for m in (1, 2, 4, 8):
+            for _ in range(50):
+                cell_s = [rng.uniform(0.5, 2.0) for _ in cells]
+                xfer = rng.choice([0.0, 0.05, 0.5])
+                rg = schedule(cells, deps, cell_s, xfer, m, "gpipe")
+                rf = schedule(cells, deps, cell_s, xfer, m, "1f1b")
+                for r in (rg, rf):
+                    assert r["step_s"] <= r["serial_step_s"] + 1e-12, (s_count, m)
+                    assert 0.0 <= r["bubble"] < 1.0, (s_count, m, r["bubble"])
+                # Neither schedule dominates on step time (the in-flight
+                # cap can delay tail forwards), but 1F1B stays within a
+                # bounded envelope of GPipe — the portfolio scores both.
+                worst_ratio = max(worst_ratio, rf["step_s"] / rg["step_s"])
+                assert rf["step_s"] <= rg["step_s"] * 1.5 + 1e-9, \
+                    f"1F1B {rf['step_s']} > 1.5x GPipe {rg['step_s']} (S={s_count} m={m})"
+                # GPipe drains: stage 0 stashes every microbatch.
+                assert rg["peak_stash"][0] == m, (rg["peak_stash"], m)
+                # 1F1B caps in-flight microbatches at the pipeline depth.
+                for s in range(s_count - 1):
+                    assert rf["peak_stash"][s] <= s_count - s, (s, rf["peak_stash"])
+                if m >= 4 and s_count == 2:
+                    assert rf["peak_stash"][0] < rg["peak_stash"][0]
+                trials += 1
+    print(f"scheduler: {trials} random schedules OK (no deadlock, "
+          f"step<=serial, stash caps hold; worst 1F1B/GPipe {worst_ratio:.3f})")
+
+
+def stage_cuts_dp(n, s_count, range_cost, cut_bytes, max_cand=32):
+    """The stage-partition DP of planner/strategy.rs, over synthetic
+    costs. Returns (cuts, total)."""
+    cand = list(range(1, n))
+    if len(cand) > max_cand:
+        step = len(cand) / max_cand
+        cand = sorted(set(1 + int(i * step) for i in range(max_cand)))
+    points = [0] + cand + [n]
+    points = sorted(set(points))
+    p = len(points)
+    inf = float("inf")
+    dp = [[inf] * p for _ in range(s_count + 1)]
+    frm = [[None] * p for _ in range(s_count + 1)]
+    dp[0][0] = 0
+    for s in range(1, s_count + 1):
+        for j in range(1, p):
+            for i in range(s - 1, j):
+                if dp[s - 1][i] == inf:
+                    continue
+                boundary = cut_bytes(points[i]) if i > 0 else 0
+                c = dp[s - 1][i] + range_cost(points[i], points[j]) + boundary
+                if c < dp[s][j]:
+                    dp[s][j] = c
+                    frm[s][j] = i
+    assert dp[s_count][p - 1] < inf
+    cuts, j = [], p - 1
+    for s in range(s_count, 0, -1):
+        i = frm[s][j]
+        if i > 0:
+            cuts.append(points[i])
+        j = i
+    cuts.reverse()
+    return cuts, dp[s_count][p - 1]
+
+
+def check_stage_dp():
+    rng = random.Random(3)
+    for trial in range(200):
+        n = rng.randint(2, 12)
+        s_count = rng.choice([s for s in (2, 3, 4) if s <= n])
+        rcost = {}
+        for lo in range(n):
+            for hi in range(lo + 1, n + 1):
+                rcost[(lo, hi)] = rng.randint(0, 1000)
+        bbytes = [rng.randint(0, 500) for _ in range(n + 1)]
+        cuts, total = stage_cuts_dp(n, s_count, lambda a, b: rcost[(a, b)],
+                                    lambda l: bbytes[l])
+        # Brute force over all interior cut choices (n small, no thinning).
+        best = min(
+            sum(rcost[(a, b)] for a, b in zip((0,) + cs, cs + (n,)))
+            + sum(bbytes[c] for c in cs)
+            for cs in itertools.combinations(range(1, n), s_count - 1)
+        )
+        assert total == best, (trial, cuts, total, best)
+        got = sum(rcost[(a, b)] for a, b in zip([0] + cuts, cuts + [n])) \
+            + sum(bbytes[c] for c in cuts)
+        assert got == total, (trial, cuts)
+    print("stage DP: 200 random instances match brute force (cuts + total)")
+
+
+def check_merge_algebra():
+    """Serial vs microbatched linear+mean-loss step with the merge rules
+    of spmd/pipeline.rs (concat carrying, scale carried grads by 1/m,
+    average non-carrying)."""
+    rng = random.Random(11)
+    B, D = 8, 3
+    for m in (1, 2, 4, 8):
+        W = [rng.uniform(-1, 1) for _ in range(D)]
+        X = [[rng.uniform(-1, 1) for _ in range(D)] for _ in range(B)]
+        Y = [rng.uniform(-1, 1) for _ in range(B)]
+
+        def step(xs, ys, w):
+            # y_hat = x.w ; loss = mean((y_hat - y)^2)
+            n = len(xs)
+            yh = [sum(x[d] * w[d] for d in range(D)) for x in xs]
+            dyh = [2.0 * (yh[i] - ys[i]) / n for i in range(n)]  # dL/dyh (carrying grad)
+            dw = [sum(dyh[i] * xs[i][d] for i in range(n)) for d in range(D)]
+            loss = sum((yh[i] - ys[i]) ** 2 for i in range(n)) / n
+            return yh, dyh, dw, loss
+
+        yh_s, dyh_s, dw_s, loss_s = step(X, Y, W)
+
+        # Microbatched: slice rows, run per-mu, merge.
+        bs = B // m
+        parts = [step(X[i * bs:(i + 1) * bs], Y[i * bs:(i + 1) * bs], W) for i in range(m)]
+        yh_m = [v for p in parts for v in p[0]]                      # carrying activation: concat
+        dyh_m = [v / m for p in parts for v in p[1]]                 # carrying gradient: concat x 1/m
+        dw_m = [sum(p[2][d] for p in parts) / m for d in range(D)]   # non-carrying: average
+        loss_m = sum(p[3] for p in parts) / m                        # non-carrying: average
+
+        def close(a, b):
+            return abs(a - b) <= 1e-12 * max(1.0, abs(a), abs(b))
+
+        assert all(close(a, b) for a, b in zip(yh_m, yh_s))
+        assert all(close(a, b) for a, b in zip(dyh_m, dyh_s)), (m, dyh_m[:2], dyh_s[:2])
+        assert all(close(a, b) for a, b in zip(dw_m, dw_s)), (m, dw_m, dw_s)
+        assert close(loss_m, loss_s)
+    print("merge algebra: concat / concat*1/m / average reproduce the "
+          "serial step exactly for m in {1,2,4,8}")
+
+
+if __name__ == "__main__":
+    check_scheduler()
+    check_stage_dp()
+    check_merge_algebra()
+    print("pipeline_mirror: all checks passed")
